@@ -1,0 +1,63 @@
+//! Memory-planner example: "will my fine-tuning run fit?"
+//!
+//! Walks the analytic VRAM model (the Table-1 engine) across methods,
+//! sequence lengths and GPU budgets at real Qwen1.5-MoE-A2.7B geometry —
+//! the tool a practitioner would use before renting a GPU.
+//!
+//!     cargo run --release --example memory_planner
+
+use revffn::memory::{
+    format_table, ordering_checks, table1_memory, Assumptions, Geometry, MemoryModel, Method,
+};
+
+fn main() {
+    let geo = Geometry::qwen15_moe_a27b();
+    println!(
+        "Qwen1.5-MoE-A2.7B: {:.2}B params ({:.2}B + {:.0}M adapters as RevFFN)\n",
+        geo.total_params() as f64 / 1e9,
+        geo.total_params() as f64 / 1e9,
+        (geo.total_params_revffn() - geo.total_params()) as f64 / 1e6,
+    );
+
+    // The paper's protocol: 80 GB H800, per-method maximized batch.
+    for (name, assume) in [
+        ("bf16 mixed precision (fp32 moments + master)", Assumptions::bf16_mixed()),
+        ("paper-calibrated (bf16, 8-bit moments, no master)", Assumptions::paper_calibrated()),
+    ] {
+        let rows = table1_memory(geo.clone(), assume, 2048, 80.0, None);
+        print!("{}", format_table(&rows, &format!("== {name} ==")));
+        for (check, ok) in ordering_checks(&rows) {
+            println!("  [{}] {check}", if ok { "ok" } else { "MISS" });
+        }
+        println!();
+    }
+
+    // Which GPUs can full-fine-tune this model with RevFFN?
+    println!("== minimum GPU budget for full-parameter fine-tuning (seq 2048, batch 1) ==");
+    let model = MemoryModel::new(geo.clone(), Assumptions::paper_calibrated());
+    for m in [Method::SftCheckpoint, Method::Lomo, Method::Galore, Method::Revffn] {
+        let need = model.peak_gb(m, 1, 2048);
+        let fits: Vec<&str> = [("24GB-4090", 24.0), ("40GB-A100", 40.0), ("80GB-H800", 80.0)]
+            .iter()
+            .filter(|(_, gb)| need <= *gb)
+            .map(|(n, _)| *n)
+            .collect();
+        println!("  {:<22} needs {need:>6.1} GB -> fits: {fits:?}", m.label());
+    }
+
+    // Sequence-length sweep: where does each method hit the 80 GB wall?
+    println!("\n== max microbatch vs sequence length (80 GB budget, paper-calibrated) ==");
+    print!("{:<22}", "Method");
+    let seqs = [512u64, 1024, 2048, 4096, 8192];
+    for s in seqs {
+        print!(" {s:>7}");
+    }
+    println!();
+    for m in Method::ALL {
+        print!("{:<22}", m.label());
+        for s in seqs {
+            print!(" {:>7}", model.max_batch(m, s, 80.0));
+        }
+        println!();
+    }
+}

@@ -1,0 +1,320 @@
+"""AOT pipeline: lower every (method, config) step function to HLO text,
+write initial-parameter blobs, and emit the manifest the Rust coordinator
+reads. This is the ONLY place Python runs; after ``make artifacts`` the
+Rust binary is self-contained.
+
+HLO **text** is the interchange format — jax≥0.5 serialized protos carry
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--config tiny]
+        [--methods sft,lora,...|all] [--pallas] [--batch B] [--seq S]
+        [--analyze]    # embed XLA memory_analysis in manifests (Table 1 calib)
+
+Layout:
+    artifacts/<cfg>/blobs/{standard,revffn}.bin + peft_<m>.bin
+    artifacts/<cfg>/<variant>/train_step.hlo.txt
+    artifacts/<cfg>/<variant>/forward.hlo.txt
+    artifacts/<cfg>/<variant>/eval_step.hlo.txt
+    artifacts/<cfg>/<variant>/manifest.json
+    artifacts/<cfg>/reconstruct/reconstruct.hlo.txt (+ manifest)
+where <variant> = method, with revffn split into revffn_stage1/_stage2.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import params as P
+from .configs import CONFIGS, ModelConfig, TrainConfig
+from .methods import ALL_VARIANTS, METHODS
+from .model import revffn_reconstruct
+from .trainstep import StepBuilder
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _blob_index(params: dict) -> dict[str, dict]:
+    """name -> {shape, offset, nbytes} for one blob."""
+    return {e["name"]: e for e in P.manifest_entries(params)}
+
+
+def build_blobs(cfg: ModelConfig, tc: TrainConfig, out_dir: str, seed: int = 0):
+    """Initial parameters. The standard model doubles as the 'pre-trained
+    checkpoint' (the Rust trainer optionally runs a brief LM pre-pass to
+    move it off random init — see DESIGN.md §Substitutions); the RevFFN
+    model wraps those same weights (§3.2 plug-and-play)."""
+    blob_dir = os.path.join(out_dir, "blobs")
+    os.makedirs(blob_dir, exist_ok=True)
+    key = jax.random.PRNGKey(seed)
+    k_std, k_rev, k_peft = jax.random.split(key, 3)
+
+    std = P.init_standard_model(k_std, cfg)
+    rev = P.rev_model_from_standard(std, k_rev, cfg)
+    blobs = {"standard": std, "revffn": rev}
+
+    from .methods import init_dora, init_ia3, init_lora
+    k1, k2 = jax.random.split(k_peft)
+    blobs["peft_lora"] = {"lora": init_lora(k1, cfg, tc.lora_rank)}
+    blobs["peft_dora"] = {"lora": init_lora(k2, cfg, tc.lora_rank),
+                          "dora": init_dora(std, cfg)}
+    blobs["peft_ia3"] = {"ia3": init_ia3(cfg)}
+
+    index = {}
+    for name, tree in blobs.items():
+        path = os.path.join(blob_dir, f"{name}.bin")
+        P.write_param_blob(tree, path)
+        index[name] = _blob_index(tree)
+    return blobs, index
+
+
+def tensor_sources(sb: StepBuilder, method: str, blob_index: dict) -> list[dict]:
+    """Map every flat tensor of the method's param tree to (blob, offset)."""
+    out = []
+    for path, shape in zip(sb.paths, sb.shapes):
+        if method in ("revffn", "revffn_naive"):
+            blob, key = "revffn", path
+        elif path.startswith("base."):
+            blob, key = "standard", path[len("base."):]
+        elif path.startswith("peft."):
+            blob, key = f"peft_{method}", path[len("peft."):]
+        else:
+            blob, key = "standard", path
+        e = blob_index[blob][key]
+        assert tuple(e["shape"]) == tuple(shape), (path, e["shape"], shape)
+        out.append({"name": path, "shape": list(shape), "dtype": "f32",
+                    "blob": blob, "offset": e["offset"], "nbytes": e["nbytes"]})
+    return out
+
+
+def lower_variant(variant: str, cfg: ModelConfig, tc: TrainConfig,
+                  out_dir: str, blob_index: dict, use_pallas: bool,
+                  analyze: bool) -> None:
+    method = "revffn" if variant.startswith("revffn_stage") else variant
+    vdir = os.path.join(out_dir, variant)
+    os.makedirs(vdir, exist_ok=True)
+
+    sb = StepBuilder(method, cfg, tc, use_pallas=use_pallas)
+    p_spec, m_spec, v_spec, tok, tgt, msk, lr, step = sb.example_args()
+    n_p, n_o = len(p_spec), len(m_spec)
+
+    def flat_train(*args):
+        params = list(args[:n_p])
+        m = list(args[n_p:n_p + n_o])
+        v = list(args[n_p + n_o:n_p + 2 * n_o])
+        tokens, targets, mask, lr_, step_ = args[n_p + 2 * n_o:]
+        new_p, new_m, new_v, loss, gnorm, aux = sb.train_step(
+            params, m, v, tokens, targets, mask, lr_, step_)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss, gnorm, aux)
+
+    # Donate params + optimizer state: XLA aliases these inputs to the
+    # matching outputs, halving the live-buffer peak of the step (§Perf L2).
+    donate = tuple(range(n_p + 2 * n_o))
+    train_args = tuple(p_spec) + tuple(m_spec) + tuple(v_spec) + (tok, tgt, msk, lr, step)
+    lowered_train = jax.jit(flat_train, donate_argnums=donate).lower(*train_args)
+    _write(os.path.join(vdir, "train_step.hlo.txt"), to_hlo_text(lowered_train))
+
+    # Microbatch-accumulation pair: grad-only pass + apply-accumulated pass
+    # (the L3 scheduler sums grads across microbatches between the two).
+    t_shapes = [sb.shapes[i] for i in sb.t_idx]
+    g_spec = [jax.ShapeDtypeStruct(s, jnp.float32) for s in t_shapes]
+    n_t = len(g_spec)
+
+    def flat_grad(*args):
+        grads, loss, aux = sb.grad_step(list(args[:n_p]), *args[n_p:])
+        return tuple(grads) + (loss, aux)
+
+    lowered_grad = jax.jit(flat_grad).lower(*(tuple(p_spec) + (tok, tgt, msk)))
+    _write(os.path.join(vdir, "grad_step.hlo.txt"), to_hlo_text(lowered_grad))
+
+    def flat_apply(*args):
+        params = list(args[:n_p])
+        m = list(args[n_p:n_p + n_o])
+        v = list(args[n_p + n_o:n_p + 2 * n_o])
+        grads = list(args[n_p + 2 * n_o:n_p + 2 * n_o + n_t])
+        lr_, step_ = args[n_p + 2 * n_o + n_t:]
+        new_p, new_m, new_v, gnorm = sb.apply_step(params, m, v, grads, lr_, step_)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (gnorm,)
+
+    apply_args = (tuple(p_spec) + tuple(m_spec) + tuple(v_spec) + tuple(g_spec)
+                  + (lr, step))
+    lowered_apply = jax.jit(flat_apply, donate_argnums=donate).lower(*apply_args)
+    _write(os.path.join(vdir, "apply_step.hlo.txt"), to_hlo_text(lowered_apply))
+
+    def flat_forward(*args):
+        return (sb.forward(list(args[:n_p]), args[n_p]),)
+
+    lowered_fwd = jax.jit(flat_forward).lower(*(tuple(p_spec) + (tok,)))
+    _write(os.path.join(vdir, "forward.hlo.txt"), to_hlo_text(lowered_fwd))
+
+    def flat_eval(*args):
+        loss, aux = sb.eval_step(list(args[:n_p]), *args[n_p:])
+        return (loss, aux)
+
+    lowered_eval = jax.jit(flat_eval).lower(*(tuple(p_spec) + (tok, tgt, msk)))
+    _write(os.path.join(vdir, "eval_step.hlo.txt"), to_hlo_text(lowered_eval))
+
+    manifest = {
+        "variant": variant,
+        "method": method,
+        "model": cfg.to_json(),
+        "train": tc.to_json(),
+        "use_pallas": use_pallas,
+        "io": sb.layout(),
+        "tensors": tensor_sources(sb, method, blob_index),
+        "artifacts": {
+            "train_step": "train_step.hlo.txt",
+            "grad_step": "grad_step.hlo.txt",
+            "apply_step": "apply_step.hlo.txt",
+            "forward": "forward.hlo.txt",
+            "eval_step": "eval_step.hlo.txt",
+        },
+        "n_params_total": sum(int(np.prod(s)) for s in sb.shapes),
+        "n_params_trainable": sum(
+            int(np.prod(sb.shapes[i])) for i in sb.t_idx),
+    }
+
+    if analyze:
+        def mem(jitted):
+            ma = jitted.lower(*train_args).compile().memory_analysis()
+            if ma is None:
+                return None
+            return {
+                "temp_size_bytes": int(ma.temp_size_in_bytes),
+                "argument_size_bytes": int(ma.argument_size_in_bytes),
+                "output_size_bytes": int(ma.output_size_in_bytes),
+                "generated_code_size_bytes": int(ma.generated_code_size_in_bytes),
+            }
+
+        # shipped (donated) step + the undonated variant for the §Perf
+        # before/after record
+        manifest["memory_analysis"] = mem(jax.jit(flat_train, donate_argnums=donate))
+        manifest["memory_analysis_nodonate"] = mem(jax.jit(flat_train))
+
+    _write(os.path.join(vdir, "manifest.json"), json.dumps(manifest, indent=2))
+    print(f"  {variant}: {len(sb.paths)} tensors "
+          f"({manifest['n_params_trainable']:,}/{manifest['n_params_total']:,} trainable), "
+          f"opt={sb.spec.optimizer}")
+
+
+def lower_reconstruct(cfg: ModelConfig, tc: TrainConfig, out_dir: str,
+                      blob_index: dict, use_pallas: bool,
+                      name: str = "reconstruct") -> None:
+    """Reversibility round-trip error artifact (Fig-1/§3.1 claim, E5)."""
+    vdir = os.path.join(out_dir, name)
+    os.makedirs(vdir, exist_ok=True)
+    sb = StepBuilder("revffn", cfg, tc, use_pallas=use_pallas)
+    p_spec, _, _, tok, *_ = sb.example_args()
+    n_p = len(p_spec)
+
+    def flat_rec(*args):
+        params = sb._assemble(list(args[:n_p]))
+        err = revffn_reconstruct(params, args[n_p], cfg, use_pallas)
+        # anchor all tensors (variants like rev_symmetric leave norm_x1
+        # unused and jit would prune the argument)
+        anchor = sum(jnp.sum(p) for p in args[:n_p])
+        return (err + 0.0 * anchor,)
+
+    lowered = jax.jit(flat_rec).lower(*(tuple(p_spec) + (tok,)))
+    _write(os.path.join(vdir, "reconstruct.hlo.txt"), to_hlo_text(lowered))
+    manifest = {
+        "variant": name,
+        "model": cfg.to_json(),
+        "train": tc.to_json(),
+        "io": sb.layout(),
+        "tensors": tensor_sources(sb, "revffn", blob_index),
+        "artifacts": {"reconstruct": "reconstruct.hlo.txt"},
+    }
+    _write(os.path.join(vdir, "manifest.json"), json.dumps(manifest, indent=2))
+    print(f"  {name}: ok")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="tiny", choices=list(CONFIGS))
+    ap.add_argument("--methods", default="all")
+    ap.add_argument("--pallas", action="store_true",
+                    help="route hot loops through the Pallas kernels")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--analyze", action="store_true",
+                    help="embed XLA memory_analysis in manifests")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output dir (artifacts/<config><tag>)")
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.config]
+    if args.methods == "all":
+        variants = [m for m in METHODS if m != "revffn"]
+        variants += ["revffn_stage1", "revffn_stage2", "revffn_naive"]
+    else:
+        variants = args.methods.split(",")
+
+    out_dir = os.path.join(args.out, args.config + args.tag)
+    os.makedirs(out_dir, exist_ok=True)
+    base_tc = TrainConfig(batch_size=args.batch, seq_len=args.seq)
+
+    print(f"[aot] config={args.config} out={out_dir} pallas={args.pallas}")
+    _, blob_index = build_blobs(cfg, base_tc, out_dir, seed=args.seed)
+    print(f"[aot] blobs written")
+
+    for variant in variants:
+        stage = 1 if variant == "revffn_stage1" else 2
+        method = "revffn" if variant.startswith("revffn_stage") else variant
+        tc = TrainConfig(method=method, batch_size=args.batch, seq_len=args.seq,
+                         stage=stage)
+        lower_variant(variant, cfg, tc, out_dir, blob_index, args.pallas,
+                      args.analyze)
+
+    lower_reconstruct(cfg, base_tc, out_dir, blob_index, args.pallas)
+    # §3.1 analysis artifacts: fixed-point iteration sweep + the exactly-
+    # invertible symmetric ablation (Reformer-style F(X2)). All share the
+    # revffn blobs, so only the HLO differs.
+    rec_variants = ["reconstruct"]
+    if args.methods == "all":
+        for iters in (2, 4):
+            c = dataclasses.replace(cfg, rev_fixedpoint_iters=iters)
+            nm = f"reconstruct_iters{iters}"
+            lower_reconstruct(c, base_tc, out_dir, blob_index, args.pallas, name=nm)
+            rec_variants.append(nm)
+        c = dataclasses.replace(cfg, rev_symmetric=True)
+        lower_reconstruct(c, base_tc, out_dir, blob_index, args.pallas,
+                          name="reconstruct_symmetric")
+        rec_variants.append("reconstruct_symmetric")
+
+    top = {
+        "config": args.config,
+        "model": cfg.to_json(),
+        "variants": variants + rec_variants,
+        "blobs": {name: f"blobs/{name}.bin" for name in blob_index},
+        "pallas": args.pallas,
+    }
+    _write(os.path.join(out_dir, "index.json"), json.dumps(top, indent=2))
+    print(f"[aot] done: {len(variants)+1} variants")
+
+
+if __name__ == "__main__":
+    main()

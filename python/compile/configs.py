@@ -1,0 +1,142 @@
+"""Model / training configurations shared between the AOT compile path and
+the Rust coordinator (via each artifact's manifest.json).
+
+The geometry mirrors Qwen1.5-MoE-A2.7B structurally (RMSNorm, RoPE
+attention, top-k router with renormalisation, SwiGLU experts plus a shared
+expert) at a size that trains on this testbed.  ``qwen15_moe_a27b`` is the
+real geometry used *analytically* by the Rust memory model for Table 1 —
+it is never instantiated here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the MoE transformer backbone."""
+
+    name: str = "tiny"
+    vocab_size: int = 512
+    d_model: int = 128          # must be even (reversible split) and % n_heads == 0
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4         # GQA supported; tiny config uses MHA
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 176      # per-expert SwiGLU intermediate
+    d_ff_shared: int = 352      # shared-expert intermediate
+    max_seq_len: int = 128
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    # RevFFN specifics
+    rev_fixedpoint_iters: int = 1   # paper §3.1: one iteration
+    rev_symmetric: bool = False     # ablation: exactly-invertible F(X2) variant
+    tie_embeddings: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_half(self) -> int:
+        return self.d_model // 2
+
+    def validate(self) -> None:
+        assert self.d_model % 2 == 0, "reversible split needs even d_model"
+        assert self.d_model % self.n_heads == 0
+        assert self.n_heads % self.n_kv_heads == 0
+        assert 1 <= self.top_k <= self.n_experts
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Per-method training hyper-parameters baked into the train_step HLO."""
+
+    method: str = "revffn"      # sft | lora | dora | ia3 | lomo | galore | revffn
+    batch_size: int = 4
+    seq_len: int = 64
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+    grad_clip: float = 1.0
+    # LoRA / DoRA
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    # GaLore
+    galore_rank: int = 8
+    galore_update_every: int = 50
+    galore_scale: float = 0.25
+    # RevFFN two-stage schedule
+    stage: int = 2              # 1 = adapter warm-up, 2 = joint fine-tuning
+    # aux loss weight for router load balancing
+    router_aux_coef: float = 0.001
+    label_smoothing: float = 0.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Named geometries
+# ---------------------------------------------------------------------------
+
+TINY = ModelConfig()
+
+SMALL = ModelConfig(
+    name="small",
+    vocab_size=2048,
+    d_model=256,
+    n_layers=6,
+    n_heads=8,
+    n_kv_heads=8,
+    n_experts=8,
+    top_k=2,
+    d_ff_expert=352,
+    d_ff_shared=704,
+    max_seq_len=256,
+)
+
+# ~100M-parameter config for the long e2e run (CPU permitting).
+MEDIUM = ModelConfig(
+    name="medium",
+    vocab_size=8192,
+    d_model=512,
+    n_layers=8,
+    n_heads=8,
+    n_kv_heads=8,
+    n_experts=16,
+    top_k=4,
+    d_ff_expert=704,
+    d_ff_shared=1408,
+    max_seq_len=512,
+)
+
+# Real Qwen1.5-MoE-A2.7B geometry — analytic use only (Table 1 memory model).
+QWEN15_MOE_A27B = ModelConfig(
+    name="qwen15_moe_a27b",
+    vocab_size=151936,
+    d_model=2048,
+    n_layers=24,
+    n_heads=16,
+    n_kv_heads=16,
+    n_experts=60,
+    top_k=4,
+    d_ff_expert=1408,
+    d_ff_shared=5632,
+    max_seq_len=8192,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, MEDIUM, QWEN15_MOE_A27B)}
+
+
+def dump_config(model: ModelConfig, train: TrainConfig) -> str:
+    return json.dumps({"model": model.to_json(), "train": train.to_json()}, indent=2)

@@ -1,0 +1,133 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization *estimates*
+per Pallas kernel BlockSpec, at both the tiny test geometry and the real
+Qwen1.5-MoE-A2.7B geometry.
+
+interpret=True gives CPU-numpy timings that are NOT a TPU proxy, so the
+optimization target is structural (DESIGN.md §Perf): block shapes that
+(a) fit the ~16 MiB/core VMEM budget with double-buffering headroom and
+(b) keep the MXU's 128x128 systolic array busy (tile dims that are
+multiples of 128 on the contracted axes, enough arithmetic per byte).
+
+Run:  python -m compile.kernel_analysis
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .configs import CONFIGS, ModelConfig
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM, TPUv4-class
+MXU = 128                       # systolic array edge
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    name: str
+    block_desc: str
+    vmem_bytes: int
+    mxu_m: int      # effective tile dims feeding the MXU
+    mxu_k: int
+    mxu_n: int
+    flops_per_byte: float
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of the 128x128 array covered by the tile (dims are
+        padded up to the array edge — utilization = prod(min(d,128)/128
+        over the two spatial axes) discounted by K-dim padding)."""
+        um = min(self.mxu_m, MXU) / MXU
+        un = min(self.mxu_n, MXU) / MXU
+        uk = 1.0 if self.mxu_k % MXU == 0 or self.mxu_k >= MXU else self.mxu_k / MXU
+        return um * un * uk
+
+
+def analyze(cfg: ModelConfig, block_t: int = 128, block_q: int = 128,
+            block_k: int = 128, block_f: int = 512,
+            bf16: bool = True) -> list[KernelEstimate]:
+    """Estimates for each kernel's working set at one grid step."""
+    b = 2 if bf16 else 4
+    d, dh = cfg.d_model, cfg.d_half
+    f, fs, e = cfg.d_ff_expert, cfg.d_ff_shared, cfg.n_experts
+    hd = cfg.head_dim
+    out = []
+
+    # moe_ffn: expert weight slab (f-chunked) + token tile + combine + out
+    bf = min(block_f, f)
+    w_bytes = 3 * d * bf * b
+    t_bytes = block_t * (d + e + d) * b + block_t * bf * 4  # acc in f32
+    out.append(KernelEstimate(
+        "moe_ffn",
+        f"(E,F,T)-grid, token tile {block_t}x{d}, weight slab d={d},bf={bf}",
+        w_bytes + t_bytes,
+        mxu_m=block_t, mxu_k=d, mxu_n=bf,
+        flops_per_byte=(2 * block_t * d * bf * 3) / max(w_bytes + t_bytes, 1),
+    ))
+
+    # attention: q tile + full k/v + accumulators
+    s = cfg.max_seq_len
+    a_bytes = (block_q * hd + 2 * s * hd) * b + block_q * (hd + 2) * 4
+    out.append(KernelEstimate(
+        "attention",
+        f"(BH,Q)-grid, q tile {block_q}x{hd}, kv {s}x{hd}, online softmax",
+        a_bytes,
+        mxu_m=block_q, mxu_k=hd, mxu_n=block_k,
+        flops_per_byte=(4 * block_q * s * hd) / max(a_bytes, 1),
+    ))
+
+    # rmsnorm: row tile
+    r_bytes = 2 * block_t * dh * b
+    out.append(KernelEstimate(
+        "rmsnorm", f"row tile {block_t}x{dh}", r_bytes,
+        mxu_m=block_t, mxu_k=1, mxu_n=dh,
+        flops_per_byte=(3 * block_t * dh) / max(r_bytes, 1),
+    ))
+
+    # router: token tile x experts
+    ro_bytes = 2 * block_t * e * 4
+    out.append(KernelEstimate(
+        "router_topk", f"token tile {block_t}x{e}, k={cfg.top_k} argmax rounds",
+        ro_bytes,
+        mxu_m=block_t, mxu_k=1, mxu_n=e,
+        flops_per_byte=(cfg.top_k * block_t * e) / max(ro_bytes, 1),
+    ))
+    return out
+
+
+def report(cfg_name: str) -> str:
+    cfg = CONFIGS[cfg_name]
+    rows = analyze(cfg)
+    lines = [f"== {cfg_name}: d={cfg.d_model} f={cfg.d_ff_expert} E={cfg.n_experts} "
+             f"S={cfg.max_seq_len} (bf16 tiles, f32 accumulators) =="]
+    lines.append(f"{'kernel':<12} {'VMEM':>10} {'%VMEM':>7} {'MXU util':>9} "
+                 f"{'flops/B':>8}  block")
+    for r in rows:
+        lines.append(
+            f"{r.name:<12} {r.vmem_bytes/1e6:>8.2f}MB {100*r.vmem_frac:>6.1f}% "
+            f"{100*r.mxu_utilization:>8.1f}% {r.flops_per_byte:>8.1f}  {r.block_desc}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for name in ("tiny", "qwen15_moe_a27b"):
+        print(report(name))
+        print()
+    # block-shape sweep for moe_ffn at Qwen geometry (the §Perf L1 iteration)
+    cfg = CONFIGS["qwen15_moe_a27b"]
+    print("== moe_ffn (block_t, block_f) sweep at Qwen geometry (§Perf L1) ==")
+    print(f"{'block_t':>8} {'block_f':>8} {'VMEM':>10} {'%VMEM':>7} {'MXU util':>9}")
+    for bt in (64, 128, 256):
+        for bfv in (256, 512, 1408):
+            k = analyze(cfg, block_t=bt, block_f=bfv)[0]
+            flag = " <= chosen" if (bt, bfv) == (128, 512) else ""
+            print(f"{bt:>8} {bfv:>8} {k.vmem_bytes/1e6:>8.2f}MB {100*k.vmem_frac:>6.1f}% "
+                  f"{100*k.mxu_utilization:>8.1f}%{flag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Every kernel here matches a same-named function in ``ref`` to float32
+tolerance; python/tests/test_kernels.py is the enforcement point.
+"""
+
+from . import ref  # noqa: F401
+from .attention import attention  # noqa: F401
+from .coupling import couple_add, couple_sub  # noqa: F401
+from .moe_ffn import moe_ffn  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401
+from .router import router_topk  # noqa: F401

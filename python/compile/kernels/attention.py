@@ -1,0 +1,110 @@
+"""Pallas flash-style causal attention kernel (cross-branch capable).
+
+RevFFN's attention takes queries from the *left* reversible stream and
+keys/values from the *right* stream (§3.1); after the P↑ projections the
+kernel-level contract is identical to self-attention, so one kernel serves
+both the RevFFN blocks and the standard-transformer baselines.
+
+Schedule: grid = (batch*heads, q_blocks); the K/V scan runs inside the
+kernel with an online-softmax accumulator, so only one (block_q, head_dim)
+output tile plus one (block_k, head_dim) K/V tile are live at a time —
+the HBM↔VMEM schedule a CUDA flash kernel expresses with threadblocks is
+expressed here with BlockSpec + fori_loop. ``interpret=True`` always.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, scale: float,
+                 valid_len: int):
+    # q_ref: [block_q, hd]; k_ref/v_ref: [S, hd]; o_ref: [block_q, hd]
+    block_q, hd = q_ref.shape
+    s = k_ref.shape[0]
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_offs = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_kb = s // block_k
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], kb * block_k, block_k, 0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], kb * block_k, block_k, 0).astype(jnp.float32)
+        logits = q @ k.T  # [block_q, block_k]
+        k_offs = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_offs[None, :] < valid_len  # drop padded key positions
+        if causal:
+            mask = mask & (q_offs[:, None] >= k_offs[None, :])
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    l_i = jnp.where(l_i == 0.0, 1.0, l_i)  # fully-masked rows (none under causal)
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              block_q: int = 64, block_k: int = 64) -> jax.Array:
+    """q,k,v: [B, H, S, hd] (GQA: K/V heads repeated up-front). Matches
+    ref.attention."""
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    # pad sequence to lcm of the blocks
+    pad = max((-s) % bq, (-s) % bk)
+    # simpler: pad to multiple of both
+    target = s
+    while target % bq or target % bk:
+        target += 1
+    pad = target - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s_p = target
+    else:
+        s_p = s
+
+    qf = q.reshape(b * h, s_p, hd)
+    kf = k.reshape(b * h, s_p, hd)
+    vf = v.reshape(b * h, s_p, hd)
+    scale = 1.0 / float(hd) ** 0.5
+    grid = (b * h, s_p // bq)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=bk, causal=causal, scale=scale,
+                          valid_len=s),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_p, hd), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, s_p, hd), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, s_p, hd), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda bh, qi: (bh, qi, 0)),
+        interpret=True,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, s_p, hd)
+    if pad:
+        out = out[:, :, :s, :]
+    return out

@@ -1,0 +1,67 @@
+"""Differentiable wrappers for the Pallas kernels.
+
+``pallas_call`` carries no reverse-mode autodiff rule (interpret mode
+included), so each kernel is wrapped in ``jax.custom_vjp``: the primal
+runs the Pallas kernel (and therefore appears in the lowered HLO), the
+backward pass is the VJP of the pure-jnp oracle — mathematically the same
+function (enforced by test_kernels.py), so gradients are exact up to the
+kernels' float tolerance. This mirrors production practice where a hand-
+written kernel ships with a hand-written (or reference-derived) backward.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .attention import attention as _attention_kernel
+from .moe_ffn import moe_ffn as _moe_ffn_kernel
+from .rmsnorm import rmsnorm as _rmsnorm_kernel
+from .router import router_topk as _router_kernel
+
+
+def _with_ref_vjp(kernel_fn, ref_fn):
+    @jax.custom_vjp
+    def f(*args):
+        return kernel_fn(*args)
+
+    def fwd(*args):
+        return f(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# rmsnorm(x, gamma, eps): eps is a non-diff scalar — close over defaults and
+# expose (x, gamma) as diff args.
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    wrapped = _with_ref_vjp(
+        lambda a, b: _rmsnorm_kernel(a, b, eps),
+        lambda a, b: ref.rmsnorm(a, b, eps),
+    )
+    return wrapped(x, gamma)
+
+
+def attention(q, k, v, causal: bool = True):
+    wrapped = _with_ref_vjp(
+        lambda a, b, c: _attention_kernel(a, b, c, causal=causal),
+        lambda a, b, c: ref.attention(a, b, c, causal=causal),
+    )
+    return wrapped(q, k, v)
+
+
+def router_topk(logits, top_k: int, renormalize: bool = True):
+    wrapped = _with_ref_vjp(
+        lambda l: _router_kernel(l, top_k, renormalize),
+        lambda l: ref.router_topk(l, top_k, renormalize),
+    )
+    return wrapped(logits)
+
+
+def moe_ffn(x, combine, w_gate, w_up, w_down):
+    wrapped = _with_ref_vjp(_moe_ffn_kernel, ref.moe_ffn)
+    return wrapped(x, combine, w_gate, w_up, w_down)

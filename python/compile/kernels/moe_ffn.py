@@ -1,0 +1,84 @@
+"""Pallas MoE expert-FFN kernel (dense dispatch, SwiGLU experts).
+
+Grid = (n_experts, f_chunks, token_blocks). Each step loads one expert's
+weight *slab* (a `block_f`-wide slice of the gate/up/down matrices) and
+one (block_t, d) token tile, computes that slab's SwiGLU contribution,
+scales by the expert's combine weights, and accumulates into the output
+tile. SwiGLU is elementwise in the hidden axis, so f-chunking is exact:
+
+    y = Σ_f  (silu(x @ Wg[:, f]) * (x @ Wu[:, f])) @ Wd[f, :]
+
+The output BlockSpec ignores the expert and chunk axes, so successive
+steps revisit the same tile — the canonical Pallas accumulation pattern
+(`@pl.when(first step)` zero-init, then `+=`).
+
+**Why f-chunking (§Perf L1):** at Qwen1.5-MoE-A2.7B geometry a full
+expert tile is 3·d·f·2B ≈ 17.3 MB — over the ~16 MB VMEM budget. With
+block_f=512 the slab is 6.3 MB, fitting with double-buffering headroom
+while keeping the MXU's 128-lane tiles full (see
+compile.kernel_analysis). ``interpret=True`` always.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, comb_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    e = pl.program_id(0)
+    fi = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(e == 0, fi == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # [bt, d]
+    wg = wg_ref[...].astype(jnp.float32)         # [d, bf]
+    wu = wu_ref[...].astype(jnp.float32)
+    wd = wd_ref[...].astype(jnp.float32)         # [bf, d]
+    w = comb_ref[...].astype(jnp.float32)        # [bt, 1] combine weight, expert e
+    h = jax.nn.silu(x @ wg) * (x @ wu)           # [bt, bf]
+    y = (h @ wd) * w
+    o_ref[...] = o_ref[...] + y.astype(o_ref.dtype)
+
+
+def moe_ffn(x: jax.Array, combine: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, block_t: int = 128, block_f: int = 512) -> jax.Array:
+    """x: [T, d]; combine: [T, E]; w_gate/w_up: [E, d, f]; w_down: [E, f, d].
+
+    Matches ref.moe_ffn (float32 accumulate, cast on store)."""
+    t, d = x.shape
+    e, _, f = w_gate.shape
+    bt = min(block_t, t)
+    bf = min(block_f, f)
+    pad_t = (-t) % bt
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+        combine = jnp.pad(combine, ((0, pad_t), (0, 0)))
+    pad_f = (-f) % bf
+    if pad_f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pad_f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pad_f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, pad_f), (0, 0)))
+    tp = x.shape[0]
+    fp = w_gate.shape[2]
+    grid = (e, fp // bf, tp // bt)
+    out = pl.pallas_call(
+        _moe_kernel,
+        out_shape=jax.ShapeDtypeStruct((tp, d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda ei, fi, ti: (ti, 0)),
+            pl.BlockSpec((bt, 1), lambda ei, fi, ti: (ti, ei)),
+            pl.BlockSpec((None, d, bf), lambda ei, fi, ti: (ei, 0, fi)),
+            pl.BlockSpec((None, d, bf), lambda ei, fi, ti: (ei, 0, fi)),
+            pl.BlockSpec((None, bf, d), lambda ei, fi, ti: (ei, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda ei, fi, ti: (ti, 0)),
+        interpret=True,
+    )(x, combine, w_gate, w_up, w_down)
+    if pad_t:
+        out = out[:t]
+    return out.astype(x.dtype)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float32 tolerance under pytest (see
+python/tests/test_kernels.py, which hypothesis-sweeps shapes and dtypes).
+The L2 model can also be built entirely from these references
+(``use_pallas=False``) — both paths lower to HLO and must agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS layer norm over the last axis: x * gamma / rms(x)."""
+    orig_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return out.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_angles(seq_len: int, head_dim: int, theta: float = 10000.0):
+    """Return (cos, sin) each of shape [seq_len, head_dim/2]."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)  # [S, hd/2]
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, head_dim] with head_dim even; rotate-half convention
+    (first half paired with second half, as in Llama/Qwen)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scaled-dot-product causal attention (cross-branch: Q from left stream,
+# K/V from right stream — shapes identical to self-attention)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """q,k,v: [B, H, S, hd] (K/V may have fewer heads — GQA — with H % Hkv == 0).
+
+    Returns [B, H, S, hd]. Softmax in float32.
+    """
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE router: softmax over expert logits, top-k selection, renormalised
+# weights scattered back to a dense [T, E] combine matrix.
+# ---------------------------------------------------------------------------
+
+def router_topk(logits: jax.Array, top_k: int, renormalize: bool = True):
+    """logits: [T, E]. Returns (combine [T, E] float32, aux_loss scalar).
+
+    combine[t, e] = renormalised softmax prob if e in top-k(t) else 0.
+    aux_loss is the Switch-style load-balancing loss: E/k * sum_e f_e * p_e,
+    with f_e the fraction of token-slots routed to e and p_e the mean router
+    probability.
+    """
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    # k-round argmax extraction instead of lax.top_k: identical result for
+    # distinct probabilities, matches the Pallas kernel's loop exactly, and
+    # avoids the TopK HLO op (whose `largest` attribute the pinned
+    # xla_extension 0.5.1 text parser rejects).
+    remaining = probs
+    mask_total = jnp.zeros_like(probs)
+    picked_sum = jnp.zeros((t, 1), jnp.float32)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        mask_total = mask_total + onehot
+        picked_sum = picked_sum + jnp.sum(onehot * probs, axis=-1, keepdims=True)
+        remaining = remaining * (1.0 - onehot)
+    combine = probs * mask_total
+    if renormalize:
+        combine = combine / picked_sum
+    mask = (combine > 0).astype(jnp.float32)
+    frac_tokens = jnp.mean(mask, axis=0)          # [E]
+    mean_prob = jnp.mean(probs, axis=0)           # [E]
+    aux = e * jnp.sum(frac_tokens * mean_prob) / top_k
+    return combine, aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU expert FFN, dense-dispatch MoE combine
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """x: [T, d]; w_gate/w_up: [d, f]; w_down: [f, d]."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def moe_ffn(x: jax.Array, combine: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array) -> jax.Array:
+    """Dense-dispatch mixture of SwiGLU experts.
+
+    x: [T, d]; combine: [T, E] (zeros off the top-k);
+    w_gate/w_up: [E, d, f]; w_down: [E, f, d]. Returns [T, d].
+
+    Dense dispatch (every expert sees every token, masked by ``combine``)
+    keeps the computation differentiable and shape-static; the Pallas kernel
+    mirrors this contraction pattern with expert-tiled blocks.
+    """
+    x32 = x.astype(jnp.float32)
+    g = jnp.einsum("td,edf->etf", x32, w_gate.astype(jnp.float32))
+    u = jnp.einsum("td,edf->etf", x32, w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("etf,efd->etd", h, w_down.astype(jnp.float32))
+    out = jnp.einsum("te,etd->td", combine.astype(jnp.float32), y)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reversible coupling (the RevFFN bijection, stream-level)
+# ---------------------------------------------------------------------------
+
+def couple_forward(x1: jax.Array, x2: jax.Array, f_fn, g_fn) -> tuple:
+    """y1 = x1 + f(x1, x2) ; y2 = x2 + g(y1). Returns (y1, y2)."""
+    y1 = x1 + f_fn(x1, x2)
+    y2 = x2 + g_fn(y1)
+    return y1, y2
+
+
+def couple_inverse(y1: jax.Array, y2: jax.Array, f_fn, g_fn, n_iters: int = 1):
+    """Invert the coupling: x2 = y2 - g(y1); x1 by fixed-point iteration
+    x1 <- y1 - f(x1, x2), seeded with x1^(0) = y1 (paper §3.1)."""
+    x2 = y2 - g_fn(y1)
+    x1 = y1
+    for _ in range(max(1, n_iters)):
+        x1 = y1 - f_fn(x1, x2)
+    return x1, x2

@@ -1,0 +1,54 @@
+"""Pallas RMSNorm kernel.
+
+Tiles the token dimension; each grid step normalises a (block_rows, d)
+tile held in VMEM-style scratch. ``interpret=True`` always (CPU PJRT); on a
+real TPU the same BlockSpec maps tiles into VMEM with the feature axis
+padded to the 128-lane register width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, gamma_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * gamma_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+            block_rows: int = 128) -> jax.Array:
+    """x: [..., d]; gamma: [d]. Matches ref.rmsnorm."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    # pad rows to a multiple of the block
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, gamma)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,69 @@
+"""Pallas top-k MoE router kernel.
+
+Computes softmax over expert logits and extracts the top-k experts per
+token by iterative max-extraction (k passes over the E axis — E is small,
+so this beats a full sort and vectorises cleanly over the token tile).
+Produces the dense [T, E] combine matrix the moe_ffn kernel consumes.
+
+The load-balancing auxiliary loss needs global (all-token) statistics, so
+it stays at the jnp level in the caller (see model.moe_block); the kernel
+is the per-token hot loop. ``interpret=True`` always.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(logits_ref, comb_ref, *, top_k: int, renormalize: bool):
+    logits = logits_ref[...].astype(jnp.float32)          # [bt, E]
+    bt, e = logits.shape
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    remaining = probs
+    mask_total = jnp.zeros_like(probs)
+    picked_sum = jnp.zeros((bt, 1), jnp.float32)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)              # [bt]
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        mask_total = mask_total + onehot
+        picked_sum = picked_sum + jnp.sum(onehot * probs, axis=-1, keepdims=True)
+        remaining = remaining * (1.0 - onehot)
+    combine = probs * mask_total
+    if renormalize:
+        combine = combine / picked_sum
+    comb_ref[...] = combine.astype(comb_ref.dtype)
+
+
+def router_topk(logits: jax.Array, top_k: int, renormalize: bool = True,
+                block_t: int = 256):
+    """logits: [T, E]. Returns (combine [T, E] float32, aux_loss scalar).
+
+    Matches ref.router_topk (combine via kernel; aux loss computed at the
+    jnp level from the kernel's combine output — identical formula)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    lp = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    grid = (lp.shape[0] // bt,)
+    combine = pl.pallas_call(
+        functools.partial(_router_kernel, top_k=top_k, renormalize=renormalize),
+        out_shape=jax.ShapeDtypeStruct(lp.shape, jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        interpret=True,
+    )(lp)
+    if pad:
+        combine = combine[:t]
+    # aux loss from global statistics (same formula as ref.router_topk)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    mask = (combine > 0).astype(jnp.float32)
+    aux = e * jnp.sum(jnp.mean(mask, axis=0) * jnp.mean(probs, axis=0)) / top_k
+    return combine, aux.astype(jnp.float32)

@@ -1,0 +1,100 @@
+"""L2 building blocks: norm dispatch, 'pre-trained' full-d attention,
+SwiGLU, and the RevFFN projection adapters.
+
+Every block takes ``use_pallas``: True routes the hot loops through the L1
+Pallas kernels (interpret=True) so they lower into the same HLO; False
+uses the pure-jnp oracles. Both paths are numerically equivalent (enforced
+by python/tests/test_model.py) — the artifact builder chooses per target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import diff
+from .configs import ModelConfig
+from .kernels import ref
+
+
+def norm(x: jax.Array, gamma: jax.Array, eps: float, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        return diff.rmsnorm(x, gamma, eps)
+    return ref.rmsnorm(x, gamma, eps)
+
+
+def p_up(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Projection adapter P↑: [..., d/2] @ [d/2, d] -> [..., d] (§3.2)."""
+    return x @ w
+
+
+def p_down(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Projection adapter P↓: [..., d] @ [d, d/2] -> [..., d/2] (§3.2)."""
+    return x @ w
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attention_block(p: dict, q_input: jax.Array, kv_input: jax.Array,
+                    cos: jax.Array, sin: jax.Array, cfg: ModelConfig,
+                    use_pallas: bool, adapters: dict | None = None) -> jax.Array:
+    """'Pre-trained' attention operating at full d_model.
+
+    q_input/kv_input: [B, S, d]. For the standard transformer the two are
+    the same tensor (self-attention); for RevFFN queries come from the left
+    stream and keys/values from the right (§3.1). RoPE on Q/K; causal mask.
+
+    ``adapters`` optionally carries PEFT state:
+      {"lora": {wq_a, wq_b, ...}, "dora": {mq, ...}, "ia3": {lk, lv}}
+    applied inside so every baseline shares this one code path.
+    """
+    def proj(x, w, name):
+        if adapters and "dora" in adapters and f"m_{name}" in adapters["dora"]:
+            # DoRA: W' = m ⊙ (W + ΔW)/||W + ΔW||_col  (ΔW = scale·A@B)
+            la, lb = adapters["lora"][f"{name}_a"], adapters["lora"][f"{name}_b"]
+            w_eff = w + (la @ lb) * adapters["lora_scale"]
+            col_norm = jnp.linalg.norm(w_eff, axis=0, keepdims=True)
+            m = adapters["dora"][f"m_{name}"]
+            return (x @ w_eff) * (m / col_norm)
+        y = x @ w
+        if adapters and "lora" in adapters and f"{name}_a" in adapters["lora"]:
+            la, lb = adapters["lora"][f"{name}_a"], adapters["lora"][f"{name}_b"]
+            y = y + (x @ la) @ lb * adapters["lora_scale"]
+        return y
+
+    q = proj(q_input, p["wq"], "wq")
+    k = proj(kv_input, p["wk"], "wk")
+    v = proj(kv_input, p["wv"], "wv")
+    if adapters and "ia3" in adapters:
+        k = k * adapters["ia3"]["lk"]
+        v = v * adapters["ia3"]["lv"]
+
+    q = _split_heads(q, cfg.n_heads)
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    q = ref.apply_rope(q, cos, sin)
+    k = ref.apply_rope(k, cos, sin)
+    if use_pallas:
+        o = diff.attention(q, k, v, causal=True)
+    else:
+        o = ref.attention(q, k, v, causal=True)
+    return proj(_merge_heads(o), p["wo"], "wo")
+
+
+def shared_expert(p: dict, x: jax.Array, adapters: dict | None = None) -> jax.Array:
+    """Qwen-style always-on shared expert with sigmoid output gate."""
+    h = jax.nn.silu(x @ p["shared_wg"]) * (x @ p["shared_wu"])
+    if adapters and "ia3" in adapters:
+        h = h * adapters["ia3"]["lff"]
+    out = h @ p["shared_wd"]
+    gate = jax.nn.sigmoid(x @ p["shared_gate"])
+    return out * gate

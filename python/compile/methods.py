@@ -1,0 +1,217 @@
+"""Fine-tuning method registry — every row of the paper's Tables 1/2.
+
+A ``MethodSpec`` bundles, for one method:
+  * parameter initialisation (base model + any PEFT tensors),
+  * the forward function,
+  * which flat tensor paths are trainable,
+  * the optimizer family and its state shapes,
+  * weight-decay mask.
+
+Methods:
+  sft      — full-parameter AdamW on the standard model, jax.remat
+             per layer ('SFT + Activation Checkpointing').
+  lora     — rank-r adapters on Wq/Wk/Wv/Wo, base frozen [10].
+  dora     — LoRA + magnitude/direction decomposition [19].
+  ia3      — learned rescaling of K, V and shared-expert FFN [20].
+  lomo     — full-parameter fused-SGD memory profile [22].
+  galore   — full-parameter AdamW with rank-r gradient projection [23].
+  revffn   — the paper: reversible model, O(1)-activation backward;
+             stage 1 trains adapters+stream norms, stage 2 everything
+             except MoE routers (§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .configs import ModelConfig, TrainConfig
+from .model import revffn_forward, standard_forward
+
+METHODS = ["sft", "lora", "dora", "ia3", "lomo", "galore", "revffn"]
+# revffn_naive: identical math without the O(1)-activation custom VJP —
+# the memory-calibration upper bound, not a Table 1/2 row.
+ALL_VARIANTS = METHODS + ["revffn_naive"]
+
+
+@dataclass
+class MethodSpec:
+    name: str
+    init: Callable          # (key, ModelConfig) -> params dict
+    forward: Callable       # (params, tokens) -> (logits, aux)
+    trainable: Callable     # (flat path str) -> bool
+    optimizer: str          # adamw | sgd | galore
+    router_aux: bool        # add load-balance aux to the loss?
+
+
+def _no_decay(path: str) -> bool:
+    """Norm gains, biases and 1-D vectors take no weight decay."""
+    leaf = path.rsplit(".", 1)[-1]
+    return leaf.startswith("norm") or leaf in ("lk", "lv", "lff") or "gate" in leaf
+
+
+def decay_mask(paths: list[str], shapes: list[tuple]) -> list[bool]:
+    return [not _no_decay(p) and len(s) >= 2 for p, s in zip(paths, shapes)]
+
+
+# ---------------------------------------------------------------------------
+# PEFT parameter initialisers (stacked per layer for lax.scan)
+# ---------------------------------------------------------------------------
+
+def _init_lora_layer(key, cfg: ModelConfig, rank: int) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    dkv = cfg.n_kv_heads * cfg.head_dim
+    out = {}
+    for k_, (name, dout) in zip(ks, [("wq", d), ("wk", dkv), ("wv", dkv), ("wo", d)]):
+        out[f"{name}_a"] = jax.random.normal(k_, (d, rank), jnp.float32) / jnp.sqrt(rank)
+        out[f"{name}_b"] = jnp.zeros((rank, dout), jnp.float32)
+    return out
+
+
+def init_lora(key, cfg: ModelConfig, rank: int) -> dict:
+    ks = jax.random.split(key, cfg.n_layers)
+    layers = [_init_lora_layer(ks[i], cfg, rank) for i in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *layers)
+
+
+def init_dora(base: dict, cfg: ModelConfig) -> dict:
+    """Magnitude vectors initialised to the pre-trained column norms."""
+    out = {}
+    for name in ("wq", "wk", "wv", "wo"):
+        w = base["layers"]["attn"][name]  # [L, d, dout]
+        out[f"m_{name}"] = jnp.linalg.norm(w, axis=1)  # [L, dout]
+    return out
+
+
+def init_ia3(cfg: ModelConfig) -> dict:
+    dkv = cfg.n_kv_heads * cfg.head_dim
+    l = cfg.n_layers
+    return {
+        "lk": jnp.ones((l, dkv), jnp.float32),
+        "lv": jnp.ones((l, dkv), jnp.float32),
+        "lff": jnp.ones((l, cfg.d_ff_shared), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def get_method(name: str, cfg: ModelConfig, tc: TrainConfig,
+               use_pallas: bool = False) -> MethodSpec:
+    cfg.validate()
+    lora_scale = tc.lora_alpha / tc.lora_rank
+
+    if name == "sft":
+        return MethodSpec(
+            name=name,
+            init=lambda key, c=cfg: P.init_standard_model(key, c),
+            forward=lambda p, t: standard_forward(p, t, cfg, use_pallas, remat=True),
+            trainable=lambda path: True,
+            optimizer="adamw",
+            router_aux=True,
+        )
+
+    if name == "lomo":
+        return MethodSpec(
+            name=name,
+            init=lambda key, c=cfg: P.init_standard_model(key, c),
+            forward=lambda p, t: standard_forward(p, t, cfg, use_pallas, remat=True),
+            trainable=lambda path: True,
+            optimizer="sgd",
+            router_aux=True,
+        )
+
+    if name == "galore":
+        return MethodSpec(
+            name=name,
+            init=lambda key, c=cfg: P.init_standard_model(key, c),
+            forward=lambda p, t: standard_forward(p, t, cfg, use_pallas, remat=True),
+            trainable=lambda path: True,
+            optimizer="galore",
+            router_aux=True,
+        )
+
+    if name == "lora":
+        def init(key, c=cfg):
+            k1, k2 = jax.random.split(key)
+            return {"base": P.init_standard_model(k1, c),
+                    "peft": {"lora": init_lora(k2, c, tc.lora_rank)}}
+
+        return MethodSpec(
+            name=name,
+            init=init,
+            forward=lambda p, t: standard_forward(
+                p["base"], t, cfg, use_pallas, remat=False,
+                adapters_stacked=p["peft"], lora_scale=lora_scale,
+                freeze_router=True),
+            trainable=lambda path: path.startswith("peft."),
+            optimizer="adamw",
+            router_aux=False,
+        )
+
+    if name == "dora":
+        def init(key, c=cfg):
+            k1, k2 = jax.random.split(key)
+            base = P.init_standard_model(k1, c)
+            return {"base": base,
+                    "peft": {"lora": init_lora(k2, c, tc.lora_rank),
+                             "dora": init_dora(base, c)}}
+
+        return MethodSpec(
+            name=name,
+            init=init,
+            forward=lambda p, t: standard_forward(
+                p["base"], t, cfg, use_pallas, remat=False,
+                adapters_stacked=p["peft"], lora_scale=lora_scale,
+                freeze_router=True),
+            trainable=lambda path: path.startswith("peft."),
+            optimizer="adamw",
+            router_aux=False,
+        )
+
+    if name == "ia3":
+        def init(key, c=cfg):
+            return {"base": P.init_standard_model(key, c),
+                    "peft": {"ia3": init_ia3(c)}}
+
+        return MethodSpec(
+            name=name,
+            init=init,
+            forward=lambda p, t: standard_forward(
+                p["base"], t, cfg, use_pallas, remat=False,
+                adapters_stacked=p["peft"], freeze_router=True),
+            trainable=lambda path: path.startswith("peft."),
+            optimizer="adamw",
+            router_aux=False,
+        )
+
+    if name in ("revffn", "revffn_naive"):
+        stage = tc.stage
+        reversible_bwd = name == "revffn"
+
+        def trainable(path: str) -> bool:
+            if ".moe.router" in path:
+                return False          # routers frozen in both stages (§3.3)
+            if stage == 1:
+                return (".adapters." in path or ".norm_x1" in path
+                        or ".norm_x2" in path or ".norm_y1" in path)
+            return True
+
+        return MethodSpec(
+            name=name,
+            init=lambda key, c=cfg: P.init_rev_model(key, c),
+            forward=lambda p, t: revffn_forward(p, t, cfg, use_pallas,
+                                                reversible_bwd=reversible_bwd),
+            trainable=trainable,
+            optimizer="adamw",
+            router_aux=False,  # routers frozen: aux is a metric only
+        )
+
+    raise ValueError(f"unknown method {name!r}; expected one of {METHODS}")

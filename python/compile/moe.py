@@ -1,0 +1,42 @@
+"""Mixture-of-Experts block: top-k router + SwiGLU experts + shared expert.
+
+Dense dispatch (see kernels/moe_ffn.py) keeps shapes static for AOT; the
+router's load-balancing auxiliary loss is returned alongside the output so
+the caller can add it to the objective (standard baselines) or log it
+(RevFFN, whose routers stay frozen — §3.3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import diff
+from .configs import ModelConfig
+from .kernels import ref
+from .layers import shared_expert
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig, use_pallas: bool,
+              adapters: dict | None = None, freeze_router: bool = False):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt @ p["router"]
+    if freeze_router:
+        # §3.3: routing decisions are treated as constants — no gradient
+        # flows into (or through) the gating network.
+        logits = jax.lax.stop_gradient(logits)
+    if use_pallas:
+        combine, aux = diff.router_topk(logits, cfg.top_k)
+    else:
+        combine, aux = ref.router_topk(logits, cfg.top_k)
+    if freeze_router:
+        combine = jax.lax.stop_gradient(combine)
+    if use_pallas:
+        expert_out = diff.moe_ffn(xt, combine, p["wg"], p["wu"], p["wd"])
+    else:
+        expert_out = ref.moe_ffn(xt, combine, p["wg"], p["wu"], p["wd"])
+    out = expert_out.reshape(b, s, d) + shared_expert(p, x, adapters)
+    return out, aux

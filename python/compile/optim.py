@@ -1,0 +1,132 @@
+"""Optimizers, implemented functionally over flat (path, tensor) lists.
+
+Three families, matching the paper's baselines:
+
+* ``adamw``      — AdamW with decoupled weight decay (SFT, PEFT, RevFFN).
+* ``sgd_fused``  — stateless SGD, the LoMo [22] memory profile: no m/v
+                   buffers; the fused gradient→update pass is a property
+                   of the *memory model* (rust/src/memory), the math here
+                   is plain SGD with gradient clipping.
+* ``galore_adamw`` — GaLore [23]: gradients of 2-D tensors are projected
+                   into a rank-r subspace (seeded Gaussian projection,
+                   refreshed every ``update_every`` steps inside the
+                   graph via fold_in(step // T)), AdamW moments live in
+                   the subspace, updates are projected back.
+
+Every update takes and returns flat tensor lists so the lowered HLO's
+input/output layout matches the Rust manifest exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TrainConfig
+
+
+def global_norm(grads: list[jax.Array]) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in grads))
+
+
+def clip_by_global_norm(grads: list[jax.Array], max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-6))
+    return [g * scale for g in grads], gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_update(params: list, grads: list, m: list, v: list, lr, step,
+                 tc: TrainConfig, decay_mask: list[bool]):
+    """One AdamW step. ``step`` is 1-based (bias correction). Returns
+    (new_params, new_m, new_v)."""
+    b1, b2, eps = tc.beta1, tc.beta2, tc.adam_eps
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi, dm in zip(params, grads, m, v, decay_mask):
+        g32 = g.astype(jnp.float32)
+        mn = b1 * mi + (1.0 - b1) * g32
+        vn = b2 * vi + (1.0 - b2) * jnp.square(g32)
+        update = (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+        if dm:
+            update = update + tc.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+        new_m.append(mn)
+        new_v.append(vn)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# LoMo-style stateless SGD
+# ---------------------------------------------------------------------------
+
+def sgd_update(params: list, grads: list, lr, tc: TrainConfig):
+    new_p = []
+    for p, g in zip(params, grads):
+        new_p.append((p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype))
+    return new_p
+
+
+# ---------------------------------------------------------------------------
+# GaLore
+# ---------------------------------------------------------------------------
+
+def _galore_proj(shape: tuple, rank: int, step, base_seed: int, update_every: int):
+    """Deterministic Gaussian projection P [r, min_dim], refreshed every
+    ``update_every`` steps (seed folds in step // T)."""
+    epoch = (step // update_every).astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(base_seed), epoch)
+    min_dim = min(shape)
+    p = jax.random.normal(key, (rank, min_dim), jnp.float32)
+    return p / jnp.sqrt(jnp.float32(rank))
+
+
+def galore_shapes(params: list, paths: list[str], rank: int):
+    """Moment shapes for each tensor: 2-D tensors get rank-r subspace
+    moments [r, other_dim]; others get full-shape moments."""
+    shapes = []
+    for p in params:
+        if p.ndim == 2 and min(p.shape) > rank:
+            other = p.shape[1] if p.shape[0] <= p.shape[1] else p.shape[0]
+            shapes.append((rank, other))
+        else:
+            shapes.append(tuple(p.shape))
+    return shapes
+
+
+def galore_update(params: list, grads: list, m: list, v: list, lr, step,
+                  tc: TrainConfig, decay_mask: list[bool], base_seed: int = 1234):
+    """GaLore-AdamW. 2-D tensors: moments in the projected space; the
+    de-projected update is scaled by ``galore_scale``. Others: plain AdamW."""
+    b1, b2, eps = tc.beta1, tc.beta2, tc.adam_eps
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, mi, vi, dm) in enumerate(zip(params, grads, m, v, decay_mask)):
+        g32 = g.astype(jnp.float32)
+        if p.ndim == 2 and min(p.shape) > tc.galore_rank:
+            proj = _galore_proj(p.shape, tc.galore_rank, step, base_seed + i,
+                                tc.galore_update_every)
+            lead = p.shape[0] <= p.shape[1]
+            r = proj @ g32 if lead else proj @ g32.T      # [r, other]
+            mn = b1 * mi + (1.0 - b1) * r
+            vn = b2 * vi + (1.0 - b2) * jnp.square(r)
+            upd_r = (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+            upd = proj.T @ upd_r if lead else (proj.T @ upd_r).T
+            upd = tc.galore_scale * upd
+        else:
+            mn = b1 * mi + (1.0 - b1) * g32
+            vn = b2 * vi + (1.0 - b2) * jnp.square(g32)
+            upd = (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+        if dm:
+            upd = upd + tc.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(mn)
+        new_v.append(vn)
+    return new_p, new_m, new_v

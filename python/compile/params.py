@@ -1,0 +1,221 @@
+"""Parameter pytree construction, flattening, and manifest generation.
+
+Parameters live in *nested dicts*; the AOT boundary flattens them to an
+ordered list (sorted dotted paths) so the Rust coordinator can address
+every tensor positionally. The manifest records name/shape/dtype/offset
+plus per-method trainable flags, and is the single source of truth for
+buffer layout on both sides of the boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten with deterministic ordering
+# ---------------------------------------------------------------------------
+
+def flatten_params(params: dict) -> list[tuple[str, jax.Array]]:
+    """Flatten a nested dict to sorted (dotted.path, leaf) pairs."""
+    out: list[tuple[str, jax.Array]] = []
+
+    def rec(prefix: str, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}.{k}" if prefix else k, node[k])
+        else:
+            out.append((prefix, node))
+
+    rec("", params)
+    return out
+
+
+def unflatten_params(pairs: list[tuple[str, jax.Array]]) -> dict:
+    root: dict = {}
+    for path, leaf in pairs:
+        keys = path.split(".")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = leaf
+    return root
+
+
+def param_paths(params: dict) -> list[str]:
+    return [p for p, _ in flatten_params(params)]
+
+
+def tree_like(paths_and_leaves: list[tuple[str, jax.Array]], values: list) -> dict:
+    return unflatten_params(list(zip([p for p, _ in paths_and_leaves], values)))
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    """Full-d_model 'pre-trained' attention block (Wq/Wk/Wv/Wo)."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    dkv = cfg.n_kv_heads * cfg.head_dim
+    return {
+        "wq": _normal(ks[0], (d, d)),
+        "wk": _normal(ks[1], (d, dkv)),
+        "wv": _normal(ks[2], (d, dkv)),
+        "wo": _normal(ks[3], (d, d)),
+    }
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    """Router + E SwiGLU experts + shared expert with sigmoid gate."""
+    ks = jax.random.split(key, 8)
+    d, e, f, fs = cfg.d_model, cfg.n_experts, cfg.d_ff_expert, cfg.d_ff_shared
+    return {
+        "router": _normal(ks[0], (d, e)),
+        "wg": _normal(ks[1], (e, d, f)),
+        "wu": _normal(ks[2], (e, d, f)),
+        "wd": _normal(ks[3], (e, f, d)),
+        "shared_wg": _normal(ks[4], (d, fs)),
+        "shared_wu": _normal(ks[5], (d, fs)),
+        "shared_wd": _normal(ks[6], (fs, d)),
+        "shared_gate": _normal(ks[7], (d, 1)),
+    }
+
+
+def init_standard_layer(key, cfg: ModelConfig) -> dict:
+    """One pre-norm decoder layer of the standard (baseline) transformer."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "attn": init_attention(k1, cfg),
+        "moe": init_moe(k2, cfg),
+        "norm_attn": jnp.ones((d,), jnp.float32),
+        "norm_mlp": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_adapters(key, cfg: ModelConfig) -> dict:
+    """RevFFN projection adapters P↑ (d/2→d) / P↓ (d→d/2) per sub-block.
+
+    P↑ is initialised near a 'duplicate' map and P↓ near a 'halved-sum'
+    map so that at t=0 the wrapped block approximates the pre-trained
+    block seeing a duplicated half-stream — this keeps stage-1 warm-up
+    short (§3.3) while remaining learnable.
+    """
+    ks = jax.random.split(key, 6)
+    d, dh = cfg.d_model, cfg.d_half
+    dup = jnp.concatenate([jnp.eye(dh), jnp.eye(dh)], axis=1)      # [dh, d]
+    halve = jnp.concatenate([jnp.eye(dh), jnp.eye(dh)], axis=0) * 0.5  # [d, dh]
+    return {
+        "attn_up_q": dup + _normal(ks[0], (dh, d), 0.01),
+        "attn_up_kv": dup + _normal(ks[1], (dh, d), 0.01),
+        "attn_down": halve + _normal(ks[2], (d, dh), 0.01),
+        "mlp_up": dup + _normal(ks[3], (dh, d), 0.01),
+        "mlp_down": halve + _normal(ks[4], (d, dh), 0.01),
+    }
+
+
+def init_rev_layer(key, cfg: ModelConfig) -> dict:
+    """One RevFFN reversible block: pre-trained attention+MoE wrapped with
+    adapters; stream norms operate on d/2 features."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dh = cfg.d_half
+    return {
+        "attn": init_attention(k1, cfg),
+        "moe": init_moe(k2, cfg),
+        "adapters": init_adapters(k3, cfg),
+        "norm_x1": jnp.ones((dh,), jnp.float32),
+        "norm_x2": jnp.ones((dh,), jnp.float32),
+        "norm_y1": jnp.ones((dh,), jnp.float32),
+    }
+
+
+def _stack_layers(layer_dicts: list[dict]) -> dict:
+    """Stack per-layer param dicts along a leading axis for lax.scan."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layer_dicts)
+
+
+def init_standard_model(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = _stack_layers([init_standard_layer(ks[i], cfg) for i in range(cfg.n_layers)])
+    return {
+        "embed": _normal(ks[-2], (cfg.vocab_size, cfg.d_model)),
+        "layers": layers,
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_rev_model(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = _stack_layers([init_rev_layer(ks[i], cfg) for i in range(cfg.n_layers)])
+    return {
+        "embed": _normal(ks[-2], (cfg.vocab_size, cfg.d_model)),
+        "layers": layers,
+        "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def rev_model_from_standard(std: dict, key, cfg: ModelConfig) -> dict:
+    """Wrap a 'pre-trained' standard model into the RevFFN scaffold,
+    re-using its attention/MoE/embedding weights (§3.2: plug-and-play)."""
+    ks = jax.random.split(key, cfg.n_layers)
+    dh = cfg.d_half
+    adapters = _stack_layers([init_adapters(ks[i], cfg) for i in range(cfg.n_layers)])
+    ones = jnp.ones((cfg.n_layers, dh), jnp.float32)
+    return {
+        "embed": std["embed"],
+        "layers": {
+            "attn": std["layers"]["attn"],
+            "moe": std["layers"]["moe"],
+            "adapters": adapters,
+            "norm_x1": ones,
+            "norm_x2": ones,
+            "norm_y1": ones,
+        },
+        "norm_f": std["norm_f"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Manifest / binary param blob
+# ---------------------------------------------------------------------------
+
+def manifest_entries(params: dict) -> list[dict]:
+    """Per-tensor manifest rows (name, shape, dtype, byte offset/size)."""
+    entries = []
+    offset = 0
+    for path, leaf in flatten_params(params):
+        nbytes = int(np.prod(leaf.shape)) * 4  # f32 blob
+        entries.append({
+            "name": path,
+            "shape": [int(s) for s in leaf.shape],
+            "dtype": "f32",
+            "offset": offset,
+            "nbytes": nbytes,
+        })
+        offset += nbytes
+    return entries
+
+
+def write_param_blob(params: dict, path: str) -> int:
+    """Concatenate all tensors (manifest order) as little-endian f32."""
+    total = 0
+    with open(path, "wb") as f:
+        for _, leaf in flatten_params(params):
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(arr.tobytes())
+            total += arr.nbytes
+    return total
+
+
+def count_params(params: dict) -> int:
+    return sum(int(np.prod(l.shape)) for _, l in flatten_params(params))

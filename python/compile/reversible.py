@@ -1,0 +1,162 @@
+"""RevFFN reversible block and O(1)-activation backward pass (paper §3.1).
+
+Forward coupling over a feature-split hidden state H = [X1, X2]:
+
+    Y1 = X1 + F(X1, X2)      F = P↓(Attn_pt(P↑N(X1), P↑N(X2), P↑N(X2)))
+    Y2 = X2 + G(Y1)          G = P↓(MoE_pt(P↑N(Y1)))
+
+The map is a bijection; the inverse is
+
+    X2 = Y2 − G(Y1)
+    X1 = Y1 − F(X1, X2)      (fixed-point in X1: queries depend on X1;
+                              seeded at X1⁽⁰⁾ = Y1, paper runs 1 iteration)
+
+``rev_stack`` scans the blocks and carries a *custom VJP*: the forward
+residuals are only the stack's **outputs** (plus parameters), and the
+backward scan reconstructs each block's inputs from its outputs before
+computing gradients. Peak live activations are therefore O(1) blocks
+instead of O(L) — the paper's entire memory claim, visible in the lowered
+HLO's live-buffer profile (rust memory calibration reads that profile).
+
+``symmetric=True`` switches F to the exactly-invertible RevNet form
+F(X2) (queries from the right stream) — the ablation variant the paper
+credits to Reformer [17].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layers import attention_block, norm, p_down, p_up
+from .moe import moe_block
+
+
+# ---------------------------------------------------------------------------
+# F / G sub-functions (single block)
+# ---------------------------------------------------------------------------
+
+def rev_f(p: dict, x1: jax.Array, x2: jax.Array, cos, sin, cfg: ModelConfig,
+          use_pallas: bool) -> jax.Array:
+    """Cross-branch attention branch. Queries from X1 (or X2 when
+    symmetric), keys/values from X2. Input/output: [B, S, d/2]."""
+    a = p["adapters"]
+    h2 = norm(x2, p["norm_x2"], cfg.rms_eps, use_pallas)
+    if cfg.rev_symmetric:
+        hq = h2
+    else:
+        hq = norm(x1, p["norm_x1"], cfg.rms_eps, use_pallas)
+    q_in = p_up(hq, a["attn_up_q"])
+    kv_in = p_up(h2, a["attn_up_kv"])
+    attn = attention_block(p["attn"], q_in, kv_in, cos, sin, cfg, use_pallas)
+    return p_down(attn, a["attn_down"])
+
+
+def rev_g(p: dict, y1: jax.Array, cfg: ModelConfig, use_pallas: bool,
+          freeze_router: bool = True):
+    """MoE branch driven by the updated left stream. [B,S,d/2] -> same."""
+    a = p["adapters"]
+    h = norm(y1, p["norm_y1"], cfg.rms_eps, use_pallas)
+    x_in = p_up(h, a["mlp_up"])
+    moe_out, aux = moe_block(p["moe"], x_in, cfg, use_pallas,
+                             freeze_router=freeze_router)
+    return p_down(moe_out, a["mlp_down"]), aux
+
+
+def rev_block_forward(p: dict, x1, x2, cos, sin, cfg: ModelConfig, use_pallas: bool):
+    """One coupled update. Returns (y1, y2, aux)."""
+    y1 = x1 + rev_f(p, x1, x2, cos, sin, cfg, use_pallas)
+    g_out, aux = rev_g(p, y1, cfg, use_pallas)
+    y2 = x2 + g_out
+    return y1, y2, aux
+
+
+def rev_block_inverse(p: dict, y1, y2, cos, sin, cfg: ModelConfig, use_pallas: bool):
+    """Exact-inverse reconstruction (§3.1). Returns (x1, x2)."""
+    g_out, _ = rev_g(p, y1, cfg, use_pallas)
+    x2 = y2 - g_out
+    if cfg.rev_symmetric:
+        # F depends only on x2 — closed-form inverse.
+        return y1 - rev_f(p, y1, x2, cos, sin, cfg, use_pallas), x2
+    x1 = y1  # X1⁽⁰⁾ = Y1 seed
+    for _ in range(max(1, cfg.rev_fixedpoint_iters)):
+        x1 = y1 - rev_f(p, x1, x2, cos, sin, cfg, use_pallas)
+    return x1, x2
+
+
+# ---------------------------------------------------------------------------
+# Reversible stack with O(1)-activation custom VJP
+# ---------------------------------------------------------------------------
+
+def make_rev_stack(cfg: ModelConfig, use_pallas: bool):
+    """Return rev_stack(stacked_params, x1, x2, cos, sin) -> (y1, y2, aux).
+
+    stacked_params: per-layer dicts stacked on axis 0 (lax.scan layout).
+    aux is the summed router load-balance statistic (stop-gradiented: the
+    RevFFN schedule freezes routers, so it is a metric, not an objective).
+    """
+
+    def fwd_scan(sp, x1, x2, cos, sin):
+        def step(carry, p):
+            c1, c2, aux = carry
+            y1, y2, a = rev_block_forward(p, c1, c2, cos, sin, cfg, use_pallas)
+            return (y1, y2, aux + jax.lax.stop_gradient(a)), None
+
+        (y1, y2, aux), _ = jax.lax.scan(step, (x1, x2, jnp.float32(0.0)), sp)
+        return y1, y2, aux
+
+    @jax.custom_vjp
+    def rev_stack(sp, x1, x2, cos, sin):
+        return fwd_scan(sp, x1, x2, cos, sin)
+
+    def rev_stack_fwd(sp, x1, x2, cos, sin):
+        y1, y2, aux = fwd_scan(sp, x1, x2, cos, sin)
+        # Residuals: outputs + params only. NO per-layer activations.
+        return (y1, y2, aux), (sp, y1, y2, cos, sin)
+
+    def rev_stack_bwd(res, cotangents):
+        sp, y1, y2, cos, sin = res
+        gy1, gy2, _gaux = cotangents
+
+        def block_fwd_for_vjp(p, a, b):
+            o1, o2, _ = rev_block_forward(p, a, b, cos, sin, cfg, use_pallas)
+            return o1, o2
+
+        def step(carry, p):
+            cy1, cy2, cg1, cg2 = carry
+            x1, x2 = rev_block_inverse(p, cy1, cy2, cos, sin, cfg, use_pallas)
+            x1 = jax.lax.stop_gradient(x1)
+            x2 = jax.lax.stop_gradient(x2)
+            _, vjp = jax.vjp(block_fwd_for_vjp, p, x1, x2)
+            gp, gx1, gx2 = vjp((cg1, cg2))
+            return (x1, x2, gx1, gx2), gp
+
+        (x1, x2, gx1, gx2), gps = jax.lax.scan(
+            step, (y1, y2, gy1, gy2), sp, reverse=True
+        )
+        zc = jnp.zeros_like(cos)
+        zs = jnp.zeros_like(sin)
+        return gps, gx1, gx2, zc, zs
+
+    rev_stack.defvjp(rev_stack_fwd, rev_stack_bwd)
+    return rev_stack
+
+
+def make_rev_stack_naive(cfg: ModelConfig, use_pallas: bool):
+    """Same forward WITHOUT the custom VJP — autodiff caches every layer's
+    activations. Used by tests (gradient equivalence) and by the memory
+    calibration as the 'non-reversible' upper bound."""
+
+    def rev_stack(sp, x1, x2, cos, sin):
+        def step(carry, p):
+            c1, c2, aux = carry
+            y1, y2, a = rev_block_forward(p, c1, c2, cos, sin, cfg, use_pallas)
+            return (y1, y2, aux + jax.lax.stop_gradient(a)), None
+
+        (y1, y2, aux), _ = jax.lax.scan(step, (x1, x2, jnp.float32(0.0)), sp)
+        return y1, y2, aux
+
+    return rev_stack

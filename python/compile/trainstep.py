@@ -1,0 +1,175 @@
+"""Assemble per-method train/eval step functions with a *flat* tensor
+boundary, ready for AOT lowering.
+
+Step signature (what the Rust coordinator executes every iteration):
+
+    inputs : [params_0 … params_{P-1},          # ALL model tensors
+              m_0 … m_{T-1}, v_0 … v_{T-1},     # moments (trainable only;
+                                                #  absent for sgd/lomo)
+              tokens  i32[B,S],
+              targets i32[B,S],
+              loss_mask f32[B,S],
+              lr f32[], step f32[]]
+    outputs: [new_params…, new_m…, new_v…, loss, grad_norm, aux]
+
+Frozen tensors pass through unchanged (XLA turns them into aliased
+no-ops); gradients are only computed for trainable tensors, which is what
+gives PEFT/RevFFN their optimizer-state savings in the manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .configs import ModelConfig, TrainConfig
+from .methods import MethodSpec, decay_mask, get_method
+from .model import make_loss_fn
+from .params import flatten_params, unflatten_params
+
+
+class StepBuilder:
+    """Builds the flat-boundary step functions + layout metadata for one
+    (method, model config, train config) triple."""
+
+    def __init__(self, method: str, cfg: ModelConfig, tc: TrainConfig,
+                 use_pallas: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.tc = tc
+        self.spec: MethodSpec = get_method(method, cfg, tc, use_pallas)
+        key = jax.random.PRNGKey(seed)
+        self.params = self.spec.init(key)
+        pairs = flatten_params(self.params)
+        self.paths = [p for p, _ in pairs]
+        self.shapes = [tuple(l.shape) for _, l in pairs]
+        self.dtypes = [l.dtype for _, l in pairs]
+        self.trainable = [self.spec.trainable(p) for p in self.paths]
+        self.t_idx = [i for i, t in enumerate(self.trainable) if t]
+        t_paths = [self.paths[i] for i in self.t_idx]
+        t_shapes = [self.shapes[i] for i in self.t_idx]
+        self.decay = decay_mask(t_paths, t_shapes)
+        self.loss_fn = make_loss_fn(self.spec.forward, tc, self.spec.router_aux)
+
+        if self.spec.optimizer == "sgd":
+            self.opt_shapes: list[tuple] = []
+        elif self.spec.optimizer == "galore":
+            t_params = [pairs[i][1] for i in self.t_idx]
+            self.opt_shapes = optim.galore_shapes(t_params, t_paths, tc.galore_rank)
+        else:
+            self.opt_shapes = t_shapes
+
+    # -- pytree plumbing ----------------------------------------------------
+
+    def _assemble(self, flat_list: list) -> dict:
+        return unflatten_params(list(zip(self.paths, flat_list)))
+
+    # -- step functions -----------------------------------------------------
+
+    def train_step(self, all_params: list, m: list, v: list, tokens, targets,
+                   loss_mask, lr, step):
+        """Pure function — the body of the train_step HLO artifact."""
+        tc = self.tc
+
+        def loss_of_trainable(trainable_list):
+            full = list(all_params)
+            for i, idx in enumerate(self.t_idx):
+                full[idx] = trainable_list[i]
+            return self.loss_fn(self._assemble(full), tokens, targets, loss_mask)
+
+        t_params = [all_params[i] for i in self.t_idx]
+        (loss, aux), grads = jax.value_and_grad(loss_of_trainable, has_aux=True)(t_params)
+        grads, gnorm = optim.clip_by_global_norm(grads, tc.grad_clip)
+
+        if self.spec.optimizer == "sgd":
+            new_t = optim.sgd_update(t_params, grads, lr, tc)
+            new_m, new_v = [], []
+        elif self.spec.optimizer == "galore":
+            new_t, new_m, new_v = optim.galore_update(
+                t_params, grads, m, v, lr, step, tc, self.decay)
+        else:
+            new_t, new_m, new_v = optim.adamw_update(
+                t_params, grads, m, v, lr, step, tc, self.decay)
+
+        new_all = list(all_params)
+        for i, idx in enumerate(self.t_idx):
+            new_all[idx] = new_t[i]
+        # anchor every scalar input into the graph so jax.jit never prunes
+        # arguments (the Rust caller always supplies the full manifest list;
+        # e.g. plain SGD has no bias correction and would drop `step`).
+        loss = loss + 0.0 * lr + 0.0 * step
+        return new_all, new_m, new_v, loss, gnorm, aux
+
+    def grad_step(self, all_params: list, tokens, targets, loss_mask):
+        """Gradient-only pass for microbatch accumulation (L3 sums the
+        returned trainable grads host-side across microbatches):
+        -> (grads_trainable…, loss, aux). No clipping — that happens in
+        apply_step on the *accumulated* gradient."""
+
+        def loss_of_trainable(trainable_list):
+            full = list(all_params)
+            for i, idx in enumerate(self.t_idx):
+                full[idx] = trainable_list[i]
+            return self.loss_fn(self._assemble(full), tokens, targets, loss_mask)
+
+        t_params = [all_params[i] for i in self.t_idx]
+        (loss, aux), grads = jax.value_and_grad(loss_of_trainable, has_aux=True)(t_params)
+        return grads, loss, aux
+
+    def apply_step(self, all_params: list, m: list, v: list, grads: list, lr, step):
+        """Apply one accumulated gradient: clip + optimizer update.
+        -> (new_params…, new_m…, new_v…, grad_norm)."""
+        tc = self.tc
+        grads, gnorm = optim.clip_by_global_norm(list(grads), tc.grad_clip)
+        t_params = [all_params[i] for i in self.t_idx]
+        if self.spec.optimizer == "sgd":
+            new_t = optim.sgd_update(t_params, grads, lr, tc)
+            new_m, new_v = [], []
+        elif self.spec.optimizer == "galore":
+            new_t, new_m, new_v = optim.galore_update(
+                t_params, grads, m, v, lr, step, tc, self.decay)
+        else:
+            new_t, new_m, new_v = optim.adamw_update(
+                t_params, grads, m, v, lr, step, tc, self.decay)
+        new_all = list(all_params)
+        for i, idx in enumerate(self.t_idx):
+            new_all[idx] = new_t[i]
+        gnorm = gnorm + 0.0 * lr + 0.0 * step  # anchor scalar inputs
+        return new_all, new_m, new_v, gnorm
+
+    def eval_step(self, all_params: list, tokens, targets, loss_mask):
+        """Loss-only pass (validation): -> (loss, aux)."""
+        return self.loss_fn(self._assemble(all_params), tokens, targets, loss_mask)
+
+    def forward(self, all_params: list, tokens):
+        """Logits pass (the eval suite's scoring primitive)."""
+        logits, aux = self.spec.forward(self._assemble(all_params), tokens)
+        return logits
+
+    # -- example args for lowering -------------------------------------------
+
+    def example_args(self):
+        b, s = self.tc.batch_size, self.tc.seq_len
+        params = [jax.ShapeDtypeStruct(sh, dt) for sh, dt in zip(self.shapes, self.dtypes)]
+        m = [jax.ShapeDtypeStruct(sh, jnp.float32) for sh in self.opt_shapes]
+        v = [jax.ShapeDtypeStruct(sh, jnp.float32) for sh in self.opt_shapes]
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        targets = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        mask = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        return params, m, v, tokens, targets, mask, scalar, scalar
+
+    def layout(self) -> dict:
+        """Manifest 'io' section: how Rust must order buffers."""
+        return {
+            "n_params": len(self.paths),
+            "n_opt": len(self.opt_shapes),
+            "optimizer": self.spec.optimizer,
+            "trainable": self.trainable,
+            "trainable_paths": [self.paths[i] for i in self.t_idx],
+            "opt_shapes": [list(s) for s in self.opt_shapes],
+            "batch_size": self.tc.batch_size,
+            "seq_len": self.tc.seq_len,
+            "train_inputs": "params*, m*, v*, tokens, targets, loss_mask, lr, step",
+            "train_outputs": "params*, m*, v*, loss, grad_norm, aux",
+        }

@@ -1,0 +1,258 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle in
+``compile.kernels.ref``. Hypothesis sweeps shapes/dtypes; fixed seeds keep
+the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    d=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(rows, d, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+    gamma = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+    got = kernels.rmsnorm(x, gamma)
+    want = ref.rmsnorm(x, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 3, 16), (1, 1, 8), (4, 64, 128)])
+def test_rmsnorm_nd_shapes(shape):
+    r = rng(0)
+    x = jnp.asarray(r.normal(size=shape), jnp.float32)
+    gamma = jnp.asarray(r.normal(size=(shape[-1],)), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.rmsnorm(x, gamma), ref.rmsnorm(x, gamma), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_bf16_dtype_preserved():
+    r = rng(1)
+    x = jnp.asarray(r.normal(size=(8, 16)), jnp.bfloat16)
+    gamma = jnp.ones((16,), jnp.bfloat16)
+    out = kernels.rmsnorm(x, gamma)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.rmsnorm(x, gamma).astype(jnp.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 16, 33, 64]),
+    hd=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, s, hd, causal, seed):
+    r = rng(seed)
+    q = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    got = kernels.attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_gqa_head_repeat():
+    r = rng(7)
+    b, h, hkv, s, hd = 2, 4, 2, 32, 8
+    q = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, hkv, s, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, hkv, s, hd)), jnp.float32)
+    got = kernels.attention(q, k, v, block_q=16, block_k=16)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_causality():
+    """Perturbing a future K/V position must not change earlier outputs."""
+    r = rng(3)
+    b, h, s, hd = 1, 2, 16, 8
+    q = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, h, s, hd)), jnp.float32)
+    out1 = kernels.attention(q, k, v, block_q=8, block_k=8)
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    out2 = kernels.attention(q, k2, v2, block_q=8, block_k=8)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 90),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_matches_ref(t, e, k, seed):
+    k = min(k, e)
+    r = rng(seed)
+    logits = jnp.asarray(r.normal(size=(t, e)) * 2.0, jnp.float32)
+    got_c, got_aux = kernels.router_topk(logits, k)
+    want_c, want_aux = ref.router_topk(logits, k)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_aux, want_aux, rtol=1e-5, atol=1e-6)
+
+
+def test_router_combine_rows_sum_to_one():
+    r = rng(11)
+    logits = jnp.asarray(r.normal(size=(40, 8)), jnp.float32)
+    combine, _ = kernels.router_topk(logits, 2)
+    np.testing.assert_allclose(np.sum(np.asarray(combine), axis=-1), 1.0, rtol=1e-5)
+    assert (np.sum(np.asarray(combine) > 0, axis=-1) == 2).all()
+
+
+def test_router_topk_equals_experts_is_softmax():
+    r = rng(12)
+    logits = jnp.asarray(r.normal(size=(10, 4)), jnp.float32)
+    combine, _ = kernels.router_topk(logits, 4, renormalize=False)
+    np.testing.assert_allclose(
+        combine, jax.nn.softmax(logits, axis=-1), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([1, 7, 32, 65]),
+    d=st.sampled_from([8, 16]),
+    e=st.sampled_from([2, 4]),
+    f=st.sampled_from([12, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_matches_ref(t, d, e, f, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(t, d)) * 0.5, jnp.float32)
+    logits = jnp.asarray(r.normal(size=(t, e)), jnp.float32)
+    combine, _ = ref.router_topk(logits, min(2, e))
+    wg = jnp.asarray(r.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(r.normal(size=(e, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(r.normal(size=(e, f, d)) * 0.1, jnp.float32)
+    got = kernels.moe_ffn(x, combine, wg, wu, wd, block_t=32, block_f=8)
+    want = ref.moe_ffn(x, combine, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)
+    # unchunked path must agree as well
+    got2 = kernels.moe_ffn(x, combine, wg, wu, wd, block_t=32, block_f=f)
+    np.testing.assert_allclose(got2, want, rtol=5e-4, atol=5e-5)
+
+
+def test_moe_ffn_single_expert_equals_swiglu():
+    r = rng(5)
+    t, d, f = 16, 8, 12
+    x = jnp.asarray(r.normal(size=(t, d)), jnp.float32)
+    combine = jnp.ones((t, 1), jnp.float32)
+    wg = jnp.asarray(r.normal(size=(1, d, f)) * 0.2, jnp.float32)
+    wu = jnp.asarray(r.normal(size=(1, d, f)) * 0.2, jnp.float32)
+    wd = jnp.asarray(r.normal(size=(1, f, d)) * 0.2, jnp.float32)
+    got = kernels.moe_ffn(x, combine, wg, wu, wd)
+    want = ref.swiglu(x, wg[0], wu[0], wd[0])
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)
+
+
+def test_moe_ffn_zero_combine_gives_zero():
+    r = rng(6)
+    x = jnp.asarray(r.normal(size=(8, 8)), jnp.float32)
+    combine = jnp.zeros((8, 2), jnp.float32)
+    wg = jnp.asarray(r.normal(size=(2, 8, 8)), jnp.float32)
+    wu = jnp.asarray(r.normal(size=(2, 8, 8)), jnp.float32)
+    wd = jnp.asarray(r.normal(size=(2, 8, 8)), jnp.float32)
+    out = kernels.moe_ffn(x, combine, wg, wu, wd)
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Coupling
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 130),
+    d=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coupling_add_sub_roundtrip_bitwise(rows, d, seed):
+    """x + f - f must be exact for the same kernel — the numerical basis of
+    reversible reconstruction."""
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+    f = jnp.asarray(r.normal(size=(rows, d)), jnp.float32)
+    y = kernels.couple_add(x, f)
+    back = kernels.couple_sub(y, f)
+    want_y = np.asarray(x) + np.asarray(f)
+    np.testing.assert_array_equal(np.asarray(y), want_y)
+    # float add/sub of the same value round-trips when no catastrophic
+    # cancellation occurs; tolerance covers the one-ulp cases.
+    np.testing.assert_allclose(back, x, rtol=1e-6, atol=1e-6)
+
+
+def test_coupling_3d_shapes():
+    r = rng(9)
+    x = jnp.asarray(r.normal(size=(2, 5, 8)), jnp.float32)
+    f = jnp.asarray(r.normal(size=(2, 5, 8)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(kernels.couple_add(x, f)), np.asarray(x) + np.asarray(f)
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE (ref-only helper used by both model paths)
+# ---------------------------------------------------------------------------
+
+def test_rope_norm_preserving():
+    cos, sin = ref.rope_angles(16, 8)
+    r = rng(4)
+    x = jnp.asarray(r.normal(size=(1, 2, 16, 8)), jnp.float32)
+    y = ref.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_identity():
+    cos, sin = ref.rope_angles(4, 8)
+    r = rng(8)
+    x = jnp.asarray(r.normal(size=(1, 1, 4, 8)), jnp.float32)
+    y = ref.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(y[..., 0, :], x[..., 0, :], rtol=1e-6)

@@ -1,0 +1,177 @@
+"""L2 model-level tests: shapes, pallas/ref path equivalence, causality,
+loss masking, and adapter behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ModelConfig, TrainConfig
+from compile.methods import get_method, init_lora
+from compile.model import lm_loss, revffn_forward, standard_forward
+from compile.params import (
+    count_params,
+    flatten_params,
+    init_rev_model,
+    init_standard_model,
+    rev_model_from_standard,
+    unflatten_params,
+)
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="t", vocab_size=64, d_model=32, n_layers=2, n_heads=2, n_kv_heads=2,
+        n_experts=4, top_k=2, d_ff_expert=24, d_ff_shared=48, max_seq_len=16,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFG = tiny_cfg()
+KEY = jax.random.PRNGKey(0)
+TOKENS = (jnp.arange(32, dtype=jnp.int32).reshape(2, 16) * 5) % CFG.vocab_size
+
+
+def test_standard_forward_shapes():
+    params = init_standard_model(KEY, CFG)
+    logits, aux = standard_forward(params, TOKENS, CFG)
+    assert logits.shape == (2, 16, CFG.vocab_size)
+    assert jnp.isfinite(logits).all()
+    assert float(aux) > 0.0  # load-balance stat is positive
+
+
+def test_revffn_forward_shapes():
+    params = init_rev_model(KEY, CFG)
+    logits, _ = revffn_forward(params, TOKENS, CFG)
+    assert logits.shape == (2, 16, CFG.vocab_size)
+    assert jnp.isfinite(logits).all()
+
+
+def test_remat_does_not_change_forward():
+    params = init_standard_model(KEY, CFG)
+    l1, _ = standard_forward(params, TOKENS, CFG, remat=False)
+    l2, _ = standard_forward(params, TOKENS, CFG, remat=True)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_matches_ref_path_standard():
+    params = init_standard_model(KEY, CFG)
+    l_ref, _ = standard_forward(params, TOKENS, CFG, use_pallas=False)
+    l_pl, _ = standard_forward(params, TOKENS, CFG, use_pallas=True)
+    np.testing.assert_allclose(l_pl, l_ref, rtol=5e-4, atol=5e-4)
+
+
+def test_pallas_path_matches_ref_path_revffn():
+    params = init_rev_model(KEY, CFG)
+    l_ref, _ = revffn_forward(params, TOKENS, CFG, use_pallas=False)
+    l_pl, _ = revffn_forward(params, TOKENS, CFG, use_pallas=True)
+    np.testing.assert_allclose(l_pl, l_ref, rtol=5e-4, atol=5e-4)
+
+
+def test_causality_of_full_model():
+    """Changing a later token must not affect earlier logits."""
+    params = init_standard_model(KEY, CFG)
+    l1, _ = standard_forward(params, TOKENS, CFG)
+    toks2 = TOKENS.at[:, -1].set((TOKENS[:, -1] + 3) % CFG.vocab_size)
+    l2, _ = standard_forward(params, toks2, CFG)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_revffn_causality():
+    params = init_rev_model(KEY, CFG)
+    l1, _ = revffn_forward(params, TOKENS, CFG)
+    toks2 = TOKENS.at[:, -1].set((TOKENS[:, -1] + 3) % CFG.vocab_size)
+    l2, _ = revffn_forward(params, toks2, CFG)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_lm_loss_masking():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    targets = jnp.zeros((1, 4), jnp.int32)
+    full = lm_loss(logits, targets, jnp.ones((1, 4)))
+    half = lm_loss(logits, targets, jnp.array([[1.0, 1.0, 0.0, 0.0]]))
+    # uniform logits: per-token loss = log(V) regardless of mask count
+    np.testing.assert_allclose(full, np.log(8), rtol=1e-6)
+    np.testing.assert_allclose(half, np.log(8), rtol=1e-6)
+    # all-masked: returns 0 (defensive denom)
+    zero = lm_loss(logits, targets, jnp.zeros((1, 4)))
+    assert float(zero) == 0.0
+
+
+def test_lm_loss_label_smoothing_increases_uniform_optimal():
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (2, 8, 16))
+    targets = jnp.zeros((2, 8), jnp.int32)
+    mask = jnp.ones((2, 8))
+    base = lm_loss(logits, targets, mask, label_smoothing=0.0)
+    smooth = lm_loss(logits, targets, mask, label_smoothing=0.1)
+    assert float(smooth) != float(base)
+
+
+def test_rev_model_wraps_standard_weights():
+    std = init_standard_model(KEY, CFG)
+    rev = rev_model_from_standard(std, jax.random.PRNGKey(1), CFG)
+    np.testing.assert_array_equal(rev["embed"], std["embed"])
+    np.testing.assert_array_equal(
+        rev["layers"]["attn"]["wq"], std["layers"]["attn"]["wq"]
+    )
+    np.testing.assert_array_equal(
+        rev["layers"]["moe"]["wg"], std["layers"]["moe"]["wg"]
+    )
+
+
+def test_adapter_init_near_duplicate_map():
+    """P↑ starts near [I;I] so the wrapped block initially sees a
+    duplicated half-stream (keeps stage-1 warm-up short)."""
+    rev = init_rev_model(KEY, CFG)
+    up = rev["layers"]["adapters"]["attn_up_q"][0]  # [dh, d]
+    dh = CFG.d_half
+    eye2 = np.concatenate([np.eye(dh), np.eye(dh)], axis=1)
+    assert float(jnp.max(jnp.abs(up - eye2))) < 0.1
+
+
+def test_flatten_unflatten_roundtrip():
+    params = init_rev_model(KEY, CFG)
+    flat = flatten_params(params)
+    back = unflatten_params(flat)
+    flat2 = flatten_params(back)
+    assert [p for p, _ in flat] == [p for p, _ in flat2]
+    for (_, a), (_, b) in zip(flat, flat2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_flatten_order_is_sorted_and_deterministic():
+    params = init_standard_model(KEY, CFG)
+    paths = [p for p, _ in flatten_params(params)]
+    assert paths == sorted(paths)
+
+
+def test_param_counts_scale_with_config():
+    small = count_params(init_standard_model(KEY, tiny_cfg(n_layers=1)))
+    big = count_params(init_standard_model(KEY, tiny_cfg(n_layers=4)))
+    assert big > small
+
+
+def test_lora_changes_logits_only_after_b_nonzero():
+    """LoRA B=0 init: forward must equal the base model at t=0."""
+    cfg = CFG
+    tc = TrainConfig(method="lora", batch_size=2, seq_len=16)
+    spec = get_method("lora", cfg, tc)
+    params = spec.init(KEY)
+    base_logits, _ = standard_forward(params["base"], TOKENS, cfg, freeze_router=True)
+    lora_logits, _ = spec.forward(params, TOKENS)
+    np.testing.assert_allclose(lora_logits, base_logits, rtol=1e-5, atol=1e-5)
+    # perturb B: logits must now differ
+    params["peft"]["lora"]["wq_b"] = params["peft"]["lora"]["wq_b"] + 0.1
+    lora2, _ = spec.forward(params, TOKENS)
+    assert float(jnp.max(jnp.abs(lora2 - base_logits))) > 1e-4
+
+
+def test_ia3_identity_at_init():
+    tc = TrainConfig(method="ia3", batch_size=2, seq_len=16)
+    spec = get_method("ia3", CFG, tc)
+    params = spec.init(KEY)
+    base_logits, _ = standard_forward(params["base"], TOKENS, CFG, freeze_router=True)
+    ia3_logits, _ = spec.forward(params, TOKENS)
+    np.testing.assert_allclose(ia3_logits, base_logits, rtol=1e-5, atol=1e-5)

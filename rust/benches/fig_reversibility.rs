@@ -1,0 +1,139 @@
+//! Fig. 1 / §3.1 claim: "reconstruction error below machine epsilon" —
+//! the quantitative content of the architecture figure.
+//!
+//! Measures max-abs reconstruction error of the inverse pass (one
+//! fixed-point iteration, as the paper prescribes) through the full
+//! reversible stack, at init and after training steps, plus the
+//! round-trip wall time vs a forward pass (the recompute overhead that
+//! drives the Table-1 throughput trade-off).
+//!
+//!     cargo bench --bench fig_reversibility
+
+use revffn::data::synthetic::{Corpus, CorpusConfig};
+use revffn::data::{encode_corpus, Batcher, Tokenizer};
+use revffn::runtime::{literal, Artifact, Device, ProgramCache, Stepper};
+use revffn::util::bench;
+
+fn reconstruct_err(
+    device: &Device,
+    artifact: &Artifact,
+    prog: &revffn::runtime::Program,
+    stepper: &mut Stepper,
+    token_seed: usize,
+) -> anyhow::Result<f32> {
+    let _ = device;
+    let io = &artifact.manifest.io;
+    let params = stepper.materialize_params().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut inputs = params.to_literals().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let tokens: Vec<i32> = (0..io.batch_size * io.seq_len)
+        .map(|i| ((i * 31 + token_seed * 97) % 500) as i32 + 5)
+        .collect();
+    inputs.push(
+        literal::i32_literal(&tokens, &[io.batch_size, io.seq_len])
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+    );
+    let out = prog.run(&inputs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    literal::scalar_to_f32(&out[0]).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cache = ProgramCache::new();
+    let artifact = Artifact::load("artifacts/tiny/reconstruct")
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts`"))?;
+    let prog_arc = cache
+        .get_or_load(&device, artifact.hlo_path("reconstruct").map_err(|e| anyhow::anyhow!("{e}"))?)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let train_art = Artifact::load("artifacts/tiny/revffn_stage2")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut stepper =
+        Stepper::new(&device, &cache, train_art).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    bench::section("Fig 1 / §3.1 — reversible reconstruction error (f32 eps = 1.19e-7)");
+
+    // at init, over several token batches
+    let mut worst: f32 = 0.0;
+    for seed in 0..5 {
+        let e = reconstruct_err(&device, &artifact, &prog_arc, &mut stepper, seed)?;
+        worst = worst.max(e);
+    }
+    bench::row("max error @ init (5 batches)", format!("{worst:.3e}"));
+
+    // fixed-point iteration sweep + the exactly-invertible symmetric
+    // ablation: the paper claims 'below machine epsilon' with ONE
+    // iteration — quantify what one iteration actually buys, and what
+    // exactness costs (the Reformer-style F(X2) variant).
+    for (variant, label) in [
+        ("reconstruct_iters2", "2 fixed-point iterations"),
+        ("reconstruct_iters4", "4 fixed-point iterations"),
+        ("reconstruct_symmetric", "symmetric variant (exact inverse)"),
+    ] {
+        let dir = format!("artifacts/tiny/{variant}");
+        let Ok(art) = Artifact::load(&dir) else {
+            bench::row(label, "(artifact missing)");
+            continue;
+        };
+        let prog = cache
+            .get_or_load(&device, art.hlo_path("reconstruct").map_err(|e| anyhow::anyhow!("{e}"))?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut worst: f32 = 0.0;
+        for seed in 0..3 {
+            let e = reconstruct_err(&device, &art, &prog, &mut stepper, seed)?;
+            worst = worst.max(e);
+        }
+        bench::row(label, format!("{worst:.3e}"));
+    }
+
+    // after training steps the weights grow — error must stay at fp noise
+    let corpus = Corpus::generate(CorpusConfig { n_train: 128, ..Default::default() });
+    let tok = Tokenizer::train(&corpus.train_text(), stepper.vocab_size())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (b, s) = stepper.batch_shape();
+    let samples = encode_corpus(&tok, &corpus.train, s);
+    let mut batcher = Batcher::new(samples, b, s, 0);
+    for checkpoint in [5u64, 20] {
+        while stepper.step < checkpoint {
+            let batch = batcher.next_batch();
+            stepper.train_step(&batch, 3e-4).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        let mut worst: f32 = 0.0;
+        for seed in 0..3 {
+            let e = reconstruct_err(&device, &artifact, &prog_arc, &mut stepper, seed)?;
+            worst = worst.max(e);
+        }
+        bench::row(
+            &format!("max error after {checkpoint} train steps"),
+            format!("{worst:.3e}"),
+        );
+    }
+
+    // recompute overhead: inverse+forward round-trip vs forward alone
+    bench::section("Recompute overhead (round-trip vs forward)");
+    let io_bs = stepper.batch_shape();
+    let tokens: Vec<i32> = (0..io_bs.0 * io_bs.1).map(|i| (i % 300) as i32 + 5).collect();
+    let fwd_t = bench::time(1, 5, || {
+        let _ = stepper.forward(&tokens).unwrap();
+    });
+    bench::row("forward", fwd_t.fmt_ms());
+    let params_lits = stepper
+        .materialize_params()
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .to_literals()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let io = &artifact.manifest.io;
+    let rt_tokens: Vec<i32> =
+        (0..io.batch_size * io.seq_len).map(|i| (i % 300) as i32 + 5).collect();
+    let rt_t = bench::time(1, 5, || {
+        let mut inputs = params_lits.clone();
+        inputs.push(
+            literal::i32_literal(&rt_tokens, &[io.batch_size, io.seq_len]).unwrap(),
+        );
+        let _ = prog_arc.run(&inputs).unwrap();
+    });
+    bench::row("forward + full inverse round-trip", rt_t.fmt_ms());
+    println!(
+        "\nround-trip / forward = {:.2}x (the §3.1 'modest increase in computation')",
+        rt_t.median_s / fwd_t.median_s
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Table 1 (memory column): peak VRAM per fine-tuning method at real
+//! Qwen1.5-MoE-A2.7B geometry, under the paper's protocol (80 GB budget,
+//! per-method maximized batch) and at a fixed batch; plus the XLA
+//! live-buffer calibration on the actually-lowered tiny graphs.
+//!
+//!     cargo bench --bench table1_memory
+
+use revffn::memory::{
+    calib, format_table, ordering_checks, paper_table1, table1_memory, Assumptions, Geometry,
+    Method,
+};
+use revffn::memory::report::{activation_reduction, rev_reduction};
+use revffn::util::bench;
+
+fn main() {
+    bench::section("Table 1 — Peak VRAM, Qwen1.5-MoE-A2.7B, seq 2048, 80 GB budget");
+
+    for (name, assume) in [
+        ("paper-calibrated assumptions (bf16, 8-bit moments)", Assumptions::paper_calibrated()),
+        ("bf16 mixed-precision assumptions (fp32 moments+master)", Assumptions::bf16_mixed()),
+    ] {
+        for (proto, fixed) in [("maximized batch", None), ("fixed batch B=64", Some(64))] {
+            let rows = table1_memory(Geometry::qwen15_moe_a27b(), assume, 2048, 80.0, fixed);
+            print!("{}", format_table(&rows, &format!("-- {name}, {proto} --")));
+            if let Some(r) = rev_reduction(&rows) {
+                print!("   RevFFN vs SFT+ckpt: peak {:.0}%", r * 100.0);
+            }
+            if let Some(r) = activation_reduction(&rows) {
+                println!(", activations {:.0}% (paper text: 49%)", r * 100.0);
+            }
+            for (check, ok) in ordering_checks(&rows) {
+                println!("   [{}] {check}", if ok { "ok" } else { "MISS" });
+            }
+            println!();
+        }
+    }
+
+    bench::section("Paper Table 1 reference rows");
+    for m in Method::ALL {
+        let (gb, tput) = paper_table1(m);
+        bench::row(m.label(), format!("{gb:>6.1} GB   {tput:>6.1} samples/s"));
+    }
+
+    bench::section("Calibration vs XLA live-buffer analysis (tiny, f32)");
+    match calib::calibrate("artifacts/tiny") {
+        Ok(rows) if !rows.is_empty() => {
+            println!(
+                "{:<16} {:>16} {:>16} {:>8}",
+                "variant", "XLA temp (B)", "analytic (B)", "ratio"
+            );
+            for r in &rows {
+                println!(
+                    "{:<16} {:>16} {:>16.0} {:>8.2}",
+                    r.variant, r.measured_temp_bytes, r.analytic_act_bytes, r.ratio
+                );
+            }
+        }
+        _ => println!("(artifacts/tiny not analyzed — run `make artifacts`)"),
+    }
+    match calib::reversible_vs_naive("artifacts/tiny") {
+        Ok(Some((rev, naive))) => {
+            println!(
+                "\nreversible vs naive backward, XLA temp bytes: {rev} vs {naive} => {:.2}x reduction",
+                naive as f64 / rev as f64
+            );
+        }
+        _ => println!("(revffn_naive calibration artifact unavailable)"),
+    }
+}

@@ -1,0 +1,88 @@
+//! Table 1 (throughput column): measured optimizer-step wall time per
+//! fine-tuning method on the AOT-lowered tiny artifacts, all at the SAME
+//! batch shape, reported as samples/s plus the normalized ratio vs
+//! SFT+Checkpointing (the shape the paper's column implies).
+//!
+//! Absolute numbers are CPU-PJRT, not H800; what must reproduce is the
+//! *relative* structure: PEFT fastest, full-FT+recompute slowest,
+//! RevFFN between (recompute cost, but reversible recompute only).
+//!
+//!     cargo bench --bench table1_throughput
+
+use revffn::data::synthetic::{Corpus, CorpusConfig};
+use revffn::data::{encode_corpus, Batcher, Tokenizer};
+use revffn::memory::{paper_table1, Method};
+use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
+use revffn::util::bench;
+
+const VARIANTS: [(&str, Method); 7] = [
+    ("lora", Method::Lora),
+    ("dora", Method::Dora),
+    ("ia3", Method::Ia3),
+    ("sft", Method::SftCheckpoint),
+    ("lomo", Method::Lomo),
+    ("galore", Method::Galore),
+    ("revffn_stage2", Method::Revffn),
+];
+
+fn main() -> anyhow::Result<()> {
+    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cache = ProgramCache::new();
+
+    bench::section("Table 1 — Throughput (tiny artifacts, CPU PJRT, equal batch)");
+
+    let corpus = Corpus::generate(CorpusConfig { n_train: 256, ..Default::default() });
+
+    let mut results: Vec<(String, f64, f64)> = Vec::new(); // (label, samples/s, median ms)
+    for (variant, method) in VARIANTS {
+        let dir = format!("artifacts/tiny/{variant}");
+        let artifact = match Artifact::load(&dir) {
+            Ok(a) => a,
+            Err(e) => {
+                println!("{variant:<16} SKIPPED ({e})");
+                continue;
+            }
+        };
+        let mut stepper = Stepper::new(&device, &cache, artifact)
+            .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+        let (b, s) = stepper.batch_shape();
+        let tokenizer = Tokenizer::train(&corpus.train_text(), stepper.vocab_size())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let samples = encode_corpus(&tokenizer, &corpus.train, s);
+        let mut batcher = Batcher::new(samples, b, s, 0);
+
+        // warmup (compile-amortized) + timed steps
+        let mut times = Vec::new();
+        for i in 0..7 {
+            let batch = batcher.next_batch();
+            let stats = stepper
+                .train_step(&batch, 1e-4)
+                .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+            if i >= 2 {
+                times.push(stats.step_time_s);
+            }
+        }
+        let t = bench::summarize(&times);
+        let sps = b as f64 / t.median_s;
+        results.push((method.label().to_string(), sps, t.median_s * 1e3));
+        bench::row(method.label(), format!("{:>8.2} samples/s   ({})", sps, t.fmt_ms()));
+    }
+
+    bench::section("Normalized vs SFT+Checkpointing (ours | paper)");
+    let ours_sft = results
+        .iter()
+        .find(|(l, _, _)| l == "SFT + Checkpointing")
+        .map(|(_, s, _)| *s)
+        .unwrap_or(1.0);
+    let paper_sft = paper_table1(Method::SftCheckpoint).1;
+    for (label, sps, _) in &results {
+        let m = VARIANTS.iter().find(|(_, m)| m.label() == label).map(|(_, m)| *m).unwrap();
+        let paper_ratio = paper_table1(m).1 / paper_sft;
+        bench::row(label, format!("{:>6.2}x | {:>6.2}x", sps / ours_sft, paper_ratio));
+    }
+    println!(
+        "\nshape checks: PEFT > full-FT methods; RevFFN vs SFT ratio paper={:.2}x",
+        paper_table1(Method::Revffn).1 / paper_sft
+    );
+    Ok(())
+}

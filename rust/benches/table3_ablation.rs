@@ -1,0 +1,71 @@
+//! Table 3: ablation of the two-stage training strategy (§3.3 / §4.4),
+//! on the MMLU-like benchmark.
+//!
+//! * RevFFN (full)        — stage 1 warm-up then stage 2 joint tuning.
+//! * w/o Stage 1          — joint training from the start.
+//! * w/o Stage 2          — projections only (PEFT-like configuration).
+//!
+//! Expected shape: full > w/o-stage1 > w/o-stage2, with a large gap to
+//! the projections-only row (paper: 66.7 / 57.1 / 54.5).
+//!
+//!     cargo bench --bench table3_ablation -- [steps] [pretrain]
+
+use revffn::config::RunConfig;
+use revffn::coordinator::Trainer;
+use revffn::eval::EvalSuite;
+use revffn::runtime::Device;
+use revffn::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<u64> = std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let steps = args.first().copied().unwrap_or(60);
+    let pretrain = args.get(1).copied().unwrap_or(40);
+    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    bench::section(&format!("Table 3 — two-stage ablation ({steps} total steps/config)"));
+    println!("{:<34} {:>10} {:>9}", "Configuration", "mmlu-like", "paper");
+
+    let configs: [(&str, u64, u64, f64); 3] = [
+        ("RevFFN (Full Method)", steps / 5, steps - steps / 5, 66.7),
+        ("w/o Stage 1 (Joint Training)", 0, steps, 57.1),
+        ("w/o Stage 2 (Projections Only)", steps, 0, 54.5),
+    ];
+
+    let mut scores = Vec::new();
+    for (label, s1, s2, paper) in configs {
+        let mut cfg = RunConfig::default_tiny("artifacts/tiny");
+        cfg.method = "revffn".into();
+        cfg.schedule.stage1_steps = s1;
+        cfg.schedule.stage2_steps = s2;
+        cfg.data.pretrain_steps = pretrain;
+        cfg.eval_every = 0;
+        cfg.out_dir = format!("runs/table3/{}", label.replace([' ', '/', '('], "_")).into();
+        let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let report = trainer.run().map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+        let stepper = trainer.stepper.as_ref().expect("trained");
+        let suite = EvalSuite::new(trainer.corpus.world.clone(), 24, 7);
+        let s = suite
+            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        bench::row(label, format!("{:>9.1}% {:>8.1}", s.mmlu_like, paper));
+        eprintln!(
+            "   [{label}] eval_loss {:.3}, train {:.3}->{:.3}",
+            report.eval_loss.unwrap_or(f32::NAN),
+            report.first_loss,
+            report.final_loss
+        );
+        scores.push((label, s.mmlu_like));
+    }
+
+    println!("\nshape check (paper: Full > w/o-S1 > w/o-S2):");
+    let full = scores[0].1;
+    let no_s1 = scores[1].1;
+    let no_s2 = scores[2].1;
+    println!("  Full {:.1} vs w/o-S1 {:.1} vs w/o-S2 {:.1}", full, no_s1, no_s2);
+    println!(
+        "  [{}] full >= w/o-stage1   [{}] w/o-stage1 >= w/o-stage2",
+        if full >= no_s1 { "ok" } else { "MISS" },
+        if no_s1 >= no_s2 { "ok" } else { "MISS" },
+    );
+    Ok(())
+}

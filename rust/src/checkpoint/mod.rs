@@ -1,0 +1,169 @@
+//! `.rvt` checkpoint format — self-describing binary parameter snapshots.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "RVT1"            4 bytes
+//! step   u64               8 bytes
+//! count  u32               4 bytes
+//! repeat count times:
+//!   name_len u32, name utf-8 bytes
+//!   ndim u32, dims u32 * ndim
+//!   data f32 * prod(dims)
+//! ```
+//! Tensors are name-tagged (not positional) so checkpoints survive
+//! manifest reorderings and can be loaded into a different variant of
+//! the same model (e.g. stage-1 → stage-2 handoff across processes).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::store::ParamStore;
+
+const MAGIC: &[u8; 4] = b"RVT1";
+
+/// Write every tensor of `params` to `path`.
+pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&step.to_le_bytes())?;
+    let snap = params.snapshot();
+    f.write_all(&(snap.len() as u32).to_le_bytes())?;
+    for (name, shape, data) in snap {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for d in &shape {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        for v in &data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// A loaded checkpoint: (step, name → (shape, data)).
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Parse("not an RVT1 checkpoint".into()));
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let step = u64::from_le_bytes(b8);
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let nlen = u32::from_le_bytes(b4) as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).map_err(|e| Error::Parse(e.to_string()))?;
+        f.read_exact(&mut b4)?;
+        let ndim = u32::from_le_bytes(b4) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            f.read_exact(&mut b4)?;
+            shape.push(u32::from_le_bytes(b4) as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let mut data = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        tensors.push((name, shape, data));
+    }
+    Ok(Checkpoint { step, tensors })
+}
+
+/// Restore matching tensors into `params`; returns how many matched.
+pub fn restore_into(ckpt: &Checkpoint, params: &mut ParamStore) -> Result<usize> {
+    let mut n = 0;
+    for (name, _shape, data) in &ckpt.tensors {
+        if params.tensor(name).is_some() {
+            params.set_tensor(name, data.clone())?;
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::TensorSpec;
+
+    fn store() -> ParamStore {
+        let specs = vec![
+            TensorSpec {
+                name: "embed".into(),
+                shape: vec![4, 2],
+                dtype: "f32".into(),
+                blob: "x".into(),
+                offset: 0,
+                nbytes: 32,
+            },
+            TensorSpec {
+                name: "norm_f".into(),
+                shape: vec![2],
+                dtype: "f32".into(),
+                blob: "x".into(),
+                offset: 32,
+                nbytes: 8,
+            },
+        ];
+        let host = vec![vec![1.0; 8], vec![0.5; 2]];
+        ParamStore::from_host(specs, host).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::ScratchDir::new("ckpt").unwrap();
+        let p = dir.join("ck.rvt");
+        let s = store();
+        save(&p, &s, 42).unwrap();
+        let ck = load(&p).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.tensors.len(), 2);
+        assert_eq!(ck.tensors[0].0, "embed");
+        assert_eq!(ck.tensors[0].2, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn restore_matches_by_name() {
+        let dir = crate::util::ScratchDir::new("ckpt").unwrap();
+        let p = dir.join("ck.rvt");
+        let mut s = store();
+        s.set_tensor("norm_f", vec![9.0, 9.0]).unwrap();
+        save(&p, &s, 1).unwrap();
+        let mut fresh = store();
+        let ck = load(&p).unwrap();
+        let n = restore_into(&ck, &mut fresh).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(fresh.tensor("norm_f").unwrap(), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::ScratchDir::new("ckpt2").unwrap();
+        let p = dir.join("junk.rvt");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

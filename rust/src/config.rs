@@ -1,0 +1,336 @@
+//! Run configuration — the launcher's single source of truth.
+//!
+//! A run file (JSON — parsed with the in-crate codec) picks the artifact
+//! config dir, the fine-tuning method, the two-stage schedule lengths,
+//! LR schedule, data generation parameters and evaluation cadence.
+//! Everything has working defaults so
+//! `revffn train --artifacts artifacts/tiny --method revffn` works with
+//! no file at all.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json, ObjBuilder};
+
+/// Learning-rate schedule shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup then cosine decay to `min_factor * lr`.
+    WarmupCosine,
+    /// Linear warmup then linear decay.
+    WarmupLinear,
+}
+
+impl LrSchedule {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "constant" => Ok(LrSchedule::Constant),
+            "warmup_cosine" => Ok(LrSchedule::WarmupCosine),
+            "warmup_linear" => Ok(LrSchedule::WarmupLinear),
+            other => Err(Error::Config(format!("unknown lr schedule {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LrSchedule::Constant => "constant",
+            LrSchedule::WarmupCosine => "warmup_cosine",
+            LrSchedule::WarmupLinear => "warmup_linear",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScheduleConfig {
+    /// Stage-1 (adapter warm-up) optimizer steps. 0 disables stage 1
+    /// (the paper's "w/o Stage 1" ablation).
+    pub stage1_steps: u64,
+    /// Stage-2 (joint fine-tuning) steps. 0 disables stage 2
+    /// ("w/o Stage 2" ablation: projections only).
+    pub stage2_steps: u64,
+    pub lr_schedule: LrSchedule,
+    /// Peak LR for stage 2 (and for non-RevFFN methods).
+    pub lr: f32,
+    /// Stage-1 LR ("small learning rate", §3.3).
+    pub stage1_lr: f32,
+    pub warmup_steps: u64,
+    pub min_lr_factor: f32,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig {
+            stage1_steps: 30,
+            stage2_steps: 170,
+            lr_schedule: LrSchedule::WarmupCosine,
+            lr: 3e-4,
+            stage1_lr: 1e-4,
+            warmup_steps: 10,
+            min_lr_factor: 0.1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub n_places: usize,
+    /// LM pre-pass steps that stand in for "pre-trained checkpoint"
+    /// (0 = fine-tune from random init).
+    pub pretrain_steps: u64,
+    pub pretrain_lr: f32,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            seed: 17,
+            n_train: 1024,
+            n_eval: 128,
+            n_places: 24,
+            pretrain_steps: 60,
+            pretrain_lr: 1e-3,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact config directory (e.g. `artifacts/tiny`).
+    pub artifacts: PathBuf,
+    /// Method row: sft | lora | dora | ia3 | lomo | galore | revffn.
+    pub method: String,
+    pub schedule: ScheduleConfig,
+    pub data: DataConfig,
+    /// Gradient-accumulation microbatches per logged step.
+    pub grad_accum: usize,
+    /// Validation cadence in optimizer steps (0 = only at stage ends).
+    pub eval_every: u64,
+    /// Where to write metrics / checkpoints (created if missing).
+    pub out_dir: PathBuf,
+    pub save_checkpoint: bool,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn default_tiny(artifacts: impl Into<PathBuf>) -> Self {
+        RunConfig {
+            artifacts: artifacts.into(),
+            method: "revffn".into(),
+            schedule: ScheduleConfig::default(),
+            data: DataConfig::default(),
+            grad_accum: 1,
+            eval_every: 50,
+            out_dir: PathBuf::from("runs/latest"),
+            save_checkpoint: false,
+            seed: 0,
+        }
+    }
+
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    /// Parse from JSON; missing keys keep their defaults.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = json::parse(text)?;
+        let mut cfg = RunConfig::default_tiny("artifacts/tiny");
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            cfg.artifacts = v.into();
+        }
+        if let Some(v) = j.get("method").and_then(Json::as_str) {
+            cfg.method = v.to_string();
+        }
+        if let Some(v) = j.get("grad_accum").and_then(Json::as_usize) {
+            cfg.grad_accum = v;
+        }
+        if let Some(v) = j.get("eval_every").and_then(Json::as_u64) {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = v.into();
+        }
+        if let Some(v) = j.get("save_checkpoint").and_then(Json::as_bool) {
+            cfg.save_checkpoint = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            cfg.seed = v;
+        }
+        if let Some(s) = j.get("schedule") {
+            let d = &mut cfg.schedule;
+            if let Some(v) = s.get("stage1_steps").and_then(Json::as_u64) {
+                d.stage1_steps = v;
+            }
+            if let Some(v) = s.get("stage2_steps").and_then(Json::as_u64) {
+                d.stage2_steps = v;
+            }
+            if let Some(v) = s.get("lr_schedule").and_then(Json::as_str) {
+                d.lr_schedule = LrSchedule::parse(v)?;
+            }
+            if let Some(v) = s.get("lr").and_then(Json::as_f64) {
+                d.lr = v as f32;
+            }
+            if let Some(v) = s.get("stage1_lr").and_then(Json::as_f64) {
+                d.stage1_lr = v as f32;
+            }
+            if let Some(v) = s.get("warmup_steps").and_then(Json::as_u64) {
+                d.warmup_steps = v;
+            }
+            if let Some(v) = s.get("min_lr_factor").and_then(Json::as_f64) {
+                d.min_lr_factor = v as f32;
+            }
+        }
+        if let Some(s) = j.get("data") {
+            let d = &mut cfg.data;
+            if let Some(v) = s.get("seed").and_then(Json::as_u64) {
+                d.seed = v;
+            }
+            if let Some(v) = s.get("n_train").and_then(Json::as_usize) {
+                d.n_train = v;
+            }
+            if let Some(v) = s.get("n_eval").and_then(Json::as_usize) {
+                d.n_eval = v;
+            }
+            if let Some(v) = s.get("n_places").and_then(Json::as_usize) {
+                d.n_places = v;
+            }
+            if let Some(v) = s.get("pretrain_steps").and_then(Json::as_u64) {
+                d.pretrain_steps = v;
+            }
+            if let Some(v) = s.get("pretrain_lr").and_then(Json::as_f64) {
+                d.pretrain_lr = v as f32;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("artifacts", self.artifacts.display().to_string())
+            .str("method", &self.method)
+            .num("grad_accum", self.grad_accum as f64)
+            .num("eval_every", self.eval_every as f64)
+            .str("out_dir", self.out_dir.display().to_string())
+            .bool("save_checkpoint", self.save_checkpoint)
+            .num("seed", self.seed as f64)
+            .val(
+                "schedule",
+                ObjBuilder::new()
+                    .num("stage1_steps", self.schedule.stage1_steps as f64)
+                    .num("stage2_steps", self.schedule.stage2_steps as f64)
+                    .str("lr_schedule", self.schedule.lr_schedule.name())
+                    .num("lr", self.schedule.lr as f64)
+                    .num("stage1_lr", self.schedule.stage1_lr as f64)
+                    .num("warmup_steps", self.schedule.warmup_steps as f64)
+                    .num("min_lr_factor", self.schedule.min_lr_factor as f64)
+                    .build(),
+            )
+            .val(
+                "data",
+                ObjBuilder::new()
+                    .num("seed", self.data.seed as f64)
+                    .num("n_train", self.data.n_train as f64)
+                    .num("n_eval", self.data.n_eval as f64)
+                    .num("n_places", self.data.n_places as f64)
+                    .num("pretrain_steps", self.data.pretrain_steps as f64)
+                    .num("pretrain_lr", self.data.pretrain_lr as f64)
+                    .build(),
+            )
+            .build()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        const METHODS: [&str; 7] =
+            ["sft", "lora", "dora", "ia3", "lomo", "galore", "revffn"];
+        if !METHODS.contains(&self.method.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown method {:?}; expected one of {METHODS:?}",
+                self.method
+            )));
+        }
+        if self.method == "revffn" {
+            if self.schedule.stage1_steps == 0 && self.schedule.stage2_steps == 0 {
+                return Err(Error::Config("both stages disabled".into()));
+            }
+        } else if self.schedule.stage2_steps == 0 {
+            return Err(Error::Config("stage2_steps=0 for a single-stage method".into()));
+        }
+        if self.grad_accum == 0 {
+            return Err(Error::Config("grad_accum must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Variant directory for a method+stage under the artifact config dir.
+    pub fn variant_dir(&self, stage: u8) -> PathBuf {
+        let name = match self.method.as_str() {
+            "revffn" => format!("revffn_stage{stage}"),
+            m => m.to_string(),
+        };
+        self.artifacts.join(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default_tiny("artifacts/tiny").validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let mut c = RunConfig::default_tiny("artifacts/tiny");
+        c.method = "qlora".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn both_stages_zero_rejected() {
+        let mut c = RunConfig::default_tiny("artifacts/tiny");
+        c.schedule.stage1_steps = 0;
+        c.schedule.stage2_steps = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default_tiny("artifacts/tiny");
+        c.method = "galore".into();
+        c.schedule.stage2_steps = 99;
+        c.data.pretrain_steps = 7;
+        let text = c.to_json().to_string();
+        let c2 = RunConfig::from_json_str(&text).unwrap();
+        assert_eq!(c2.method, "galore");
+        assert_eq!(c2.schedule.stage2_steps, 99);
+        assert_eq!(c2.data.pretrain_steps, 7);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let c = RunConfig::from_json_str(r#"{"method": "lora"}"#).unwrap();
+        assert_eq!(c.method, "lora");
+        assert_eq!(c.schedule.stage2_steps, ScheduleConfig::default().stage2_steps);
+    }
+
+    #[test]
+    fn bad_lr_schedule_rejected() {
+        let r = RunConfig::from_json_str(r#"{"schedule": {"lr_schedule": "step"}}"#);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn variant_dirs() {
+        let c = RunConfig::default_tiny("a");
+        assert!(c.variant_dir(1).ends_with("revffn_stage1"));
+        let mut c2 = c.clone();
+        c2.method = "lora".into();
+        assert!(c2.variant_dir(2).ends_with("lora"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Learning-rate schedules (computed host-side; the HLO step takes lr as
+//! a scalar input, so schedules never require re-lowering).
+
+use crate::config::{LrSchedule, ScheduleConfig};
+
+/// LR at optimizer step `step` (0-based) of a phase `total` steps long.
+pub fn lr_at(sched: &ScheduleConfig, peak: f32, step: u64, total: u64) -> f32 {
+    let total = total.max(1);
+    let warm = sched.warmup_steps.min(total.saturating_sub(1));
+    if step < warm {
+        return peak * (step + 1) as f32 / warm.max(1) as f32;
+    }
+    let min_lr = peak * sched.min_lr_factor;
+    let progress = (step - warm) as f32 / (total - warm).max(1) as f32;
+    let progress = progress.clamp(0.0, 1.0);
+    match sched.lr_schedule {
+        LrSchedule::Constant => peak,
+        LrSchedule::WarmupCosine => {
+            min_lr + 0.5 * (peak - min_lr) * (1.0 + (std::f32::consts::PI * progress).cos())
+        }
+        LrSchedule::WarmupLinear => peak - (peak - min_lr) * progress,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScheduleConfig;
+
+    fn sched(kind: LrSchedule) -> ScheduleConfig {
+        ScheduleConfig { lr_schedule: kind, warmup_steps: 10, min_lr_factor: 0.1,
+                         ..Default::default() }
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = sched(LrSchedule::WarmupCosine);
+        let l1 = lr_at(&s, 1.0, 0, 100);
+        let l5 = lr_at(&s, 1.0, 4, 100);
+        let l10 = lr_at(&s, 1.0, 9, 100);
+        assert!(l1 < l5 && l5 < l10);
+        assert!((l10 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = sched(LrSchedule::WarmupCosine);
+        let end = lr_at(&s, 1.0, 99, 100);
+        assert!((end - 0.1).abs() < 0.02, "end lr {end}");
+    }
+
+    #[test]
+    fn linear_decays_to_min() {
+        let s = sched(LrSchedule::WarmupLinear);
+        let end = lr_at(&s, 2.0, 99, 100);
+        assert!((end - 0.2).abs() < 0.05, "end lr {end}");
+    }
+
+    #[test]
+    fn constant_stays_flat() {
+        let s = sched(LrSchedule::Constant);
+        assert_eq!(lr_at(&s, 0.5, 50, 100), 0.5);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = sched(LrSchedule::WarmupCosine);
+        let mut prev = f32::MAX;
+        for step in 10..100 {
+            let l = lr_at(&s, 1.0, step, 100);
+            assert!(l <= prev + 1e-6);
+            prev = l;
+        }
+    }
+}

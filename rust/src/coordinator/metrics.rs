@@ -1,0 +1,163 @@
+//! Training metrics: per-step records, throughput accounting, and a
+//! JSON-lines sink for offline analysis (loss curves in EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::util::json::ObjBuilder;
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub stage: u8,
+    pub loss: f32,
+    pub lr: f32,
+    pub grad_norm: f32,
+    pub router_aux: f32,
+    pub step_time_s: f64,
+    pub samples_per_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub eval_loss: f32,
+}
+
+/// Collects step/eval records and computes run-level summaries.
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { steps: Vec::new(), evals: Vec::new(), started: Instant::now() }
+    }
+
+    pub fn record_step(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn record_eval(&mut self, step: u64, eval_loss: f32) {
+        self.evals.push(EvalRecord { step, eval_loss });
+    }
+
+    pub fn wall_time_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Mean loss over the last `n` steps (smoothed final loss).
+    pub fn smoothed_loss(&self, n: usize) -> Option<f32> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Median samples/s over all recorded steps (Table-1 throughput).
+    pub fn median_throughput(&self) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.steps.iter().map(|r| r.samples_per_s).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(v[v.len() / 2])
+    }
+
+    /// First/last loss — the "did it learn" check.
+    pub fn loss_delta(&self) -> Option<(f32, f32)> {
+        let first = self.steps.first()?.loss;
+        let last = self.smoothed_loss(10)?;
+        Some((first, last))
+    }
+
+    /// Write JSON-lines: one object per step + per eval.
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for s in &self.steps {
+            let j = ObjBuilder::new()
+                .num("step", s.step as f64)
+                .num("stage", s.stage as f64)
+                .num("loss", s.loss as f64)
+                .num("lr", s.lr as f64)
+                .num("grad_norm", s.grad_norm as f64)
+                .num("router_aux", s.router_aux as f64)
+                .num("step_time_s", s.step_time_s)
+                .num("samples_per_s", s.samples_per_s)
+                .build();
+            writeln!(f, "{}", j.to_string())?;
+        }
+        for e in &self.evals {
+            let j = ObjBuilder::new()
+                .num("step", e.step as f64)
+                .num("eval_loss", e.eval_loss as f64)
+                .build();
+            writeln!(f, "{}", j.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, sps: f64) -> StepRecord {
+        StepRecord {
+            step,
+            stage: 2,
+            loss,
+            lr: 1e-4,
+            grad_norm: 1.0,
+            router_aux: 0.0,
+            step_time_s: 0.1,
+            samples_per_s: sps,
+        }
+    }
+
+    #[test]
+    fn smoothed_loss_tail() {
+        let mut m = Metrics::new();
+        for i in 0..20 {
+            m.record_step(rec(i, 10.0 - i as f32 * 0.1, 8.0));
+        }
+        let s = m.smoothed_loss(5).unwrap();
+        assert!(s < 8.6 && s > 8.0);
+    }
+
+    #[test]
+    fn median_throughput_robust_to_outliers() {
+        let mut m = Metrics::new();
+        m.record_step(rec(0, 1.0, 100.0)); // first-step compile outlier
+        for i in 1..10 {
+            m.record_step(rec(i, 1.0, 10.0));
+        }
+        assert_eq!(m.median_throughput().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn jsonl_written() {
+        let dir = crate::util::ScratchDir::new("metrics").unwrap();
+        let mut m = Metrics::new();
+        m.record_step(rec(0, 5.0, 1.0));
+        m.record_eval(0, 4.5);
+        let p = dir.join("metrics.jsonl");
+        m.write_jsonl(&p).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+}

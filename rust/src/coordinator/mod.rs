@@ -1,0 +1,11 @@
+//! L3 coordination: the trainer (launch → pre-pass → two-stage schedule →
+//! metrics/checkpoints), LR schedules, and metrics sinks.
+
+pub mod lr;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{Metrics, StepRecord};
+pub use schedule::{plan, Phase};
+pub use trainer::{TrainReport, Trainer};

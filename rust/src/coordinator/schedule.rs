@@ -1,0 +1,98 @@
+//! Two-stage training schedule (§3.3).
+//!
+//! Stage 1 ("adapter warm-up"): only the projection adapters P↑/P↓ and
+//! the stream norms train, at a small LR — realised by executing the
+//! `revffn_stage1` artifact, whose train_step computes gradients for the
+//! adapter subset only. Stage 2 ("joint fine-tuning"): everything except
+//! the MoE routers trains (`revffn_stage2`). Non-RevFFN methods run a
+//! single stage.
+//!
+//! The ablations of Table 3 are schedule edits: `w/o Stage 1` sets
+//! stage1_steps = 0; `w/o Stage 2` sets stage2_steps = 0 and extends
+//! stage 1.
+
+use crate::config::RunConfig;
+
+/// One executable phase of a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    /// 1 or 2 — selects the artifact variant for RevFFN.
+    pub stage: u8,
+    pub steps: u64,
+    pub peak_lr: f32,
+    pub label: &'static str,
+}
+
+/// Expand a run config into its ordered phases.
+pub fn plan(cfg: &RunConfig) -> Vec<Phase> {
+    let s = &cfg.schedule;
+    if cfg.method != "revffn" {
+        return vec![Phase {
+            stage: 2,
+            steps: s.stage2_steps,
+            peak_lr: s.lr,
+            label: "finetune",
+        }];
+    }
+    let mut phases = Vec::new();
+    if s.stage1_steps > 0 {
+        phases.push(Phase {
+            stage: 1,
+            steps: s.stage1_steps,
+            peak_lr: s.stage1_lr,
+            label: "stage1-adapter-warmup",
+        });
+    }
+    if s.stage2_steps > 0 {
+        phases.push(Phase {
+            stage: 2,
+            steps: s.stage2_steps,
+            peak_lr: s.lr,
+            label: "stage2-joint-finetune",
+        });
+    }
+    phases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn revffn_has_two_phases() {
+        let cfg = RunConfig::default_tiny("a");
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].stage, 1);
+        assert_eq!(p[1].stage, 2);
+        assert!(p[0].peak_lr < p[1].peak_lr, "stage-1 LR must be small (§3.3)");
+    }
+
+    #[test]
+    fn ablation_without_stage1() {
+        let mut cfg = RunConfig::default_tiny("a");
+        cfg.schedule.stage1_steps = 0;
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].stage, 2);
+    }
+
+    #[test]
+    fn ablation_without_stage2() {
+        let mut cfg = RunConfig::default_tiny("a");
+        cfg.schedule.stage2_steps = 0;
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].stage, 1);
+    }
+
+    #[test]
+    fn baselines_are_single_phase() {
+        let mut cfg = RunConfig::default_tiny("a");
+        cfg.method = "lora".into();
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].label, "finetune");
+    }
+}

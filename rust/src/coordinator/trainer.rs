@@ -1,0 +1,274 @@
+//! The training coordinator: corpus → tokenizer → optional LM pre-pass →
+//! two-stage fine-tuning with LR scheduling, gradient-accumulation,
+//! periodic validation, metrics and checkpointing.
+//!
+//! This is the paper's launcher. It owns no math: every optimizer step
+//! is one PJRT execution of the AOT train_step artifact for the active
+//! (method, stage) variant.
+
+use std::path::PathBuf;
+
+use crate::checkpoint;
+use crate::config::RunConfig;
+use crate::coordinator::lr::lr_at;
+use crate::coordinator::metrics::{Metrics, StepRecord};
+use crate::coordinator::schedule::{plan, Phase};
+use crate::data::dataset::{encode_corpus, encode_lm_text};
+use crate::data::synthetic::{Corpus, CorpusConfig};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::Batcher;
+use crate::error::{Error, Result};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::pjrt::{Device, ProgramCache};
+use crate::runtime::stepper::Stepper;
+
+/// Outcome summary of a full run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub method: String,
+    pub steps_run: u64,
+    pub final_loss: f32,
+    pub first_loss: f32,
+    pub eval_loss: Option<f32>,
+    pub median_samples_per_s: f64,
+    pub wall_time_s: f64,
+}
+
+pub struct Trainer<'d> {
+    device: &'d Device,
+    cache: ProgramCache,
+    pub cfg: RunConfig,
+    pub tokenizer: Tokenizer,
+    pub corpus: Corpus,
+    pub metrics: Metrics,
+    /// The live model after `run` (for the eval suite).
+    pub stepper: Option<Stepper>,
+}
+
+impl<'d> Trainer<'d> {
+    /// Prepare data (generate corpus, train tokenizer, no XLA work yet).
+    pub fn new(device: &'d Device, cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let corpus = Corpus::generate(CorpusConfig {
+            seed: cfg.data.seed,
+            n_train: cfg.data.n_train,
+            n_eval: cfg.data.n_eval,
+            n_places: cfg.data.n_places,
+            ..Default::default()
+        });
+        // vocab size comes from the artifact geometry
+        let probe_stage = if cfg.method == "revffn" && cfg.schedule.stage2_steps == 0 {
+            1
+        } else {
+            2
+        };
+        let probe = Artifact::load(cfg.variant_dir(probe_stage))?;
+        let vocab = probe.manifest.model.vocab_size;
+        let tokenizer = Tokenizer::train(&corpus.pretrain_text(), vocab)?;
+        Ok(Trainer {
+            device,
+            cache: ProgramCache::new(),
+            cfg,
+            tokenizer,
+            corpus,
+            metrics: Metrics::new(),
+            stepper: None,
+        })
+    }
+
+    fn load_stepper(&self, stage: u8) -> Result<Stepper> {
+        let artifact = Artifact::load(self.cfg.variant_dir(stage))?;
+        Stepper::new(self.device, &self.cache, artifact)
+    }
+
+    /// LM pre-pass on the standard model — the "pre-trained checkpoint"
+    /// substitute. Returns the pre-passed parameter store.
+    fn pretrain(&mut self) -> Result<Option<Stepper>> {
+        if self.cfg.data.pretrain_steps == 0 {
+            return Ok(None);
+        }
+        let sft_dir = self.cfg.artifacts.join("sft");
+        if !sft_dir.join("manifest.json").exists() {
+            return Ok(None); // artifact set without sft (pallas-only dirs)
+        }
+        let artifact = Artifact::load(&sft_dir)?;
+        let mut stepper = Stepper::new(self.device, &self.cache, artifact)?;
+        let (b, s) = stepper.batch_shape();
+        let samples = encode_lm_text(&self.tokenizer, &self.corpus.pretrain_text(), s);
+        let mut batcher = Batcher::new(samples, b, s, self.cfg.seed ^ 0xface);
+        for step in 0..self.cfg.data.pretrain_steps {
+            let batch = batcher.next_batch();
+            let stats = stepper.train_step(&batch, self.cfg.data.pretrain_lr)?;
+            if step % 20 == 0 {
+                eprintln!("[pretrain] step {step} loss {:.4}", stats.loss);
+            }
+        }
+        Ok(Some(stepper))
+    }
+
+    /// Execute the full schedule. Returns the report; the trained model
+    /// stays available in `self.stepper`.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let phases = plan(&self.cfg);
+        if phases.is_empty() {
+            return Err(Error::Config("empty schedule".into()));
+        }
+
+        let pre = self.pretrain()?;
+
+        let mut pre = pre;
+        let mut current: Option<Stepper> = None;
+        let mut eval_loss = None;
+        for phase in &phases {
+            let mut stepper = self.load_stepper(phase.stage)?;
+            // parameter handoff: stage N adopts stage N-1 (or the pre-pass)
+            if let Some(prev) = current.as_mut() {
+                let params = prev.materialize_params()?;
+                stepper.adopt_params(params)?;
+            } else if let Some(pre) = pre.as_mut() {
+                let params = pre.materialize_params()?;
+                let copied = stepper.adopt_params(params)?;
+                eprintln!("[handoff] adopted {copied} pre-passed tensors");
+            }
+            eval_loss = Some(self.run_phase(&mut stepper, phase)?);
+            current = Some(stepper);
+        }
+
+        let mut stepper = current.expect("at least one phase ran");
+        stepper.materialize_params()?;
+        let (first, last) = self.metrics.loss_delta().unwrap_or((0.0, 0.0));
+        let report = TrainReport {
+            method: self.cfg.method.clone(),
+            steps_run: self.metrics.steps.len() as u64,
+            final_loss: last,
+            first_loss: first,
+            eval_loss,
+            median_samples_per_s: self.metrics.median_throughput().unwrap_or(0.0),
+            wall_time_s: self.metrics.wall_time_s(),
+        };
+
+        std::fs::create_dir_all(&self.cfg.out_dir)?;
+        self.metrics
+            .write_jsonl(self.cfg.out_dir.join("metrics.jsonl"))?;
+        if self.cfg.save_checkpoint {
+            checkpoint::save(
+                &self.cfg.out_dir.join("final.rvt"),
+                &stepper.params,
+                stepper.step,
+            )?;
+        }
+        self.stepper = Some(stepper);
+        Ok(report)
+    }
+
+    fn run_phase(&mut self, stepper: &mut Stepper, phase: &Phase) -> Result<f32> {
+        let (b, s) = stepper.batch_shape();
+        let train_samples = encode_corpus(&self.tokenizer, &self.corpus.train, s);
+        let eval_samples = encode_corpus(&self.tokenizer, &self.corpus.eval, s);
+        if train_samples.is_empty() {
+            return Err(Error::Config(format!("no training samples fit seq_len {s}")));
+        }
+        let mut batcher = Batcher::new(train_samples, b, s, self.cfg.seed);
+        let eval_batcher = Batcher::new(eval_samples, b, s, self.cfg.seed);
+
+        eprintln!(
+            "[{}] {} steps, peak lr {:.2e}, batch {}x{}",
+            phase.label, phase.steps, phase.peak_lr, b, s
+        );
+        let accumulate = self.cfg.grad_accum > 1 && stepper.supports_accumulation();
+        for step in 0..phase.steps {
+            let lr = lr_at(&self.cfg.schedule, phase.peak_lr, step, phase.steps);
+            let mut loss_acc = 0.0;
+            let mut gn_acc = 0.0;
+            let mut aux_acc = 0.0;
+            let t0 = std::time::Instant::now();
+            if accumulate {
+                // true microbatch accumulation: grad-only passes summed
+                // host-side, then ONE optimizer update on the mean grad
+                let mut grads: Option<Vec<Vec<f32>>> = None;
+                for _ in 0..self.cfg.grad_accum {
+                    let batch = batcher.next_batch();
+                    let (g, loss, aux) = stepper.grad_step(&batch)?;
+                    loss_acc += loss;
+                    aux_acc += aux;
+                    match grads.as_mut() {
+                        None => grads = Some(g),
+                        Some(acc) => {
+                            for (a, gi) in acc.iter_mut().zip(&g) {
+                                for (x, y) in a.iter_mut().zip(gi) {
+                                    *x += *y;
+                                }
+                            }
+                        }
+                    }
+                }
+                let mut grads = grads.expect("grad_accum >= 1");
+                let scale = 1.0 / self.cfg.grad_accum as f32;
+                for g in grads.iter_mut() {
+                    for x in g.iter_mut() {
+                        *x *= scale;
+                    }
+                }
+                gn_acc = stepper.apply_accumulated(&grads, lr)? * self.cfg.grad_accum as f32;
+            } else {
+                for _ in 0..self.cfg.grad_accum {
+                    let batch = batcher.next_batch();
+                    let stats = stepper.train_step(&batch, lr)?;
+                    loss_acc += stats.loss;
+                    gn_acc += stats.grad_norm;
+                    aux_acc += stats.router_aux;
+                }
+            }
+            let time_acc = t0.elapsed().as_secs_f64();
+            let ga = self.cfg.grad_accum as f32;
+            let samples = (b * self.cfg.grad_accum) as f64;
+            self.metrics.record_step(StepRecord {
+                step: stepper.step,
+                stage: phase.stage,
+                loss: loss_acc / ga,
+                lr,
+                grad_norm: gn_acc / ga,
+                router_aux: aux_acc / ga,
+                step_time_s: time_acc,
+                samples_per_s: samples / time_acc.max(1e-9),
+            });
+            if step % 25 == 0 {
+                eprintln!(
+                    "[{}] step {}/{} loss {:.4} lr {:.2e}",
+                    phase.label,
+                    step,
+                    phase.steps,
+                    loss_acc / ga,
+                    lr
+                );
+            }
+            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                let el = self.validate(stepper, &eval_batcher)?;
+                self.metrics.record_eval(stepper.step, el);
+                eprintln!("[{}] step {} eval_loss {:.4}", phase.label, step, el);
+            }
+        }
+        let el = self.validate(stepper, &eval_batcher)?;
+        self.metrics.record_eval(stepper.step, el);
+        Ok(el)
+    }
+
+    fn validate(&self, stepper: &Stepper, eval_batcher: &Batcher) -> Result<f32> {
+        let batches = eval_batcher.sequential_batches();
+        if batches.is_empty() {
+            return Ok(f32::NAN);
+        }
+        let mut total = 0.0;
+        let n = batches.len().min(8); // cap validation cost
+        for batch in batches.iter().take(n) {
+            let (loss, _aux) = stepper.eval_step(batch)?;
+            total += loss;
+        }
+        Ok(total / n as f32)
+    }
+
+    /// Path of the metrics file for this run.
+    pub fn metrics_path(&self) -> PathBuf {
+        self.cfg.out_dir.join("metrics.jsonl")
+    }
+}

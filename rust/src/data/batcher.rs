@@ -1,0 +1,147 @@
+//! Batch assembly: deterministic shuffling, epoch iteration, and
+//! microbatch grouping for gradient accumulation.
+
+use crate::data::dataset::Sample;
+use crate::util::rng::Rng;
+use crate::runtime::stepper::Batch;
+
+/// Epoch-shuffling batcher over encoded samples.
+pub struct Batcher {
+    samples: Vec<Sample>,
+    order: Vec<usize>,
+    cursor: usize,
+    batch_size: usize,
+    seq_len: usize,
+    rng: Rng,
+    pub epoch: u64,
+}
+
+impl Batcher {
+    pub fn new(samples: Vec<Sample>, batch_size: usize, seq_len: usize, seed: u64) -> Self {
+        let order: Vec<usize> = (0..samples.len()).collect();
+        let mut b = Batcher {
+            samples,
+            order,
+            cursor: 0,
+            batch_size,
+            seq_len,
+            rng: Rng::seed_from_u64(seed),
+            epoch: 0,
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Number of batches per epoch (full batches only).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.samples.len() / self.batch_size
+    }
+
+    /// Assemble the next batch, wrapping to a new shuffled epoch as needed.
+    pub fn next_batch(&mut self) -> Batch {
+        let b = self.batch_size;
+        let s = self.seq_len;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        let mut mask = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            let sample = &self.samples[self.order[self.cursor]];
+            self.cursor += 1;
+            tokens.extend_from_slice(&sample.tokens);
+            targets.extend_from_slice(&sample.targets);
+            mask.extend_from_slice(&sample.loss_mask);
+        }
+        Batch { tokens, targets, loss_mask: mask, batch_size: b, seq_len: s }
+    }
+
+    /// Deterministic, in-order batches over the whole set (validation).
+    pub fn sequential_batches(&self) -> Vec<Batch> {
+        let b = self.batch_size;
+        let s = self.seq_len;
+        self.samples
+            .chunks(b)
+            .filter(|c| c.len() == b)
+            .map(|chunk| {
+                let mut tokens = Vec::with_capacity(b * s);
+                let mut targets = Vec::with_capacity(b * s);
+                let mut mask = Vec::with_capacity(b * s);
+                for sample in chunk {
+                    tokens.extend_from_slice(&sample.tokens);
+                    targets.extend_from_slice(&sample.targets);
+                    mask.extend_from_slice(&sample.loss_mask);
+                }
+                Batch { tokens, targets, loss_mask: mask, batch_size: b, seq_len: s }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples(n: usize, seq: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| Sample {
+                tokens: vec![i as i32; seq],
+                targets: vec![i as i32; seq],
+                loss_mask: vec![1.0; seq],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batches_have_static_shape() {
+        let mut b = Batcher::new(samples(10, 8), 4, 8, 0);
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            batch.validate().unwrap();
+            assert_eq!(batch.tokens.len(), 32);
+        }
+    }
+
+    #[test]
+    fn epoch_wraps_and_reshuffles() {
+        let mut b = Batcher::new(samples(8, 4), 4, 4, 1);
+        assert_eq!(b.epoch, 0);
+        b.next_batch();
+        b.next_batch();
+        b.next_batch(); // wraps
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(samples(16, 4), 4, 4, 7);
+        let mut b = Batcher::new(samples(16, 4), 4, 4, 7);
+        for _ in 0..6 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn sequential_covers_in_order() {
+        let b = Batcher::new(samples(9, 4), 2, 4, 0);
+        let batches = b.sequential_batches();
+        assert_eq!(batches.len(), 4); // 9/2 full batches
+        assert_eq!(batches[0].tokens[0], 0);
+        assert_eq!(batches[1].tokens[0], 2 * 4 / 4); // sample index 2
+    }
+}

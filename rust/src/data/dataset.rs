@@ -1,0 +1,174 @@
+//! Instruction formatting, tokenization, packing and loss masking.
+//!
+//! Mirrors the Dolly SFT recipe: each example is rendered with an
+//! instruction template, tokenized, and the loss mask covers ONLY the
+//! response tokens (+ EOS). Sequences are truncated/padded to a fixed
+//! `seq_len` matching the AOT artifact's static shape.
+
+use crate::data::synthetic::Example;
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::error::{Error, Result};
+
+/// One packed training sequence.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+}
+
+/// Render the instruction template (prompt part only).
+pub fn render_prompt(instruction: &str) -> String {
+    format!("### Instruction:\n{instruction}\n### Response:\n")
+}
+
+/// Tokenize + mask one example into a fixed-length `Sample`.
+///
+/// Layout: `[BOS, prompt…, response…, EOS, PAD…]`; `targets[t]` is
+/// `tokens[t+1]` (next-token prediction), `loss_mask` is 1.0 exactly on
+/// positions whose *target* is a response token or the EOS.
+pub fn encode_example(tok: &Tokenizer, ex: &Example, seq_len: usize) -> Result<Sample> {
+    let prompt_ids = tok.encode(&render_prompt(&ex.instruction));
+    let resp_ids = tok.encode(&ex.response);
+
+    let mut tokens = Vec::with_capacity(seq_len + 1);
+    tokens.push(BOS);
+    tokens.extend_from_slice(&prompt_ids);
+    let resp_start = tokens.len();
+    tokens.extend_from_slice(&resp_ids);
+    tokens.push(EOS);
+    if resp_start >= seq_len {
+        return Err(Error::Config(format!(
+            "prompt alone ({resp_start} tokens) exceeds seq_len {seq_len}"
+        )));
+    }
+    tokens.truncate(seq_len + 1);
+    let valid = tokens.len();
+
+    let mut toks = vec![PAD; seq_len];
+    let mut targets = vec![PAD; seq_len];
+    let mut mask = vec![0f32; seq_len];
+    for t in 0..seq_len {
+        if t < valid {
+            toks[t] = tokens[t];
+        }
+        if t + 1 < valid {
+            targets[t] = tokens[t + 1];
+            // target position t predicts tokens[t+1]; that token is a
+            // response/EOS token iff t+1 >= resp_start
+            if t + 1 >= resp_start {
+                mask[t] = 1.0;
+            }
+        }
+    }
+    Ok(Sample { tokens: toks, targets, loss_mask: mask })
+}
+
+/// Plain language-modeling sample from running text (the pre-pass):
+/// every non-pad position carries loss.
+pub fn encode_lm_chunk(ids: &[i32], seq_len: usize) -> Sample {
+    let mut toks = vec![PAD; seq_len];
+    let mut targets = vec![PAD; seq_len];
+    let mut mask = vec![0f32; seq_len];
+    let n = ids.len().min(seq_len + 1);
+    for t in 0..seq_len {
+        if t < n {
+            toks[t] = ids[t];
+        }
+        if t + 1 < n {
+            targets[t] = ids[t + 1];
+            mask[t] = 1.0;
+        }
+    }
+    Sample { tokens: toks, targets, loss_mask: mask }
+}
+
+/// Tokenize a whole corpus into fixed-length instruction samples,
+/// dropping examples whose prompt doesn't fit.
+pub fn encode_corpus(tok: &Tokenizer, examples: &[Example], seq_len: usize) -> Vec<Sample> {
+    examples
+        .iter()
+        .filter_map(|ex| encode_example(tok, ex, seq_len).ok())
+        .collect()
+}
+
+/// Chunk running text into LM samples (stride = seq_len).
+pub fn encode_lm_text(tok: &Tokenizer, text: &str, seq_len: usize) -> Vec<Sample> {
+    let ids = tok.encode(text);
+    ids.chunks(seq_len + 1)
+        .filter(|c| c.len() > 1)
+        .map(|c| encode_lm_chunk(c, seq_len))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Family;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::byte_level(512)
+    }
+
+    fn ex() -> Example {
+        Example {
+            instruction: "Compute 2 plus 3.".into(),
+            response: "The answer is 5.".into(),
+            family: Family::Arithmetic,
+        }
+    }
+
+    #[test]
+    fn shapes_are_fixed() {
+        let s = encode_example(&tok(), &ex(), 96).unwrap();
+        assert_eq!(s.tokens.len(), 96);
+        assert_eq!(s.targets.len(), 96);
+        assert_eq!(s.loss_mask.len(), 96);
+    }
+
+    #[test]
+    fn mask_covers_only_response() {
+        let t = tok();
+        let e = ex();
+        let s = encode_example(&t, &e, 128).unwrap();
+        let prompt_len = t.encode(&render_prompt(&e.instruction)).len() + 1; // +BOS
+        // no loss on prompt-predicting positions
+        for i in 0..prompt_len - 1 {
+            assert_eq!(s.loss_mask[i], 0.0, "pos {i}");
+        }
+        let resp_len = t.encode(&e.response).len();
+        let masked: f32 = s.loss_mask.iter().sum();
+        assert_eq!(masked as usize, resp_len + 1); // response + EOS
+    }
+
+    #[test]
+    fn targets_shift_by_one() {
+        let s = encode_example(&tok(), &ex(), 128).unwrap();
+        for i in 0..127 {
+            if s.targets[i] != PAD {
+                assert_eq!(s.targets[i], s.tokens[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn too_long_prompt_rejected() {
+        let e = Example {
+            instruction: "x".repeat(400),
+            response: "y".into(),
+            family: Family::Rewrite,
+        };
+        assert!(encode_example(&tok(), &e, 64).is_err());
+    }
+
+    #[test]
+    fn lm_chunks_cover_text() {
+        let t = tok();
+        let samples = encode_lm_text(&t, &"hello world. ".repeat(40), 32);
+        assert!(samples.len() > 2);
+        for s in &samples {
+            assert_eq!(s.tokens.len(), 32);
+            assert!(s.loss_mask.iter().sum::<f32>() > 0.0);
+        }
+    }
+}

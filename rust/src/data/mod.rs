@@ -1,0 +1,12 @@
+//! Data pipeline: tokenizer training, synthetic Dolly-like corpus
+//! generation, instruction formatting + loss masking, and batching.
+
+pub mod batcher;
+pub mod dataset;
+pub mod synthetic;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use dataset::{encode_corpus, encode_example, encode_lm_text, Sample};
+pub use synthetic::{Corpus, CorpusConfig, Example, Family, World};
+pub use tokenizer::Tokenizer;

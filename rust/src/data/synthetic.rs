@@ -1,0 +1,312 @@
+//! Synthetic Dolly-like instruction corpus.
+//!
+//! Substitute for databricks-dolly-15k (see DESIGN.md §Substitutions):
+//! deterministic, templated instruction/response pairs over four task
+//! families chosen so that each downstream benchmark of Table 2 has a
+//! synthetic counterpart with the same *discrimination*:
+//!
+//! * `Knowledge`  — facts from a closed random world ("The fruit grown in
+//!   Valdor is the plum.") → MMLU-like MCQ evaluation.
+//! * `Arithmetic` — multi-step modular-sum word problems → GSM8K-like.
+//! * `Rewrite`    — instruction-following transformations (reverse,
+//!   uppercase, extract) → MT-Bench-like response quality.
+//! * A token-permuted "language B" rendering of Knowledge tasks →
+//!   Multilingual-like transfer (fine-tuning only on language A should
+//!   slightly regress language B, the paper's multilingual dip).
+//!
+//! Everything is seeded; train/eval splits are disjoint by construction.
+
+use crate::util::json::ObjBuilder;
+use crate::util::rng::Rng;
+
+/// One instruction/response pair.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub instruction: String,
+    pub response: String,
+    pub family: Family,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Knowledge,
+    Arithmetic,
+    Rewrite,
+    KnowledgeLangB,
+}
+
+/// The closed world the knowledge tasks draw from.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub places: Vec<String>,
+    pub items: Vec<String>,
+    /// facts[p] = index into `items` for place p.
+    pub facts: Vec<usize>,
+}
+
+const PLACE_STEMS: [&str; 12] = [
+    "vald", "quri", "zem", "tolar", "brix", "nuvo", "kesh", "mirra", "olth",
+    "pryn", "sorv", "ulek",
+];
+const ITEM_WORDS: [&str; 8] = [
+    "plum", "iron", "silk", "rice", "opal", "wool", "salt", "jade",
+];
+
+impl World {
+    pub fn generate(seed: u64, n_places: usize) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut places = Vec::with_capacity(n_places);
+        for i in 0..n_places {
+            let stem = PLACE_STEMS[i % PLACE_STEMS.len()];
+            let suffix = ["or", "ia", "um", "eth"][(i / PLACE_STEMS.len()) % 4];
+            places.push(format!("{stem}{suffix}"));
+        }
+        let items: Vec<String> = ITEM_WORDS.iter().map(|s| s.to_string()).collect();
+        let facts = (0..n_places).map(|_| rng.gen_range(0..items.len())).collect();
+        World { places, items, facts }
+    }
+
+    pub fn fact_sentence(&self, p: usize) -> (String, String) {
+        (
+            format!("What is the product of {}?", self.places[p]),
+            format!("The product of {} is {}.", self.places[p], self.items[self.facts[p]]),
+        )
+    }
+}
+
+/// Corpus generator configuration.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub n_places: usize,
+    /// Max operands in an arithmetic chain (>=2).
+    pub max_chain: usize,
+    /// Include the token-permuted language-B knowledge split in training?
+    /// (The fine-tuning corpus is English-only, like Dolly; language B
+    /// appears only in the *pre-training* mix and the eval suite.)
+    pub train_lang_b: bool,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            seed: 17,
+            n_train: 2048,
+            n_eval: 256,
+            n_places: 24,
+            max_chain: 4,
+            train_lang_b: false,
+        }
+    }
+}
+
+/// Caesar-style letter permutation for "language B".
+pub fn to_lang_b(text: &str) -> String {
+    text.chars()
+        .map(|c| match c {
+            'a'..='z' => (b'a' + (c as u8 - b'a' + 7) % 26) as char,
+            'A'..='Z' => (b'A' + (c as u8 - b'A' + 7) % 26) as char,
+            _ => c,
+        })
+        .collect()
+}
+
+fn arithmetic_example(rng: &mut Rng, max_chain: usize) -> Example {
+    let n = rng.gen_range_inclusive(2, max_chain.max(2));
+    let nums: Vec<u32> = (0..n).map(|_| rng.gen_u32_range(1..20)).collect();
+    let sum: u32 = nums.iter().sum();
+    let list = nums
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(" plus ");
+    let mut steps = String::new();
+    let mut acc = nums[0];
+    for &v in &nums[1..] {
+        steps.push_str(&format!("{acc} plus {v} is {}. ", acc + v));
+        acc += v;
+    }
+    Example {
+        instruction: format!("Compute {list}."),
+        response: format!("{steps}The answer is {sum}."),
+        family: Family::Arithmetic,
+    }
+}
+
+fn rewrite_example(rng: &mut Rng) -> Example {
+    let words = ["river", "stone", "amber", "falcon", "meadow", "copper", "harbor"];
+    let w = words[rng.gen_range(0..words.len())];
+    match rng.gen_range(0..3) {
+        0 => Example {
+            instruction: format!("Spell the word {w} backwards."),
+            response: format!("{}.", w.chars().rev().collect::<String>()),
+            family: Family::Rewrite,
+        },
+        1 => Example {
+            instruction: format!("Write the word {w} in capital letters."),
+            response: format!("{}.", w.to_uppercase()),
+            family: Family::Rewrite,
+        },
+        _ => Example {
+            instruction: format!("What is the first letter of {w}?"),
+            response: format!("{}.", w.chars().next().unwrap()),
+            family: Family::Rewrite,
+        },
+    }
+}
+
+/// Generated corpus: disjoint train / eval splits + the world.
+pub struct Corpus {
+    pub train: Vec<Example>,
+    pub eval: Vec<Example>,
+    pub world: World,
+    pub config: CorpusConfig,
+}
+
+impl Corpus {
+    pub fn generate(config: CorpusConfig) -> Self {
+        let world = World::generate(config.seed ^ 0x9e37_79b9, config.n_places);
+        let mut rng = Rng::seed_from_u64(config.seed);
+        let make = |n: usize, rng: &mut Rng| -> Vec<Example> {
+            (0..n)
+                .map(|_| match rng.gen_range(0..10) {
+                    0..=3 => {
+                        let p = rng.gen_range(0..world.places.len());
+                        let (q, a) = world.fact_sentence(p);
+                        Example { instruction: q, response: a, family: Family::Knowledge }
+                    }
+                    4..=6 => arithmetic_example(rng, config.max_chain),
+                    7..=8 => rewrite_example(rng),
+                    _ => {
+                        let p = rng.gen_range(0..world.places.len());
+                        let (q, a) = world.fact_sentence(p);
+                        if config.train_lang_b {
+                            Example {
+                                instruction: to_lang_b(&q),
+                                response: to_lang_b(&a),
+                                family: Family::KnowledgeLangB,
+                            }
+                        } else {
+                            Example { instruction: q, response: a, family: Family::Knowledge }
+                        }
+                    }
+                })
+                .collect()
+        };
+        let train = make(config.n_train, &mut rng);
+        let eval = make(config.n_eval, &mut rng);
+        Corpus { train, eval, world, config }
+    }
+
+    /// Raw text of the training split (tokenizer training / LM pre-pass).
+    pub fn train_text(&self) -> String {
+        let mut s = String::new();
+        for ex in &self.train {
+            s.push_str(&ex.instruction);
+            s.push(' ');
+            s.push_str(&ex.response);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Pre-training mix: both languages, all families (the 'pre-trained
+    /// checkpoint' substitute — see DESIGN.md §Substitutions).
+    pub fn pretrain_text(&self) -> String {
+        let mut s = self.train_text();
+        for ex in &self.train {
+            s.push_str(&to_lang_b(&ex.instruction));
+            s.push(' ');
+            s.push_str(&to_lang_b(&ex.response));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Corpus::generate(CorpusConfig::default());
+        let b = Corpus::generate(CorpusConfig::default());
+        assert_eq!(a.train.len(), b.train.len());
+        assert_eq!(a.train[0].instruction, b.train[0].instruction);
+        assert_eq!(a.world.facts, b.world.facts);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Corpus::generate(CorpusConfig { seed: 1, ..Default::default() });
+        let b = Corpus::generate(CorpusConfig { seed: 2, ..Default::default() });
+        assert_ne!(a.world.facts, b.world.facts);
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        let c = Corpus::generate(CorpusConfig::default());
+        for ex in c.train.iter().filter(|e| e.family == Family::Arithmetic) {
+            let nums: Vec<u32> = ex
+                .instruction
+                .trim_start_matches("Compute ")
+                .trim_end_matches('.')
+                .split(" plus ")
+                .map(|t| t.parse().unwrap())
+                .collect();
+            let sum: u32 = nums.iter().sum();
+            assert!(ex.response.contains(&format!("The answer is {sum}.")));
+        }
+    }
+
+    #[test]
+    fn lang_b_is_a_bijection() {
+        let s = "The product of valdor is plum.";
+        let b = to_lang_b(s);
+        assert_ne!(s, b);
+        // applying the +7 shift 26/ gcd(7,26)=26 times cycles back; check
+        // instead that distinct letters stay distinct:
+        let b2 = to_lang_b(&b);
+        assert_ne!(b, b2);
+        assert_eq!(s.len(), b.len());
+    }
+
+    #[test]
+    fn world_facts_stable_across_splits() {
+        let c = Corpus::generate(CorpusConfig::default());
+        // every knowledge response in eval must agree with the world
+        for ex in c.eval.iter().filter(|e| e.family == Family::Knowledge) {
+            let place = ex
+                .instruction
+                .trim_start_matches("What is the product of ")
+                .trim_end_matches('?');
+            let p = c.world.places.iter().position(|x| x == place).unwrap();
+            assert!(ex.response.contains(&c.world.items[c.world.facts[p]]));
+        }
+    }
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Knowledge => "knowledge",
+            Family::Arithmetic => "arithmetic",
+            Family::Rewrite => "rewrite",
+            Family::KnowledgeLangB => "knowledge_lang_b",
+        }
+    }
+}
+
+impl Example {
+    /// JSONL row (the `gen-data` CLI output).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        ObjBuilder::new()
+            .str("instruction", &self.instruction)
+            .str("response", &self.response)
+            .str("family", self.family.name())
+            .build()
+    }
+}

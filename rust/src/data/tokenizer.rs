@@ -1,0 +1,209 @@
+//! Byte-level BPE tokenizer (trained from scratch — no external deps).
+//!
+//! Substrate for the Dolly-style instruction pipeline: the paper
+//! fine-tunes a pre-trained tokenizer'd model; here the tokenizer is
+//! trained on the synthetic corpus at data-generation time and shipped
+//! with the run directory. IDs 0..=3 are reserved: PAD, BOS, EOS, UNK;
+//! ids 4..260 are the raw bytes; merges fill the rest of the vocab.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+const BYTE_BASE: i32 = 4;
+
+/// A trained byte-BPE model.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// Merge rules in training order: (left, right) -> new id.
+    pub merges: Vec<(i32, i32)>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Byte-only tokenizer (no merges) — always valid for vocab >= 260.
+    pub fn byte_level(vocab_size: usize) -> Self {
+        Tokenizer { merges: Vec::new(), vocab_size }
+    }
+
+    /// Train merges greedily on `corpus` until `vocab_size` ids are used.
+    ///
+    /// Classic BPE: repeatedly merge the most frequent adjacent pair.
+    /// Deterministic: frequency ties break on the smaller pair ids.
+    pub fn train(corpus: &str, vocab_size: usize) -> Result<Self> {
+        if vocab_size < (BYTE_BASE as usize) + 256 {
+            return Err(Error::Config(format!(
+                "vocab_size {vocab_size} < {} (reserved + bytes)",
+                BYTE_BASE + 256
+            )));
+        }
+        let mut ids: Vec<i32> = corpus.bytes().map(|b| b as i32 + BYTE_BASE).collect();
+        let mut merges = Vec::new();
+        let mut next_id = BYTE_BASE + 256;
+        while (next_id as usize) < vocab_size {
+            let mut counts: HashMap<(i32, i32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing left worth merging
+            }
+            merges.push(pair);
+            ids = Self::apply_merge(&ids, pair, next_id);
+            next_id += 1;
+        }
+        Ok(Tokenizer { merges, vocab_size })
+    }
+
+    fn apply_merge(ids: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Encode UTF-8 text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text.bytes().map(|b| b as i32 + BYTE_BASE).collect();
+        let mut next_id = BYTE_BASE + 256;
+        for &pair in &self.merges {
+            ids = Self::apply_merge(&ids, pair, next_id);
+            next_id += 1;
+        }
+        ids
+    }
+
+    /// Decode ids back to text (merge expansion, then bytes).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut expand: HashMap<i32, (i32, i32)> = HashMap::new();
+        let mut next_id = BYTE_BASE + 256;
+        for &pair in &self.merges {
+            expand.insert(next_id, pair);
+            next_id += 1;
+        }
+        let mut bytes = Vec::new();
+        for &id in ids {
+            let mut stack = vec![id];
+            while let Some(top) = stack.pop() {
+                if let Some(&(a, b)) = expand.get(&top) {
+                    stack.push(b);
+                    stack.push(a);
+                } else if (BYTE_BASE..BYTE_BASE + 256).contains(&top) {
+                    bytes.push((top - BYTE_BASE) as u8);
+                }
+                // reserved ids (PAD/BOS/EOS/UNK) decode to nothing
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        use crate::util::json::Json;
+        let merges = Json::Arr(
+            self.merges
+                .iter()
+                .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                .collect(),
+        );
+        let j = crate::util::json::ObjBuilder::new()
+            .num("vocab_size", self.vocab_size as f64)
+            .val("merges", merges)
+            .build();
+        std::fs::write(path, j.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        use crate::error::Error;
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::parse(&text)?;
+        let merges = j
+            .arr_of("merges")?
+            .iter()
+            .map(|pair| {
+                let p = pair
+                    .as_arr()
+                    .ok_or_else(|| Error::Parse("merges: non-array".into()))?;
+                let a = p[0].as_f64().ok_or_else(|| Error::Parse("merge: non-num".into()))?;
+                let b = p[1].as_f64().ok_or_else(|| Error::Parse("merge: non-num".into()))?;
+                Ok((a as i32, b as i32))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Tokenizer { merges, vocab_size: j.usize_of("vocab_size")? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip_without_merges() {
+        let tok = Tokenizer::byte_level(512);
+        let s = "hello, RevFFN! 123";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+    }
+
+    #[test]
+    fn train_learns_frequent_pairs() {
+        let corpus = "the cat sat on the mat. the cat sat. ".repeat(50);
+        let tok = Tokenizer::train(&corpus, 300).unwrap();
+        assert!(!tok.merges.is_empty());
+        let enc = tok.encode("the cat");
+        let plain = Tokenizer::byte_level(512).encode("the cat");
+        assert!(enc.len() < plain.len(), "merges should compress");
+    }
+
+    #[test]
+    fn trained_roundtrip_exact() {
+        let corpus = "instruction: add 12 and 34. response: 46. ".repeat(40);
+        let tok = Tokenizer::train(&corpus, 320).unwrap();
+        for s in ["add 12 and 34", "response: 99", "unseen text!?"] {
+            assert_eq!(tok.decode(&tok.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let corpus = "aaaa bbbb cccc dddd ".repeat(100);
+        let vocab = 280;
+        let tok = Tokenizer::train(&corpus, vocab).unwrap();
+        let ids = tok.encode(&corpus);
+        assert!(ids.iter().all(|&i| (i as usize) < vocab));
+    }
+
+    #[test]
+    fn vocab_too_small_rejected() {
+        assert!(Tokenizer::train("abc", 100).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::ScratchDir::new("tok").unwrap();
+        let tok = Tokenizer::train(&"ab ab ab ab ".repeat(30), 300).unwrap();
+        let p = dir.join("tok.json");
+        tok.save(&p).unwrap();
+        let tok2 = Tokenizer::load(&p).unwrap();
+        assert_eq!(tok.merges, tok2.merges);
+        assert_eq!(tok.encode("ab ab"), tok2.encode("ab ab"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Crate-wide error type.
+//!
+//! Wraps the failure domains the coordinator crosses: PJRT/XLA runtime
+//! errors, manifest/config parsing, I/O, and internal invariant
+//! violations. `eyre` is used at the binary edge; the library keeps a
+//! concrete enum so callers can match on failure classes.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub enum Error {
+    /// XLA / PJRT runtime failure (compile, execute, literal conversion).
+    Xla(xla::Error),
+    /// I/O failure (artifact files, blobs, checkpoints).
+    Io(std::io::Error),
+    /// Manifest / config deserialization failure.
+    Parse(String),
+    /// Shape or layout mismatch between manifest and runtime buffers.
+    Layout(String),
+    /// Invalid configuration (bad method name, impossible schedule…).
+    Config(String),
+    /// Training diverged or hit an invariant violation.
+    Training(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Layout(m) => write!(f, "layout error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Training(m) => write!(f, "training error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

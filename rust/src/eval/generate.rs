@@ -1,0 +1,143 @@
+//! Autoregressive generation on top of the AOT `forward` artifact.
+//!
+//! The forward program has a static (B, S) shape, so decoding re-runs the
+//! full forward each token over a right-padded window — simple and exact
+//! (no KV cache is exported by the AOT bundle; at tiny scale this costs
+//! milliseconds per token). Supports greedy, temperature and top-k
+//! sampling, batched up to the artifact's batch dimension.
+
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::error::{Error, Result};
+use crate::runtime::stepper::Stepper;
+use crate::util::rng::Rng;
+
+/// Decoding configuration.
+#[derive(Debug, Clone)]
+pub struct GenerateConfig {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// 0 = no top-k truncation.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for GenerateConfig {
+    fn default() -> Self {
+        GenerateConfig { max_new_tokens: 32, temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Sample one token id from a logit row.
+fn sample_token(row: &[f32], cfg: &GenerateConfig, rng: &mut Rng) -> i32 {
+    if cfg.temperature <= 0.0 {
+        return row
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(UNKNOWN);
+    }
+    // top-k mask then temperature softmax
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < row.len() {
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        idx.truncate(cfg.top_k);
+    }
+    let m = idx.iter().map(|&i| row[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((row[i] - m) / cfg.temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut r = rng.gen_f64() * total;
+    for (i, w) in idx.iter().zip(&weights) {
+        r -= w;
+        if r <= 0.0 {
+            return *i as i32;
+        }
+    }
+    *idx.last().unwrap() as i32
+}
+
+const UNKNOWN: i32 = 3;
+
+/// Generate a completion for one prompt. Returns the generated token ids
+/// (without the prompt; stops at EOS or `max_new_tokens`).
+pub fn generate(stepper: &Stepper, prompt_ids: &[i32], cfg: &GenerateConfig)
+    -> Result<Vec<i32>> {
+    let (b, s) = stepper.batch_shape();
+    let v = stepper.vocab_size();
+    let mut ids = Vec::with_capacity(prompt_ids.len() + 1);
+    ids.push(BOS);
+    ids.extend_from_slice(prompt_ids);
+    if ids.len() >= s {
+        return Err(Error::Config(format!(
+            "prompt ({} tokens) must fit the artifact window {s}",
+            ids.len()
+        )));
+    }
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut out = Vec::new();
+    for _ in 0..cfg.max_new_tokens {
+        if ids.len() >= s {
+            break;
+        }
+        // pack the sequence into row 0 of a padded batch
+        let mut tokens = vec![PAD; b * s];
+        tokens[..ids.len()].copy_from_slice(&ids);
+        let logits = stepper.forward(&tokens)?;
+        let pos = ids.len() - 1; // next-token logits at the last real slot
+        let row = &logits[pos * v..(pos + 1) * v];
+        let next = sample_token(row, cfg, &mut rng);
+        if next == EOS {
+            break;
+        }
+        ids.push(next);
+        out.push(next);
+    }
+    Ok(out)
+}
+
+/// Convenience: prompt → rendered instruction → generated text.
+pub fn generate_text(stepper: &Stepper, tok: &Tokenizer, instruction: &str,
+                     cfg: &GenerateConfig) -> Result<String> {
+    let prompt = crate::data::dataset::render_prompt(instruction);
+    let ids = generate(stepper, &tok.encode(&prompt), cfg)?;
+    Ok(tok.decode(&ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::seed_from_u64(0);
+        let row = vec![0.1, 2.0, -1.0, 0.5];
+        let cfg = GenerateConfig::default();
+        assert_eq!(sample_token(&row, &cfg, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_stays_in_topk() {
+        let mut rng = Rng::seed_from_u64(1);
+        let row = vec![5.0, 4.9, -10.0, -10.0];
+        let cfg = GenerateConfig { temperature: 1.0, top_k: 2, ..Default::default() };
+        for _ in 0..50 {
+            let t = sample_token(&row, &cfg, &mut rng);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let row = vec![1.0, 1.1, 0.9, 1.05];
+        let cfg = GenerateConfig { temperature: 0.8, top_k: 0, seed: 9, ..Default::default() };
+        let mut r1 = Rng::seed_from_u64(9);
+        let mut r2 = Rng::seed_from_u64(9);
+        for _ in 0..20 {
+            assert_eq!(sample_token(&row, &cfg, &mut r1), sample_token(&row, &cfg, &mut r2));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Downstream evaluation: log-likelihood scoring primitives and the
+//! synthetic Table-2 benchmark suite (MMLU/GSM8K/Multilingual/MT-Bench
+//! counterparts).
+
+pub mod generate;
+pub mod scoring;
+pub mod suite;
+
+pub use generate::{generate, generate_text, GenerateConfig};
+pub use scoring::{log_softmax_at, score_samples, SampleScore};
+pub use suite::{paper_table2, BenchScores, EvalSuite};

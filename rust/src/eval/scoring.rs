@@ -1,0 +1,115 @@
+//! Log-likelihood scoring primitives shared by all benchmarks.
+//!
+//! Every synthetic benchmark reduces to: render candidates as
+//! prompt+response samples, run the AOT `forward` artifact, and compare
+//! summed response log-probabilities. The log-softmax runs host-side
+//! over the returned logits.
+
+use crate::data::dataset::Sample;
+use crate::error::{Error, Result};
+use crate::runtime::stepper::Stepper;
+
+/// Summed response log-prob + token count for each sample.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleScore {
+    pub logprob: f64,
+    pub n_tokens: usize,
+}
+
+impl SampleScore {
+    pub fn per_token(&self) -> f64 {
+        self.logprob / self.n_tokens.max(1) as f64
+    }
+}
+
+/// Score a batch-worth of samples (pads the final partial batch by
+/// repeating the last sample; the padding scores are discarded).
+pub fn score_samples(stepper: &Stepper, samples: &[Sample]) -> Result<Vec<SampleScore>> {
+    let (b, s) = stepper.batch_shape();
+    let v = stepper.vocab_size();
+    if samples.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::with_capacity(samples.len());
+    for chunk in samples.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * s);
+        for i in 0..b {
+            let sample = chunk.get(i).unwrap_or_else(|| chunk.last().unwrap());
+            if sample.tokens.len() != s {
+                return Err(Error::Layout(format!(
+                    "sample seq {} != artifact seq {s}",
+                    sample.tokens.len()
+                )));
+            }
+            tokens.extend_from_slice(&sample.tokens);
+        }
+        let logits = stepper.forward(&tokens)?;
+        if logits.len() != b * s * v {
+            return Err(Error::Layout(format!(
+                "forward returned {} logits, want {}",
+                logits.len(),
+                b * s * v
+            )));
+        }
+        for (i, sample) in chunk.iter().enumerate() {
+            let mut lp = 0.0f64;
+            let mut n = 0usize;
+            for t in 0..s {
+                if sample.loss_mask[t] == 0.0 {
+                    continue;
+                }
+                let row = &logits[(i * s + t) * v..(i * s + t + 1) * v];
+                lp += log_softmax_at(row, sample.targets[t] as usize);
+                n += 1;
+            }
+            out.push(SampleScore { logprob: lp, n_tokens: n });
+        }
+    }
+    Ok(out)
+}
+
+/// Numerically-stable log softmax evaluated at one index.
+pub fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[idx] as f64) - m - z.ln()
+}
+
+/// Index of the best-scoring candidate (per-token normalized to avoid
+/// length bias).
+pub fn argmax_candidate(scores: &[SampleScore]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.per_token().partial_cmp(&b.per_token()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_softmax_prefers_larger_logit() {
+        let row = vec![0.0f32, 5.0, -1.0];
+        assert!(log_softmax_at(&row, 1) > log_softmax_at(&row, 0));
+        assert!(log_softmax_at(&row, 0) > log_softmax_at(&row, 2));
+    }
+
+    #[test]
+    fn argmax_uses_per_token_normalization() {
+        let scores = vec![
+            SampleScore { logprob: -10.0, n_tokens: 2 },  // -5/token
+            SampleScore { logprob: -12.0, n_tokens: 10 }, // -1.2/token
+        ];
+        assert_eq!(argmax_candidate(&scores), 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! # RevFFN — memory-efficient full-parameter fine-tuning of MoE LLMs
+//!
+//! Rust coordinator (L3) for the three-layer RevFFN stack:
+//!
+//! * **L1** Pallas kernels and **L2** JAX model live under `python/compile`
+//!   and are AOT-lowered to HLO text by `make artifacts`. Python never runs
+//!   at training time.
+//! * **L3** (this crate) owns the training loop: configuration, data
+//!   pipeline, two-stage schedule (§3.3 of the paper), optimizer-step
+//!   execution through the PJRT C API, VRAM accounting, evaluation, and
+//!   checkpointing.
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```no_run
+//! use revffn::runtime::{Device, Artifact};
+//! use revffn::coordinator::Trainer;
+//! use revffn::config::RunConfig;
+//!
+//! let cfg = RunConfig::default_tiny("artifacts/tiny");
+//! let device = Device::cpu().unwrap();
+//! let mut trainer = Trainer::new(&device, cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final loss {:.4}", report.final_loss);
+//! ```
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod memory;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,320 @@
+//! `revffn` — the launcher CLI (hand-rolled arg parsing; the offline
+//! build carries no clap).
+//!
+//! Subcommands:
+//! * `train`        — run a fine-tuning method end-to-end (two-stage for
+//!                    RevFFN), logging metrics and optionally evaluating.
+//! * `eval`         — run the synthetic benchmark suite on a checkpoint
+//!                    or freshly-initialized model.
+//! * `plan-memory`  — print the Table-1 analytic VRAM breakdown at real
+//!                    Qwen1.5-MoE-A2.7B geometry.
+//! * `calibrate`    — compare the analytic model against XLA's live-buffer
+//!                    analysis of the lowered tiny graphs.
+//! * `gen-data`     — dump the synthetic instruction corpus as JSONL.
+//! * `reconstruct`  — measure reversible reconstruction error (§3.1).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use revffn::config::RunConfig;
+use revffn::coordinator::Trainer;
+use revffn::data::synthetic::{Corpus, CorpusConfig};
+use revffn::eval::EvalSuite;
+use revffn::memory::{self, Assumptions, Geometry};
+use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
+
+const USAGE: &str = "\
+revffn — RevFFN training coordinator
+
+USAGE: revffn <command> [--flag value]...
+
+COMMANDS:
+  train         --artifacts DIR --method M [--stage1-steps N] [--stage2-steps N]
+                [--pretrain-steps N] [--out-dir DIR] [--config FILE.json]
+                [--eval-suite] [--save-checkpoint]
+  eval          --artifacts DIR --method M [--checkpoint FILE.rvt] [--questions N]
+  plan-memory   [--seq N] [--budget-gb G] [--batch B] [--assumptions bf16_mixed|paper|f32]
+  calibrate     [--artifacts DIR]
+  gen-data      [--seed N] [--n N] [--out FILE.jsonl]
+  reconstruct   [--artifacts DIR]
+  generate      --prompt TEXT [--artifacts DIR] [--method M] [--checkpoint F]
+                [--max-new-tokens N] [--temperature T] [--top-k K]
+";
+
+/// flag parser: `--key value` and boolean `--key` pairs.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?}\n{USAGE}");
+            };
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.replace('-', "_"), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.replace('-', "_"), "true".into());
+                i += 1;
+            }
+        }
+        Ok(Flags(m))
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn opt(&self, key: &str) -> Option<String> {
+        self.0.get(key).cloned()
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.0.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.0.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "eval" => cmd_eval(&flags),
+        "plan-memory" => cmd_plan_memory(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        "gen-data" => cmd_gen_data(&flags),
+        "reconstruct" => cmd_reconstruct(&flags),
+        "generate" => cmd_generate(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(f: &Flags) -> Result<()> {
+    let mut cfg = match f.opt("config") {
+        Some(p) => RunConfig::from_json_file(&p).map_err(|e| anyhow!("loading {p}: {e}"))?,
+        None => {
+            let mut c = RunConfig::default_tiny(f.str("artifacts", "artifacts/tiny"));
+            c.method = f.str("method", "revffn");
+            c.schedule.stage1_steps = f.u64("stage1_steps", 30)?;
+            c.schedule.stage2_steps = f.u64("stage2_steps", 170)?;
+            c.data.pretrain_steps = f.u64("pretrain_steps", 0)?;
+            c.out_dir = PathBuf::from(f.str("out_dir", "runs/latest"));
+            c.save_checkpoint = f.bool("save_checkpoint");
+            c
+        }
+    };
+    if cfg.method != "revffn" {
+        cfg.schedule.stage1_steps = 0;
+    }
+    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
+    eprintln!("[device] {} x{}", device.platform_name(), device.device_count());
+    let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow!("{e}"))?;
+    let report = trainer.run().map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "method={} steps={} loss {:.4} -> {:.4} (eval {:.4}) {:.1} samples/s, {:.0}s",
+        report.method,
+        report.steps_run,
+        report.first_loss,
+        report.final_loss,
+        report.eval_loss.unwrap_or(f32::NAN),
+        report.median_samples_per_s,
+        report.wall_time_s
+    );
+    if f.bool("eval_suite") {
+        let stepper = trainer.stepper.as_ref().expect("model available after run");
+        let suite = EvalSuite::new(trainer.corpus.world.clone(), 32, 7);
+        let scores = suite
+            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
+            .map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "bench: mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
+            scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(f: &Flags) -> Result<()> {
+    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
+    let method = f.str("method", "revffn");
+    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
+    let cache = ProgramCache::new();
+    let variant = if method == "revffn" { "revffn_stage2".to_string() } else { method.clone() };
+    let artifact = Artifact::load(artifacts.join(&variant)).map_err(|e| anyhow!("{e}"))?;
+    let mut stepper = Stepper::new(&device, &cache, artifact).map_err(|e| anyhow!("{e}"))?;
+    if let Some(ck) = f.opt("checkpoint") {
+        let ck = revffn::checkpoint::load(&ck).map_err(|e| anyhow!("{e}"))?;
+        let n = stepper
+            .replace_params(|p| revffn::checkpoint::restore_into(&ck, p))
+            .map_err(|e| anyhow!("{e}"))?;
+        eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
+    }
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let tokenizer =
+        revffn::data::Tokenizer::train(&corpus.pretrain_text(), stepper.vocab_size())
+            .map_err(|e| anyhow!("{e}"))?;
+    let suite = EvalSuite::new(corpus.world.clone(), f.u64("questions", 32)? as usize, 7);
+    let scores =
+        suite.run(&stepper, &tokenizer, &corpus.eval).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
+        scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like
+    );
+    Ok(())
+}
+
+fn cmd_plan_memory(f: &Flags) -> Result<()> {
+    let assumptions = f.str("assumptions", "bf16_mixed");
+    let assume = match assumptions.as_str() {
+        "paper" => Assumptions::paper_calibrated(),
+        "f32" => Assumptions::f32_exact(),
+        _ => Assumptions::bf16_mixed(),
+    };
+    let seq = f.u64("seq", 2048)?;
+    let budget = f.f64("budget_gb", 80.0)?;
+    let batch = f.opt("batch").map(|b| b.parse()).transpose()?;
+    let rows = memory::table1_memory(Geometry::qwen15_moe_a27b(), assume, seq, budget, batch);
+    print!(
+        "{}",
+        memory::format_table(
+            &rows,
+            &format!(
+                "Table 1 (memory) — Qwen1.5-MoE-A2.7B, seq={seq}, budget={budget} GB, assumptions={assumptions}"
+            )
+        )
+    );
+    for (check, ok) in memory::ordering_checks(&rows) {
+        println!("  [{}] {}", if ok { "ok" } else { "MISS" }, check);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(f: &Flags) -> Result<()> {
+    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
+    let rows = memory::calib::calibrate(&artifacts).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "{:<16} {:>16} {:>16} {:>8}",
+        "variant", "XLA temp (B)", "analytic (B)", "ratio"
+    );
+    for r in &rows {
+        println!(
+            "{:<16} {:>16} {:>16.0} {:>8.2}",
+            r.variant, r.measured_temp_bytes, r.analytic_act_bytes, r.ratio
+        );
+    }
+    if let Some((rev, naive)) =
+        memory::calib::reversible_vs_naive(&artifacts).map_err(|e| anyhow!("{e}"))?
+    {
+        println!(
+            "reversible vs naive temp bytes: {rev} vs {naive} ({:.1}x reduction)",
+            naive as f64 / rev as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(f: &Flags) -> Result<()> {
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: f.u64("seed", 17)?,
+        n_train: f.u64("n", 256)? as usize,
+        ..Default::default()
+    });
+    let out = PathBuf::from(f.str("out", "runs/corpus.jsonl"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut text = String::new();
+    for ex in &corpus.train {
+        text.push_str(&ex.to_json().to_string());
+        text.push('\n');
+    }
+    std::fs::write(&out, text)?;
+    println!("wrote {} examples to {}", corpus.train.len(), out.display());
+    Ok(())
+}
+
+fn cmd_generate(f: &Flags) -> Result<()> {
+    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
+    let method = f.str("method", "revffn");
+    let prompt = f
+        .opt("prompt")
+        .ok_or_else(|| anyhow!("--prompt is required"))?;
+    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
+    let cache = ProgramCache::new();
+    let variant = if method == "revffn" { "revffn_stage2".to_string() } else { method.clone() };
+    let artifact = Artifact::load(artifacts.join(&variant)).map_err(|e| anyhow!("{e}"))?;
+    let mut stepper = Stepper::new(&device, &cache, artifact).map_err(|e| anyhow!("{e}"))?;
+    if let Some(ck) = f.opt("checkpoint") {
+        let ck = revffn::checkpoint::load(&ck).map_err(|e| anyhow!("{e}"))?;
+        let n = stepper
+            .replace_params(|p| revffn::checkpoint::restore_into(&ck, p))
+            .map_err(|e| anyhow!("{e}"))?;
+        eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
+    }
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let tokenizer =
+        revffn::data::Tokenizer::train(&corpus.pretrain_text(), stepper.vocab_size())
+            .map_err(|e| anyhow!("{e}"))?;
+    let cfg = revffn::eval::GenerateConfig {
+        max_new_tokens: f.u64("max_new_tokens", 32)? as usize,
+        temperature: f.f64("temperature", 0.0)? as f32,
+        top_k: f.u64("top_k", 0)? as usize,
+        seed: f.u64("seed", 0)?,
+    };
+    let text = revffn::eval::generate_text(&stepper, &tokenizer, &prompt, &cfg)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_reconstruct(f: &Flags) -> Result<()> {
+    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
+    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
+    let artifact = Artifact::load(artifacts.join("reconstruct")).map_err(|e| anyhow!("{e}"))?;
+    let hlo = artifact.hlo_path("reconstruct").map_err(|e| anyhow!("{e}"))?;
+    let prog = device.load_hlo_text(&hlo).map_err(|e| anyhow!("{e}"))?;
+    let params =
+        revffn::runtime::ParamStore::from_blobs(&artifact).map_err(|e| anyhow!("{e}"))?;
+    let mut inputs = params.to_literals().map_err(|e| anyhow!("{e}"))?;
+    let io = &artifact.manifest.io;
+    let tokens: Vec<i32> =
+        (0..io.batch_size * io.seq_len).map(|i| (i % 200) as i32 + 5).collect();
+    inputs.push(
+        revffn::runtime::literal::i32_literal(&tokens, &[io.batch_size, io.seq_len])
+            .map_err(|e| anyhow!("{e}"))?,
+    );
+    let out = prog.run(&inputs).map_err(|e| anyhow!("{e}"))?;
+    let err = revffn::runtime::literal::scalar_to_f32(&out[0]).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "max-abs reconstruction error over {} layers: {err:.3e} (f32 eps = 1.19e-7)",
+        artifact.manifest.model.n_layers
+    );
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Calibration of the analytic VRAM model against XLA's live-buffer
+//! analysis of the actually-lowered tiny graphs.
+//!
+//! `make artifacts` (with `--analyze`) embeds each variant's
+//! `memory_analysis` — XLA's measured temp/argument/output buffer sizes
+//! for the compiled train_step. The *temp* bytes correspond to our
+//! activations(+workspace) term at f32; arguments/outputs correspond to
+//! weights+moments. Comparing per method validates the model's relative
+//! structure (RevFFN ≪ naive, checkpointing < PEFT caching, …).
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::memory::model::{Assumptions, Geometry, MemoryModel, Method};
+use crate::runtime::artifact::Artifact;
+
+/// One calibration row: analytic vs measured.
+#[derive(Debug, Clone)]
+pub struct CalibRow {
+    pub variant: String,
+    pub measured_temp_bytes: u64,
+    pub analytic_act_bytes: f64,
+    /// measured / analytic (1.0 = perfect).
+    pub ratio: f64,
+}
+
+fn method_of_variant(variant: &str) -> Option<Method> {
+    match variant {
+        "sft" => Some(Method::SftCheckpoint),
+        "lora" => Some(Method::Lora),
+        "dora" => Some(Method::Dora),
+        "ia3" => Some(Method::Ia3),
+        "lomo" => Some(Method::Lomo),
+        "galore" => Some(Method::Galore),
+        "revffn_stage1" | "revffn_stage2" => Some(Method::Revffn),
+        _ => None,
+    }
+}
+
+/// Compare every analyzed variant under `cfg_dir` against the analytic
+/// model at the same (f32) assumptions and batch shape.
+pub fn calibrate(cfg_dir: impl AsRef<Path>) -> Result<Vec<CalibRow>> {
+    let index = crate::runtime::artifact::ArtifactIndex::load(&cfg_dir)?;
+    let mut rows = Vec::new();
+    for variant in &index.variants {
+        let Some(method) = method_of_variant(variant) else { continue };
+        let art = Artifact::load(cfg_dir.as_ref().join(variant))?;
+        // prefer the undonated analysis: donation aliases args into temps
+        // and would blur the pure-activation comparison
+        let Some(ma) = art
+            .manifest
+            .memory_analysis_nodonate
+            .as_ref()
+            .or(art.manifest.memory_analysis.as_ref())
+        else { continue };
+        let geo = Geometry::from_manifest(&art.manifest.model);
+        let model = MemoryModel::new(geo, Assumptions::f32_exact());
+        let io = &art.manifest.io;
+        let bd = model.breakdown(method, io.batch_size as u64, io.seq_len as u64);
+        let analytic = bd.activations + bd.logits + bd.grads;
+        rows.push(CalibRow {
+            variant: variant.clone(),
+            measured_temp_bytes: ma.temp_size_bytes,
+            analytic_act_bytes: analytic,
+            ratio: ma.temp_size_bytes as f64 / analytic.max(1.0),
+        });
+    }
+    Ok(rows)
+}
+
+/// The reversibility memory claim, measured on the real lowered graphs:
+/// XLA temp bytes of the reversible train step vs the identical math
+/// without the custom VJP (`revffn_naive`). Returns (reversible, naive).
+pub fn reversible_vs_naive(cfg_dir: impl AsRef<Path>) -> Result<Option<(u64, u64)>> {
+    let dir = cfg_dir.as_ref();
+    let load = |v: &str| -> Result<Option<u64>> {
+        let p = dir.join(v);
+        if !p.join("manifest.json").exists() {
+            return Ok(None);
+        }
+        let m = Artifact::load(p)?.manifest;
+        Ok(m
+            .memory_analysis_nodonate
+            .or(m.memory_analysis)
+            .map(|m| m.temp_size_bytes))
+    };
+    match (load("revffn_stage2")?, load("revffn_naive")?) {
+        (Some(r), Some(n)) => Ok(Some((r, n))),
+        _ => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        p.join("index.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn calibration_rows_exist() {
+        let Some(dir) = cfg_dir() else { return };
+        let rows = calibrate(&dir).unwrap();
+        assert!(rows.len() >= 5, "expected most variants analyzed, got {}", rows.len());
+        for r in &rows {
+            assert!(r.measured_temp_bytes > 0, "{}", r.variant);
+        }
+    }
+
+    #[test]
+    fn reversible_temp_strictly_below_naive() {
+        let Some(dir) = cfg_dir() else { return };
+        let Some((rev, naive)) = reversible_vs_naive(&dir).unwrap() else { return };
+        assert!(
+            rev < naive,
+            "reversible backward must shrink XLA temp memory: {rev} vs {naive}"
+        );
+    }
+}

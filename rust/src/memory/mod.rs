@@ -1,0 +1,12 @@
+//! VRAM accounting: the analytic peak-memory model (Table 1's memory
+//! column at real Qwen geometry), its calibration against XLA live-buffer
+//! analysis of the lowered tiny graphs, and table-shaped reporting.
+
+pub mod calib;
+pub mod model;
+pub mod report;
+
+pub use model::{Assumptions, Breakdown, Geometry, MemoryModel, Method};
+pub use report::{
+    format_table, ordering_checks, paper_table1, rev_reduction, table1_memory, MemoryRow,
+};

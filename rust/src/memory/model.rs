@@ -1,0 +1,539 @@
+//! Analytic peak-VRAM model for single-GPU fine-tuning (Table 1, E1).
+//!
+//! Peak VRAM on a data-parallel single GPU is arithmetic over tensor
+//! lifetimes; this module implements that arithmetic per method at any
+//! geometry (including the real Qwen1.5-MoE-A2.7B, which is never
+//! instantiated). Terms:
+//!
+//! * weights           — all parameters, `w_bytes` each
+//! * master weights    — fp32 copies of *trainable* params (mixed precision)
+//! * gradients         — trainable params (LoMo: one layer at a time)
+//! * optimizer moments — AdamW m+v on trainable (GaLore: rank-r subspace;
+//!                       LoMo: none)
+//! * activations       — method-dependent live set (see below)
+//! * logits + loss     — B·S·V fp32 (chunked cross-entropy optional)
+//!
+//! Activation live-sets:
+//! * full caching (PEFT)   : L · block_act + L · boundary
+//! * checkpointing (SFT…)  : L · boundary + 1 · block_act (recompute)
+//! * reversible (RevFFN)   : 2 · boundary(d/2 streams ⇒ 1 · boundary) +
+//!                           1 · block_act — **independent of L** (§3.1)
+//!
+//! The model is validated two ways (memory/calib.rs): against XLA's
+//! live-buffer analysis of the lowered tiny graphs, and against the
+//! paper's own Table 1 under its assumptions preset.
+
+/// Model geometry (mirrors the python ModelConfig; constructed from a
+/// manifest or from the named presets below).
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub name: String,
+    pub vocab_size: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub n_experts: u64,
+    pub top_k: u64,
+    pub d_ff_expert: u64,
+    pub d_ff_shared: u64,
+}
+
+impl Geometry {
+    /// Real Qwen1.5-MoE-A2.7B geometry (14.3 B total / 2.7 B activated).
+    pub fn qwen15_moe_a27b() -> Self {
+        Geometry {
+            name: "qwen15_moe_a27b".into(),
+            vocab_size: 151_936,
+            d_model: 2048,
+            n_layers: 24,
+            n_heads: 16,
+            n_kv_heads: 16,
+            n_experts: 60,
+            top_k: 4,
+            d_ff_expert: 1408,
+            d_ff_shared: 5632,
+        }
+    }
+
+    pub fn from_manifest(m: &crate::runtime::artifact::ModelGeometry) -> Self {
+        Geometry {
+            name: m.name.clone(),
+            vocab_size: m.vocab_size as u64,
+            d_model: m.d_model as u64,
+            n_layers: m.n_layers as u64,
+            n_heads: m.n_heads as u64,
+            n_kv_heads: m.n_kv_heads as u64,
+            n_experts: m.n_experts as u64,
+            top_k: m.top_k as u64,
+            d_ff_expert: m.d_ff_expert as u64,
+            d_ff_shared: m.d_ff_shared as u64,
+        }
+    }
+
+    pub fn d_kv(&self) -> u64 {
+        self.d_model / self.n_heads * self.n_kv_heads
+    }
+
+    /// Parameters of one decoder layer's attention block.
+    pub fn attn_params(&self) -> u64 {
+        let d = self.d_model;
+        2 * d * d + 2 * d * self.d_kv()
+    }
+
+    /// Parameters of one decoder layer's MoE block (router + experts +
+    /// shared expert + shared gate).
+    pub fn moe_params(&self) -> u64 {
+        let d = self.d_model;
+        d * self.n_experts
+            + self.n_experts * 3 * d * self.d_ff_expert
+            + 3 * d * self.d_ff_shared
+            + d
+    }
+
+    pub fn router_params(&self) -> u64 {
+        self.d_model * self.n_experts * self.n_layers
+    }
+
+    /// Per-layer norm gains (standard model: 2·d).
+    pub fn norm_params(&self) -> u64 {
+        2 * self.d_model
+    }
+
+    /// RevFFN adapters per layer: 2 P↑(q,kv) + P↓ for attention,
+    /// P↑ + P↓ for the MLP, each d/2·d — plus 3 stream norms (d/2).
+    pub fn adapter_params(&self) -> u64 {
+        let d = self.d_model;
+        let dh = d / 2;
+        5 * dh * d + 3 * dh
+    }
+
+    pub fn embed_params(&self) -> u64 {
+        self.vocab_size * self.d_model
+    }
+
+    /// Total parameters of the standard (baseline) model.
+    pub fn total_params(&self) -> u64 {
+        self.embed_params()
+            + self.n_layers * (self.attn_params() + self.moe_params() + self.norm_params())
+            + self.d_model
+    }
+
+    /// Total parameters of the RevFFN-wrapped model.
+    pub fn total_params_revffn(&self) -> u64 {
+        // stream norms replace the 2 full-d norms (3·d/2 counted in adapters)
+        self.embed_params()
+            + self.n_layers * (self.attn_params() + self.moe_params() + self.adapter_params())
+            + self.d_model
+    }
+
+    /// Largest single-layer trainable tensor group (LoMo's live-grad set).
+    pub fn max_layer_params(&self) -> u64 {
+        (self.attn_params() + self.moe_params() + self.norm_params()).max(self.embed_params())
+    }
+}
+
+/// Numeric-format assumptions for the accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct Assumptions {
+    pub w_bytes: f64,
+    pub g_bytes: f64,
+    /// Per-moment bytes (AdamW has two moments).
+    pub m_bytes: f64,
+    pub act_bytes: f64,
+    /// Keep fp32 master copies of trainable weights?
+    pub master_weights: bool,
+    /// Chunked cross-entropy (logits materialized in S-chunks)?
+    pub chunked_logits: bool,
+    /// PEFT baselines also run gradient checkpointing (standard HF
+    /// practice at fine-tuning batch sizes; the lowered tiny graphs do
+    /// NOT, so the f32 calibration preset turns this off).
+    pub peft_checkpointing: bool,
+    /// Allocator fragmentation / workspace multiplier on the total.
+    pub overhead: f64,
+}
+
+impl Assumptions {
+    /// bf16 compute, fp32 moments + master — the standard mixed-precision
+    /// recipe (our principled default).
+    pub fn bf16_mixed() -> Self {
+        Assumptions {
+            w_bytes: 2.0,
+            g_bytes: 2.0,
+            m_bytes: 4.0,
+            act_bytes: 2.0,
+            master_weights: true,
+            chunked_logits: true,
+            peft_checkpointing: true,
+            overhead: 1.05,
+        }
+    }
+
+    /// The weakest-footprint recipe consistent with the paper's Table 1
+    /// scale: bf16 everything, 8-bit moments, no master copies, chunked
+    /// logits. Used for the "paper-calibrated" rows.
+    pub fn paper_calibrated() -> Self {
+        Assumptions {
+            w_bytes: 2.0,
+            g_bytes: 2.0,
+            m_bytes: 1.0,
+            act_bytes: 2.0,
+            master_weights: false,
+            chunked_logits: true,
+            peft_checkpointing: true,
+            overhead: 1.05,
+        }
+    }
+
+    /// Pure f32 (matches the tiny AOT artifacts → XLA calibration).
+    pub fn f32_exact() -> Self {
+        Assumptions {
+            w_bytes: 4.0,
+            g_bytes: 4.0,
+            m_bytes: 4.0,
+            act_bytes: 4.0,
+            master_weights: false,
+            chunked_logits: false,
+            peft_checkpointing: false,
+            overhead: 1.0,
+        }
+    }
+}
+
+/// Method rows of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Lora,
+    Dora,
+    Ia3,
+    SftCheckpoint,
+    Lomo,
+    Galore,
+    Revffn,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Lora,
+        Method::Dora,
+        Method::Ia3,
+        Method::SftCheckpoint,
+        Method::Lomo,
+        Method::Galore,
+        Method::Revffn,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Lora => "LoRA",
+            Method::Dora => "DoRA",
+            Method::Ia3 => "(IA)^3",
+            Method::SftCheckpoint => "SFT + Checkpointing",
+            Method::Lomo => "LOMO",
+            Method::Galore => "GaLore",
+            Method::Revffn => "RevFFN",
+        }
+    }
+
+    pub fn is_full_parameter(&self) -> bool {
+        matches!(self, Method::SftCheckpoint | Method::Lomo | Method::Galore | Method::Revffn)
+    }
+}
+
+/// Per-component byte breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub weights: f64,
+    pub master: f64,
+    pub grads: f64,
+    pub moments: f64,
+    pub activations: f64,
+    pub logits: f64,
+    pub total: f64,
+}
+
+impl Breakdown {
+    pub fn gb(bytes: f64) -> f64 {
+        bytes / 1e9
+    }
+}
+
+/// The analytic model.
+pub struct MemoryModel {
+    pub geo: Geometry,
+    pub assume: Assumptions,
+    /// LoRA/GaLore rank.
+    pub rank: u64,
+}
+
+impl MemoryModel {
+    pub fn new(geo: Geometry, assume: Assumptions) -> Self {
+        MemoryModel { geo, assume, rank: 8 }
+    }
+
+    fn lora_params(&self) -> u64 {
+        let g = &self.geo;
+        let d = g.d_model;
+        // A: d×r + B: r×dout for wq,wk,wv,wo
+        g.n_layers * self.rank * (2 * (d + d) + 2 * (d + g.d_kv()))
+    }
+
+    fn ia3_params(&self) -> u64 {
+        let g = &self.geo;
+        g.n_layers * (2 * g.d_kv() + g.d_ff_shared)
+    }
+
+    fn trainable_params(&self, m: Method) -> u64 {
+        let g = &self.geo;
+        match m {
+            Method::Lora => self.lora_params(),
+            Method::Dora => self.lora_params() + g.n_layers * (2 * g.d_model + 2 * g.d_kv()),
+            Method::Ia3 => self.ia3_params(),
+            Method::SftCheckpoint | Method::Lomo => g.total_params(),
+            Method::Galore => g.total_params(),
+            Method::Revffn => g.total_params_revffn() - g.router_params(),
+        }
+    }
+
+    fn total_weights(&self, m: Method) -> u64 {
+        match m {
+            Method::Revffn => self.geo.total_params_revffn(),
+            Method::Lora | Method::Dora => self.geo.total_params() + self.trainable_params(m),
+            Method::Ia3 => self.geo.total_params() + self.trainable_params(m),
+            _ => self.geo.total_params(),
+        }
+    }
+
+    /// Live activation elements for one decoder block's recompute
+    /// workspace (flash attention — no S² score materialization).
+    fn block_act_elems(&self, tokens: f64, m: Method) -> f64 {
+        let g = &self.geo;
+        let d = g.d_model as f64;
+        let f = g.d_ff_expert as f64;
+        let fs = g.d_ff_shared as f64;
+        let k = g.top_k as f64;
+        let e = g.n_experts as f64;
+        // norm out + q,k,v + attn out + proj out
+        let attn = 5.0 * d + g.d_kv() as f64;
+        // router logits + combine + top-k expert intermediates + shared
+        let moe = 2.0 * e + k * 2.0 * f + 2.0 * fs + d;
+        let adapters = match m {
+            Method::Revffn => 3.0 * d, // P↑ outputs ×2 + P↓ input
+            Method::Lora | Method::Dora => 4.0 * self.rank as f64,
+            _ => 0.0,
+        };
+        tokens * (attn + moe + adapters)
+    }
+
+    /// Activation bytes live at the backward-pass peak.
+    fn activation_bytes(&self, m: Method, batch: u64, seq: u64) -> f64 {
+        let g = &self.geo;
+        let tokens = (batch * seq) as f64;
+        let boundary = tokens * g.d_model as f64; // one inter-layer hidden
+        let block = self.block_act_elems(tokens, m);
+        let l = g.n_layers as f64;
+        let elems = match m {
+            // PEFT: every block's set cached, unless the run enables
+            // gradient checkpointing (assumption flag)
+            Method::Lora | Method::Dora | Method::Ia3 => {
+                if self.assume.peft_checkpointing {
+                    l * boundary + block
+                } else {
+                    l * (block + boundary)
+                }
+            }
+            // full FT with per-layer checkpointing: boundaries + one block
+            Method::SftCheckpoint | Method::Lomo | Method::Galore => l * boundary + block,
+            // reversible: two d/2 streams (=1 boundary) + one block —
+            // independent of depth (§3.1)
+            Method::Revffn => 2.0 * boundary + block,
+        };
+        elems * self.assume.act_bytes
+    }
+
+    fn logits_bytes(&self, batch: u64, seq: u64) -> f64 {
+        let v = self.geo.vocab_size as f64;
+        let toks = if self.assume.chunked_logits {
+            // vocab-chunked cross-entropy (Liger-style): 1/64 of positions
+            (batch * seq) as f64 / 64.0
+        } else {
+            (batch * seq) as f64
+        };
+        // logits + log-softmax workspace, fp32
+        2.0 * toks * v * 4.0
+    }
+
+    /// Full breakdown at a given microbatch.
+    pub fn breakdown(&self, m: Method, batch: u64, seq: u64) -> Breakdown {
+        let a = &self.assume;
+        let trainable = self.trainable_params(m) as f64;
+        let weights = self.total_weights(m) as f64 * a.w_bytes;
+        // LoMo's fused update writes weights in place — no fp32 master copy
+        // (that is half its point); other methods keep one under mixed
+        // precision when the recipe says so.
+        let master = if a.master_weights && m != Method::Lomo {
+            trainable * 4.0
+        } else {
+            0.0
+        };
+        let grads = match m {
+            // LoMo fuses grad computation with the update: only one
+            // layer's gradients are ever materialized.
+            Method::Lomo => self.geo.max_layer_params() as f64 * a.g_bytes,
+            _ => trainable * a.g_bytes,
+        };
+        let moments = match m {
+            Method::Lomo => 0.0,
+            Method::Galore => {
+                // rank-r moments for 2-D tensors; embed dominates
+                let g = &self.geo;
+                let r = self.rank as f64;
+                let two_d: f64 = (g.embed_params() / g.d_model) as f64 * r // embed: V×d -> r×V
+                    + (g.n_layers as f64)
+                        * (r * (2.0 * g.d_model as f64 + 2.0 * g.d_kv() as f64) // attn
+                            + g.n_experts as f64 * 3.0 * r * g.d_ff_expert.max(g.d_model) as f64
+                            + 3.0 * r * g.d_ff_shared.max(g.d_model) as f64);
+                2.0 * two_d * a.m_bytes
+            }
+            _ => 2.0 * trainable * a.m_bytes,
+        };
+        let activations = self.activation_bytes(m, batch, seq);
+        let logits = self.logits_bytes(batch, seq);
+        let total = (weights + master + grads + moments + activations + logits) * a.overhead;
+        Breakdown { weights, master, grads, moments, activations, logits, total }
+    }
+
+    /// Peak VRAM in GB.
+    pub fn peak_gb(&self, m: Method, batch: u64, seq: u64) -> f64 {
+        Breakdown::gb(self.breakdown(m, batch, seq).total)
+    }
+
+    /// Largest batch (doubling + linear refine) fitting `budget_gb`.
+    pub fn max_batch(&self, m: Method, seq: u64, budget_gb: f64) -> u64 {
+        if self.peak_gb(m, 1, seq) > budget_gb {
+            return 0;
+        }
+        let mut b = 1u64;
+        while self.peak_gb(m, b * 2, seq) <= budget_gb && b < 1 << 20 {
+            b *= 2;
+        }
+        let mut best = b;
+        for cand in b..b * 2 {
+            if self.peak_gb(m, cand, seq) <= budget_gb {
+                best = cand;
+            } else {
+                break;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MemoryModel {
+        MemoryModel::new(Geometry::qwen15_moe_a27b(), Assumptions::bf16_mixed())
+    }
+
+    #[test]
+    fn qwen_total_params_near_14_3b() {
+        let g = Geometry::qwen15_moe_a27b();
+        let total = g.total_params() as f64;
+        assert!(
+            (total - 14.3e9).abs() / 14.3e9 < 0.05,
+            "got {total:.3e}, want ~14.3e9"
+        );
+    }
+
+    #[test]
+    fn revffn_adds_small_adapter_overhead() {
+        let g = Geometry::qwen15_moe_a27b();
+        let extra = g.total_params_revffn() as f64 - g.total_params() as f64;
+        assert!(extra > 0.0);
+        let frac = extra / g.total_params() as f64;
+        assert!(frac < 0.02, "adapters must be O(d^2): {extra:.2e}");
+    }
+
+    #[test]
+    fn peft_uses_less_than_full_ft() {
+        let m = model();
+        let (b, s) = (8, 2048);
+        assert!(m.peak_gb(Method::Lora, b, s) < m.peak_gb(Method::SftCheckpoint, b, s));
+        assert!(m.peak_gb(Method::Ia3, b, s) < m.peak_gb(Method::SftCheckpoint, b, s));
+    }
+
+    #[test]
+    fn revffn_beats_sft_checkpointing_at_training_batch() {
+        // The reversible saving scales with batch: at fine-tuning batches
+        // (B>=16) activation savings dominate the adapter-state overhead.
+        let m = model();
+        let (b, s) = (32, 2048);
+        assert!(m.peak_gb(Method::Revffn, b, s) < m.peak_gb(Method::SftCheckpoint, b, s));
+    }
+
+    #[test]
+    fn revffn_crossover_batch_is_small() {
+        // below a handful of samples the adapters cost more than the
+        // activations save — the crossover must sit at single-digit batch
+        let m = MemoryModel::new(Geometry::qwen15_moe_a27b(), Assumptions::paper_calibrated());
+        let rev16 = m.peak_gb(Method::Revffn, 16, 2048);
+        let sft16 = m.peak_gb(Method::SftCheckpoint, 16, 2048);
+        assert!(rev16 < sft16, "by B=16 RevFFN must win: {rev16} vs {sft16}");
+    }
+
+    #[test]
+    fn revffn_activations_depth_independent() {
+        let mut g = Geometry::qwen15_moe_a27b();
+        let a = Assumptions::bf16_mixed();
+        g.n_layers = 24;
+        let m24 = MemoryModel::new(g.clone(), a).breakdown(Method::Revffn, 8, 2048).activations;
+        g.n_layers = 48;
+        let m48 = MemoryModel::new(g, a).breakdown(Method::Revffn, 8, 2048).activations;
+        assert!((m48 - m24).abs() / m24 < 1e-9, "reversible act must not scale with L");
+    }
+
+    #[test]
+    fn sft_activations_scale_with_depth() {
+        let mut g = Geometry::qwen15_moe_a27b();
+        let a = Assumptions::bf16_mixed();
+        g.n_layers = 24;
+        let m24 = MemoryModel::new(g.clone(), a)
+            .breakdown(Method::SftCheckpoint, 8, 2048)
+            .activations;
+        g.n_layers = 48;
+        let m48 = MemoryModel::new(g, a).breakdown(Method::SftCheckpoint, 8, 2048).activations;
+        assert!(m48 > 1.5 * m24);
+    }
+
+    #[test]
+    fn lomo_has_no_moments() {
+        let m = model();
+        let b = m.breakdown(Method::Lomo, 8, 2048);
+        assert_eq!(b.moments, 0.0);
+        assert!(b.grads < m.breakdown(Method::SftCheckpoint, 8, 2048).grads / 4.0);
+    }
+
+    #[test]
+    fn galore_moments_much_smaller_than_adamw() {
+        let m = model();
+        let adamw = m.breakdown(Method::SftCheckpoint, 8, 2048).moments;
+        let galore = m.breakdown(Method::Galore, 8, 2048).moments;
+        assert!(galore < adamw / 10.0, "galore {galore:.2e} vs adamw {adamw:.2e}");
+    }
+
+    #[test]
+    fn max_batch_monotone_in_budget() {
+        let m = model();
+        let b40 = m.max_batch(Method::Revffn, 2048, 40.0);
+        let b80 = m.max_batch(Method::Revffn, 2048, 80.0);
+        assert!(b80 >= b40);
+    }
+
+    #[test]
+    fn max_batch_zero_when_weights_dont_fit() {
+        let m = model();
+        assert_eq!(m.max_batch(Method::SftCheckpoint, 2048, 1.0), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Table-1 style report generation from the analytic memory model.
+
+use crate::memory::model::{Assumptions, Breakdown, Geometry, MemoryModel, Method};
+
+/// Paper Table 1 reference values (GB / samples-per-s) for comparison.
+pub fn paper_table1(method: Method) -> (f64, f64) {
+    match method {
+        Method::Lora => (18.2, 75.4),
+        Method::Dora => (19.5, 71.8),
+        Method::Ia3 => (17.9, 74.1),
+        Method::SftCheckpoint => (65.4, 19.7),
+        Method::Lomo => (42.2, 17.3),
+        Method::Galore => (45.1, 35.2),
+        Method::Revffn => (39.5, 24.6),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    pub method: String,
+    pub peak_gb: f64,
+    pub max_batch: u64,
+    pub breakdown: Breakdown,
+    pub paper_gb: f64,
+}
+
+/// Build the Table-1 memory column at a given geometry/assumptions.
+///
+/// Mirrors the paper's protocol: each method's microbatch is the largest
+/// fitting the 80 GB budget at `seq`; peak VRAM is reported at that batch
+/// (so every row sits under, but near, the budget in the components that
+/// matter for it).
+pub fn table1_memory(
+    geo: Geometry,
+    assume: Assumptions,
+    seq: u64,
+    budget_gb: f64,
+    fixed_batch: Option<u64>,
+) -> Vec<MemoryRow> {
+    let model = MemoryModel::new(geo, assume);
+    Method::ALL
+        .iter()
+        .map(|&m| {
+            let batch = fixed_batch.unwrap_or_else(|| model.max_batch(m, seq, budget_gb));
+            let bd = model.breakdown(m, batch.max(1), seq);
+            MemoryRow {
+                method: m.label().to_string(),
+                peak_gb: Breakdown::gb(bd.total),
+                max_batch: batch,
+                breakdown: bd,
+                paper_gb: paper_table1(m).0,
+            }
+        })
+        .collect()
+}
+
+/// Pretty-print the rows like the paper's table.
+pub fn format_table(rows: &[MemoryRow], title: &str) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{title}\n"));
+    s.push_str(&format!(
+        "{:<22} {:>10} {:>10} {:>9} | {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+        "Method", "Peak(GB)", "Paper(GB)", "maxB", "weights", "master", "grads", "moments", "acts"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<22} {:>10.1} {:>10.1} {:>9} | {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1}\n",
+            r.method,
+            r.peak_gb,
+            r.paper_gb,
+            r.max_batch,
+            Breakdown::gb(r.breakdown.weights),
+            Breakdown::gb(r.breakdown.master),
+            Breakdown::gb(r.breakdown.grads),
+            Breakdown::gb(r.breakdown.moments),
+            Breakdown::gb(r.breakdown.activations),
+        ));
+    }
+    s
+}
+
+/// Qualitative checks the paper's table implies (used by tests/benches).
+pub fn ordering_checks(rows: &[MemoryRow]) -> Vec<(String, bool)> {
+    let get = |label: &str| rows.iter().find(|r| r.method == label).map(|r| r.peak_gb);
+    let mut out = Vec::new();
+    if let (Some(lora), Some(sft)) = (get("LoRA"), get("SFT + Checkpointing")) {
+        out.push(("PEFT (LoRA) below SFT+ckpt".to_string(), lora < sft));
+    }
+    if let (Some(rev), Some(sft)) = (get("RevFFN"), get("SFT + Checkpointing")) {
+        out.push(("RevFFN below SFT+ckpt".to_string(), rev < sft));
+    }
+    if let Some(r) = activation_reduction(rows) {
+        // The paper's "49% reduction" is the activation term (its peak
+        // totals are not consistent with any fixed optimizer recipe —
+        // see EXPERIMENTS.md E1); the reversible design halves it.
+        out.push((
+            format!("RevFFN activation reduction vs SFT = {:.0}% (paper text: 49%)", r * 100.0),
+            r > 0.30,
+        ));
+    }
+    if let (Some(rev), Some(lora)) = (get("RevFFN"), get("LoRA")) {
+        out.push(("RevFFN above PEFT (full-parameter cost)".to_string(), rev > lora));
+    }
+    out
+}
+
+/// RevFFN's fractional *peak-VRAM* reduction vs SFT+ckpt.
+pub fn rev_reduction(rows: &[MemoryRow]) -> Option<f64> {
+    let get = |label: &str| rows.iter().find(|r| r.method == label).map(|r| r.peak_gb);
+    let rev = get("RevFFN")?;
+    let sft = get("SFT + Checkpointing")?;
+    Some((sft - rev) / sft)
+}
+
+/// RevFFN's fractional *activation-memory* reduction vs SFT+ckpt — the
+/// quantity the paper's "49% reduction" text actually tracks (the peak
+/// totals in its Table 1 are not mutually consistent; soundness band 0).
+pub fn activation_reduction(rows: &[MemoryRow]) -> Option<f64> {
+    let get = |label: &str| {
+        rows.iter().find(|r| r.method == label).map(|r| r.breakdown.activations)
+    };
+    let rev = get("RevFFN")?;
+    let sft = get("SFT + Checkpointing")?;
+    Some((sft - rev) / sft)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rows_cover_all_methods() {
+        let rows = table1_memory(
+            Geometry::qwen15_moe_a27b(),
+            Assumptions::bf16_mixed(),
+            2048,
+            80.0,
+            Some(8),
+        );
+        assert_eq!(rows.len(), 7);
+        assert!(rows.iter().all(|r| r.peak_gb > 0.0));
+    }
+
+    #[test]
+    fn qualitative_orderings_hold_at_fixed_batch() {
+        let rows = table1_memory(
+            Geometry::qwen15_moe_a27b(),
+            Assumptions::paper_calibrated(),
+            2048,
+            80.0,
+            Some(64),
+        );
+        for (check, ok) in ordering_checks(&rows) {
+            assert!(ok, "failed: {check}");
+        }
+    }
+
+    #[test]
+    fn formatting_contains_all_rows() {
+        let rows = table1_memory(
+            Geometry::qwen15_moe_a27b(),
+            Assumptions::bf16_mixed(),
+            2048,
+            80.0,
+            Some(4),
+        );
+        let text = format_table(&rows, "Table 1");
+        assert!(text.contains("RevFFN"));
+        assert!(text.contains("GaLore"));
+        assert_eq!(text.lines().count(), 9);
+    }
+}

@@ -1,0 +1,382 @@
+//! Artifact manifests — the L2→L3 contract.
+//!
+//! `make artifacts` writes, per (config, variant), a `manifest.json`
+//! describing every tensor (name/shape/blob/offset), the flat I/O layout
+//! of the step functions, and the embedded XLA memory analysis used to
+//! calibrate the Table-1 VRAM model. This module parses those manifests
+//! (via the in-crate JSON codec) and locates the HLO text files; it never
+//! touches Python.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// One tensor of the flat parameter list.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// Blob file (under `<cfg>/blobs/`) holding the initial value.
+    pub blob: String,
+    /// Byte offset of this tensor inside the blob.
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.str_of("name")?,
+            shape: j.usize_vec_of("shape")?,
+            dtype: j.str_of("dtype")?,
+            blob: j.str_of("blob")?,
+            offset: j.usize_of("offset")?,
+            nbytes: j.usize_of("nbytes")?,
+        })
+    }
+}
+
+/// Flat I/O layout of the step functions (mirrors StepBuilder.layout()).
+#[derive(Debug, Clone)]
+pub struct IoLayout {
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub optimizer: String,
+    pub trainable: Vec<bool>,
+    pub trainable_paths: Vec<String>,
+    pub opt_shapes: Vec<Vec<usize>>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl IoLayout {
+    fn from_json(j: &Json) -> Result<Self> {
+        let trainable = j
+            .arr_of("trainable")?
+            .iter()
+            .map(|v| v.as_bool().ok_or_else(|| Error::Parse("trainable: non-bool".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let trainable_paths = j
+            .arr_of("trainable_paths")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Parse("trainable_paths: non-string".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opt_shapes = j
+            .arr_of("opt_shapes")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| Error::Parse("opt_shapes: non-array".into()))?
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| Error::Parse("opt_shapes: non-num".into()))
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IoLayout {
+            n_params: j.usize_of("n_params")?,
+            n_opt: j.usize_of("n_opt")?,
+            optimizer: j.str_of("optimizer")?,
+            trainable,
+            trainable_paths,
+            opt_shapes,
+            batch_size: j.usize_of("batch_size")?,
+            seq_len: j.usize_of("seq_len")?,
+        })
+    }
+}
+
+/// XLA live-buffer analysis embedded at AOT time (`--analyze`).
+#[derive(Debug, Clone)]
+pub struct MemoryAnalysis {
+    pub temp_size_bytes: u64,
+    pub argument_size_bytes: u64,
+    pub output_size_bytes: u64,
+    pub generated_code_size_bytes: u64,
+}
+
+/// Geometry of the model baked into an artifact (mirrors ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff_expert: usize,
+    pub d_ff_shared: usize,
+    pub max_seq_len: usize,
+    pub rev_fixedpoint_iters: usize,
+    pub rev_symmetric: bool,
+}
+
+impl ModelGeometry {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelGeometry {
+            name: j.str_of("name")?,
+            vocab_size: j.usize_of("vocab_size")?,
+            d_model: j.usize_of("d_model")?,
+            n_layers: j.usize_of("n_layers")?,
+            n_heads: j.usize_of("n_heads")?,
+            n_kv_heads: j.usize_of("n_kv_heads")?,
+            n_experts: j.usize_of("n_experts")?,
+            top_k: j.usize_of("top_k")?,
+            d_ff_expert: j.usize_of("d_ff_expert")?,
+            d_ff_shared: j.usize_of("d_ff_shared")?,
+            max_seq_len: j.usize_of("max_seq_len")?,
+            rev_fixedpoint_iters: j.usize_of("rev_fixedpoint_iters").unwrap_or(1),
+            rev_symmetric: j.bool_of("rev_symmetric").unwrap_or(false),
+        })
+    }
+}
+
+/// Per-variant manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub method: String,
+    pub model: ModelGeometry,
+    pub io: IoLayout,
+    pub tensors: Vec<TensorSpec>,
+    pub artifacts: HashMap<String, String>,
+    /// Analysis of the shipped (donated) train step.
+    pub memory_analysis: Option<MemoryAnalysis>,
+    /// Analysis without input donation — the clean activation-memory
+    /// signal used by the Table-1 calibration.
+    pub memory_analysis_nodonate: Option<MemoryAnalysis>,
+    pub n_params_total: u64,
+    pub n_params_trainable: u64,
+    pub use_pallas: bool,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = json::parse(text)?;
+        let tensors = j
+            .arr_of("tensors")?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Parse("artifacts: not an object".into()))?
+            .iter()
+            .map(|(k, v)| {
+                v.as_str()
+                    .map(|s| (k.clone(), s.to_string()))
+                    .ok_or_else(|| Error::Parse("artifacts: non-string".into()))
+            })
+            .collect::<Result<HashMap<_, _>>>()?;
+        let parse_ma = |key: &str| -> Result<Option<MemoryAnalysis>> {
+            Ok(match j.get(key) {
+                Some(m) if !matches!(m, Json::Null) => Some(MemoryAnalysis {
+                    temp_size_bytes: m.u64_of("temp_size_bytes")?,
+                    argument_size_bytes: m.u64_of("argument_size_bytes")?,
+                    output_size_bytes: m.u64_of("output_size_bytes")?,
+                    generated_code_size_bytes: m
+                        .u64_of("generated_code_size_bytes")
+                        .unwrap_or(0),
+                }),
+                _ => None,
+            })
+        };
+        let memory_analysis = parse_ma("memory_analysis")?;
+        let memory_analysis_nodonate = parse_ma("memory_analysis_nodonate")?;
+        Ok(Manifest {
+            variant: j.str_of("variant")?,
+            method: j.str_of("method").unwrap_or_default(),
+            model: ModelGeometry::from_json(j.req("model")?)?,
+            io: IoLayout::from_json(j.req("io")?)?,
+            tensors,
+            artifacts,
+            memory_analysis,
+            memory_analysis_nodonate,
+            n_params_total: j.u64_of("n_params_total").unwrap_or(0),
+            n_params_trainable: j.u64_of("n_params_trainable").unwrap_or(0),
+            use_pallas: j.bool_of("use_pallas").unwrap_or(false),
+        })
+    }
+}
+
+/// A variant directory on disk: manifest + resolved HLO paths.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("reading {}/manifest.json: {e}", dir.display()),
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Artifact { dir, manifest })
+    }
+
+    /// Path of one HLO program (`train_step`, `forward`, `eval_step`, …).
+    pub fn hlo_path(&self, kind: &str) -> Result<PathBuf> {
+        let rel = self.manifest.artifacts.get(kind).ok_or_else(|| {
+            Error::Config(format!(
+                "variant {} has no artifact kind {kind:?}",
+                self.manifest.variant
+            ))
+        })?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Directory holding the parameter blobs (`../blobs`).
+    pub fn blob_dir(&self) -> PathBuf {
+        self.dir
+            .parent()
+            .map(|p| p.join("blobs"))
+            .unwrap_or_else(|| PathBuf::from("blobs"))
+    }
+
+    /// Indices (into the flat tensor list) of trainable tensors.
+    pub fn trainable_indices(&self) -> Vec<usize> {
+        self.manifest
+            .io
+            .trainable
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &t)| t.then_some(i))
+            .collect()
+    }
+}
+
+/// Top-level `index.json` for one lowered config.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub config: String,
+    pub variants: Vec<String>,
+    pub blobs: HashMap<String, String>,
+    pub pallas: bool,
+}
+
+impl ArtifactIndex {
+    pub fn load(cfg_dir: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(cfg_dir.as_ref().join("index.json"))?;
+        let j = json::parse(&text)?;
+        let variants = j
+            .arr_of("variants")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let blobs = j
+            .req("blobs")?
+            .as_obj()
+            .ok_or_else(|| Error::Parse("blobs: not an object".into()))?
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect();
+        Ok(ArtifactIndex {
+            config: j.str_of("config")?,
+            variants,
+            blobs,
+            pallas: j.bool_of("pallas").unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses_and_is_consistent() {
+        let Some(root) = artifacts_root() else { return };
+        let art = Artifact::load(root.join("revffn_stage2")).unwrap();
+        let m = &art.manifest;
+        assert_eq!(m.io.n_params, m.tensors.len());
+        assert_eq!(m.io.trainable.len(), m.tensors.len());
+        assert!(m.io.n_opt <= m.io.trainable.iter().filter(|&&t| t).count());
+        assert!(art.hlo_path("train_step").unwrap().exists());
+        assert!(art.hlo_path("forward").unwrap().exists());
+        // router tensors must be frozen in both RevFFN stages (§3.3)
+        for (spec, &tr) in m.tensors.iter().zip(&m.io.trainable) {
+            if spec.name.contains(".moe.router") {
+                assert!(!tr, "router tensor {} must be frozen", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stage1_trains_only_adapters_and_stream_norms() {
+        let Some(root) = artifacts_root() else { return };
+        let art = Artifact::load(root.join("revffn_stage1")).unwrap();
+        for (spec, &tr) in art.manifest.tensors.iter().zip(&art.manifest.io.trainable) {
+            let is_adapter = spec.name.contains(".adapters.")
+                || spec.name.contains(".norm_x1")
+                || spec.name.contains(".norm_x2")
+                || spec.name.contains(".norm_y1");
+            assert_eq!(tr, is_adapter, "stage-1 trainability wrong for {}", spec.name);
+        }
+    }
+
+    #[test]
+    fn index_lists_all_variants() {
+        let Some(root) = artifacts_root() else { return };
+        let idx = ArtifactIndex::load(&root).unwrap();
+        assert!(idx.variants.len() >= 8);
+        for v in &idx.variants {
+            assert!(root.join(v).join("manifest.json").exists(), "missing {v}");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_kind_is_config_error() {
+        let Some(root) = artifacts_root() else { return };
+        let art = Artifact::load(root.join("revffn_stage2")).unwrap();
+        assert!(art.hlo_path("nonexistent").is_err());
+    }
+
+    #[test]
+    fn lomo_manifest_has_no_opt_state() {
+        let Some(root) = artifacts_root() else { return };
+        let art = Artifact::load(root.join("lomo")).unwrap();
+        assert_eq!(art.manifest.io.n_opt, 0);
+        assert_eq!(art.manifest.io.optimizer, "sgd");
+    }
+
+    #[test]
+    fn galore_opt_shapes_are_rank_reduced() {
+        let Some(root) = artifacts_root() else { return };
+        let art = Artifact::load(root.join("galore")).unwrap();
+        assert_eq!(art.manifest.io.optimizer, "galore");
+        // the embedding moment must be [r, vocab] not [vocab, d]
+        let vocab = art.manifest.model.vocab_size;
+        assert!(art
+            .manifest
+            .io
+            .opt_shapes
+            .iter()
+            .any(|s| s.len() == 2 && s[1] == vocab && s[0] < 64));
+    }
+}

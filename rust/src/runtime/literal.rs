@@ -1,0 +1,163 @@
+//! Host tensor <-> XLA `Literal` conversion utilities.
+//!
+//! The coordinator's host-side tensors are plain `Vec<f32>` / `Vec<i32>`
+//! with explicit shapes; this module owns the (cheap, but easy to get
+//! wrong) conversions into the `xla` crate's `Literal`s and back.
+
+use xla::{ArrayElement, Literal, PrimitiveType};
+
+use crate::error::{Error, Result};
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != expect {
+        return Err(Error::Layout(format!(
+            "f32_literal: data len {} != shape {:?} ({expect})",
+            data.len(),
+            shape
+        )));
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != expect {
+        return Err(Error::Layout(format!(
+            "i32_literal: data len {} != shape {:?} ({expect})",
+            data.len(),
+            shape
+        )));
+    }
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// All-zero f32 literal of the given shape (optimizer-state init).
+pub fn zeros_f32(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    f32_literal(&vec![0.0; n], shape)
+}
+
+/// Read back an f32 literal into a host vector.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 out of a literal (converting if needed).
+pub fn scalar_to_f32(lit: &Literal) -> Result<f32> {
+    let lit = match lit.primitive_type()? {
+        PrimitiveType::F32 => lit.to_vec::<f32>()?,
+        _ => lit.convert(PrimitiveType::F32)?.to_vec::<f32>()?,
+    };
+    lit.first().copied().ok_or_else(|| Error::Layout("empty literal".into()))
+}
+
+/// Element count helper.
+pub fn elem_count(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+/// Bytes per element for the manifest's dtype strings.
+pub fn dtype_bytes(dtype: &str) -> Result<usize> {
+    match dtype {
+        "f32" | "i32" | "u32" => Ok(4),
+        "bf16" | "f16" => Ok(2),
+        "f64" | "i64" => Ok(8),
+        other => Err(Error::Parse(format!("unknown dtype {other:?}"))),
+    }
+}
+
+/// Generic typed literal from raw bytes (dtype from manifest).
+pub fn literal_from_bytes(bytes: &[u8], shape: &[usize], dtype: &str) -> Result<Literal> {
+    match dtype {
+        "f32" => {
+            let mut v = vec![0f32; bytes.len() / 4];
+            bytemuck_cast_f32(bytes, &mut v)?;
+            f32_literal(&v, shape)
+        }
+        other => Err(Error::Parse(format!("unsupported blob dtype {other:?}"))),
+    }
+}
+
+fn bytemuck_cast_f32(bytes: &[u8], out: &mut [f32]) -> Result<()> {
+    if bytes.len() != out.len() * 4 {
+        return Err(Error::Layout("byte length not a multiple of 4".into()));
+    }
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(())
+}
+
+/// Ensure a literal has the expected element type `T`.
+pub fn check_type<T: ArrayElement>(lit: &Literal) -> Result<()> {
+    let ty = lit.ty()?;
+    if ty != T::TY {
+        return Err(Error::Layout(format!("literal type {ty:?} != expected {:?}", T::TY)));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_2d() {
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(7.5);
+        assert_eq!(scalar_to_f32(&lit).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn zeros_have_right_count() {
+        let lit = zeros_f32(&[4, 8]).unwrap();
+        assert_eq!(lit.element_count(), 32);
+        assert!(to_f32_vec(&lit).unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bytes_to_literal() {
+        let vals = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = literal_from_bytes(&bytes, &[3], "f32").unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vals);
+    }
+
+    #[test]
+    fn dtype_bytes_table() {
+        assert_eq!(dtype_bytes("f32").unwrap(), 4);
+        assert_eq!(dtype_bytes("bf16").unwrap(), 2);
+        assert!(dtype_bytes("q4").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime (L3 ↔ L2 boundary): artifact manifests, literal
+//! conversions, compiled-program cache, parameter store, and the
+//! `Stepper` that executes the AOT step functions.
+//!
+//! Adapted from the `/opt/xla-example/load_hlo` pattern: HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> PJRT compile ->
+//! execute. Python never runs at training time.
+
+pub mod artifact;
+pub mod literal;
+pub mod pjrt;
+pub mod stepper;
+pub mod store;
+
+pub use artifact::{Artifact, ArtifactIndex, Manifest, TensorSpec};
+pub use pjrt::{Device, Program, ProgramCache};
+pub use stepper::{Batch, StepStats, Stepper};
+pub use store::{OptState, ParamStore};

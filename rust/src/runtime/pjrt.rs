@@ -1,0 +1,109 @@
+//! PJRT execution: load HLO text, compile once, execute many.
+//!
+//! `Device` wraps the PJRT CPU client; `Program` is one compiled HLO
+//! module. The train loop holds its state as `Literal`s and calls
+//! `Program::run`, which returns the flattened output tuple. Executables
+//! are cached by file path in `ProgramCache` so repeated constructions
+//! (benches, eval passes) never recompile.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::error::{Error, Result};
+
+/// PJRT device handle (CPU plugin; the xla crate also exposes gpu/tpu).
+pub struct Device {
+    client: PjRtClient,
+}
+
+impl Device {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Device { client: PjRtClient::cpu()? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile HLO text (the AOT interchange format) into a `Program`.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Program> {
+        let path = path.as_ref();
+        let proto = HloModuleProto::from_text_file(path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Program {
+            exe,
+            source: path.to_path_buf(),
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct Program {
+    exe: PjRtLoadedExecutable,
+    source: PathBuf,
+}
+
+impl Program {
+    pub fn source(&self) -> &Path {
+        &self.source
+    }
+
+    /// Execute with literal inputs; flatten the (single-tuple) output.
+    ///
+    /// AOT lowering uses `return_tuple=True`, so PJRT hands back one tuple
+    /// buffer; we decompose it into the flat output list the manifest
+    /// describes. Accepts owned or borrowed literals — the hot path passes
+    /// `&Literal` state to avoid copies.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<L>(inputs)?;
+        let buf = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Layout("program produced no output".into()))?;
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Path-keyed executable cache (compile once per process).
+#[derive(Clone, Default)]
+pub struct ProgramCache {
+    inner: Arc<Mutex<HashMap<PathBuf, Arc<Program>>>>,
+}
+
+impl ProgramCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get_or_load(&self, device: &Device, path: impl AsRef<Path>) -> Result<Arc<Program>> {
+        let path = path.as_ref().to_path_buf();
+        let mut map = self
+            .inner
+            .lock()
+            .map_err(|_| Error::Training("program cache poisoned".into()))?;
+        if let Some(p) = map.get(&path) {
+            return Ok(p.clone());
+        }
+        let prog = Arc::new(device.load_hlo_text(&path)?);
+        map.insert(path, prog.clone());
+        Ok(prog)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().map(|m| m.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,368 @@
+//! `Stepper` — one variant's executable step functions bound to live state.
+//!
+//! Owns the compiled `train_step` / `grad_step` / `apply_step` /
+//! `eval_step` / `forward` programs plus the parameter and optimizer
+//! state, and exposes typed entry points the trainer calls every
+//! iteration. All buffer ordering logic (the flat manifest layout) is
+//! concentrated here.
+//!
+//! ## State representation (hot-path design)
+//!
+//! Step outputs are XLA `Literal`s; the stepper keeps them AS literals
+//! and feeds them back by reference on the next call (`execute` takes
+//! `Borrow<Literal>`), so the steady-state loop performs **zero**
+//! host-side parameter copies. The `ParamStore` host mirror is
+//! materialized lazily — only for checkpointing, cross-stage adoption,
+//! or inspection (see EXPERIMENTS.md §Perf for the before/after).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::literal::{f32_literal, i32_literal, scalar_f32, scalar_to_f32, to_f32_vec};
+use crate::runtime::pjrt::{Device, Program, ProgramCache};
+use crate::runtime::store::{OptState, ParamStore};
+
+/// One training/eval batch, already tokenized and masked.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+impl Batch {
+    pub fn validate(&self) -> Result<()> {
+        let n = self.batch_size * self.seq_len;
+        if self.tokens.len() != n || self.targets.len() != n || self.loss_mask.len() != n {
+            return Err(Error::Layout(format!(
+                "batch arrays must be {}x{}={}",
+                self.batch_size, self.seq_len, n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Scalar results of one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub router_aux: f32,
+    /// Wall-clock of the PJRT execute call(s).
+    pub step_time_s: f64,
+}
+
+pub struct Stepper {
+    pub artifact: Artifact,
+    /// Host mirror (lazily synchronized; see `materialize_params`).
+    pub params: ParamStore,
+    host_dirty: bool,
+    /// Device-facing state: literals fed by reference every step.
+    param_lits: Vec<Literal>,
+    m_lits: Vec<Literal>,
+    v_lits: Vec<Literal>,
+    train: Arc<Program>,
+    grad: Option<Arc<Program>>,
+    apply: Option<Arc<Program>>,
+    eval: Arc<Program>,
+    forward: Arc<Program>,
+    /// 1-based optimizer step (Adam bias correction).
+    pub step: u64,
+}
+
+impl Stepper {
+    /// Compile (or fetch cached) programs and stage initial state.
+    pub fn new(device: &Device, cache: &ProgramCache, artifact: Artifact) -> Result<Self> {
+        let train = cache.get_or_load(device, artifact.hlo_path("train_step")?)?;
+        let eval = cache.get_or_load(device, artifact.hlo_path("eval_step")?)?;
+        let forward = cache.get_or_load(device, artifact.hlo_path("forward")?)?;
+        // grad/apply pair is optional (older artifact sets)
+        let grad = artifact
+            .hlo_path("grad_step")
+            .ok()
+            .filter(|p| p.exists())
+            .map(|p| cache.get_or_load(device, p))
+            .transpose()?;
+        let apply = artifact
+            .hlo_path("apply_step")
+            .ok()
+            .filter(|p| p.exists())
+            .map(|p| cache.get_or_load(device, p))
+            .transpose()?;
+        let params = ParamStore::from_blobs(&artifact)?;
+        let opt = OptState::zeros(&artifact.manifest.io.opt_shapes);
+        let param_lits = params.to_literals()?;
+        let (m_lits, v_lits) = opt.to_literals()?;
+        Ok(Stepper {
+            artifact,
+            params,
+            host_dirty: false,
+            param_lits,
+            m_lits,
+            v_lits,
+            train,
+            grad,
+            apply,
+            eval,
+            forward,
+            step: 0,
+        })
+    }
+
+    /// Re-initialize the optimizer moments (stage switches reset Adam).
+    pub fn reset_opt(&mut self) -> Result<()> {
+        let opt = OptState::zeros(&self.artifact.manifest.io.opt_shapes);
+        let (m, v) = opt.to_literals()?;
+        self.m_lits = m;
+        self.v_lits = v;
+        Ok(())
+    }
+
+    /// Sync the host mirror from the literal state (no-op when clean).
+    pub fn materialize_params(&mut self) -> Result<&ParamStore> {
+        if self.host_dirty {
+            self.params.update_from_literals(&self.param_lits)?;
+            self.host_dirty = false;
+        }
+        Ok(&self.params)
+    }
+
+    /// Rebuild the literal state after mutating the host mirror.
+    fn refresh_literals(&mut self) -> Result<()> {
+        self.param_lits = self.params.to_literals()?;
+        self.host_dirty = false;
+        Ok(())
+    }
+
+    /// Adopt parameters from another stepper's store (stage handoff or
+    /// pre-pass transfer). Tensors are matched by name, with the PEFT
+    /// `base.` prefix bridged in both directions (a LoRA tree stores the
+    /// backbone under `base.*`, the standard model at the root); missing
+    /// tensors keep their current value.
+    pub fn adopt_params(&mut self, other: &ParamStore) -> Result<usize> {
+        self.materialize_params()?;
+        let mut copied = 0;
+        let names: Vec<String> =
+            self.params.specs().iter().map(|s| s.name.clone()).collect();
+        for name in names {
+            let candidates = [
+                name.clone(),
+                name.strip_prefix("base.").map(str::to_string).unwrap_or_default(),
+                format!("base.{name}"),
+            ];
+            for cand in candidates.iter().filter(|c| !c.is_empty()) {
+                if let Some(vals) = other.tensor(cand) {
+                    self.params.set_tensor(&name, vals.to_vec())?;
+                    copied += 1;
+                    break;
+                }
+            }
+        }
+        self.refresh_literals()?;
+        Ok(copied)
+    }
+
+    /// Overwrite host params (checkpoint restore) and refresh device state.
+    pub fn replace_params(&mut self, mutate: impl FnOnce(&mut ParamStore) -> Result<usize>)
+        -> Result<usize> {
+        self.materialize_params()?;
+        let n = mutate(&mut self.params)?;
+        self.refresh_literals()?;
+        Ok(n)
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<[Literal; 3]> {
+        batch.validate()?;
+        let shape = [batch.batch_size, batch.seq_len];
+        Ok([
+            i32_literal(&batch.tokens, &shape)?,
+            i32_literal(&batch.targets, &shape)?,
+            f32_literal(&batch.loss_mask, &shape)?,
+        ])
+    }
+
+    /// Execute one fused optimizer step, updating state in place.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let io = &self.artifact.manifest.io;
+        self.step += 1;
+        let [tok, tgt, msk] = self.batch_literals(batch)?;
+        let lr_lit = scalar_f32(lr);
+        let step_lit = scalar_f32(self.step as f32);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(io.n_params + 2 * io.n_opt + 5);
+        inputs.extend(self.param_lits.iter());
+        inputs.extend(self.m_lits.iter());
+        inputs.extend(self.v_lits.iter());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        inputs.push(&lr_lit);
+        inputs.push(&step_lit);
+
+        let t0 = Instant::now();
+        let outputs = self.train.run(&inputs)?;
+        let step_time_s = t0.elapsed().as_secs_f64();
+
+        let np = io.n_params;
+        let no = io.n_opt;
+        let expect = np + 2 * no + 3;
+        if outputs.len() != expect {
+            return Err(Error::Layout(format!(
+                "train_step returned {} outputs, manifest wants {expect}",
+                outputs.len()
+            )));
+        }
+        let mut outputs = outputs;
+        let tail = outputs.split_off(np + 2 * no);
+        let v_new = outputs.split_off(np + no);
+        let m_new = outputs.split_off(np);
+        self.param_lits = outputs;
+        self.m_lits = m_new;
+        self.v_lits = v_new;
+        self.host_dirty = true;
+
+        let loss = scalar_to_f32(&tail[0])?;
+        let grad_norm = scalar_to_f32(&tail[1])?;
+        let router_aux = scalar_to_f32(&tail[2])?;
+        if !loss.is_finite() {
+            return Err(Error::Training(format!(
+                "non-finite loss {loss} at step {}",
+                self.step
+            )));
+        }
+        Ok(StepStats { loss, grad_norm, router_aux, step_time_s })
+    }
+
+    /// Gradient-only microbatch pass: returns host gradients for the
+    /// trainable tensors (manifest `trainable_paths` order) + (loss, aux).
+    pub fn grad_step(&self, batch: &Batch) -> Result<(Vec<Vec<f32>>, f32, f32)> {
+        let prog = self.grad.as_ref().ok_or_else(|| {
+            Error::Config("artifact set lacks grad_step (re-run make artifacts)".into())
+        })?;
+        let [tok, tgt, msk] = self.batch_literals(batch)?;
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_lits.len() + 3);
+        inputs.extend(self.param_lits.iter());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        let outputs = prog.run(&inputs)?;
+        let n_t = self.artifact.trainable_indices().len();
+        if outputs.len() != n_t + 2 {
+            return Err(Error::Layout(format!(
+                "grad_step returned {} outputs, want {}",
+                outputs.len(),
+                n_t + 2
+            )));
+        }
+        let loss = scalar_to_f32(&outputs[n_t])?;
+        let aux = scalar_to_f32(&outputs[n_t + 1])?;
+        let grads = outputs[..n_t]
+            .iter()
+            .map(to_f32_vec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((grads, loss, aux))
+    }
+
+    /// Apply an accumulated (already averaged) gradient; returns the
+    /// post-clip gradient norm. Increments the optimizer step.
+    pub fn apply_accumulated(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<f32> {
+        let prog = self.apply.as_ref().ok_or_else(|| {
+            Error::Config("artifact set lacks apply_step (re-run make artifacts)".into())
+        })?;
+        self.step += 1;
+        let io = &self.artifact.manifest.io;
+        let t_idx = self.artifact.trainable_indices();
+        if grads.len() != t_idx.len() {
+            return Err(Error::Layout(format!(
+                "apply: {} grads for {} trainable tensors",
+                grads.len(),
+                t_idx.len()
+            )));
+        }
+        let grad_lits = t_idx
+            .iter()
+            .zip(grads)
+            .map(|(&i, g)| f32_literal(g, &self.artifact.manifest.tensors[i].shape))
+            .collect::<Result<Vec<_>>>()?;
+        let lr_lit = scalar_f32(lr);
+        let step_lit = scalar_f32(self.step as f32);
+        let mut inputs: Vec<&Literal> =
+            Vec::with_capacity(io.n_params + 2 * io.n_opt + grad_lits.len() + 2);
+        inputs.extend(self.param_lits.iter());
+        inputs.extend(self.m_lits.iter());
+        inputs.extend(self.v_lits.iter());
+        inputs.extend(grad_lits.iter());
+        inputs.push(&lr_lit);
+        inputs.push(&step_lit);
+        let outputs = prog.run(&inputs)?;
+        let np = io.n_params;
+        let no = io.n_opt;
+        if outputs.len() != np + 2 * no + 1 {
+            return Err(Error::Layout(format!(
+                "apply_step returned {} outputs, want {}",
+                outputs.len(),
+                np + 2 * no + 1
+            )));
+        }
+        let mut outputs = outputs;
+        let tail = outputs.split_off(np + 2 * no);
+        let v_new = outputs.split_off(np + no);
+        let m_new = outputs.split_off(np);
+        self.param_lits = outputs;
+        self.m_lits = m_new;
+        self.v_lits = v_new;
+        self.host_dirty = true;
+        scalar_to_f32(&tail[0])
+    }
+
+    /// Loss-only validation pass (no state mutation).
+    pub fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let [tok, tgt, msk] = self.batch_literals(batch)?;
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_lits.len() + 3);
+        inputs.extend(self.param_lits.iter());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        let outputs = self.eval.run(&inputs)?;
+        Ok((scalar_to_f32(&outputs[0])?, scalar_to_f32(&outputs[1])?))
+    }
+
+    /// Logits pass: returns [B*S*V] f32 (row-major `[B, S, V]`).
+    pub fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let io = &self.artifact.manifest.io;
+        let n = io.batch_size * io.seq_len;
+        if tokens.len() != n {
+            return Err(Error::Layout(format!(
+                "forward wants {} tokens, got {}",
+                n,
+                tokens.len()
+            )));
+        }
+        let tok = i32_literal(tokens, &[io.batch_size, io.seq_len])?;
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_lits.len() + 1);
+        inputs.extend(self.param_lits.iter());
+        inputs.push(&tok);
+        let outputs = self.forward.run(&inputs)?;
+        to_f32_vec(&outputs[0])
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.artifact.manifest.model.vocab_size
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        let io = &self.artifact.manifest.io;
+        (io.batch_size, io.seq_len)
+    }
+
+    /// Has microbatch accumulation support (grad/apply artifacts)?
+    pub fn supports_accumulation(&self) -> bool {
+        self.grad.is_some() && self.apply.is_some()
+    }
+}

@@ -1,0 +1,243 @@
+//! Parameter store: the flat tensor state the train loop threads through
+//! the AOT step functions.
+//!
+//! Initial values come from the AOT parameter blobs (one contiguous
+//! little-endian f32 file per source tree — `standard`, `revffn`,
+//! `peft_<method>`); each manifest tensor names its blob + byte offset.
+//! The store owns host copies (`Vec<f32>`) *and* the staged `Literal`s,
+//! so checkpointing and evaluation never re-read the blob files.
+
+use std::collections::HashMap;
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{Artifact, TensorSpec};
+use crate::runtime::literal;
+
+/// Flat, manifest-ordered parameter state.
+pub struct ParamStore {
+    specs: Vec<TensorSpec>,
+    host: Vec<Vec<f32>>,
+    name_index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Load every tensor of `artifact` from its parameter blobs.
+    pub fn from_blobs(artifact: &Artifact) -> Result<Self> {
+        let blob_dir = artifact.blob_dir();
+        let mut blobs: HashMap<String, Vec<u8>> = HashMap::new();
+        let mut host = Vec::with_capacity(artifact.manifest.tensors.len());
+        for spec in &artifact.manifest.tensors {
+            let bytes = match blobs.get(&spec.blob) {
+                Some(b) => b,
+                None => {
+                    let path = blob_dir.join(format!("{}.bin", spec.blob));
+                    let data = std::fs::read(&path).map_err(|e| {
+                        Error::Io(std::io::Error::new(
+                            e.kind(),
+                            format!("reading blob {}: {e}", path.display()),
+                        ))
+                    })?;
+                    blobs.entry(spec.blob.clone()).or_insert(data)
+                }
+            };
+            let end = spec.offset + spec.nbytes;
+            if end > bytes.len() {
+                return Err(Error::Layout(format!(
+                    "tensor {} overruns blob {} ({} > {})",
+                    spec.name,
+                    spec.blob,
+                    end,
+                    bytes.len()
+                )));
+            }
+            let raw = &bytes[spec.offset..end];
+            let mut vals = vec![0f32; raw.len() / 4];
+            for (i, c) in raw.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            if vals.len() != spec.elem_count() {
+                return Err(Error::Layout(format!(
+                    "tensor {}: blob has {} elems, shape {:?} wants {}",
+                    spec.name,
+                    vals.len(),
+                    spec.shape,
+                    spec.elem_count()
+                )));
+            }
+            host.push(vals);
+        }
+        Self::from_host(artifact.manifest.tensors.clone(), host)
+    }
+
+    /// Build from in-memory tensors (checkpoint restore, tests).
+    pub fn from_host(specs: Vec<TensorSpec>, host: Vec<Vec<f32>>) -> Result<Self> {
+        if specs.len() != host.len() {
+            return Err(Error::Layout(format!(
+                "spec count {} != tensor count {}",
+                specs.len(),
+                host.len()
+            )));
+        }
+        for (s, h) in specs.iter().zip(&host) {
+            if s.elem_count() != h.len() {
+                return Err(Error::Layout(format!(
+                    "tensor {}: {} elems for shape {:?}",
+                    s.name,
+                    h.len(),
+                    s.shape
+                )));
+            }
+        }
+        let name_index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        Ok(ParamStore { specs, host, name_index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&[f32]> {
+        self.name_index.get(name).map(|&i| self.host[i].as_slice())
+    }
+
+    pub fn tensor_by_index(&self, i: usize) -> &[f32] {
+        &self.host[i]
+    }
+
+    /// Total parameter count (elements).
+    pub fn param_count(&self) -> u64 {
+        self.specs.iter().map(|s| s.elem_count() as u64).sum()
+    }
+
+    /// Stage every tensor as an XLA literal (manifest order).
+    pub fn to_literals(&self) -> Result<Vec<Literal>> {
+        self.specs
+            .iter()
+            .zip(&self.host)
+            .map(|(s, h)| literal::f32_literal(h, &s.shape))
+            .collect()
+    }
+
+    /// Replace host state from step-function outputs (manifest order).
+    pub fn update_from_literals(&mut self, lits: &[Literal]) -> Result<()> {
+        if lits.len() != self.specs.len() {
+            return Err(Error::Layout(format!(
+                "update: {} literals for {} tensors",
+                lits.len(),
+                self.specs.len()
+            )));
+        }
+        for (i, lit) in lits.iter().enumerate() {
+            let v = literal::to_f32_vec(lit)?;
+            if v.len() != self.host[i].len() {
+                return Err(Error::Layout(format!(
+                    "update: tensor {} got {} elems, want {}",
+                    self.specs[i].name,
+                    v.len(),
+                    self.host[i].len()
+                )));
+            }
+            self.host[i] = v;
+        }
+        Ok(())
+    }
+
+    /// Overwrite a single tensor (tests / surgery).
+    pub fn set_tensor(&mut self, name: &str, vals: Vec<f32>) -> Result<()> {
+        let &i = self
+            .name_index
+            .get(name)
+            .ok_or_else(|| Error::Layout(format!("unknown tensor {name:?}")))?;
+        if vals.len() != self.host[i].len() {
+            return Err(Error::Layout(format!(
+                "set_tensor {name}: {} elems, want {}",
+                vals.len(),
+                self.host[i].len()
+            )));
+        }
+        self.host[i] = vals;
+        Ok(())
+    }
+
+    /// L2 norm over all parameters (divergence tripwire).
+    pub fn global_norm(&self) -> f64 {
+        self.host
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Serialize to the `.rvt` checkpoint payload (name-tagged tensors).
+    pub fn snapshot(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        self.specs
+            .iter()
+            .zip(&self.host)
+            .map(|(s, h)| (s.name.clone(), s.shape.clone(), h.clone()))
+            .collect()
+    }
+}
+
+/// Optimizer-moment state (m, v) for the trainable subset.
+pub struct OptState {
+    pub shapes: Vec<Vec<usize>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl OptState {
+    /// Fresh zeros, shaped per the manifest's `opt_shapes`.
+    pub fn zeros(shapes: &[Vec<usize>]) -> Self {
+        let m = shapes
+            .iter()
+            .map(|s| vec![0f32; literal::elem_count(s)])
+            .collect::<Vec<_>>();
+        let v = m.clone();
+        OptState { shapes: shapes.to_vec(), m, v }
+    }
+
+    pub fn to_literals(&self) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let mk = |xs: &Vec<Vec<f32>>| -> Result<Vec<Literal>> {
+            xs.iter()
+                .zip(&self.shapes)
+                .map(|(h, s)| literal::f32_literal(h, s))
+                .collect()
+        };
+        Ok((mk(&self.m)?, mk(&self.v)?))
+    }
+
+    pub fn update_from_literals(&mut self, m: &[Literal], v: &[Literal]) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(Error::Layout("opt state arity mismatch".into()));
+        }
+        for (i, lit) in m.iter().enumerate() {
+            self.m[i] = literal::to_f32_vec(lit)?;
+        }
+        for (i, lit) in v.iter().enumerate() {
+            self.v[i] = literal::to_f32_vec(lit)?;
+        }
+        Ok(())
+    }
+
+    /// Bytes held by the moments — the optimizer-state term of Table 1.
+    pub fn nbytes(&self) -> u64 {
+        (self.m.iter().map(|t| t.len()).sum::<usize>()
+            + self.v.iter().map(|t| t.len()).sum::<usize>()) as u64
+            * 4
+    }
+}

@@ -1,0 +1,101 @@
+//! Bench-harness substrate (criterion substitute for the offline build).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary using this
+//! module: warmup + timed iterations, median/mean/stddev reporting, and
+//! a uniform output format so `cargo bench` output reads like a table.
+
+use std::time::Instant;
+
+/// Timing summary over iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "median {:.2} ms  mean {:.2} ms ± {:.2}  (n={}, min {:.2}, max {:.2})",
+            self.median_s * 1e3,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters,
+            self.min_s * 1e3,
+            self.max_s * 1e3
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+/// Summarize raw per-iteration seconds.
+pub fn summarize(times: &[f64]) -> Timing {
+    let n = times.len().max(1);
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    Timing {
+        iters: n,
+        mean_s: mean,
+        median_s: sorted[n / 2],
+        stddev_s: var.sqrt(),
+        min_s: sorted.first().copied().unwrap_or(0.0),
+        max_s: sorted.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Standard bench header so all `cargo bench` outputs align.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// One formatted result row.
+pub fn row(label: &str, value: impl std::fmt::Display) {
+    println!("{label:<34} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_constant_series() {
+        let t = summarize(&[0.5; 9]);
+        assert_eq!(t.median_s, 0.5);
+        assert!(t.stddev_s < 1e-12);
+    }
+
+    #[test]
+    fn summarize_orders_min_max() {
+        let t = summarize(&[0.3, 0.1, 0.2]);
+        assert_eq!(t.min_s, 0.1);
+        assert_eq!(t.max_s, 0.3);
+        assert_eq!(t.median_s, 0.2);
+    }
+
+    #[test]
+    fn time_runs_the_closure() {
+        let mut count = 0;
+        let t = time(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(t.iters, 5);
+    }
+}

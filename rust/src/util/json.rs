@@ -1,0 +1,514 @@
+//! Minimal JSON parser + writer (substrate — the build is fully offline,
+//! so serde is implemented in-crate; see DESIGN.md §Inventory S17).
+//!
+//! Supports the full JSON grammar needed by the artifact manifests and
+//! run configs: objects, arrays, strings (with escapes), numbers, bools,
+//! null. Numbers are kept as f64 (manifest values are well within 2^53).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::error::{Error, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ------------------------------------------------------------------
+    // Typed accessors
+    // ------------------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `get` that errors with the key name (manifest parsing).
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| Error::Parse(format!("missing key {key:?}")))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => m.get_or(),
+            _ => None,
+        }
+    }
+
+    // typed + named error helpers -------------------------------------
+
+    pub fn str_of(&self, key: &str) -> Result<String> {
+        self.req(key)?
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not a string")))
+    }
+
+    pub fn usize_of(&self, key: &str) -> Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not a number")))
+    }
+
+    pub fn u64_of(&self, key: &str) -> Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not a number")))
+    }
+
+    pub fn f64_of(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not a number")))
+    }
+
+    pub fn bool_of(&self, key: &str) -> Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not a bool")))
+    }
+
+    pub fn arr_of(&self, key: &str) -> Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| Error::Parse(format!("key {key:?} is not an array")))
+    }
+
+    /// Array of usize (shapes).
+    pub fn usize_vec_of(&self, key: &str) -> Result<Vec<usize>> {
+        self.arr_of(key)?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Parse(format!("{key:?}: non-numeric element")))
+            })
+            .collect()
+    }
+}
+
+// a tiny helper so as_obj above compiles cleanly
+trait GetOr {
+    fn get_or(&self) -> Option<&Self>;
+}
+impl GetOr for BTreeMap<String, Json> {
+    fn get_or(&self) -> Option<&Self> {
+        Some(self)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Parsing
+// ----------------------------------------------------------------------
+
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != bytes.len() {
+        return Err(Error::Parse(format!("trailing data at byte {}", p.i)));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| Error::Parse("unexpected end of input".into()))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            return Err(Error::Parse(format!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char, self.i, self.b[self.i] as char
+            )));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(Error::Parse(format!("bad literal at byte {}", self.i)))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => return Err(Error::Parse(format!("expected , or }} found {:?}", c as char))),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => return Err(Error::Parse(format!("expected , or ] found {:?}", c as char))),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(Error::Parse("truncated \\u escape".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|e| Error::Parse(e.to_string()))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|e| Error::Parse(e.to_string()))?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(Error::Parse("bad escape".into())),
+                    }
+                }
+                _ => {
+                    // copy raw UTF-8 bytes through
+                    let start = self.i - 1;
+                    while self.i < self.b.len() && self.b[self.i] >= 0x80 {
+                        self.i += 1;
+                    }
+                    s.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|e| Error::Parse(e.to_string()))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| Error::Parse(e.to_string()))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| Error::Parse(format!("bad number {text:?}: {e}")))
+    }
+}
+
+// ----------------------------------------------------------------------
+// Writing
+// ----------------------------------------------------------------------
+
+/// Escape a string for JSON output.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Json {
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience builder for writing objects field by field.
+#[derive(Default)]
+pub struct ObjBuilder {
+    m: BTreeMap<String, Json>,
+}
+
+impl ObjBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn str(mut self, k: &str, v: impl Into<String>) -> Self {
+        self.m.insert(k.into(), Json::Str(v.into()));
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.m.insert(k.into(), Json::Num(v));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.m.insert(k.into(), Json::Bool(v));
+        self
+    }
+
+    pub fn val(mut self, k: &str, v: Json) -> Self {
+        self.m.insert(k.into(), v);
+        self
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let text = r#"{
+            "variant": "revffn_stage2",
+            "io": {"n_params": 22, "trainable": [true, false], "opt_shapes": [[4, 8]]},
+            "use_pallas": false,
+            "n_params_total": 3200384,
+            "nested": {"a": [1, 2.5, -3e2], "b": null}
+        }"#;
+        let j = parse(text).unwrap();
+        assert_eq!(j.str_of("variant").unwrap(), "revffn_stage2");
+        assert_eq!(j.req("io").unwrap().usize_of("n_params").unwrap(), 22);
+        assert!(!j.bool_of("use_pallas").unwrap());
+        assert_eq!(j.u64_of("n_params_total").unwrap(), 3_200_384);
+        let shapes = j.req("io").unwrap().arr_of("opt_shapes").unwrap();
+        assert_eq!(shapes[0].as_arr().unwrap()[1].as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let j = Json::Str("a\"b\\c\nd\te".into());
+        let text = j.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let j = parse(r#""P↑ adapters — ↑""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "P↑ adapters — ↑");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(parse("{} extra").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("{\"a\": }").is_err());
+    }
+
+    #[test]
+    fn numbers_int_and_float() {
+        let j = parse("[0, -5, 3.25, 1e3, 2E-2]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[1].as_f64().unwrap(), -5.0);
+        assert_eq!(a[3].as_f64().unwrap(), 1000.0);
+        assert!((a[4].as_f64().unwrap() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_produces_parseable_output() {
+        let j = ObjBuilder::new()
+            .str("name", "x")
+            .num("v", 1.5)
+            .bool("ok", true)
+            .val("arr", Json::Arr(vec![Json::Num(1.0)]))
+            .build();
+        let round = parse(&j.to_string()).unwrap();
+        assert_eq!(round.f64_of("v").unwrap(), 1.5);
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let mut text = String::new();
+        for _ in 0..50 {
+            text.push('[');
+        }
+        text.push('1');
+        for _ in 0..50 {
+            text.push(']');
+        }
+        assert!(parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,55 @@
+//! In-crate substrates for the fully-offline build: JSON codec, PRNG,
+//! bench-timing helpers, and a scratch-dir guard for tests.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// RAII scratch directory for tests (tempfile substitute).
+pub struct ScratchDir {
+    pub path: std::path::PathBuf,
+}
+
+impl ScratchDir {
+    pub fn new(tag: &str) -> std::io::Result<Self> {
+        let pid = std::process::id();
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir().join(format!("revffn-{tag}-{pid}-{t}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(ScratchDir { path })
+    }
+
+    pub fn join(&self, name: &str) -> std::path::PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_dir_created_and_removed() {
+        let p;
+        {
+            let d = ScratchDir::new("t").unwrap();
+            p = d.path.clone();
+            std::fs::write(d.join("x"), "y").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+}

@@ -1,0 +1,93 @@
+//! Property-test harness (proptest substitute for the offline build).
+//!
+//! `prop_check` drives a predicate with `n` randomized cases from the
+//! in-crate PCG32; on failure it re-runs a simple halving shrink over the
+//! case index's seed to report the smallest failing seed it can find.
+//! Generators are plain closures over `Rng` — composable and explicit.
+
+use crate::util::rng::Rng;
+
+/// Run `n` random cases; panic with the failing seed on first failure.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for case in 0..n {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // shrink: try lower-entropy seeds derived from this one
+            let mut worst = (seed, format!("{input:?}"));
+            for shrink in [seed / 2, seed / 4, base_seed, 0] {
+                let mut r = Rng::seed_from_u64(shrink);
+                let cand = gen(&mut r);
+                if !prop(&cand) {
+                    worst = (shrink, format!("{cand:?}"));
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {}): input = {}",
+                worst.0, worst.1
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn string(rng: &mut Rng, max_len: usize) -> String {
+        let len = rng.gen_range(0..max_len + 1);
+        (0..len)
+            .map(|_| {
+                // mixed ASCII + some multi-byte chars
+                match rng.gen_range(0..10) {
+                    0 => '✓',
+                    1 => 'é',
+                    _ => (rng.gen_range(0x20..0x7f) as u8) as char,
+                }
+            })
+            .collect()
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.gen_normal() as f32) * scale).collect()
+    }
+
+    pub fn i32_vec(rng: &mut Rng, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len)
+            .map(|_| lo + (rng.gen_range(0..(hi - lo) as usize)) as i32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        prop_check("reverse-involution", 50, 7,
+            |rng| {
+                let n = rng.gen_range(0..20);
+                gen::i32_vec(rng, n, -5, 5)
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                w == *v
+            });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always-false", 3, 1, |rng| rng.next_u32(), |_| false);
+    }
+}

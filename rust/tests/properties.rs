@@ -1,0 +1,234 @@
+//! Property-based tests over the coordinator substrates (proptest-style,
+//! driven by the in-crate harness): tokenizer round-trips, JSON codec
+//! round-trips, checkpoint format, batcher invariants, LR schedule
+//! bounds, memory-model monotonicity, instruction masking.
+
+use revffn::config::{LrSchedule, ScheduleConfig};
+use revffn::coordinator::lr::lr_at;
+use revffn::data::dataset::{encode_example, encode_lm_chunk};
+use revffn::data::synthetic::{Example, Family};
+use revffn::data::tokenizer::Tokenizer;
+use revffn::data::Batcher;
+use revffn::memory::{Assumptions, Geometry, MemoryModel, Method};
+use revffn::util::json;
+use revffn::util::prop::{gen, prop_check};
+use revffn::util::rng::Rng;
+
+#[test]
+fn prop_tokenizer_roundtrip_any_ascii() {
+    let corpus = "the quick brown fox jumps over the lazy dog 0123456789 ".repeat(30);
+    let tok = Tokenizer::train(&corpus, 300).unwrap();
+    prop_check("tokenizer-roundtrip", 100, 11,
+        |rng| gen::string(rng, 60),
+        |s| tok.decode(&tok.encode(s)) == *s);
+}
+
+#[test]
+fn prop_tokenizer_ids_in_vocab() {
+    let corpus = "aa bb cc dd ee ff ".repeat(40);
+    let vocab = 290;
+    let tok = Tokenizer::train(&corpus, vocab).unwrap();
+    prop_check("tokenizer-vocab-bound", 100, 13,
+        |rng| gen::string(rng, 80),
+        |s| tok.encode(s).iter().all(|&i| (i as usize) < vocab));
+}
+
+#[test]
+fn prop_json_string_roundtrip() {
+    prop_check("json-string-roundtrip", 200, 17,
+        |rng| gen::string(rng, 40),
+        |s| {
+            let j = json::Json::Str(s.clone());
+            json::parse(&j.to_string()).map(|b| b == j).unwrap_or(false)
+        });
+}
+
+#[test]
+fn prop_json_number_array_roundtrip() {
+    prop_check("json-num-roundtrip", 100, 19,
+        |rng| {
+            let n = rng.gen_range(0..30);
+            gen::i32_vec(rng, n, -100000, 100000)
+        },
+        |v| {
+            let j = json::Json::Arr(v.iter().map(|&x| json::Json::Num(x as f64)).collect());
+            match json::parse(&j.to_string()) {
+                Ok(json::Json::Arr(back)) => back
+                    .iter()
+                    .zip(v)
+                    .all(|(b, &x)| b.as_f64() == Some(x as f64)),
+                _ => false,
+            }
+        });
+}
+
+#[test]
+fn prop_lr_always_in_bounds() {
+    let scheds = [LrSchedule::Constant, LrSchedule::WarmupCosine, LrSchedule::WarmupLinear];
+    prop_check("lr-bounds", 300, 23,
+        |rng| {
+            let kind = scheds[rng.gen_range(0..3)];
+            let total = rng.gen_range(1..500) as u64;
+            let step = rng.gen_range(0..total as usize) as u64;
+            let peak = rng.gen_f32() + 1e-3;
+            (kind, total, step, peak)
+        },
+        |&(kind, total, step, peak)| {
+            let s = ScheduleConfig {
+                lr_schedule: kind,
+                warmup_steps: 10,
+                min_lr_factor: 0.1,
+                ..Default::default()
+            };
+            let lr = lr_at(&s, peak, step, total);
+            lr > 0.0 && lr <= peak * (1.0 + 1e-6)
+        });
+}
+
+#[test]
+fn prop_batcher_preserves_sample_multiset_per_epoch() {
+    prop_check("batcher-epoch-coverage", 30, 29,
+        |rng| (rng.gen_range(4..40), rng.gen_range(1..5), rng.next_u64()),
+        |&(n, b, seed)| {
+            let n = n - n % b; // full batches only for exact coverage
+            if n == 0 {
+                return true;
+            }
+            let samples: Vec<_> = (0..n)
+                .map(|i| revffn::data::Sample {
+                    tokens: vec![i as i32; 4],
+                    targets: vec![i as i32; 4],
+                    loss_mask: vec![1.0; 4],
+                })
+                .collect();
+            let mut batcher = Batcher::new(samples, b, 4, seed);
+            let mut seen = vec![0usize; n];
+            for _ in 0..n / b {
+                let batch = batcher.next_batch();
+                for row in 0..b {
+                    seen[batch.tokens[row * 4] as usize] += 1;
+                }
+            }
+            seen.iter().all(|&c| c == 1)
+        });
+}
+
+#[test]
+fn prop_mask_never_covers_prompt() {
+    let corpus = "Compute 1 plus 2. The answer is 3. ".repeat(30);
+    let tok = Tokenizer::train(&corpus, 300).unwrap();
+    prop_check("mask-prompt-disjoint", 60, 31,
+        |rng| {
+            let a = rng.gen_range(1..50);
+            let b = rng.gen_range(1..50);
+            Example {
+                instruction: format!("Compute {a} plus {b}."),
+                response: format!("The answer is {}.", a + b),
+                family: Family::Arithmetic,
+            }
+        },
+        |ex| {
+            let Ok(s) = encode_example(&tok, ex, 96) else { return true };
+            let prompt_len =
+                tok.encode(&revffn::data::dataset::render_prompt(&ex.instruction)).len() + 1;
+            s.loss_mask[..prompt_len.saturating_sub(1)].iter().all(|&m| m == 0.0)
+        });
+}
+
+#[test]
+fn prop_lm_chunk_targets_shifted() {
+    prop_check("lm-shift", 80, 37,
+        |rng| {
+            let n = rng.gen_range(2..40);
+            gen::i32_vec(rng, n, 4, 260)
+        },
+        |ids| {
+            let s = encode_lm_chunk(ids, 24);
+            (0..23).all(|t| s.loss_mask[t] == 0.0 || s.targets[t] == s.tokens[t + 1])
+        });
+}
+
+#[test]
+fn prop_memory_monotone_in_batch_and_seq() {
+    let model = MemoryModel::new(Geometry::qwen15_moe_a27b(), Assumptions::bf16_mixed());
+    prop_check("memory-monotone", 60, 41,
+        |rng| {
+            let m = Method::ALL[rng.gen_range(0..Method::ALL.len())];
+            let b = rng.gen_range(1..64) as u64;
+            let s = [512u64, 1024, 2048][rng.gen_range(0..3)];
+            (m, b, s)
+        },
+        |&(m, b, s)| {
+            model.peak_gb(m, b + 1, s) >= model.peak_gb(m, b, s)
+                && model.peak_gb(m, b, s * 2) >= model.peak_gb(m, b, s)
+        });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_tensors() {
+    use revffn::runtime::artifact::TensorSpec;
+    use revffn::runtime::ParamStore;
+    prop_check("checkpoint-roundtrip", 25, 43,
+        |rng| {
+            let n_tensors = rng.gen_range(1..6);
+            (0..n_tensors)
+                .map(|i| {
+                    let rows = rng.gen_range(1..5);
+                    let cols = rng.gen_range(1..7);
+                    (format!("t{i}"), vec![rows, cols], gen::f32_vec(rng, rows * cols, 2.0))
+                })
+                .collect::<Vec<_>>()
+        },
+        |tensors| {
+            let specs: Vec<TensorSpec> = tensors
+                .iter()
+                .map(|(name, shape, data)| TensorSpec {
+                    name: name.clone(),
+                    shape: shape.clone(),
+                    dtype: "f32".into(),
+                    blob: "none".into(),
+                    offset: 0,
+                    nbytes: data.len() * 4,
+                })
+                .collect();
+            let host: Vec<Vec<f32>> = tensors.iter().map(|(_, _, d)| d.clone()).collect();
+            let store = ParamStore::from_host(specs.clone(), host).unwrap();
+            let dir = revffn::util::ScratchDir::new("prop-ckpt").unwrap();
+            let path = dir.join("x.rvt");
+            revffn::checkpoint::save(&path, &store, 5).unwrap();
+            let ck = revffn::checkpoint::load(&path).unwrap();
+            ck.step == 5
+                && ck.tensors.len() == tensors.len()
+                && ck.tensors.iter().zip(tensors).all(|(a, b)| a.0 == b.0 && a.2 == b.2)
+        });
+}
+
+#[test]
+fn prop_lang_b_preserves_structure() {
+    use revffn::data::synthetic::to_lang_b;
+    prop_check("lang-b-structure", 100, 47,
+        |rng| gen::string(rng, 50),
+        |s| {
+            let b = to_lang_b(s);
+            b.chars().count() == s.chars().count()
+                && s.chars().zip(b.chars()).all(|(x, y)| {
+                    x.is_ascii_alphabetic() == y.is_ascii_alphabetic()
+                        && (!x.is_ascii_alphabetic() || x != y || !x.is_ascii_alphabetic())
+                        && (x.is_ascii_uppercase() == y.is_ascii_uppercase())
+                })
+        });
+}
+
+#[test]
+fn prop_rng_shuffle_uniformish() {
+    // sanity: over many shuffles of [0,1,2], each permutation appears
+    let mut counts = std::collections::HashMap::new();
+    let mut rng = Rng::seed_from_u64(51);
+    for _ in 0..600 {
+        let mut v = vec![0, 1, 2];
+        rng.shuffle(&mut v);
+        *counts.entry(v).or_insert(0) += 1;
+    }
+    assert_eq!(counts.len(), 6, "all 6 permutations must occur");
+    assert!(counts.values().all(|&c| c > 40), "roughly uniform: {counts:?}");
+}
