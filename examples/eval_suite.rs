@@ -5,28 +5,18 @@
 //!
 //!     cargo run --release --example eval_suite -- [train_steps]
 
-use revffn::data::synthetic::{Corpus, CorpusConfig};
-use revffn::data::{encode_corpus, Batcher, Tokenizer};
-use revffn::eval::EvalSuite;
-use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
+use revffn::data::{encode_corpus, Batcher};
+use revffn::engine::{Method, Session};
 
 fn main() -> anyhow::Result<()> {
     let steps: u64 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(40);
-    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let cache = ProgramCache::new();
-    let artifact = Artifact::load("artifacts/tiny/revffn_stage2")
+    let mut session = Session::builder("artifacts/tiny")
+        .method(Method::Revffn)
+        .build()
         .map_err(|e| anyhow::anyhow!("{e} — did you run `make artifacts`?"))?;
-    let mut stepper = Stepper::new(&device, &cache, artifact).map_err(|e| anyhow::anyhow!("{e}"))?;
-
-    let corpus = Corpus::generate(CorpusConfig::default());
-    let tokenizer = Tokenizer::train(&corpus.pretrain_text(), stepper.vocab_size())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let suite = EvalSuite::new(corpus.world.clone(), 24, 7);
 
     println!("== untrained model ==");
-    let before = suite
-        .run(&stepper, &tokenizer, &corpus.eval)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let before = session.bench_scores(24, 7).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "  mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
         before.mmlu_like, before.gsm8k_like, before.multilingual_like, before.mtbench_like
@@ -34,21 +24,22 @@ fn main() -> anyhow::Result<()> {
     println!("  (random-guess floor: mmlu {:.1}%, gsm8k 25.0%)", 100.0 / 8.0);
 
     println!("\n== training {steps} steps ==");
-    let (b, s) = stepper.batch_shape();
-    let samples = encode_corpus(&tokenizer, &corpus.train, s);
+    let (b, s) = session.stepper.batch_shape();
+    let samples = encode_corpus(&session.tokenizer, &session.corpus.train, s);
     let mut batcher = Batcher::new(samples, b, s, 0);
     for step in 0..steps {
         let batch = batcher.next_batch();
-        let stats = stepper.train_step(&batch, 3e-4).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let stats = session
+            .stepper
+            .train_step(&batch, 3e-4)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         if step % 10 == 0 {
             println!("  step {step}: loss {:.4}", stats.loss);
         }
     }
 
     println!("\n== after training ==");
-    let after = suite
-        .run(&stepper, &tokenizer, &corpus.eval)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let after = session.bench_scores(24, 7).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "  mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
         after.mmlu_like, after.gsm8k_like, after.multilingual_like, after.mtbench_like

@@ -3,6 +3,10 @@
 //! corpus, log the loss curve, and score the trained model on the
 //! Table-2 benchmark suite.
 //!
+//! Drives the run through the step-granular `Run::step()` API — each
+//! `StepEvent` streams out as it happens, which is how an external
+//! scheduler or server would multiplex runs.
+//!
 //!     cargo run --release --example finetune_e2e -- [steps2] [steps1] [pretrain]
 //!
 //! Defaults: 170 stage-2 steps, 30 stage-1 steps, 60 LM pre-pass steps —
@@ -12,7 +16,7 @@
 
 use revffn::config::RunConfig;
 use revffn::coordinator::Trainer;
-use revffn::eval::EvalSuite;
+use revffn::engine::{Method, StepEvent};
 use revffn::runtime::Device;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let pretrain = args.get(2).copied().unwrap_or(60);
 
     let mut cfg = RunConfig::default_tiny("artifacts/tiny");
-    cfg.method = "revffn".into();
+    cfg.method = Method::Revffn;
     cfg.schedule.stage1_steps = stage1;
     cfg.schedule.stage2_steps = stage2;
     cfg.data.pretrain_steps = pretrain;
@@ -35,19 +39,30 @@ fn main() -> anyhow::Result<()> {
         "== RevFFN end-to-end: pre-pass {pretrain} + stage1 {stage1} + stage2 {stage2} steps =="
     );
     let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let report = trainer.run().map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    println!("\n== loss curve (every 10th step) ==");
-    for rec in trainer.metrics.steps.iter().step_by(10) {
-        println!(
-            "  stage{} step {:>4}  loss {:.4}  lr {:.2e}",
-            rec.stage, rec.step, rec.loss, rec.lr
-        );
+    // stream the run event-by-event instead of blocking in run()
+    let mut run = trainer.start().map_err(|e| anyhow::anyhow!("{e}"))?;
+    while let Some(event) = run.step().map_err(|e| anyhow::anyhow!("{e}"))? {
+        match event {
+            StepEvent::PhaseStarted { label, steps, batch_size, seq_len, .. } => {
+                println!("-- {label}: {steps} steps (batch {batch_size}x{seq_len})");
+            }
+            StepEvent::Step(rec) if rec.step % 10 == 0 => {
+                println!(
+                    "  stage{} step {:>4}  loss {:.4}  lr {:.2e}",
+                    rec.stage, rec.step, rec.loss, rec.lr
+                );
+            }
+            StepEvent::EvalPoint { step, eval_loss } => {
+                println!("  eval @ step {step:>4}  loss {eval_loss:.4}");
+            }
+            StepEvent::PhaseFinished { stage, eval_loss, .. } => {
+                println!("-- stage {stage} done (eval {eval_loss:.4})");
+            }
+            _ => {}
+        }
     }
-    println!("\n== evals ==");
-    for e in &trainer.metrics.evals {
-        println!("  step {:>4}  eval_loss {:.4}", e.step, e.eval_loss);
-    }
+    let report = run.finish().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     println!(
         "\nsummary: {} steps, train loss {:.4} -> {:.4}, eval {:.4}, {:.1} samples/s, wall {:.0}s",
@@ -63,11 +78,7 @@ fn main() -> anyhow::Result<()> {
         "e2e validation failed: loss did not decrease"
     );
 
-    let stepper = trainer.stepper.as_ref().expect("trained model");
-    let suite = EvalSuite::new(trainer.corpus.world.clone(), 32, 7);
-    let scores = suite
-        .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let scores = trainer.bench_scores(32, 7).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "benchmarks: mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
         scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like

@@ -1,42 +1,45 @@
-//! Quickstart: load the RevFFN artifacts, run a few reversible fine-tuning
-//! steps on a synthetic batch, and verify the §3.1 reconstruction claim.
+//! Quickstart: load the RevFFN artifacts through the `Session` facade,
+//! run a few reversible fine-tuning steps on a synthetic batch, and
+//! verify the §3.1 reconstruction claim.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
 //! This exercises the full stack end to end: manifest parsing → blob
 //! loading → PJRT compile → train_step execution → reversibility check.
 
-use revffn::data::synthetic::{Corpus, CorpusConfig};
-use revffn::data::{encode_corpus, Batcher, Tokenizer};
-use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
+use revffn::data::synthetic::CorpusConfig;
+use revffn::data::{encode_corpus, Batcher};
+use revffn::engine::{Method, Session};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args()
         .nth(1)
         .unwrap_or_else(|| "artifacts/tiny".to_string());
 
-    // 1. PJRT device + compiled programs
-    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("device: {} x{}", device.platform_name(), device.device_count());
-    let cache = ProgramCache::new();
-    let artifact = Artifact::load(format!("{artifacts}/revffn_stage2"))
+    // 1. One builder call replaces device + cache + artifact + tokenizer
+    //    assembly (see `revffn::engine::Session`)
+    let mut session = Session::builder(&artifacts)
+        .method(Method::Revffn)
+        .corpus(CorpusConfig { n_train: 256, ..Default::default() })
+        .build()
         .map_err(|e| anyhow::anyhow!("{e} — did you run `make artifacts`?"))?;
     println!(
-        "model: {} ({} tensors, {}/{} params trainable)",
-        artifact.manifest.model.name,
-        artifact.manifest.tensors.len(),
-        artifact.manifest.n_params_trainable,
-        artifact.manifest.n_params_total,
+        "device: {} x{}",
+        session.device.platform_name(),
+        session.device.device_count()
     );
-    let mut stepper =
-        Stepper::new(&device, &cache, artifact).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let manifest = &session.stepper.artifact.manifest;
+    println!(
+        "model: {} ({} tensors, {}/{} params trainable)",
+        manifest.model.name,
+        manifest.tensors.len(),
+        manifest.n_params_trainable,
+        manifest.n_params_total,
+    );
 
-    // 2. Synthetic instruction data
-    let corpus = Corpus::generate(CorpusConfig { n_train: 256, ..Default::default() });
-    let tokenizer = Tokenizer::train(&corpus.train_text(), stepper.vocab_size())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let (b, s) = stepper.batch_shape();
-    let samples = encode_corpus(&tokenizer, &corpus.train, s);
+    // 2. Synthetic instruction data through the session's tokenizer
+    let (b, s) = session.stepper.batch_shape();
+    let samples = encode_corpus(&session.tokenizer, &session.corpus.train, s);
     let mut batcher = Batcher::new(samples, b, s, 0);
 
     // 3. A few reversible full-parameter optimizer steps
@@ -45,7 +48,8 @@ fn main() -> anyhow::Result<()> {
     let mut last = 0.0;
     for step in 0..8 {
         let batch = batcher.next_batch();
-        let stats = stepper
+        let stats = session
+            .stepper
             .train_step(&batch, 3e-4)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         first.get_or_insert(stats.loss);
@@ -65,12 +69,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 4. Reversibility: reconstruct inputs from outputs through the stack
-    let rec = Artifact::load(format!("{artifacts}/reconstruct"))
+    let (rec, prog) = session
+        .program("reconstruct", "reconstruct")
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let prog = device
-        .load_hlo_text(rec.hlo_path("reconstruct").map_err(|e| anyhow::anyhow!("{e}"))?)
+    let trained = session
+        .stepper
+        .materialize_params()
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let trained = stepper.materialize_params().map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut inputs = trained.to_literals().map_err(|e| anyhow::anyhow!("{e}"))?;
     let io = &rec.manifest.io;
     let tokens: Vec<i32> = (0..io.batch_size * io.seq_len)

@@ -9,19 +9,18 @@
 //!
 //!     cargo bench --bench fig_reversibility
 
-use revffn::data::synthetic::{Corpus, CorpusConfig};
-use revffn::data::{encode_corpus, Batcher, Tokenizer};
-use revffn::runtime::{literal, Artifact, Device, ProgramCache, Stepper};
+use revffn::data::synthetic::CorpusConfig;
+use revffn::data::{encode_corpus, Batcher};
+use revffn::engine::{Method, Session};
+use revffn::runtime::{literal, Artifact, Program, Stepper};
 use revffn::util::bench;
 
 fn reconstruct_err(
-    device: &Device,
     artifact: &Artifact,
-    prog: &revffn::runtime::Program,
+    prog: &Program,
     stepper: &mut Stepper,
     token_seed: usize,
 ) -> anyhow::Result<f32> {
-    let _ = device;
     let io = &artifact.manifest.io;
     let params = stepper.materialize_params().map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut inputs = params.to_literals().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -37,24 +36,23 @@ fn reconstruct_err(
 }
 
 fn main() -> anyhow::Result<()> {
-    let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let cache = ProgramCache::new();
-    let artifact = Artifact::load("artifacts/tiny/reconstruct")
+    // one session: the RevFFN inference model + corpus/tokenizer, plus
+    // cached access to the auxiliary reconstruct programs
+    let mut session = Session::builder("artifacts/tiny")
+        .method(Method::Revffn)
+        .corpus(CorpusConfig { n_train: 128, ..Default::default() })
+        .build()
         .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts`"))?;
-    let prog_arc = cache
-        .get_or_load(&device, artifact.hlo_path("reconstruct").map_err(|e| anyhow::anyhow!("{e}"))?)
+    let (artifact, prog_arc) = session
+        .program("reconstruct", "reconstruct")
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let train_art = Artifact::load("artifacts/tiny/revffn_stage2")
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut stepper =
-        Stepper::new(&device, &cache, train_art).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     bench::section("Fig 1 / §3.1 — reversible reconstruction error (f32 eps = 1.19e-7)");
 
     // at init, over several token batches
     let mut worst: f32 = 0.0;
     for seed in 0..5 {
-        let e = reconstruct_err(&device, &artifact, &prog_arc, &mut stepper, seed)?;
+        let e = reconstruct_err(&artifact, &prog_arc, &mut session.stepper, seed)?;
         worst = worst.max(e);
     }
     bench::row("max error @ init (5 batches)", format!("{worst:.3e}"));
@@ -68,37 +66,33 @@ fn main() -> anyhow::Result<()> {
         ("reconstruct_iters4", "4 fixed-point iterations"),
         ("reconstruct_symmetric", "symmetric variant (exact inverse)"),
     ] {
-        let dir = format!("artifacts/tiny/{variant}");
-        let Ok(art) = Artifact::load(&dir) else {
+        let Ok((art, prog)) = session.program(variant, "reconstruct") else {
             bench::row(label, "(artifact missing)");
             continue;
         };
-        let prog = cache
-            .get_or_load(&device, art.hlo_path("reconstruct").map_err(|e| anyhow::anyhow!("{e}"))?)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
         let mut worst: f32 = 0.0;
         for seed in 0..3 {
-            let e = reconstruct_err(&device, &art, &prog, &mut stepper, seed)?;
+            let e = reconstruct_err(&art, &prog, &mut session.stepper, seed)?;
             worst = worst.max(e);
         }
         bench::row(label, format!("{worst:.3e}"));
     }
 
     // after training steps the weights grow — error must stay at fp noise
-    let corpus = Corpus::generate(CorpusConfig { n_train: 128, ..Default::default() });
-    let tok = Tokenizer::train(&corpus.train_text(), stepper.vocab_size())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let (b, s) = stepper.batch_shape();
-    let samples = encode_corpus(&tok, &corpus.train, s);
+    let (b, s) = session.stepper.batch_shape();
+    let samples = encode_corpus(&session.tokenizer, &session.corpus.train, s);
     let mut batcher = Batcher::new(samples, b, s, 0);
     for checkpoint in [5u64, 20] {
-        while stepper.step < checkpoint {
+        while session.stepper.step < checkpoint {
             let batch = batcher.next_batch();
-            stepper.train_step(&batch, 3e-4).map_err(|e| anyhow::anyhow!("{e}"))?;
+            session
+                .stepper
+                .train_step(&batch, 3e-4)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
         }
         let mut worst: f32 = 0.0;
         for seed in 0..3 {
-            let e = reconstruct_err(&device, &artifact, &prog_arc, &mut stepper, seed)?;
+            let e = reconstruct_err(&artifact, &prog_arc, &mut session.stepper, seed)?;
             worst = worst.max(e);
         }
         bench::row(
@@ -109,13 +103,14 @@ fn main() -> anyhow::Result<()> {
 
     // recompute overhead: inverse+forward round-trip vs forward alone
     bench::section("Recompute overhead (round-trip vs forward)");
-    let io_bs = stepper.batch_shape();
+    let io_bs = session.stepper.batch_shape();
     let tokens: Vec<i32> = (0..io_bs.0 * io_bs.1).map(|i| (i % 300) as i32 + 5).collect();
     let fwd_t = bench::time(1, 5, || {
-        let _ = stepper.forward(&tokens).unwrap();
+        let _ = session.stepper.forward(&tokens).unwrap();
     });
     bench::row("forward", fwd_t.fmt_ms());
-    let params_lits = stepper
+    let params_lits = session
+        .stepper
         .materialize_params()
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .to_literals()

@@ -11,19 +11,10 @@
 
 use revffn::data::synthetic::{Corpus, CorpusConfig};
 use revffn::data::{encode_corpus, Batcher, Tokenizer};
-use revffn::memory::{paper_table1, Method};
+use revffn::engine::Method;
+use revffn::memory::paper_table1;
 use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
 use revffn::util::bench;
-
-const VARIANTS: [(&str, Method); 7] = [
-    ("lora", Method::Lora),
-    ("dora", Method::Dora),
-    ("ia3", Method::Ia3),
-    ("sft", Method::SftCheckpoint),
-    ("lomo", Method::Lomo),
-    ("galore", Method::Galore),
-    ("revffn_stage2", Method::Revffn),
-];
 
 fn main() -> anyhow::Result<()> {
     let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -33,8 +24,9 @@ fn main() -> anyhow::Result<()> {
 
     let corpus = Corpus::generate(CorpusConfig { n_train: 256, ..Default::default() });
 
-    let mut results: Vec<(String, f64, f64)> = Vec::new(); // (label, samples/s, median ms)
-    for (variant, method) in VARIANTS {
+    let mut results: Vec<(Method, f64)> = Vec::new(); // (method, samples/s)
+    for method in Method::ALL {
+        let variant = method.eval_variant();
         let dir = format!("artifacts/tiny/{variant}");
         let artifact = match Artifact::load(&dir) {
             Ok(a) => a,
@@ -64,25 +56,27 @@ fn main() -> anyhow::Result<()> {
         }
         let t = bench::summarize(&times);
         let sps = b as f64 / t.median_s;
-        results.push((method.label().to_string(), sps, t.median_s * 1e3));
+        results.push((method, sps));
         bench::row(method.label(), format!("{:>8.2} samples/s   ({})", sps, t.fmt_ms()));
     }
 
     bench::section("Normalized vs SFT+Checkpointing (ours | paper)");
     let ours_sft = results
         .iter()
-        .find(|(l, _, _)| l == "SFT + Checkpointing")
-        .map(|(_, s, _)| *s)
+        .find(|(m, _)| *m == Method::Sft)
+        .map(|(_, s)| *s)
         .unwrap_or(1.0);
-    let paper_sft = paper_table1(Method::SftCheckpoint).1;
-    for (label, sps, _) in &results {
-        let m = VARIANTS.iter().find(|(_, m)| m.label() == label).map(|(_, m)| *m).unwrap();
-        let paper_ratio = paper_table1(m).1 / paper_sft;
-        bench::row(label, format!("{:>6.2}x | {:>6.2}x", sps / ours_sft, paper_ratio));
+    let paper_sft = paper_table1(Method::Sft.memory_method()).1;
+    for (method, sps) in &results {
+        let paper_ratio = paper_table1(method.memory_method()).1 / paper_sft;
+        bench::row(
+            method.label(),
+            format!("{:>6.2}x | {:>6.2}x", sps / ours_sft, paper_ratio),
+        );
     }
     println!(
         "\nshape checks: PEFT > full-FT methods; RevFFN vs SFT ratio paper={:.2}x",
-        paper_table1(Method::Revffn).1 / paper_sft
+        paper_table1(Method::Revffn.memory_method()).1 / paper_sft
     );
     Ok(())
 }

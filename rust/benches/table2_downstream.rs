@@ -14,7 +14,8 @@
 
 use revffn::config::RunConfig;
 use revffn::coordinator::Trainer;
-use revffn::eval::{paper_table2, EvalSuite};
+use revffn::engine::Method;
+use revffn::eval::paper_table2;
 use revffn::runtime::Device;
 use revffn::util::bench;
 
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     // the scheduler's minimum).
     {
         let mut cfg = RunConfig::default_tiny("artifacts/tiny");
-        cfg.method = "sft".into();
+        cfg.method = Method::Sft;
         cfg.data.pretrain_steps = pretrain;
         cfg.schedule.stage1_steps = 0;
         cfg.schedule.stage2_steps = 1;
@@ -47,21 +48,19 @@ fn main() -> anyhow::Result<()> {
         cfg.out_dir = "runs/table2/base".into();
         let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
         trainer.run().map_err(|e| anyhow::anyhow!("base: {e}"))?;
-        let stepper = trainer.stepper.as_ref().expect("base model");
-        let suite = EvalSuite::new(trainer.corpus.world.clone(), questions, 7);
-        let s = suite
-            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
+        let s = trainer
+            .bench_scores(questions, 7)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         print_row("base", [s.mmlu_like, s.gsm8k_like, s.multilingual_like, s.mtbench_like]);
     }
 
-    for method in ["lora", "dora", "ia3", "sft", "lomo", "galore", "revffn"] {
+    for method in Method::ALL {
         let mut cfg = RunConfig::default_tiny("artifacts/tiny");
-        cfg.method = method.into();
+        cfg.method = method;
         cfg.data.pretrain_steps = pretrain;
         cfg.eval_every = 0;
         cfg.out_dir = format!("runs/table2/{method}").into();
-        if method == "revffn" {
+        if method.is_two_stage() {
             // keep total step budget equal: stage1 takes 20% of it (§3.3)
             cfg.schedule.stage1_steps = steps / 5;
             cfg.schedule.stage2_steps = steps - steps / 5;
@@ -71,12 +70,13 @@ fn main() -> anyhow::Result<()> {
         }
         let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
         let report = trainer.run().map_err(|e| anyhow::anyhow!("{method}: {e}"))?;
-        let stepper = trainer.stepper.as_ref().expect("trained");
-        let suite = EvalSuite::new(trainer.corpus.world.clone(), questions, 7);
-        let s = suite
-            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
+        let s = trainer
+            .bench_scores(questions, 7)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        print_row(method, [s.mmlu_like, s.gsm8k_like, s.multilingual_like, s.mtbench_like]);
+        print_row(
+            method.name(),
+            [s.mmlu_like, s.gsm8k_like, s.multilingual_like, s.mtbench_like],
+        );
         eprintln!(
             "   [{method}] loss {:.3}->{:.3}, {:.1} samples/s",
             report.first_loss, report.final_loss, report.median_samples_per_s

@@ -12,7 +12,7 @@
 
 use revffn::config::RunConfig;
 use revffn::coordinator::Trainer;
-use revffn::eval::EvalSuite;
+use revffn::engine::Method;
 use revffn::runtime::Device;
 use revffn::util::bench;
 
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let mut scores = Vec::new();
     for (label, s1, s2, paper) in configs {
         let mut cfg = RunConfig::default_tiny("artifacts/tiny");
-        cfg.method = "revffn".into();
+        cfg.method = Method::Revffn;
         cfg.schedule.stage1_steps = s1;
         cfg.schedule.stage2_steps = s2;
         cfg.data.pretrain_steps = pretrain;
@@ -42,11 +42,7 @@ fn main() -> anyhow::Result<()> {
         cfg.out_dir = format!("runs/table3/{}", label.replace([' ', '/', '('], "_")).into();
         let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
         let report = trainer.run().map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
-        let stepper = trainer.stepper.as_ref().expect("trained");
-        let suite = EvalSuite::new(trainer.corpus.world.clone(), 24, 7);
-        let s = suite
-            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let s = trainer.bench_scores(24, 7).map_err(|e| anyhow::anyhow!("{e}"))?;
         bench::row(label, format!("{:>9.1}% {:>8.1}", s.mmlu_like, paper));
         eprintln!(
             "   [{label}] eval_loss {:.3}, train {:.3}->{:.3}",

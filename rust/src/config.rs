@@ -1,14 +1,17 @@
 //! Run configuration — the launcher's single source of truth.
 //!
 //! A run file (JSON — parsed with the in-crate codec) picks the artifact
-//! config dir, the fine-tuning method, the two-stage schedule lengths,
-//! LR schedule, data generation parameters and evaluation cadence.
+//! config dir, the fine-tuning method (typed — see
+//! [`crate::engine::Method`]), the two-stage schedule lengths, LR
+//! schedule, data generation parameters and evaluation cadence.
 //! Everything has working defaults so
 //! `revffn train --artifacts artifacts/tiny --method revffn` works with
 //! no file at all.
 
 use std::path::{Path, PathBuf};
 
+use crate::data::synthetic::CorpusConfig;
+use crate::engine::Method;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json, ObjBuilder};
 
@@ -97,18 +100,33 @@ impl Default for DataConfig {
     }
 }
 
+impl DataConfig {
+    /// Synthetic-corpus parameters of this data config.
+    pub fn corpus_config(&self) -> CorpusConfig {
+        CorpusConfig {
+            seed: self.seed,
+            n_train: self.n_train,
+            n_eval: self.n_eval,
+            n_places: self.n_places,
+            ..Default::default()
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Artifact config directory (e.g. `artifacts/tiny`).
     pub artifacts: PathBuf,
-    /// Method row: sft | lora | dora | ia3 | lomo | galore | revffn.
-    pub method: String,
+    /// Fine-tuning method (Table-1 row).
+    pub method: Method,
     pub schedule: ScheduleConfig,
     pub data: DataConfig,
     /// Gradient-accumulation microbatches per logged step.
     pub grad_accum: usize,
     /// Validation cadence in optimizer steps (0 = only at stage ends).
     pub eval_every: u64,
+    /// Max eval batches per validation pass (0 = score every batch).
+    pub eval_batches: usize,
     /// Where to write metrics / checkpoints (created if missing).
     pub out_dir: PathBuf,
     pub save_checkpoint: bool,
@@ -119,11 +137,12 @@ impl RunConfig {
     pub fn default_tiny(artifacts: impl Into<PathBuf>) -> Self {
         RunConfig {
             artifacts: artifacts.into(),
-            method: "revffn".into(),
+            method: Method::Revffn,
             schedule: ScheduleConfig::default(),
             data: DataConfig::default(),
             grad_accum: 1,
             eval_every: 50,
+            eval_batches: 8,
             out_dir: PathBuf::from("runs/latest"),
             save_checkpoint: false,
             seed: 0,
@@ -143,13 +162,16 @@ impl RunConfig {
             cfg.artifacts = v.into();
         }
         if let Some(v) = j.get("method").and_then(Json::as_str) {
-            cfg.method = v.to_string();
+            cfg.method = v.parse()?;
         }
         if let Some(v) = j.get("grad_accum").and_then(Json::as_usize) {
             cfg.grad_accum = v;
         }
         if let Some(v) = j.get("eval_every").and_then(Json::as_u64) {
             cfg.eval_every = v;
+        }
+        if let Some(v) = j.get("eval_batches").and_then(Json::as_usize) {
+            cfg.eval_batches = v;
         }
         if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
             cfg.out_dir = v.into();
@@ -211,9 +233,10 @@ impl RunConfig {
     pub fn to_json(&self) -> Json {
         ObjBuilder::new()
             .str("artifacts", self.artifacts.display().to_string())
-            .str("method", &self.method)
+            .str("method", self.method.name())
             .num("grad_accum", self.grad_accum as f64)
             .num("eval_every", self.eval_every as f64)
+            .num("eval_batches", self.eval_batches as f64)
             .str("out_dir", self.out_dir.display().to_string())
             .bool("save_checkpoint", self.save_checkpoint)
             .num("seed", self.seed as f64)
@@ -244,15 +267,7 @@ impl RunConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        const METHODS: [&str; 7] =
-            ["sft", "lora", "dora", "ia3", "lomo", "galore", "revffn"];
-        if !METHODS.contains(&self.method.as_str()) {
-            return Err(Error::Config(format!(
-                "unknown method {:?}; expected one of {METHODS:?}",
-                self.method
-            )));
-        }
-        if self.method == "revffn" {
+        if self.method.is_two_stage() {
             if self.schedule.stage1_steps == 0 && self.schedule.stage2_steps == 0 {
                 return Err(Error::Config("both stages disabled".into()));
             }
@@ -262,16 +277,18 @@ impl RunConfig {
         if self.grad_accum == 0 {
             return Err(Error::Config("grad_accum must be >= 1".into()));
         }
+        if self.grad_accum > 1 && !self.method.supports_grad_accum() {
+            return Err(Error::Config(format!(
+                "method {} fuses its update into the backward pass and cannot use grad_accum > 1",
+                self.method
+            )));
+        }
         Ok(())
     }
 
     /// Variant directory for a method+stage under the artifact config dir.
     pub fn variant_dir(&self, stage: u8) -> PathBuf {
-        let name = match self.method.as_str() {
-            "revffn" => format!("revffn_stage{stage}"),
-            m => m.to_string(),
-        };
-        self.artifacts.join(name)
+        self.artifacts.join(self.method.variant(stage))
     }
 }
 
@@ -285,10 +302,18 @@ mod tests {
     }
 
     #[test]
-    fn unknown_method_rejected() {
+    fn unknown_method_rejected_at_parse() {
+        assert!(RunConfig::from_json_str(r#"{"method": "qlora"}"#).is_err());
+    }
+
+    #[test]
+    fn lomo_with_grad_accum_rejected() {
         let mut c = RunConfig::default_tiny("artifacts/tiny");
-        c.method = "qlora".into();
+        c.method = Method::Lomo;
+        c.grad_accum = 4;
         assert!(c.validate().is_err());
+        c.grad_accum = 1;
+        c.validate().unwrap();
     }
 
     #[test]
@@ -302,21 +327,24 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let mut c = RunConfig::default_tiny("artifacts/tiny");
-        c.method = "galore".into();
+        c.method = Method::Galore;
         c.schedule.stage2_steps = 99;
         c.data.pretrain_steps = 7;
+        c.eval_batches = 3;
         let text = c.to_json().to_string();
         let c2 = RunConfig::from_json_str(&text).unwrap();
-        assert_eq!(c2.method, "galore");
+        assert_eq!(c2.method, Method::Galore);
         assert_eq!(c2.schedule.stage2_steps, 99);
         assert_eq!(c2.data.pretrain_steps, 7);
+        assert_eq!(c2.eval_batches, 3);
     }
 
     #[test]
     fn partial_json_keeps_defaults() {
         let c = RunConfig::from_json_str(r#"{"method": "lora"}"#).unwrap();
-        assert_eq!(c.method, "lora");
+        assert_eq!(c.method, Method::Lora);
         assert_eq!(c.schedule.stage2_steps, ScheduleConfig::default().stage2_steps);
+        assert_eq!(c.eval_batches, 8);
     }
 
     #[test]
@@ -330,7 +358,7 @@ mod tests {
         let c = RunConfig::default_tiny("a");
         assert!(c.variant_dir(1).ends_with("revffn_stage1"));
         let mut c2 = c.clone();
-        c2.method = "lora".into();
+        c2.method = Method::Lora;
         assert!(c2.variant_dir(2).ends_with("lora"));
     }
 }

@@ -1,5 +1,12 @@
 //! L3 coordination: the trainer (launch → pre-pass → two-stage schedule →
 //! metrics/checkpoints), LR schedules, and metrics sinks.
+//!
+//! Since the engine API redesign, step execution lives in
+//! [`crate::engine::Run`]: `Trainer::start()` returns a `Run` whose
+//! `step()` yields `StepEvent`s one unit of work at a time, and
+//! `Trainer::run()` is the blocking compatibility loop over it. Method
+//! selection is typed ([`crate::engine::Method`]) and model loading for
+//! eval/generate goes through [`crate::engine::Session`].
 
 pub mod lr;
 pub mod metrics;

@@ -26,7 +26,7 @@ pub struct Phase {
 /// Expand a run config into its ordered phases.
 pub fn plan(cfg: &RunConfig) -> Vec<Phase> {
     let s = &cfg.schedule;
-    if cfg.method != "revffn" {
+    if !cfg.method.is_two_stage() {
         return vec![Phase {
             stage: 2,
             steps: s.stage2_steps,
@@ -90,7 +90,7 @@ mod tests {
     #[test]
     fn baselines_are_single_phase() {
         let mut cfg = RunConfig::default_tiny("a");
-        cfg.method = "lora".into();
+        cfg.method = crate::engine::Method::Lora;
         let p = plan(&cfg);
         assert_eq!(p.len(), 1);
         assert_eq!(p[0].label, "finetune");

@@ -4,20 +4,26 @@
 //!
 //! This is the paper's launcher. It owns no math: every optimizer step
 //! is one PJRT execution of the AOT train_step artifact for the active
-//! (method, stage) variant.
+//! (method, stage) variant. Since the engine API redesign the stepping
+//! itself lives in [`crate::engine::Run`]; [`Trainer::run`] is a thin
+//! compatibility loop over [`Trainer::start`] that adds stderr progress
+//! logging. External callers that want to interleave, pause, or observe
+//! runs should drive [`crate::engine::Run::step`] directly.
 
 use std::path::PathBuf;
 
-use crate::checkpoint;
 use crate::config::RunConfig;
-use crate::coordinator::lr::lr_at;
-use crate::coordinator::metrics::{Metrics, StepRecord};
-use crate::coordinator::schedule::{plan, Phase};
-use crate::data::dataset::{encode_corpus, encode_lm_text};
-use crate::data::synthetic::{Corpus, CorpusConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::schedule::plan;
+use crate::data::dataset::encode_lm_text;
+use crate::data::synthetic::Corpus;
 use crate::data::tokenizer::Tokenizer;
 use crate::data::Batcher;
-use crate::error::{Error, Result};
+use crate::engine::run::{Run, StepEvent};
+use crate::engine::session::corpus_and_tokenizer;
+use crate::engine::Method;
+use crate::error::Result;
+use crate::eval::{BenchScores, EvalSuite};
 use crate::runtime::artifact::Artifact;
 use crate::runtime::pjrt::{Device, ProgramCache};
 use crate::runtime::stepper::Stepper;
@@ -25,7 +31,7 @@ use crate::runtime::stepper::Stepper;
 /// Outcome summary of a full run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
-    pub method: String,
+    pub method: Method,
     pub steps_run: u64,
     pub final_loss: f32,
     pub first_loss: f32,
@@ -35,8 +41,8 @@ pub struct TrainReport {
 }
 
 pub struct Trainer<'d> {
-    device: &'d Device,
-    cache: ProgramCache,
+    pub(crate) device: &'d Device,
+    pub(crate) cache: ProgramCache,
     pub cfg: RunConfig,
     pub tokenizer: Tokenizer,
     pub corpus: Corpus,
@@ -49,22 +55,12 @@ impl<'d> Trainer<'d> {
     /// Prepare data (generate corpus, train tokenizer, no XLA work yet).
     pub fn new(device: &'d Device, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        let corpus = Corpus::generate(CorpusConfig {
-            seed: cfg.data.seed,
-            n_train: cfg.data.n_train,
-            n_eval: cfg.data.n_eval,
-            n_places: cfg.data.n_places,
-            ..Default::default()
-        });
-        // vocab size comes from the artifact geometry
-        let probe_stage = if cfg.method == "revffn" && cfg.schedule.stage2_steps == 0 {
-            1
-        } else {
-            2
-        };
+        // vocab size comes from the artifact geometry: probe the variant
+        // of the schedule's final phase
+        let probe_stage = plan(&cfg).last().map(|p| p.stage).unwrap_or(2);
         let probe = Artifact::load(cfg.variant_dir(probe_stage))?;
         let vocab = probe.manifest.model.vocab_size;
-        let tokenizer = Tokenizer::train(&corpus.pretrain_text(), vocab)?;
+        let (corpus, tokenizer) = corpus_and_tokenizer(cfg.data.corpus_config(), vocab)?;
         Ok(Trainer {
             device,
             cache: ProgramCache::new(),
@@ -76,18 +72,18 @@ impl<'d> Trainer<'d> {
         })
     }
 
-    fn load_stepper(&self, stage: u8) -> Result<Stepper> {
+    pub(crate) fn load_stepper(&self, stage: u8) -> Result<Stepper> {
         let artifact = Artifact::load(self.cfg.variant_dir(stage))?;
         Stepper::new(self.device, &self.cache, artifact)
     }
 
     /// LM pre-pass on the standard model — the "pre-trained checkpoint"
     /// substitute. Returns the pre-passed parameter store.
-    fn pretrain(&mut self) -> Result<Option<Stepper>> {
+    pub(crate) fn pretrain(&mut self) -> Result<Option<Stepper>> {
         if self.cfg.data.pretrain_steps == 0 {
             return Ok(None);
         }
-        let sft_dir = self.cfg.artifacts.join("sft");
+        let sft_dir = self.cfg.artifacts.join(Method::Sft.eval_variant());
         if !sft_dir.join("manifest.json").exists() {
             return Ok(None); // artifact set without sft (pallas-only dirs)
         }
@@ -106,165 +102,89 @@ impl<'d> Trainer<'d> {
         Ok(Some(stepper))
     }
 
-    /// Execute the full schedule. Returns the report; the trained model
-    /// stays available in `self.stepper`.
+    /// Begin a step-granular run over the planned schedule (runs the LM
+    /// pre-pass eagerly). Drive it with [`Run::step`], then call
+    /// [`Run::finish`] for the report.
+    pub fn start(&mut self) -> Result<Run<'_, 'd>> {
+        Run::new(self)
+    }
+
+    /// Execute the full schedule (compatibility wrapper: a thin loop
+    /// over [`Trainer::start`] that logs progress to stderr). Returns
+    /// the report; the trained model stays available in `self.stepper`.
     pub fn run(&mut self) -> Result<TrainReport> {
-        let phases = plan(&self.cfg);
-        if phases.is_empty() {
-            return Err(Error::Config("empty schedule".into()));
-        }
-
-        let pre = self.pretrain()?;
-
-        let mut pre = pre;
-        let mut current: Option<Stepper> = None;
-        let mut eval_loss = None;
-        for phase in &phases {
-            let mut stepper = self.load_stepper(phase.stage)?;
-            // parameter handoff: stage N adopts stage N-1 (or the pre-pass)
-            if let Some(prev) = current.as_mut() {
-                let params = prev.materialize_params()?;
-                stepper.adopt_params(params)?;
-            } else if let Some(pre) = pre.as_mut() {
-                let params = pre.materialize_params()?;
-                let copied = stepper.adopt_params(params)?;
-                eprintln!("[handoff] adopted {copied} pre-passed tensors");
+        let mut run = self.start()?;
+        let mut label = "";
+        let mut phase_steps = 0u64;
+        let mut local_step = 0u64;
+        while let Some(event) = run.step()? {
+            match event {
+                StepEvent::PhaseStarted {
+                    label: l, steps, peak_lr, batch_size, seq_len, ..
+                } => {
+                    label = l;
+                    phase_steps = steps;
+                    local_step = 0;
+                    eprintln!(
+                        "[{label}] {steps} steps, peak lr {peak_lr:.2e}, batch {batch_size}x{seq_len}"
+                    );
+                }
+                StepEvent::Step(rec) => {
+                    if local_step % 25 == 0 {
+                        eprintln!(
+                            "[{label}] step {local_step}/{phase_steps} loss {:.4} lr {:.2e}",
+                            rec.loss, rec.lr
+                        );
+                    }
+                    local_step += 1;
+                }
+                StepEvent::EvalPoint { eval_loss, .. } => {
+                    eprintln!(
+                        "[{label}] step {} eval_loss {eval_loss:.4}",
+                        local_step.saturating_sub(1)
+                    );
+                }
+                StepEvent::PhaseFinished { .. } => {}
             }
-            eval_loss = Some(self.run_phase(&mut stepper, phase)?);
-            current = Some(stepper);
         }
-
-        let mut stepper = current.expect("at least one phase ran");
-        stepper.materialize_params()?;
-        let (first, last) = self.metrics.loss_delta().unwrap_or((0.0, 0.0));
-        let report = TrainReport {
-            method: self.cfg.method.clone(),
-            steps_run: self.metrics.steps.len() as u64,
-            final_loss: last,
-            first_loss: first,
-            eval_loss,
-            median_samples_per_s: self.metrics.median_throughput().unwrap_or(0.0),
-            wall_time_s: self.metrics.wall_time_s(),
-        };
-
-        std::fs::create_dir_all(&self.cfg.out_dir)?;
-        self.metrics
-            .write_jsonl(self.cfg.out_dir.join("metrics.jsonl"))?;
-        if self.cfg.save_checkpoint {
-            checkpoint::save(
-                &self.cfg.out_dir.join("final.rvt"),
-                &stepper.params,
-                stepper.step,
-            )?;
-        }
-        self.stepper = Some(stepper);
-        Ok(report)
+        run.finish()
     }
 
-    fn run_phase(&mut self, stepper: &mut Stepper, phase: &Phase) -> Result<f32> {
-        let (b, s) = stepper.batch_shape();
-        let train_samples = encode_corpus(&self.tokenizer, &self.corpus.train, s);
-        let eval_samples = encode_corpus(&self.tokenizer, &self.corpus.eval, s);
-        if train_samples.is_empty() {
-            return Err(Error::Config(format!("no training samples fit seq_len {s}")));
-        }
-        let mut batcher = Batcher::new(train_samples, b, s, self.cfg.seed);
-        let eval_batcher = Batcher::new(eval_samples, b, s, self.cfg.seed);
-
-        eprintln!(
-            "[{}] {} steps, peak lr {:.2e}, batch {}x{}",
-            phase.label, phase.steps, phase.peak_lr, b, s
-        );
-        let accumulate = self.cfg.grad_accum > 1 && stepper.supports_accumulation();
-        for step in 0..phase.steps {
-            let lr = lr_at(&self.cfg.schedule, phase.peak_lr, step, phase.steps);
-            let mut loss_acc = 0.0;
-            let mut gn_acc = 0.0;
-            let mut aux_acc = 0.0;
-            let t0 = std::time::Instant::now();
-            if accumulate {
-                // true microbatch accumulation: grad-only passes summed
-                // host-side, then ONE optimizer update on the mean grad
-                let mut grads: Option<Vec<Vec<f32>>> = None;
-                for _ in 0..self.cfg.grad_accum {
-                    let batch = batcher.next_batch();
-                    let (g, loss, aux) = stepper.grad_step(&batch)?;
-                    loss_acc += loss;
-                    aux_acc += aux;
-                    match grads.as_mut() {
-                        None => grads = Some(g),
-                        Some(acc) => {
-                            for (a, gi) in acc.iter_mut().zip(&g) {
-                                for (x, y) in a.iter_mut().zip(gi) {
-                                    *x += *y;
-                                }
-                            }
-                        }
-                    }
-                }
-                let mut grads = grads.expect("grad_accum >= 1");
-                let scale = 1.0 / self.cfg.grad_accum as f32;
-                for g in grads.iter_mut() {
-                    for x in g.iter_mut() {
-                        *x *= scale;
-                    }
-                }
-                gn_acc = stepper.apply_accumulated(&grads, lr)? * self.cfg.grad_accum as f32;
-            } else {
-                for _ in 0..self.cfg.grad_accum {
-                    let batch = batcher.next_batch();
-                    let stats = stepper.train_step(&batch, lr)?;
-                    loss_acc += stats.loss;
-                    gn_acc += stats.grad_norm;
-                    aux_acc += stats.router_aux;
-                }
-            }
-            let time_acc = t0.elapsed().as_secs_f64();
-            let ga = self.cfg.grad_accum as f32;
-            let samples = (b * self.cfg.grad_accum) as f64;
-            self.metrics.record_step(StepRecord {
-                step: stepper.step,
-                stage: phase.stage,
-                loss: loss_acc / ga,
-                lr,
-                grad_norm: gn_acc / ga,
-                router_aux: aux_acc / ga,
-                step_time_s: time_acc,
-                samples_per_s: samples / time_acc.max(1e-9),
-            });
-            if step % 25 == 0 {
-                eprintln!(
-                    "[{}] step {}/{} loss {:.4} lr {:.2e}",
-                    phase.label,
-                    step,
-                    phase.steps,
-                    loss_acc / ga,
-                    lr
-                );
-            }
-            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
-                let el = self.validate(stepper, &eval_batcher)?;
-                self.metrics.record_eval(stepper.step, el);
-                eprintln!("[{}] step {} eval_loss {:.4}", phase.label, step, el);
-            }
-        }
-        let el = self.validate(stepper, &eval_batcher)?;
-        self.metrics.record_eval(stepper.step, el);
-        Ok(el)
-    }
-
-    fn validate(&self, stepper: &Stepper, eval_batcher: &Batcher) -> Result<f32> {
+    /// Validation pass over up to `cfg.eval_batches` sequential eval
+    /// batches (0 = all).
+    pub(crate) fn validate(&self, stepper: &Stepper, eval_batcher: &Batcher) -> Result<f32> {
         let batches = eval_batcher.sequential_batches();
         if batches.is_empty() {
             return Ok(f32::NAN);
         }
+        let cap = if self.cfg.eval_batches == 0 { batches.len() } else { self.cfg.eval_batches };
+        let n = batches.len().min(cap);
+        if n < batches.len() {
+            eprintln!(
+                "[eval] scoring {n}/{} eval batches ({} skipped; raise eval_batches to cover all)",
+                batches.len(),
+                batches.len() - n
+            );
+        }
         let mut total = 0.0;
-        let n = batches.len().min(8); // cap validation cost
         for batch in batches.iter().take(n) {
             let (loss, _aux) = stepper.eval_step(batch)?;
             total += loss;
         }
         Ok(total / n as f32)
+    }
+
+    /// Score the trained model on the synthetic Table-2 benchmark suite.
+    /// Requires a completed run (the stepper it produced).
+    pub fn bench_scores(&self, n_questions: usize, seed: u64) -> Result<BenchScores> {
+        let stepper = self.stepper.as_ref().ok_or_else(|| {
+            crate::error::Error::Config("bench_scores requires a completed run".into())
+        })?;
+        EvalSuite::new(self.corpus.world.clone(), n_questions, seed).run(
+            stepper,
+            &self.tokenizer,
+            &self.corpus.eval,
+        )
     }
 
     /// Path of the metrics file for this run.

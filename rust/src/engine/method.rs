@@ -1,0 +1,260 @@
+//! Typed fine-tuning methods and the `MethodSpec` registry.
+//!
+//! Every launcher-visible property of a method — its CLI/JSON name, the
+//! artifact variant directory per training stage, whether host-side
+//! gradient accumulation is meaningful, and the analytic memory-model
+//! row — lives here. Adding a method variant is a one-entry change: the
+//! config parser, schedule planner, trainer, CLI, benches, and the
+//! calibration path all consume this registry instead of comparing
+//! strings.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::{Error, Result};
+use crate::memory;
+
+/// A fine-tuning method (one Table-1/Table-2 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Full-parameter SFT with activation checkpointing.
+    Sft,
+    Lora,
+    Dora,
+    Ia3,
+    /// LOMO-style fused gradient/update ("Full Parameter Fine-tuning for
+    /// Large Language Models with Limited Resources").
+    Lomo,
+    Galore,
+    /// RevFFN two-stage reversible fine-tuning (this paper).
+    Revffn,
+}
+
+/// Static properties of one method.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodSpec {
+    /// CLI / JSON name (`--method NAME`).
+    pub name: &'static str,
+    /// Human-readable table label.
+    pub label: &'static str,
+    /// Artifact variant directory per training stage, in execution
+    /// order. Single-stage methods have exactly one entry; the last
+    /// entry is also the inference/eval variant.
+    pub stage_variants: &'static [&'static str],
+    /// Whether host-side microbatch gradient accumulation is meaningful.
+    /// LOMO fuses the update into the backward pass, so accumulating
+    /// full gradients host-side would defeat the method.
+    pub supports_grad_accum: bool,
+    /// Row in the analytic peak-VRAM model (`memory::Method`).
+    pub memory: memory::Method,
+}
+
+const SPEC_SFT: MethodSpec = MethodSpec {
+    name: "sft",
+    label: "SFT + Checkpointing",
+    stage_variants: &["sft"],
+    supports_grad_accum: true,
+    memory: memory::Method::SftCheckpoint,
+};
+const SPEC_LORA: MethodSpec = MethodSpec {
+    name: "lora",
+    label: "LoRA",
+    stage_variants: &["lora"],
+    supports_grad_accum: true,
+    memory: memory::Method::Lora,
+};
+const SPEC_DORA: MethodSpec = MethodSpec {
+    name: "dora",
+    label: "DoRA",
+    stage_variants: &["dora"],
+    supports_grad_accum: true,
+    memory: memory::Method::Dora,
+};
+const SPEC_IA3: MethodSpec = MethodSpec {
+    name: "ia3",
+    label: "(IA)^3",
+    stage_variants: &["ia3"],
+    supports_grad_accum: true,
+    memory: memory::Method::Ia3,
+};
+const SPEC_LOMO: MethodSpec = MethodSpec {
+    name: "lomo",
+    label: "LOMO",
+    stage_variants: &["lomo"],
+    supports_grad_accum: false,
+    memory: memory::Method::Lomo,
+};
+const SPEC_GALORE: MethodSpec = MethodSpec {
+    name: "galore",
+    label: "GaLore",
+    stage_variants: &["galore"],
+    supports_grad_accum: true,
+    memory: memory::Method::Galore,
+};
+const SPEC_REVFFN: MethodSpec = MethodSpec {
+    name: "revffn",
+    label: "RevFFN",
+    stage_variants: &["revffn_stage1", "revffn_stage2"],
+    supports_grad_accum: true,
+    memory: memory::Method::Revffn,
+};
+
+impl Method {
+    /// Every registered method, in canonical (Table-1 row) order.
+    pub const ALL: [Method; 7] = [
+        Method::Sft,
+        Method::Lora,
+        Method::Dora,
+        Method::Ia3,
+        Method::Lomo,
+        Method::Galore,
+        Method::Revffn,
+    ];
+
+    /// The registry entry for this method.
+    pub fn spec(self) -> &'static MethodSpec {
+        match self {
+            Method::Sft => &SPEC_SFT,
+            Method::Lora => &SPEC_LORA,
+            Method::Dora => &SPEC_DORA,
+            Method::Ia3 => &SPEC_IA3,
+            Method::Lomo => &SPEC_LOMO,
+            Method::Galore => &SPEC_GALORE,
+            Method::Revffn => &SPEC_REVFFN,
+        }
+    }
+
+    /// CLI / JSON name.
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Human-readable table label.
+    pub fn label(self) -> &'static str {
+        self.spec().label
+    }
+
+    /// Number of training stages (1 for everything but RevFFN).
+    pub fn stages(self) -> u8 {
+        self.spec().stage_variants.len() as u8
+    }
+
+    pub fn is_two_stage(self) -> bool {
+        self.stages() > 1
+    }
+
+    /// Whether host-side microbatch gradient accumulation is meaningful.
+    pub fn supports_grad_accum(self) -> bool {
+        self.spec().supports_grad_accum
+    }
+
+    /// Artifact variant directory name for a 1-based stage. Stages past
+    /// the method's last stage clamp to the final variant, so schedule
+    /// code can always ask for "stage 2".
+    pub fn variant(self, stage: u8) -> &'static str {
+        let sv = self.spec().stage_variants;
+        let idx = (stage.max(1) as usize - 1).min(sv.len() - 1);
+        sv[idx]
+    }
+
+    /// Variant used for inference and evaluation (the final stage).
+    pub fn eval_variant(self) -> &'static str {
+        let sv = self.spec().stage_variants;
+        sv[sv.len() - 1]
+    }
+
+    /// Reverse lookup: which method does an artifact variant directory
+    /// belong to? Ablation-only variants (`revffn_naive`, the
+    /// `reconstruct*` family) map to `None`.
+    pub fn from_variant(variant: &str) -> Option<Method> {
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.spec().stage_variants.contains(&variant))
+    }
+
+    /// Row in the analytic peak-VRAM model.
+    pub fn memory_method(self) -> memory::Method {
+        self.spec().memory
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Method {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Method::ALL.iter().map(|m| m.name()).collect();
+                Error::Config(format!("unknown method {s:?}; expected one of {names:?}"))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(m.name().parse::<Method>().unwrap(), m);
+            assert_eq!(m.to_string(), m.name());
+        }
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        assert!("qlora".parse::<Method>().is_err());
+        assert!("".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn registry_invariants() {
+        let mut names = std::collections::HashSet::new();
+        let mut variants = std::collections::HashSet::new();
+        for m in Method::ALL {
+            let spec = m.spec();
+            assert!(names.insert(spec.name), "duplicate name {}", spec.name);
+            assert!(!spec.stage_variants.is_empty(), "{}: no stages", spec.name);
+            for v in spec.stage_variants {
+                assert!(variants.insert(*v), "duplicate variant {v}");
+            }
+            assert_eq!(m.eval_variant(), *spec.stage_variants.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn revffn_is_two_stage() {
+        assert!(Method::Revffn.is_two_stage());
+        assert_eq!(Method::Revffn.variant(1), "revffn_stage1");
+        assert_eq!(Method::Revffn.variant(2), "revffn_stage2");
+        assert_eq!(Method::Revffn.eval_variant(), "revffn_stage2");
+        assert_eq!(Method::Sft.stages(), 1);
+        assert_eq!(Method::Sft.variant(2), "sft");
+    }
+
+    #[test]
+    fn from_variant_reverse_lookup() {
+        assert_eq!(Method::from_variant("revffn_stage1"), Some(Method::Revffn));
+        assert_eq!(Method::from_variant("revffn_stage2"), Some(Method::Revffn));
+        assert_eq!(Method::from_variant("lomo"), Some(Method::Lomo));
+        assert_eq!(Method::from_variant("revffn_naive"), None);
+        assert_eq!(Method::from_variant("reconstruct"), None);
+    }
+
+    #[test]
+    fn lomo_cannot_accumulate() {
+        assert!(!Method::Lomo.supports_grad_accum());
+        assert!(Method::Revffn.supports_grad_accum());
+    }
+}

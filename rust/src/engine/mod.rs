@@ -1,0 +1,24 @@
+//! The crate's public driving API.
+//!
+//! Three pieces, designed so that adding a fine-tuning method variant is
+//! a one-file change and training is externally drivable:
+//!
+//! * [`Method`] / [`MethodSpec`] — the typed method registry. Replaces
+//!   every stringly-typed `method` / variant-directory comparison in the
+//!   config, trainer, CLI, benches and calibration code.
+//! * [`Session`] / [`SessionBuilder`] — the unified model-loading
+//!   facade: artifact-load → program-compile → checkpoint-restore →
+//!   tokenizer-train, shared by `eval`, `generate`, `reconstruct`, the
+//!   examples and the benches.
+//! * [`Run`] / [`StepEvent`] — the step-granular training driver.
+//!   `Trainer::run()` is a thin compatibility loop over it; external
+//!   callers can interleave, pause, or multiplex runs and observe
+//!   `PhaseStarted` / `Step` / `EvalPoint` / `PhaseFinished` events.
+
+pub mod method;
+pub mod run;
+pub mod session;
+
+pub use method::{Method, MethodSpec};
+pub use run::{Observer, Run, StepEvent};
+pub use session::{RawProgram, Session, SessionBuilder};

@@ -1,0 +1,336 @@
+//! `Run` — the step-granular training driver.
+//!
+//! A `Run` is an iterator-style state machine over the planned phases of
+//! a [`Trainer`]'s config: each call to [`Run::step`] performs at most
+//! one unit of work (open a phase, execute one optimizer step, close a
+//! phase) and yields the resulting [`StepEvent`]. External callers — the
+//! CLI, the benches, the eval suite, future servers — can interleave,
+//! pause, or multiplex runs between calls; `Trainer::run()` is now a
+//! thin loop over this type.
+//!
+//! Event order for a two-phase RevFFN run:
+//!
+//! ```text
+//! PhaseStarted{stage:1} Step.. [EvalPoint..] EvalPoint PhaseFinished{stage:1}
+//! PhaseStarted{stage:2} Step.. [EvalPoint..] EvalPoint PhaseFinished{stage:2}
+//! -> step() returns None; finish() yields the TrainReport
+//! ```
+//!
+//! Every `Step` / `EvalPoint` event mirrors exactly one record in
+//! `trainer.metrics`, so an observer sees the same stream the metrics
+//! sink persists.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::checkpoint;
+use crate::coordinator::lr::lr_at;
+use crate::coordinator::metrics::StepRecord;
+use crate::coordinator::schedule::{plan, Phase};
+use crate::coordinator::trainer::{TrainReport, Trainer};
+use crate::data::dataset::encode_corpus;
+use crate::data::Batcher;
+use crate::error::{Error, Result};
+use crate::runtime::stepper::Stepper;
+
+/// One observable unit of training progress.
+#[derive(Debug, Clone)]
+pub enum StepEvent {
+    /// A phase's stepper is compiled, parameters handed off, and data
+    /// batched; `steps` optimizer steps follow.
+    PhaseStarted {
+        /// 0-based index into the planned phases.
+        phase: usize,
+        /// 1 or 2 — the artifact stage this phase executes.
+        stage: u8,
+        label: &'static str,
+        steps: u64,
+        peak_lr: f32,
+        batch_size: usize,
+        seq_len: usize,
+    },
+    /// One logged optimizer step (possibly `grad_accum` microbatches).
+    /// The record is identical to what `trainer.metrics` stores.
+    Step(StepRecord),
+    /// A validation pass (cadence or end-of-phase), identical to the
+    /// metrics eval record.
+    EvalPoint { step: u64, eval_loss: f32 },
+    /// The phase's final validation ran; its stepper becomes the
+    /// parameter source for the next phase.
+    PhaseFinished { phase: usize, stage: u8, eval_loss: f32 },
+}
+
+/// Observer hook: called with every event as it is yielded.
+pub type Observer<'a> = Box<dyn FnMut(&StepEvent) + 'a>;
+
+/// An in-flight training run. Create via [`Trainer::start`].
+///
+/// Note: the LM pre-pass (`cfg.data.pretrain_steps`) still executes
+/// eagerly inside [`Trainer::start`], before the first `step()` — it is
+/// not yet part of the event stream (ROADMAP open item).
+pub struct Run<'t, 'd> {
+    trainer: &'t mut Trainer<'d>,
+    phases: Vec<Phase>,
+    phase_idx: usize,
+    step_in_phase: u64,
+    phase_open: bool,
+    /// The live model of the current (or just-finished) phase.
+    stepper: Option<Stepper>,
+    /// The LM pre-pass model (parameter source for the first phase).
+    pre: Option<Stepper>,
+    batcher: Option<Batcher>,
+    eval_batcher: Option<Batcher>,
+    queue: VecDeque<StepEvent>,
+    last_eval: Option<f32>,
+    observer: Option<Observer<'t>>,
+    finished: bool,
+}
+
+impl<'t, 'd> Run<'t, 'd> {
+    pub(crate) fn new(trainer: &'t mut Trainer<'d>) -> Result<Self> {
+        let phases = plan(&trainer.cfg);
+        if phases.is_empty() {
+            return Err(Error::Config("empty schedule".into()));
+        }
+        let pre = trainer.pretrain()?;
+        Ok(Run {
+            trainer,
+            phases,
+            phase_idx: 0,
+            step_in_phase: 0,
+            phase_open: false,
+            stepper: None,
+            pre,
+            batcher: None,
+            eval_batcher: None,
+            queue: VecDeque::new(),
+            last_eval: None,
+            observer: None,
+            finished: false,
+        })
+    }
+
+    /// Install an observer invoked with every yielded event (metrics
+    /// mirrors, progress bars, remote reporting…).
+    pub fn set_observer<F: FnMut(&StepEvent) + 't>(&mut self, f: F) {
+        self.observer = Some(Box::new(f));
+    }
+
+    /// The planned phases of this run.
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Advance by one unit of work and yield its event; `None` once the
+    /// schedule is exhausted (then call [`Run::finish`]).
+    pub fn step(&mut self) -> Result<Option<StepEvent>> {
+        loop {
+            if let Some(ev) = self.queue.pop_front() {
+                if let Some(obs) = self.observer.as_mut() {
+                    obs(&ev);
+                }
+                return Ok(Some(ev));
+            }
+            if self.finished {
+                return Ok(None);
+            }
+            self.advance()?;
+        }
+    }
+
+    /// Drive any remaining steps, then finalize: sync parameters to
+    /// host, write `metrics.jsonl`, save the checkpoint if configured,
+    /// hand the trained stepper back to the trainer, and summarize.
+    pub fn finish(mut self) -> Result<TrainReport> {
+        while self.step()?.is_some() {}
+        let mut stepper = self
+            .stepper
+            .take()
+            .ok_or_else(|| Error::Config("run finished without executing a phase".into()))?;
+        let trainer = self.trainer;
+        stepper.materialize_params()?;
+        let (first, last) = trainer.metrics.loss_delta().unwrap_or((0.0, 0.0));
+        let report = TrainReport {
+            method: trainer.cfg.method,
+            steps_run: trainer.metrics.steps.len() as u64,
+            final_loss: last,
+            first_loss: first,
+            eval_loss: self.last_eval,
+            median_samples_per_s: trainer.metrics.median_throughput().unwrap_or(0.0),
+            wall_time_s: trainer.metrics.wall_time_s(),
+        };
+        std::fs::create_dir_all(&trainer.cfg.out_dir)?;
+        trainer
+            .metrics
+            .write_jsonl(trainer.cfg.out_dir.join("metrics.jsonl"))?;
+        if trainer.cfg.save_checkpoint {
+            checkpoint::save(
+                &trainer.cfg.out_dir.join("final.rvt"),
+                &stepper.params,
+                stepper.step,
+            )?;
+        }
+        trainer.stepper = Some(stepper);
+        Ok(report)
+    }
+
+    /// Perform one unit of work, pushing its event(s) onto the queue.
+    fn advance(&mut self) -> Result<()> {
+        if self.phase_idx >= self.phases.len() {
+            self.finished = true;
+            return Ok(());
+        }
+        let phase = self.phases[self.phase_idx].clone();
+        if !self.phase_open {
+            self.open_phase(&phase)?;
+            return Ok(());
+        }
+        if self.step_in_phase < phase.steps {
+            self.train_one(&phase)?;
+            self.step_in_phase += 1;
+            return Ok(());
+        }
+        self.close_phase(&phase)
+    }
+
+    /// Compile the phase's stepper, hand parameters off from the
+    /// previous phase (or the pre-pass), and batch the data.
+    fn open_phase(&mut self, phase: &Phase) -> Result<()> {
+        let mut stepper = self.trainer.load_stepper(phase.stage)?;
+        if let Some(prev) = self.stepper.as_mut() {
+            let params = prev.materialize_params()?;
+            stepper.adopt_params(params)?;
+        } else if let Some(pre) = self.pre.as_mut() {
+            let params = pre.materialize_params()?;
+            let copied = stepper.adopt_params(params)?;
+            eprintln!("[handoff] adopted {copied} pre-passed tensors");
+        }
+        let (b, s) = stepper.batch_shape();
+        let train_samples = encode_corpus(&self.trainer.tokenizer, &self.trainer.corpus.train, s);
+        let eval_samples = encode_corpus(&self.trainer.tokenizer, &self.trainer.corpus.eval, s);
+        if train_samples.is_empty() {
+            return Err(Error::Config(format!("no training samples fit seq_len {s}")));
+        }
+        self.batcher = Some(Batcher::new(train_samples, b, s, self.trainer.cfg.seed));
+        self.eval_batcher = Some(Batcher::new(eval_samples, b, s, self.trainer.cfg.seed));
+        self.stepper = Some(stepper);
+        self.phase_open = true;
+        self.step_in_phase = 0;
+        self.queue.push_back(StepEvent::PhaseStarted {
+            phase: self.phase_idx,
+            stage: phase.stage,
+            label: phase.label,
+            steps: phase.steps,
+            peak_lr: phase.peak_lr,
+            batch_size: b,
+            seq_len: s,
+        });
+        Ok(())
+    }
+
+    /// One logged optimizer step: `grad_accum` microbatches, either as
+    /// true host-side accumulation (grad-only passes summed, one update
+    /// on the mean gradient) or as sequential fused steps. The recorded
+    /// `grad_norm` is the mean-gradient norm in both paths.
+    fn train_one(&mut self, phase: &Phase) -> Result<()> {
+        let step = self.step_in_phase;
+        let ga = self.trainer.cfg.grad_accum;
+        let eval_every = self.trainer.cfg.eval_every;
+        let method_accum = self.trainer.cfg.method.supports_grad_accum();
+        let lr = lr_at(&self.trainer.cfg.schedule, phase.peak_lr, step, phase.steps);
+
+        let stepper = self.stepper.as_mut().expect("phase open");
+        let batcher = self.batcher.as_mut().expect("phase open");
+        let (b, _s) = stepper.batch_shape();
+        let accumulate = ga > 1 && method_accum && stepper.supports_accumulation();
+
+        let mut loss_acc = 0.0f32;
+        let mut aux_acc = 0.0f32;
+        let grad_norm;
+        let t0 = Instant::now();
+        if accumulate {
+            let mut grads: Option<Vec<Vec<f32>>> = None;
+            for _ in 0..ga {
+                let batch = batcher.next_batch();
+                let (g, loss, aux) = stepper.grad_step(&batch)?;
+                loss_acc += loss;
+                aux_acc += aux;
+                match grads.as_mut() {
+                    None => grads = Some(g),
+                    Some(acc) => {
+                        for (a, gi) in acc.iter_mut().zip(&g) {
+                            for (x, y) in a.iter_mut().zip(gi) {
+                                *x += *y;
+                            }
+                        }
+                    }
+                }
+            }
+            let mut grads = grads.expect("grad_accum >= 1");
+            let scale = 1.0 / ga as f32;
+            for g in grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            // the update consumes the already-averaged gradient, so its
+            // post-clip norm IS the mean-gradient norm — no rescaling
+            grad_norm = stepper.apply_accumulated(&grads, lr)?;
+        } else {
+            let mut gn_acc = 0.0f32;
+            for _ in 0..ga {
+                let batch = batcher.next_batch();
+                let stats = stepper.train_step(&batch, lr)?;
+                loss_acc += stats.loss;
+                gn_acc += stats.grad_norm;
+                aux_acc += stats.router_aux;
+            }
+            grad_norm = gn_acc / ga as f32;
+        }
+        let time_acc = t0.elapsed().as_secs_f64();
+        let gaf = ga as f32;
+        let samples = (b * ga) as f64;
+        let rec = StepRecord {
+            step: stepper.step,
+            stage: phase.stage,
+            loss: loss_acc / gaf,
+            lr,
+            grad_norm,
+            router_aux: aux_acc / gaf,
+            step_time_s: time_acc,
+            samples_per_s: samples / time_acc.max(1e-9),
+        };
+        self.trainer.metrics.record_step(rec.clone());
+        self.queue.push_back(StepEvent::Step(rec));
+
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            self.validate_now()?;
+        }
+        Ok(())
+    }
+
+    /// End-of-phase validation, then rotate to the next phase.
+    fn close_phase(&mut self, phase: &Phase) -> Result<()> {
+        let eval_loss = self.validate_now()?;
+        self.queue.push_back(StepEvent::PhaseFinished {
+            phase: self.phase_idx,
+            stage: phase.stage,
+            eval_loss,
+        });
+        self.phase_idx += 1;
+        self.phase_open = false;
+        Ok(())
+    }
+
+    /// Run a validation pass, record it, and queue its event.
+    fn validate_now(&mut self) -> Result<f32> {
+        let stepper = self.stepper.as_ref().expect("phase open");
+        let eval_batcher = self.eval_batcher.as_ref().expect("phase open");
+        let eval_loss = self.trainer.validate(stepper, eval_batcher)?;
+        let at = stepper.step;
+        self.trainer.metrics.record_eval(at, eval_loss);
+        self.last_eval = Some(eval_loss);
+        self.queue.push_back(StepEvent::EvalPoint { step: at, eval_loss });
+        Ok(eval_loss)
+    }
+}

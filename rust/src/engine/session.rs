@@ -1,0 +1,206 @@
+//! `Session` — the unified model-loading facade.
+//!
+//! One builder covers the artifact-load → program-compile →
+//! checkpoint-restore → tokenizer-train sequence that the CLI
+//! subcommands (`eval`, `generate`, `reconstruct`), the examples and the
+//! benches previously each re-implemented. Two products:
+//!
+//! * [`SessionBuilder::build`] — a full [`Session`]: a live [`Stepper`]
+//!   for the method's inference variant plus the synthetic corpus and a
+//!   tokenizer trained at the artifact's vocab size.
+//! * [`SessionBuilder::build_program`] — a [`RawProgram`]: one compiled
+//!   auxiliary HLO program (e.g. the `reconstruct` variants) with its
+//!   blob-initialized parameters, no tokenizer.
+//!
+//! Training runs are driven by [`crate::coordinator::Trainer`] /
+//! [`crate::engine::Run`]; a `Session` is the read/serve side.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::checkpoint;
+use crate::data::synthetic::{Corpus, CorpusConfig};
+use crate::data::tokenizer::Tokenizer;
+use crate::engine::method::Method;
+use crate::error::Result;
+use crate::eval::{generate_text, BenchScores, EvalSuite, GenerateConfig};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::pjrt::{Device, Program, ProgramCache};
+use crate::runtime::stepper::Stepper;
+use crate::runtime::store::ParamStore;
+
+/// Generate the synthetic corpus and train a tokenizer sized to the
+/// artifact vocabulary — the shared data half of every loading path
+/// (`SessionBuilder::build` and `Trainer::new`).
+pub(crate) fn corpus_and_tokenizer(
+    config: CorpusConfig,
+    vocab_size: usize,
+) -> Result<(Corpus, Tokenizer)> {
+    let corpus = Corpus::generate(config);
+    let tokenizer = Tokenizer::train(&corpus.pretrain_text(), vocab_size)?;
+    Ok((corpus, tokenizer))
+}
+
+/// Builder for [`Session`] / [`RawProgram`].
+pub struct SessionBuilder {
+    artifacts: PathBuf,
+    method: Method,
+    variant: Option<String>,
+    checkpoint: Option<PathBuf>,
+    corpus: CorpusConfig,
+    device: Option<Device>,
+}
+
+impl SessionBuilder {
+    pub fn new(artifacts: impl Into<PathBuf>) -> Self {
+        SessionBuilder {
+            artifacts: artifacts.into(),
+            method: Method::Revffn,
+            variant: None,
+            checkpoint: None,
+            corpus: CorpusConfig::default(),
+            device: None,
+        }
+    }
+
+    /// Fine-tuning method whose inference variant to load (default:
+    /// [`Method::Revffn`]).
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Explicit artifact variant directory, overriding the method's
+    /// default (`method.eval_variant()`). Use for auxiliary variants
+    /// like `reconstruct`.
+    pub fn variant(mut self, variant: impl Into<String>) -> Self {
+        self.variant = Some(variant.into());
+        self
+    }
+
+    /// Restore parameters from an `.rvt` checkpoint after loading.
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    /// Synthetic corpus configuration (default: `CorpusConfig::default()`).
+    pub fn corpus(mut self, config: CorpusConfig) -> Self {
+        self.corpus = config;
+        self
+    }
+
+    /// Reuse an existing PJRT device instead of creating a CPU client.
+    pub fn device(mut self, device: Device) -> Self {
+        self.device = Some(device);
+        self
+    }
+
+    fn resolve_variant(&self) -> String {
+        self.variant
+            .clone()
+            .unwrap_or_else(|| self.method.eval_variant().to_string())
+    }
+
+    /// Build the full facade: compiled stepper + corpus + tokenizer.
+    pub fn build(self) -> Result<Session> {
+        let variant = self.resolve_variant();
+        let SessionBuilder { artifacts, method, checkpoint: ckpt, corpus, device, .. } = self;
+        let device = match device {
+            Some(d) => d,
+            None => Device::cpu()?,
+        };
+        let cache = ProgramCache::new();
+        let artifact = Artifact::load(artifacts.join(&variant))?;
+        let mut stepper = Stepper::new(&device, &cache, artifact)?;
+        if let Some(path) = &ckpt {
+            let ck = checkpoint::load(path)?;
+            let n = stepper.replace_params(|p| checkpoint::restore_into(&ck, p))?;
+            eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
+        }
+        let (corpus, tokenizer) = corpus_and_tokenizer(corpus, stepper.vocab_size())?;
+        Ok(Session { device, cache, artifacts, method, corpus, tokenizer, stepper })
+    }
+
+    /// Build one auxiliary program (no tokenizer, no eval suite): load
+    /// the variant's manifest, compile the named HLO artifact, stage its
+    /// blob parameters, and apply the checkpoint if one was given.
+    pub fn build_program(self, kind: &str) -> Result<RawProgram> {
+        let variant = self.resolve_variant();
+        let SessionBuilder { artifacts, checkpoint: ckpt, device, .. } = self;
+        let device = match device {
+            Some(d) => d,
+            None => Device::cpu()?,
+        };
+        let cache = ProgramCache::new();
+        let artifact = Artifact::load(artifacts.join(&variant))?;
+        let program = cache.get_or_load(&device, artifact.hlo_path(kind)?)?;
+        let mut params = ParamStore::from_blobs(&artifact)?;
+        if let Some(path) = &ckpt {
+            let ck = checkpoint::load(path)?;
+            let n = checkpoint::restore_into(&ck, &mut params)?;
+            eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
+        }
+        Ok(RawProgram { device, artifact, program, params })
+    }
+}
+
+/// A loaded model bound to a device: the one-stop facade for eval,
+/// generation, and auxiliary-program access.
+pub struct Session {
+    pub device: Device,
+    cache: ProgramCache,
+    artifacts: PathBuf,
+    pub method: Method,
+    pub corpus: Corpus,
+    pub tokenizer: Tokenizer,
+    pub stepper: Stepper,
+}
+
+impl Session {
+    pub fn builder(artifacts: impl Into<PathBuf>) -> SessionBuilder {
+        SessionBuilder::new(artifacts)
+    }
+
+    /// Artifact config directory this session loads from.
+    pub fn artifacts(&self) -> &Path {
+        &self.artifacts
+    }
+
+    pub fn cache(&self) -> &ProgramCache {
+        &self.cache
+    }
+
+    /// The Table-2 benchmark suite over this session's world.
+    pub fn eval_suite(&self, n_questions: usize, seed: u64) -> EvalSuite {
+        EvalSuite::new(self.corpus.world.clone(), n_questions, seed)
+    }
+
+    /// Score the model on the synthetic benchmark suite.
+    pub fn bench_scores(&self, n_questions: usize, seed: u64) -> Result<BenchScores> {
+        self.eval_suite(n_questions, seed)
+            .run(&self.stepper, &self.tokenizer, &self.corpus.eval)
+    }
+
+    /// Autoregressive generation through the AOT `forward` artifact.
+    pub fn generate(&self, prompt: &str, cfg: &GenerateConfig) -> Result<String> {
+        generate_text(&self.stepper, &self.tokenizer, prompt, cfg)
+    }
+
+    /// Load + compile another variant's HLO program through this
+    /// session's device and cache (reconstruction probes, ablations…).
+    pub fn program(&self, variant: &str, kind: &str) -> Result<(Artifact, Arc<Program>)> {
+        let artifact = Artifact::load(self.artifacts.join(variant))?;
+        let program = self.cache.get_or_load(&self.device, artifact.hlo_path(kind)?)?;
+        Ok((artifact, program))
+    }
+}
+
+/// One compiled auxiliary program plus its parameters (see
+/// [`SessionBuilder::build_program`]).
+pub struct RawProgram {
+    pub device: Device,
+    pub artifact: Artifact,
+    pub program: Arc<Program>,
+    pub params: ParamStore,
+}

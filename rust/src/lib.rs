@@ -10,28 +10,64 @@
 //!   execution through the PJRT C API, VRAM accounting, evaluation, and
 //!   checkpointing.
 //!
-//! Quick start (after `make artifacts`):
+//! ## Driving API (the `engine` module)
+//!
+//! Methods are typed ([`engine::Method`]), model loading goes through
+//! one facade ([`engine::Session`]), and training is step-granular
+//! ([`engine::Run`] yields [`engine::StepEvent`]s). Quick start (after
+//! `make artifacts`):
 //!
 //! ```no_run
-//! use revffn::runtime::{Device, Artifact};
-//! use revffn::coordinator::Trainer;
 //! use revffn::config::RunConfig;
+//! use revffn::coordinator::Trainer;
+//! use revffn::engine::{Method, StepEvent};
+//! use revffn::runtime::Device;
 //!
-//! let cfg = RunConfig::default_tiny("artifacts/tiny");
+//! let mut cfg = RunConfig::default_tiny("artifacts/tiny");
+//! cfg.method = Method::Revffn;
 //! let device = Device::cpu().unwrap();
 //! let mut trainer = Trainer::new(&device, cfg).unwrap();
-//! let report = trainer.run().unwrap();
+//!
+//! // drive the two-stage schedule one event at a time
+//! let mut run = trainer.start().unwrap();
+//! while let Some(event) = run.step().unwrap() {
+//!     match event {
+//!         StepEvent::Step(rec) => println!("step {} loss {:.4}", rec.step, rec.loss),
+//!         StepEvent::EvalPoint { step, eval_loss } => {
+//!             println!("eval @ {step}: {eval_loss:.4}")
+//!         }
+//!         _ => {}
+//!     }
+//! }
+//! let report = run.finish().unwrap();
 //! println!("final loss {:.4}", report.final_loss);
+//! ```
+//!
+//! (`trainer.run()` remains as the blocking wrapper over the same loop.)
+//!
+//! Inference and evaluation load through the session facade:
+//!
+//! ```no_run
+//! use revffn::engine::{Method, Session};
+//!
+//! let session = Session::builder("artifacts/tiny")
+//!     .method(Method::Revffn)
+//!     .build()
+//!     .unwrap();
+//! let scores = session.bench_scores(32, 7).unwrap();
+//! println!("mmlu-like {:.1}%", scores.mmlu_like);
 //! ```
 
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod memory;
 pub mod runtime;
 pub mod util;
 
+pub use engine::{Method, Run, Session, SessionBuilder, StepEvent};
 pub use error::{Error, Result};

@@ -1,29 +1,33 @@
-//! `revffn` — the launcher CLI (hand-rolled arg parsing; the offline
-//! build carries no clap).
+//! `revffn` — the launcher CLI (hand-rolled arg parsing via
+//! `revffn::util::Flags`; the offline build carries no clap).
 //!
-//! Subcommands:
-//! * `train`        — run a fine-tuning method end-to-end (two-stage for
+//! Every subcommand is a thin shell over the `engine` API — see
+//! `docs/API.md` for the full CLI ↔ API mapping:
+//!
+//! * `train`        — `Trainer::start()` / `Run::step()` (two-stage for
 //!                    RevFFN), logging metrics and optionally evaluating.
-//! * `eval`         — run the synthetic benchmark suite on a checkpoint
-//!                    or freshly-initialized model.
+//! * `eval`         — `Session` + `BenchScores` on a checkpoint or
+//!                    freshly-initialized model.
 //! * `plan-memory`  — print the Table-1 analytic VRAM breakdown at real
 //!                    Qwen1.5-MoE-A2.7B geometry.
 //! * `calibrate`    — compare the analytic model against XLA's live-buffer
 //!                    analysis of the lowered tiny graphs.
 //! * `gen-data`     — dump the synthetic instruction corpus as JSONL.
-//! * `reconstruct`  — measure reversible reconstruction error (§3.1).
+//! * `reconstruct`  — measure reversible reconstruction error (§3.1) via
+//!                    `SessionBuilder::build_program`.
+//! * `generate`     — `Session::generate` autoregressive decoding.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use revffn::config::RunConfig;
 use revffn::coordinator::Trainer;
 use revffn::data::synthetic::{Corpus, CorpusConfig};
-use revffn::eval::EvalSuite;
+use revffn::engine::{Method, Session};
 use revffn::memory::{self, Assumptions, Geometry};
-use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
+use revffn::runtime::Device;
+use revffn::util::Flags;
 
 const USAGE: &str = "\
 revffn — RevFFN training coordinator
@@ -32,8 +36,8 @@ USAGE: revffn <command> [--flag value]...
 
 COMMANDS:
   train         --artifacts DIR --method M [--stage1-steps N] [--stage2-steps N]
-                [--pretrain-steps N] [--out-dir DIR] [--config FILE.json]
-                [--eval-suite] [--save-checkpoint]
+                [--pretrain-steps N] [--eval-batches N] [--out-dir DIR]
+                [--config FILE.json] [--eval-suite] [--save-checkpoint]
   eval          --artifacts DIR --method M [--checkpoint FILE.rvt] [--questions N]
   plan-memory   [--seq N] [--budget-gb G] [--batch B] [--assumptions bf16_mixed|paper|f32]
   calibrate     [--artifacts DIR]
@@ -41,57 +45,9 @@ COMMANDS:
   reconstruct   [--artifacts DIR]
   generate      --prompt TEXT [--artifacts DIR] [--method M] [--checkpoint F]
                 [--max-new-tokens N] [--temperature T] [--top-k K]
+
+METHODS: sft | lora | dora | ia3 | lomo | galore | revffn
 ";
-
-/// flag parser: `--key value` and boolean `--key` pairs.
-struct Flags(HashMap<String, String>);
-
-impl Flags {
-    fn parse(args: &[String]) -> Result<Self> {
-        let mut m = HashMap::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            let Some(key) = a.strip_prefix("--") else {
-                bail!("unexpected argument {a:?}\n{USAGE}");
-            };
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                m.insert(key.replace('-', "_"), args[i + 1].clone());
-                i += 2;
-            } else {
-                m.insert(key.replace('-', "_"), "true".into());
-                i += 1;
-            }
-        }
-        Ok(Flags(m))
-    }
-
-    fn str(&self, key: &str, default: &str) -> String {
-        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn opt(&self, key: &str) -> Option<String> {
-        self.0.get(key).cloned()
-    }
-
-    fn u64(&self, key: &str, default: u64) -> Result<u64> {
-        match self.0.get(key) {
-            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
-            None => Ok(default),
-        }
-    }
-
-    fn f64(&self, key: &str, default: f64) -> Result<f64> {
-        match self.0.get(key) {
-            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
-            None => Ok(default),
-        }
-    }
-
-    fn bool(&self, key: &str) -> bool {
-        self.0.get(key).map(|v| v == "true").unwrap_or(false)
-    }
-}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -99,7 +55,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let flags = Flags::parse(&argv[1..])?;
+    let flags = Flags::parse(&argv[1..]).map_err(|e| anyhow!("{e}\n{USAGE}"))?;
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "eval" => cmd_eval(&flags),
@@ -116,21 +72,27 @@ fn main() -> Result<()> {
     }
 }
 
+fn method_flag(f: &Flags) -> Result<Method> {
+    f.str("method", "revffn").parse().map_err(|e| anyhow!("{e}"))
+}
+
 fn cmd_train(f: &Flags) -> Result<()> {
     let mut cfg = match f.opt("config") {
         Some(p) => RunConfig::from_json_file(&p).map_err(|e| anyhow!("loading {p}: {e}"))?,
         None => {
             let mut c = RunConfig::default_tiny(f.str("artifacts", "artifacts/tiny"));
-            c.method = f.str("method", "revffn");
-            c.schedule.stage1_steps = f.u64("stage1_steps", 30)?;
-            c.schedule.stage2_steps = f.u64("stage2_steps", 170)?;
-            c.data.pretrain_steps = f.u64("pretrain_steps", 0)?;
+            c.method = method_flag(f)?;
+            c.schedule.stage1_steps = f.u64("stage1_steps", 30).map_err(|e| anyhow!("{e}"))?;
+            c.schedule.stage2_steps = f.u64("stage2_steps", 170).map_err(|e| anyhow!("{e}"))?;
+            c.data.pretrain_steps = f.u64("pretrain_steps", 0).map_err(|e| anyhow!("{e}"))?;
+            c.eval_batches =
+                f.u64("eval_batches", c.eval_batches as u64).map_err(|e| anyhow!("{e}"))? as usize;
             c.out_dir = PathBuf::from(f.str("out_dir", "runs/latest"));
             c.save_checkpoint = f.bool("save_checkpoint");
             c
         }
     };
-    if cfg.method != "revffn" {
+    if !cfg.method.is_two_stage() {
         cfg.schedule.stage1_steps = 0;
     }
     let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
@@ -148,11 +110,7 @@ fn cmd_train(f: &Flags) -> Result<()> {
         report.wall_time_s
     );
     if f.bool("eval_suite") {
-        let stepper = trainer.stepper.as_ref().expect("model available after run");
-        let suite = EvalSuite::new(trainer.corpus.world.clone(), 32, 7);
-        let scores = suite
-            .run(stepper, &trainer.tokenizer, &trainer.corpus.eval)
-            .map_err(|e| anyhow!("{e}"))?;
+        let scores = trainer.bench_scores(32, 7).map_err(|e| anyhow!("{e}"))?;
         println!(
             "bench: mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
             scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like
@@ -161,31 +119,60 @@ fn cmd_train(f: &Flags) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(f: &Flags) -> Result<()> {
-    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
-    let method = f.str("method", "revffn");
-    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
-    let cache = ProgramCache::new();
-    let variant = if method == "revffn" { "revffn_stage2".to_string() } else { method.clone() };
-    let artifact = Artifact::load(artifacts.join(&variant)).map_err(|e| anyhow!("{e}"))?;
-    let mut stepper = Stepper::new(&device, &cache, artifact).map_err(|e| anyhow!("{e}"))?;
+fn session_from_flags(f: &Flags) -> Result<Session> {
+    let mut builder = Session::builder(f.str("artifacts", "artifacts/tiny"))
+        .method(method_flag(f)?);
     if let Some(ck) = f.opt("checkpoint") {
-        let ck = revffn::checkpoint::load(&ck).map_err(|e| anyhow!("{e}"))?;
-        let n = stepper
-            .replace_params(|p| revffn::checkpoint::restore_into(&ck, p))
-            .map_err(|e| anyhow!("{e}"))?;
-        eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
+        builder = builder.checkpoint(ck);
     }
-    let corpus = Corpus::generate(CorpusConfig::default());
-    let tokenizer =
-        revffn::data::Tokenizer::train(&corpus.pretrain_text(), stepper.vocab_size())
-            .map_err(|e| anyhow!("{e}"))?;
-    let suite = EvalSuite::new(corpus.world.clone(), f.u64("questions", 32)? as usize, 7);
-    let scores =
-        suite.run(&stepper, &tokenizer, &corpus.eval).map_err(|e| anyhow!("{e}"))?;
+    builder.build().map_err(|e| anyhow!("{e}"))
+}
+
+fn cmd_eval(f: &Flags) -> Result<()> {
+    let session = session_from_flags(f)?;
+    let questions = f.u64("questions", 32).map_err(|e| anyhow!("{e}"))? as usize;
+    let scores = session.bench_scores(questions, 7).map_err(|e| anyhow!("{e}"))?;
     println!(
         "mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
         scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like
+    );
+    Ok(())
+}
+
+fn cmd_generate(f: &Flags) -> Result<()> {
+    let prompt = f
+        .opt("prompt")
+        .ok_or_else(|| anyhow!("--prompt is required"))?;
+    let session = session_from_flags(f)?;
+    let cfg = revffn::eval::GenerateConfig {
+        max_new_tokens: f.u64("max_new_tokens", 32).map_err(|e| anyhow!("{e}"))? as usize,
+        temperature: f.f64("temperature", 0.0).map_err(|e| anyhow!("{e}"))? as f32,
+        top_k: f.u64("top_k", 0).map_err(|e| anyhow!("{e}"))? as usize,
+        seed: f.u64("seed", 0).map_err(|e| anyhow!("{e}"))?,
+    };
+    let text = session.generate(&prompt, &cfg).map_err(|e| anyhow!("{e}"))?;
+    println!("{text}");
+    Ok(())
+}
+
+fn cmd_reconstruct(f: &Flags) -> Result<()> {
+    let raw = Session::builder(f.str("artifacts", "artifacts/tiny"))
+        .variant("reconstruct")
+        .build_program("reconstruct")
+        .map_err(|e| anyhow!("{e}"))?;
+    let mut inputs = raw.params.to_literals().map_err(|e| anyhow!("{e}"))?;
+    let io = &raw.artifact.manifest.io;
+    let tokens: Vec<i32> =
+        (0..io.batch_size * io.seq_len).map(|i| (i % 200) as i32 + 5).collect();
+    inputs.push(
+        revffn::runtime::literal::i32_literal(&tokens, &[io.batch_size, io.seq_len])
+            .map_err(|e| anyhow!("{e}"))?,
+    );
+    let out = raw.program.run(&inputs).map_err(|e| anyhow!("{e}"))?;
+    let err = revffn::runtime::literal::scalar_to_f32(&out[0]).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "max-abs reconstruction error over {} layers: {err:.3e} (f32 eps = 1.19e-7)",
+        raw.artifact.manifest.model.n_layers
     );
     Ok(())
 }
@@ -197,8 +184,8 @@ fn cmd_plan_memory(f: &Flags) -> Result<()> {
         "f32" => Assumptions::f32_exact(),
         _ => Assumptions::bf16_mixed(),
     };
-    let seq = f.u64("seq", 2048)?;
-    let budget = f.f64("budget_gb", 80.0)?;
+    let seq = f.u64("seq", 2048).map_err(|e| anyhow!("{e}"))?;
+    let budget = f.f64("budget_gb", 80.0).map_err(|e| anyhow!("{e}"))?;
     let batch = f.opt("batch").map(|b| b.parse()).transpose()?;
     let rows = memory::table1_memory(Geometry::qwen15_moe_a27b(), assume, seq, budget, batch);
     print!(
@@ -242,8 +229,8 @@ fn cmd_calibrate(f: &Flags) -> Result<()> {
 
 fn cmd_gen_data(f: &Flags) -> Result<()> {
     let corpus = Corpus::generate(CorpusConfig {
-        seed: f.u64("seed", 17)?,
-        n_train: f.u64("n", 256)? as usize,
+        seed: f.u64("seed", 17).map_err(|e| anyhow!("{e}"))?,
+        n_train: f.u64("n", 256).map_err(|e| anyhow!("{e}"))? as usize,
         ..Default::default()
     });
     let out = PathBuf::from(f.str("out", "runs/corpus.jsonl"));
@@ -257,64 +244,5 @@ fn cmd_gen_data(f: &Flags) -> Result<()> {
     }
     std::fs::write(&out, text)?;
     println!("wrote {} examples to {}", corpus.train.len(), out.display());
-    Ok(())
-}
-
-fn cmd_generate(f: &Flags) -> Result<()> {
-    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
-    let method = f.str("method", "revffn");
-    let prompt = f
-        .opt("prompt")
-        .ok_or_else(|| anyhow!("--prompt is required"))?;
-    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
-    let cache = ProgramCache::new();
-    let variant = if method == "revffn" { "revffn_stage2".to_string() } else { method.clone() };
-    let artifact = Artifact::load(artifacts.join(&variant)).map_err(|e| anyhow!("{e}"))?;
-    let mut stepper = Stepper::new(&device, &cache, artifact).map_err(|e| anyhow!("{e}"))?;
-    if let Some(ck) = f.opt("checkpoint") {
-        let ck = revffn::checkpoint::load(&ck).map_err(|e| anyhow!("{e}"))?;
-        let n = stepper
-            .replace_params(|p| revffn::checkpoint::restore_into(&ck, p))
-            .map_err(|e| anyhow!("{e}"))?;
-        eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
-    }
-    let corpus = Corpus::generate(CorpusConfig::default());
-    let tokenizer =
-        revffn::data::Tokenizer::train(&corpus.pretrain_text(), stepper.vocab_size())
-            .map_err(|e| anyhow!("{e}"))?;
-    let cfg = revffn::eval::GenerateConfig {
-        max_new_tokens: f.u64("max_new_tokens", 32)? as usize,
-        temperature: f.f64("temperature", 0.0)? as f32,
-        top_k: f.u64("top_k", 0)? as usize,
-        seed: f.u64("seed", 0)?,
-    };
-    let text = revffn::eval::generate_text(&stepper, &tokenizer, &prompt, &cfg)
-        .map_err(|e| anyhow!("{e}"))?;
-    println!("{text}");
-    Ok(())
-}
-
-fn cmd_reconstruct(f: &Flags) -> Result<()> {
-    let artifacts = PathBuf::from(f.str("artifacts", "artifacts/tiny"));
-    let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
-    let artifact = Artifact::load(artifacts.join("reconstruct")).map_err(|e| anyhow!("{e}"))?;
-    let hlo = artifact.hlo_path("reconstruct").map_err(|e| anyhow!("{e}"))?;
-    let prog = device.load_hlo_text(&hlo).map_err(|e| anyhow!("{e}"))?;
-    let params =
-        revffn::runtime::ParamStore::from_blobs(&artifact).map_err(|e| anyhow!("{e}"))?;
-    let mut inputs = params.to_literals().map_err(|e| anyhow!("{e}"))?;
-    let io = &artifact.manifest.io;
-    let tokens: Vec<i32> =
-        (0..io.batch_size * io.seq_len).map(|i| (i % 200) as i32 + 5).collect();
-    inputs.push(
-        revffn::runtime::literal::i32_literal(&tokens, &[io.batch_size, io.seq_len])
-            .map_err(|e| anyhow!("{e}"))?,
-    );
-    let out = prog.run(&inputs).map_err(|e| anyhow!("{e}"))?;
-    let err = revffn::runtime::literal::scalar_to_f32(&out[0]).map_err(|e| anyhow!("{e}"))?;
-    println!(
-        "max-abs reconstruction error over {} layers: {err:.3e} (f32 eps = 1.19e-7)",
-        artifact.manifest.model.n_layers
-    );
     Ok(())
 }

@@ -10,8 +10,9 @@
 
 use std::path::Path;
 
+use crate::engine::Method as FtMethod;
 use crate::error::Result;
-use crate::memory::model::{Assumptions, Geometry, MemoryModel, Method};
+use crate::memory::model::{Assumptions, Geometry, MemoryModel};
 use crate::runtime::artifact::Artifact;
 
 /// One calibration row: analytic vs measured.
@@ -24,26 +25,17 @@ pub struct CalibRow {
     pub ratio: f64,
 }
 
-fn method_of_variant(variant: &str) -> Option<Method> {
-    match variant {
-        "sft" => Some(Method::SftCheckpoint),
-        "lora" => Some(Method::Lora),
-        "dora" => Some(Method::Dora),
-        "ia3" => Some(Method::Ia3),
-        "lomo" => Some(Method::Lomo),
-        "galore" => Some(Method::Galore),
-        "revffn_stage1" | "revffn_stage2" => Some(Method::Revffn),
-        _ => None,
-    }
-}
-
 /// Compare every analyzed variant under `cfg_dir` against the analytic
-/// model at the same (f32) assumptions and batch shape.
+/// model at the same (f32) assumptions and batch shape. Variant →
+/// method resolution goes through the `engine::Method` registry;
+/// ablation-only variants (`revffn_naive`, `reconstruct*`) are skipped.
 pub fn calibrate(cfg_dir: impl AsRef<Path>) -> Result<Vec<CalibRow>> {
     let index = crate::runtime::artifact::ArtifactIndex::load(&cfg_dir)?;
     let mut rows = Vec::new();
     for variant in &index.variants {
-        let Some(method) = method_of_variant(variant) else { continue };
+        let Some(method) = FtMethod::from_variant(variant).map(|m| m.memory_method()) else {
+            continue;
+        };
         let art = Artifact::load(cfg_dir.as_ref().join(variant))?;
         // prefer the undonated analysis: donation aliases args into temps
         // and would blur the pure-activation comparison
@@ -84,7 +76,7 @@ pub fn reversible_vs_naive(cfg_dir: impl AsRef<Path>) -> Result<Option<(u64, u64
             .or(m.memory_analysis)
             .map(|m| m.temp_size_bytes))
     };
-    match (load("revffn_stage2")?, load("revffn_naive")?) {
+    match (load(FtMethod::Revffn.eval_variant())?, load("revffn_naive")?) {
         (Some(r), Some(n)) => Ok(Some((r, n))),
         _ => Ok(None),
     }

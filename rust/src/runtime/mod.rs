@@ -5,6 +5,12 @@
 //! Adapted from the `/opt/xla-example/load_hlo` pattern: HLO *text* ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation` -> PJRT compile ->
 //! execute. Python never runs at training time.
+//!
+//! Most callers should not construct these types directly:
+//! [`crate::engine::Session`] owns the device + cache + artifact + stepper
+//! assembly (and checkpoint restore), and [`crate::engine::Run`] drives
+//! `Stepper` step functions during training. Reach for this module when
+//! building new execution paths (servers, custom probes).
 
 pub mod artifact;
 pub mod literal;

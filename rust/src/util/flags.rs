@@ -1,0 +1,154 @@
+//! Hand-rolled CLI flag parser (the offline build carries no clap).
+//!
+//! Grammar: a flat list of `--key value` pairs and boolean `--key`
+//! flags. A token following a flag is its value unless it starts with
+//! `--`; values beginning with a single `-` (negative numbers) are
+//! accepted. Dashes in keys normalize to underscores, so `--stage1-steps`
+//! and `--stage1_steps` are the same flag. Positional arguments are
+//! rejected.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed flags: normalized key → raw string value (`"true"` for bare
+/// boolean flags).
+#[derive(Debug, Default)]
+pub struct Flags(HashMap<String, String>);
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Self> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected positional argument {a:?}")));
+            };
+            if key.is_empty() {
+                return Err(Error::Config("empty flag name \"--\"".into()));
+            }
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.replace('-', "_"), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.replace('-', "_"), "true".into());
+                i += 1;
+            }
+        }
+        Ok(Flags(m))
+    }
+
+    /// String value with a default.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// String value, `None` when absent.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.0.get(key).cloned()
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.0.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} must be an integer, got {v:?}"))),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} must be a number, got {v:?}"))),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean flag: present without a value (or with `true`) → true.
+    pub fn bool(&self, key: &str) -> bool {
+        self.0.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let f = Flags::parse(&args(&["--artifacts", "a/b", "--method", "lora"])).unwrap();
+        assert_eq!(f.str("artifacts", "x"), "a/b");
+        assert_eq!(f.str("method", "revffn"), "lora");
+        assert_eq!(f.str("missing", "dflt"), "dflt");
+        assert_eq!(f.opt("method").as_deref(), Some("lora"));
+        assert_eq!(f.opt("missing"), None);
+    }
+
+    #[test]
+    fn bare_boolean_flags() {
+        let f = Flags::parse(&args(&["--eval-suite", "--save-checkpoint"])).unwrap();
+        assert!(f.bool("eval_suite"));
+        assert!(f.bool("save_checkpoint"));
+        assert!(!f.bool("absent"));
+    }
+
+    #[test]
+    fn boolean_before_another_flag() {
+        let f = Flags::parse(&args(&["--eval-suite", "--questions", "16"])).unwrap();
+        assert!(f.bool("eval_suite"));
+        assert_eq!(f.u64("questions", 0).unwrap(), 16);
+    }
+
+    #[test]
+    fn explicit_false_turns_flag_off() {
+        let f = Flags::parse(&args(&["--save-checkpoint", "false"])).unwrap();
+        assert!(!f.bool("save_checkpoint"));
+    }
+
+    #[test]
+    fn positional_argument_rejected() {
+        assert!(Flags::parse(&args(&["train", "--method", "sft"])).is_err());
+        assert!(Flags::parse(&args(&["--method", "sft", "stray"])).is_err());
+        assert!(Flags::parse(&args(&["--"])).is_err());
+    }
+
+    #[test]
+    fn value_beginning_with_single_dash_accepted() {
+        let f = Flags::parse(&args(&["--temperature", "-0.5", "--seed", "-3"])).unwrap();
+        assert_eq!(f.f64("temperature", 0.0).unwrap(), -0.5);
+        // not parseable as u64 — must error, not silently default
+        assert!(f.u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_value_is_swallowed_as_flag() {
+        // a value starting with `--` reads as the next flag: the first
+        // key becomes boolean — documented grammar, locked in here
+        let f = Flags::parse(&args(&["--out-dir", "--weird"])).unwrap();
+        assert!(f.bool("out_dir"));
+        assert!(f.bool("weird"));
+    }
+
+    #[test]
+    fn dashes_normalize_to_underscores() {
+        let f = Flags::parse(&args(&["--stage1-steps", "30"])).unwrap();
+        assert_eq!(f.u64("stage1_steps", 0).unwrap(), 30);
+    }
+
+    #[test]
+    fn malformed_numbers_error() {
+        let f = Flags::parse(&args(&["--steps", "many", "--lr", "fast"])).unwrap();
+        assert!(f.u64("steps", 1).is_err());
+        assert!(f.f64("lr", 1.0).is_err());
+        // absent keys fall back to defaults without error
+        assert_eq!(f.u64("other", 7).unwrap(), 7);
+        assert_eq!(f.f64("other_f", 0.5).unwrap(), 0.5);
+    }
+}

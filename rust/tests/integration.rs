@@ -10,6 +10,7 @@ use std::path::PathBuf;
 
 use revffn::data::synthetic::{Corpus, CorpusConfig};
 use revffn::data::{encode_corpus, Batcher, Tokenizer};
+use revffn::engine::Method;
 use revffn::runtime::{Artifact, ArtifactIndex, Device, ProgramCache, Stepper};
 
 fn artifacts_root() -> Option<PathBuf> {
@@ -58,7 +59,7 @@ fn every_variant_compiles_and_loads_params() {
 #[test]
 fn revffn_train_step_learns() {
     let (device, cache) = ctx();
-    let Some(mut stepper) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
+    let Some(mut stepper) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
     let mut batcher = data_for(&stepper, 64);
     let mut losses = Vec::new();
     for _ in 0..6 {
@@ -77,7 +78,7 @@ fn revffn_train_step_learns() {
 fn all_method_train_steps_execute() {
     let Some(root) = artifacts_root() else { return };
     let (device, cache) = ctx();
-    for variant in ["sft", "lora", "dora", "ia3", "lomo", "galore", "revffn_stage1"] {
+    for variant in Method::ALL.map(|m| m.variant(1)) {
         if !root.join(variant).join("manifest.json").exists() {
             continue;
         }
@@ -93,7 +94,7 @@ fn all_method_train_steps_execute() {
 #[test]
 fn eval_step_is_pure() {
     let (device, cache) = ctx();
-    let Some(stepper) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
+    let Some(stepper) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
     let mut batcher = data_for(&stepper, 16);
     let batch = batcher.next_batch();
     let (l1, _) = stepper.eval_step(&batch).unwrap();
@@ -104,7 +105,7 @@ fn eval_step_is_pure() {
 #[test]
 fn forward_shape_and_finiteness() {
     let (device, cache) = ctx();
-    let Some(stepper) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
+    let Some(stepper) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
     let (b, s) = stepper.batch_shape();
     let v = stepper.vocab_size();
     let tokens: Vec<i32> = (0..b * s).map(|i| (i % 60) as i32 + 4).collect();
@@ -116,8 +117,8 @@ fn forward_shape_and_finiteness() {
 #[test]
 fn stage_handoff_preserves_weights() {
     let (device, cache) = ctx();
-    let Some(mut s1) = make_stepper_in(&device, &cache, "revffn_stage1") else { return };
-    let Some(mut s2) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
+    let Some(mut s1) = make_stepper_in(&device, &cache, Method::Revffn.variant(1)) else { return };
+    let Some(mut s2) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
     // train stage 1 a little so params differ from the blob init
     let mut batcher = data_for(&s1, 16);
     for _ in 0..2 {
@@ -135,8 +136,8 @@ fn pretrain_transfer_standard_to_revffn() {
     // The pre-pass trains the standard model; the RevFFN scaffold adopts
     // the shared tensors by name (embed, layers.attn.*, layers.moe.*).
     let (device, cache) = ctx();
-    let Some(mut sft) = make_stepper_in(&device, &cache, "sft") else { return };
-    let Some(mut rev) = make_stepper_in(&device, &cache, "revffn_stage1") else { return };
+    let Some(mut sft) = make_stepper_in(&device, &cache, Method::Sft.eval_variant()) else { return };
+    let Some(mut rev) = make_stepper_in(&device, &cache, Method::Revffn.variant(1)) else { return };
     let mut batcher = data_for(&sft, 16);
     sft.train_step(&batcher.next_batch(), 1e-3).unwrap();
     let sft_params = sft.materialize_params().unwrap();
@@ -152,8 +153,8 @@ fn pretrain_transfer_standard_to_revffn() {
 #[test]
 fn deterministic_training_given_same_inputs() {
     let (device, cache) = ctx();
-    let Some(mut a) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
-    let Some(mut b) = make_stepper_in(&device, &cache, "revffn_stage2") else { return };
+    let Some(mut a) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
+    let Some(mut b) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
     let mut ba = data_for(&a, 16);
     let mut bb = data_for(&b, 16);
     for _ in 0..2 {
@@ -178,7 +179,7 @@ fn reversible_memory_claim_on_lowered_graphs() {
 fn reconstruct_error_bounded_and_iteration_sweep_improves() {
     let Some(root) = artifacts_root() else { return };
     let (device, cache) = ctx();
-    let params_src = make_stepper_in(&device, &cache, "revffn_stage2").unwrap();
+    let params_src = make_stepper_in(&device, &cache, Method::Revffn.variant(2)).unwrap();
     // freshly constructed: host mirror is clean
     let mut errs = Vec::new();
     for variant in ["reconstruct", "reconstruct_iters4", "reconstruct_symmetric"] {
@@ -213,12 +214,12 @@ fn pallas_variant_matches_ref_variant_outputs() {
     // logits must agree with the ref-path artifacts on identical weights.
     let Some(root) = artifacts_root() else { return };
     let pallas_root = root.parent().unwrap().join("tiny_pallas");
-    if !pallas_root.join("revffn_stage2/manifest.json").exists() {
+    if !pallas_root.join(Method::Revffn.variant(2)).join("manifest.json").exists() {
         return;
     }
     let (device, cache) = ctx();
-    let ref_art = Artifact::load(root.join("revffn_stage2")).unwrap();
-    let pl_art = Artifact::load(pallas_root.join("revffn_stage2")).unwrap();
+    let ref_art = Artifact::load(root.join(Method::Revffn.variant(2))).unwrap();
+    let pl_art = Artifact::load(pallas_root.join(Method::Revffn.variant(2))).unwrap();
     assert!(pl_art.manifest.use_pallas);
     let ref_stepper = Stepper::new(&device, &cache, ref_art).unwrap();
     let mut pl_stepper = Stepper::new(&device, &cache, pl_art).unwrap();
