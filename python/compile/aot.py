@@ -15,6 +15,7 @@ Usage:
 Layout:
     artifacts/<cfg>/blobs/{standard,revffn}.bin + peft_<m>.bin
     artifacts/<cfg>/<variant>/train_step.hlo.txt
+    artifacts/<cfg>/<variant>/{grad,apply,accum}_step.hlo.txt + scale.hlo.txt
     artifacts/<cfg>/<variant>/forward.hlo.txt
     artifacts/<cfg>/<variant>/eval_step.hlo.txt
     artifacts/<cfg>/<variant>/manifest.json
@@ -162,6 +163,28 @@ def lower_variant(variant: str, cfg: ModelConfig, tc: TrainConfig,
     lowered_apply = jax.jit(flat_apply, donate_argnums=donate).lower(*apply_args)
     _write(os.path.join(vdir, "apply_step.hlo.txt"), to_hlo_text(lowered_apply))
 
+    # Device-resident accumulation pair: running sum + mean scale over the
+    # trainable gradients. With these, L3's accumulate loop never moves a
+    # gradient across the host boundary (runtime/accum.rs).
+    donate_acc = tuple(range(n_t))
+
+    def flat_accum(*args):
+        acc = list(args[:n_t])
+        grads = list(args[n_t:2 * n_t])
+        return tuple(sb.accum_step(acc, grads))
+
+    lowered_accum = jax.jit(flat_accum, donate_argnums=donate_acc).lower(
+        *(tuple(g_spec) + tuple(g_spec)))
+    _write(os.path.join(vdir, "accum_step.hlo.txt"), to_hlo_text(lowered_accum))
+
+    def flat_scale(*args):
+        acc = list(args[:n_t])
+        return tuple(sb.scale_step(acc, args[n_t]))
+
+    lowered_scale = jax.jit(flat_scale, donate_argnums=donate_acc).lower(
+        *(tuple(g_spec) + (lr,)))
+    _write(os.path.join(vdir, "scale.hlo.txt"), to_hlo_text(lowered_scale))
+
     def flat_forward(*args):
         return (sb.forward(list(args[:n_p]), args[n_p]),)
 
@@ -187,6 +210,8 @@ def lower_variant(variant: str, cfg: ModelConfig, tc: TrainConfig,
             "train_step": "train_step.hlo.txt",
             "grad_step": "grad_step.hlo.txt",
             "apply_step": "apply_step.hlo.txt",
+            "accum_step": "accum_step.hlo.txt",
+            "scale": "scale.hlo.txt",
             "forward": "forward.hlo.txt",
             "eval_step": "eval_step.hlo.txt",
         },

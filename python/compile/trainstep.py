@@ -137,6 +137,17 @@ class StepBuilder:
         gnorm = gnorm + 0.0 * lr + 0.0 * step  # anchor scalar inputs
         return new_all, new_m, new_v, gnorm
 
+    def accum_step(self, acc: list, grads: list):
+        """Running-sum for device-resident microbatch accumulation:
+        -> (acc + g per trainable tensor). L3 keeps the sum as XLA
+        literals across microbatches; donation aliases `acc` in place."""
+        return [a + g for a, g in zip(acc, grads)]
+
+    def scale_step(self, acc: list, scale):
+        """Scale the accumulated gradient (by 1/n_microbatches) into the
+        mean the apply_step consumes: -> acc * scale."""
+        return [a * scale for a in acc]
+
     def eval_step(self, all_params: list, tokens, targets, loss_mask):
         """Loss-only pass (validation): -> (loss, aux)."""
         return self.loss_fn(self._assemble(all_params), tokens, targets, loss_mask)

@@ -3,9 +3,15 @@
 //! batch shape, reported as samples/s plus the normalized ratio vs
 //! SFT+Checkpointing (the shape the paper's column implies).
 //!
-//! Absolute numbers are CPU-PJRT, not H800; what must reproduce is the
-//! *relative* structure: PEFT fastest, full-FT+recompute slowest,
-//! RevFFN between (recompute cost, but reversible recompute only).
+//! For every method that supports microbatch accumulation the bench also
+//! times a `grad_accum=2` optimizer step on both implementations of the
+//! accumulate path — `accum_device` (literal-resident, this PR) and
+//! `accum_host` (the pre-PR host-summing baseline, kept as
+//! `grad_step`/`apply_accumulated_host`) — so the before/after step-time
+//! delta is tracked on the same config from here on.
+//!
+//! Results go to stdout AND to `BENCH_throughput.json` (machine-readable:
+//! samples/s, tokens/s, step-time p50/p95 per method and path).
 //!
 //!     cargo bench --bench table1_throughput
 
@@ -13,8 +19,43 @@ use revffn::data::synthetic::{Corpus, CorpusConfig};
 use revffn::data::{encode_corpus, Batcher, Tokenizer};
 use revffn::engine::Method;
 use revffn::memory::paper_table1;
-use revffn::runtime::{Artifact, Device, ProgramCache, Stepper};
-use revffn::util::bench;
+use revffn::runtime::{Artifact, Device, GradAccumulator, ProgramCache, Stepper};
+use revffn::util::bench::{self, Timing};
+use revffn::util::json::{Json, ObjBuilder};
+
+/// Microbatches per accumulate-path optimizer step.
+const GRAD_ACCUM: usize = 2;
+/// Timed + discarded iterations per (method, path).
+const ITERS: usize = 5;
+const WARMUP: usize = 2;
+
+const OUT_PATH: &str = "BENCH_throughput.json";
+
+fn row_json(
+    method: Method,
+    path: &str,
+    b: usize,
+    s: usize,
+    samples_per_step: usize,
+    t: &Timing,
+    device_resident: Option<bool>,
+) -> Json {
+    let sps = samples_per_step as f64 / t.median_s.max(1e-12);
+    let mut o = ObjBuilder::new()
+        .str("method", method.name())
+        .str("path", path)
+        .num("batch_size", b as f64)
+        .num("seq_len", s as f64)
+        .num("samples_per_s", sps)
+        .num("tokens_per_s", sps * s as f64)
+        .num("step_p50_ms", t.median_s * 1e3)
+        .num("step_p95_ms", t.p95_s * 1e3)
+        .num("iters", t.iters as f64);
+    if let Some(d) = device_resident {
+        o = o.bool("device_resident", d);
+    }
+    o.build()
+}
 
 fn main() -> anyhow::Result<()> {
     let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -24,7 +65,8 @@ fn main() -> anyhow::Result<()> {
 
     let corpus = Corpus::generate(CorpusConfig { n_train: 256, ..Default::default() });
 
-    let mut results: Vec<(Method, f64)> = Vec::new(); // (method, samples/s)
+    let mut rows: Vec<Json> = Vec::new();
+    let mut results: Vec<(Method, f64)> = Vec::new(); // (method, fused samples/s)
     for method in Method::ALL {
         let variant = method.eval_variant();
         let dir = format!("artifacts/tiny/{variant}");
@@ -43,21 +85,116 @@ fn main() -> anyhow::Result<()> {
         let samples = encode_corpus(&tokenizer, &corpus.train, s);
         let mut batcher = Batcher::new(samples, b, s, 0);
 
-        // warmup (compile-amortized) + timed steps
+        // -- fused path: one train_step per optimizer step ----------------
         let mut times = Vec::new();
-        for i in 0..7 {
+        for i in 0..WARMUP + ITERS {
             let batch = batcher.next_batch();
             let stats = stepper
                 .train_step(&batch, 1e-4)
                 .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
-            if i >= 2 {
+            if i >= WARMUP {
                 times.push(stats.step_time_s);
             }
         }
         let t = bench::summarize(&times);
         let sps = b as f64 / t.median_s;
         results.push((method, sps));
-        bench::row(method.label(), format!("{:>8.2} samples/s   ({})", sps, t.fmt_ms()));
+        rows.push(row_json(method, "fused", b, s, b, &t, None));
+        bench::row(method.label(), format!("{sps:>8.2} samples/s   ({})", t.fmt_ms()));
+
+        if !(method.supports_grad_accum() && stepper.supports_accumulation()) {
+            continue;
+        }
+
+        // -- accumulate path, literal-resident (this PR) ------------------
+        let mut accum = GradAccumulator::for_stepper(&stepper);
+        let run_accum = |stepper: &mut Stepper,
+                         batcher: &mut Batcher,
+                         accum: &mut GradAccumulator|
+         -> anyhow::Result<()> {
+            for _ in 0..GRAD_ACCUM {
+                let batch = batcher.next_batch();
+                let out = stepper
+                    .grad_step_literals(&batch)
+                    .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+                accum.add(out.grads).map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+            }
+            let mean = accum.finish().map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+            stepper
+                .apply_accumulated(&mean, 1e-4)
+                .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+            Ok(())
+        };
+        let mut times = Vec::new();
+        for i in 0..WARMUP + ITERS {
+            let t0 = std::time::Instant::now();
+            run_accum(&mut stepper, &mut batcher, &mut accum)?;
+            if i >= WARMUP {
+                times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        let td = bench::summarize(&times);
+        let n_samples = b * GRAD_ACCUM;
+        rows.push(row_json(
+            method,
+            "accum_device",
+            b,
+            s,
+            n_samples,
+            &td,
+            Some(accum.is_device_resident()),
+        ));
+        bench::row(
+            &format!("{} [accum x{GRAD_ACCUM} device]", method.label()),
+            format!("{:>8.2} samples/s   ({})", n_samples as f64 / td.median_s, td.fmt_ms()),
+        );
+
+        // -- accumulate path, pre-PR host-summing baseline ----------------
+        let mut times = Vec::new();
+        for i in 0..WARMUP + ITERS {
+            let t0 = std::time::Instant::now();
+            let mut grads: Option<Vec<Vec<f32>>> = None;
+            for _ in 0..GRAD_ACCUM {
+                let batch = batcher.next_batch();
+                let (g, _loss, _aux) = stepper
+                    .grad_step(&batch)
+                    .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+                match grads.as_mut() {
+                    None => grads = Some(g),
+                    Some(acc) => {
+                        for (a, gi) in acc.iter_mut().zip(&g) {
+                            for (x, y) in a.iter_mut().zip(gi) {
+                                *x += *y;
+                            }
+                        }
+                    }
+                }
+            }
+            let mut grads = grads.expect("grad_accum >= 1");
+            let scale = 1.0 / GRAD_ACCUM as f32;
+            for g in grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+            stepper
+                .apply_accumulated_host(&grads, 1e-4)
+                .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+            if i >= WARMUP {
+                times.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        let th = bench::summarize(&times);
+        rows.push(row_json(method, "accum_host", b, s, n_samples, &th, None));
+        bench::row(
+            &format!("{} [accum x{GRAD_ACCUM} host]", method.label()),
+            format!(
+                "{:>8.2} samples/s   ({})  device/host p50 {:.2}x",
+                n_samples as f64 / th.median_s,
+                th.fmt_ms(),
+                th.median_s / td.median_s.max(1e-12)
+            ),
+        );
     }
 
     bench::section("Normalized vs SFT+Checkpointing (ours | paper)");
@@ -78,5 +215,16 @@ fn main() -> anyhow::Result<()> {
         "\nshape checks: PEFT > full-FT methods; RevFFN vs SFT ratio paper={:.2}x",
         paper_table1(Method::Revffn.memory_method()).1 / paper_sft
     );
+
+    let doc = ObjBuilder::new()
+        .str("bench", "table1_throughput")
+        .str("artifacts", "artifacts/tiny")
+        .num("grad_accum", GRAD_ACCUM as f64)
+        .num("warmup", WARMUP as f64)
+        .num("iters", ITERS as f64)
+        .val("methods", Json::Arr(rows))
+        .build();
+    std::fs::write(OUT_PATH, doc.to_string())?;
+    println!("\nwrote {OUT_PATH}");
     Ok(())
 }

@@ -18,11 +18,15 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::runtime::literal::{cast_f32_le, extend_f32_le};
 use crate::runtime::store::ParamStore;
 
 const MAGIC: &[u8; 4] = b"RVT1";
 
-/// Write every tensor of `params` to `path`.
+/// Write every tensor of `params` to `path`. Streams straight out of the
+/// store's borrowed snapshot — no tensor is cloned — and converts each
+/// tensor to bytes in one reused buffer (one `write_all` per tensor
+/// instead of one per element).
 pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
         std::fs::create_dir_all(parent)?;
@@ -30,19 +34,19 @@ pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     f.write_all(&step.to_le_bytes())?;
-    let snap = params.snapshot();
-    f.write_all(&(snap.len() as u32).to_le_bytes())?;
-    for (name, shape, data) in snap {
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    for (name, shape, data) in params.snapshot() {
         let nb = name.as_bytes();
         f.write_all(&(nb.len() as u32).to_le_bytes())?;
         f.write_all(nb)?;
         f.write_all(&(shape.len() as u32).to_le_bytes())?;
-        for d in &shape {
+        for d in shape {
             f.write_all(&(*d as u32).to_le_bytes())?;
         }
-        for v in &data {
-            f.write_all(&v.to_le_bytes())?;
-        }
+        buf.clear();
+        extend_f32_le(data, &mut buf);
+        f.write_all(&buf)?;
     }
     Ok(())
 }
@@ -67,6 +71,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
     f.read_exact(&mut b4)?;
     let count = u32::from_le_bytes(b4) as usize;
     let mut tensors = Vec::with_capacity(count);
+    let mut buf: Vec<u8> = Vec::new(); // reused byte buffer across tensors
     for _ in 0..count {
         f.read_exact(&mut b4)?;
         let nlen = u32::from_le_bytes(b4) as usize;
@@ -82,11 +87,9 @@ pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         }
         let n: usize = shape.iter().product::<usize>().max(1);
         let mut data = vec![0f32; n];
-        let mut buf = vec![0u8; n * 4];
+        buf.resize(n * 4, 0);
         f.read_exact(&mut buf)?;
-        for (i, c) in buf.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
+        cast_f32_le(&buf, &mut data)?;
         tensors.push((name, shape, data));
     }
     Ok(Checkpoint { step, tensors })

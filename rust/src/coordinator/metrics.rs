@@ -16,7 +16,13 @@ pub struct StepRecord {
     pub lr: f32,
     pub grad_norm: f32,
     pub router_aux: f32,
+    /// Wall-clock of the whole logged step (microbatches + update +
+    /// batch waits).
     pub step_time_s: f64,
+    /// PJRT execute time within the step — `step_time_s` minus this is
+    /// coordinator overhead (batch assembly, literal staging), which the
+    /// accumulate and fused paths must keep comparable.
+    pub device_time_s: f64,
     pub samples_per_s: f64,
 }
 
@@ -97,6 +103,7 @@ impl Metrics {
                 .num("grad_norm", s.grad_norm as f64)
                 .num("router_aux", s.router_aux as f64)
                 .num("step_time_s", s.step_time_s)
+                .num("device_time_s", s.device_time_s)
                 .num("samples_per_s", s.samples_per_s)
                 .build();
             writeln!(f, "{}", j.to_string())?;
@@ -125,6 +132,7 @@ mod tests {
             grad_norm: 1.0,
             router_aux: 0.0,
             step_time_s: 0.1,
+            device_time_s: 0.08,
             samples_per_s: sps,
         }
     }

@@ -151,24 +151,25 @@ impl<'d> Trainer<'d> {
     }
 
     /// Validation pass over up to `cfg.eval_batches` sequential eval
-    /// batches (0 = all).
+    /// batches (0 = all). Batches stream from the batcher's lazy
+    /// iterator, so capped evaluation never assembles the skipped tail.
     pub(crate) fn validate(&self, stepper: &Stepper, eval_batcher: &Batcher) -> Result<f32> {
-        let batches = eval_batcher.sequential_batches();
-        if batches.is_empty() {
+        let total_batches = eval_batcher.n_sequential_batches();
+        if total_batches == 0 {
             return Ok(f32::NAN);
         }
-        let cap = if self.cfg.eval_batches == 0 { batches.len() } else { self.cfg.eval_batches };
-        let n = batches.len().min(cap);
-        if n < batches.len() {
+        let cap =
+            if self.cfg.eval_batches == 0 { total_batches } else { self.cfg.eval_batches };
+        let n = total_batches.min(cap);
+        if n < total_batches {
             eprintln!(
-                "[eval] scoring {n}/{} eval batches ({} skipped; raise eval_batches to cover all)",
-                batches.len(),
-                batches.len() - n
+                "[eval] scoring {n}/{total_batches} eval batches ({} skipped; raise eval_batches to cover all)",
+                total_batches - n
             );
         }
         let mut total = 0.0;
-        for batch in batches.iter().take(n) {
-            let (loss, _aux) = stepper.eval_step(batch)?;
+        for batch in eval_batcher.sequential_batches().take(n) {
+            let (loss, _aux) = stepper.eval_step(&batch)?;
             total += loss;
         }
         Ok(total / n as f32)

@@ -52,11 +52,31 @@ impl Batcher {
 
     /// Assemble the next batch, wrapping to a new shuffled epoch as needed.
     pub fn next_batch(&mut self) -> Batch {
+        let mut batch = Batch {
+            tokens: Vec::new(),
+            targets: Vec::new(),
+            loss_mask: Vec::new(),
+            batch_size: self.batch_size,
+            seq_len: self.seq_len,
+        };
+        self.fill_next(&mut batch);
+        batch
+    }
+
+    /// Assemble the next batch *into* an existing `Batch`, reusing its
+    /// buffers (the prefetch pipeline recycles batches through here so
+    /// the steady-state loop allocates nothing).
+    pub fn fill_next(&mut self, batch: &mut Batch) {
         let b = self.batch_size;
         let s = self.seq_len;
-        let mut tokens = Vec::with_capacity(b * s);
-        let mut targets = Vec::with_capacity(b * s);
-        let mut mask = Vec::with_capacity(b * s);
+        batch.batch_size = b;
+        batch.seq_len = s;
+        batch.tokens.clear();
+        batch.targets.clear();
+        batch.loss_mask.clear();
+        batch.tokens.reserve(b * s);
+        batch.targets.reserve(b * s);
+        batch.loss_mask.reserve(b * s);
         for _ in 0..b {
             if self.cursor >= self.order.len() {
                 self.epoch += 1;
@@ -64,32 +84,34 @@ impl Batcher {
             }
             let sample = &self.samples[self.order[self.cursor]];
             self.cursor += 1;
-            tokens.extend_from_slice(&sample.tokens);
-            targets.extend_from_slice(&sample.targets);
-            mask.extend_from_slice(&sample.loss_mask);
+            batch.tokens.extend_from_slice(&sample.tokens);
+            batch.targets.extend_from_slice(&sample.targets);
+            batch.loss_mask.extend_from_slice(&sample.loss_mask);
         }
-        Batch { tokens, targets, loss_mask: mask, batch_size: b, seq_len: s }
+    }
+
+    /// Number of full batches `sequential_batches` yields.
+    pub fn n_sequential_batches(&self) -> usize {
+        self.samples.len() / self.batch_size
     }
 
     /// Deterministic, in-order batches over the whole set (validation).
-    pub fn sequential_batches(&self) -> Vec<Batch> {
+    /// Streams lazily — callers that cap evaluation (`cfg.eval_batches`)
+    /// only pay for the batches they actually score.
+    pub fn sequential_batches(&self) -> impl Iterator<Item = Batch> + '_ {
         let b = self.batch_size;
         let s = self.seq_len;
-        self.samples
-            .chunks(b)
-            .filter(|c| c.len() == b)
-            .map(|chunk| {
-                let mut tokens = Vec::with_capacity(b * s);
-                let mut targets = Vec::with_capacity(b * s);
-                let mut mask = Vec::with_capacity(b * s);
-                for sample in chunk {
-                    tokens.extend_from_slice(&sample.tokens);
-                    targets.extend_from_slice(&sample.targets);
-                    mask.extend_from_slice(&sample.loss_mask);
-                }
-                Batch { tokens, targets, loss_mask: mask, batch_size: b, seq_len: s }
-            })
-            .collect()
+        self.samples.chunks(b).filter(move |c| c.len() == b).map(move |chunk| {
+            let mut tokens = Vec::with_capacity(b * s);
+            let mut targets = Vec::with_capacity(b * s);
+            let mut mask = Vec::with_capacity(b * s);
+            for sample in chunk {
+                tokens.extend_from_slice(&sample.tokens);
+                targets.extend_from_slice(&sample.targets);
+                mask.extend_from_slice(&sample.loss_mask);
+            }
+            Batch { tokens, targets, loss_mask: mask, batch_size: b, seq_len: s }
+        })
     }
 }
 
@@ -139,9 +161,35 @@ mod tests {
     #[test]
     fn sequential_covers_in_order() {
         let b = Batcher::new(samples(9, 4), 2, 4, 0);
-        let batches = b.sequential_batches();
-        assert_eq!(batches.len(), 4); // 9/2 full batches
+        assert_eq!(b.n_sequential_batches(), 4); // 9/2 full batches
+        let batches: Vec<Batch> = b.sequential_batches().collect();
+        assert_eq!(batches.len(), 4);
         assert_eq!(batches[0].tokens[0], 0);
         assert_eq!(batches[1].tokens[0], 2 * 4 / 4); // sample index 2
+    }
+
+    #[test]
+    fn sequential_streams_lazily() {
+        let b = Batcher::new(samples(100, 4), 2, 4, 0);
+        // taking 3 of 50 must not require materializing the rest
+        assert_eq!(b.sequential_batches().take(3).count(), 3);
+    }
+
+    #[test]
+    fn fill_next_reuses_buffers_and_matches_next_batch() {
+        let mut a = Batcher::new(samples(16, 4), 4, 4, 7);
+        let mut b = Batcher::new(samples(16, 4), 4, 4, 7);
+        let mut reused = a.next_batch();
+        let ptr_before = reused.tokens.as_ptr();
+        let cap_before = reused.tokens.capacity();
+        assert_eq!(reused.tokens, b.next_batch().tokens);
+        for _ in 0..5 {
+            a.fill_next(&mut reused);
+            reused.validate().unwrap();
+            assert_eq!(reused.tokens, b.next_batch().tokens);
+        }
+        // same allocation throughout (capacity never needed to grow)
+        assert_eq!(reused.tokens.capacity(), cap_before);
+        assert_eq!(reused.tokens.as_ptr(), ptr_before);
     }
 }

@@ -1,12 +1,15 @@
 //! Data pipeline: tokenizer training, synthetic Dolly-like corpus
-//! generation, instruction formatting + loss masking, and batching.
+//! generation, instruction formatting + loss masking, batching, and
+//! double-buffered background batch prefetch ([`Pipeline`]).
 
 pub mod batcher;
 pub mod dataset;
+pub mod pipeline;
 pub mod synthetic;
 pub mod tokenizer;
 
 pub use batcher::Batcher;
+pub use pipeline::Pipeline;
 pub use dataset::{encode_corpus, encode_example, encode_lm_text, Sample};
 pub use synthetic::{Corpus, CorpusConfig, Example, Family, World};
 pub use tokenizer::Tokenizer;

@@ -41,9 +41,9 @@ pub struct MethodSpec {
     /// order. Single-stage methods have exactly one entry; the last
     /// entry is also the inference/eval variant.
     pub stage_variants: &'static [&'static str],
-    /// Whether host-side microbatch gradient accumulation is meaningful.
-    /// LOMO fuses the update into the backward pass, so accumulating
-    /// full gradients host-side would defeat the method.
+    /// Whether microbatch gradient accumulation is meaningful. LOMO
+    /// fuses the update into the backward pass, so accumulating full
+    /// gradients (even device-resident) would defeat the method.
     pub supports_grad_accum: bool,
     /// Row in the analytic peak-VRAM model (`memory::Method`).
     pub memory: memory::Method,
@@ -143,7 +143,7 @@ impl Method {
         self.stages() > 1
     }
 
-    /// Whether host-side microbatch gradient accumulation is meaningful.
+    /// Whether microbatch gradient accumulation is meaningful.
     pub fn supports_grad_accum(self) -> bool {
         self.spec().supports_grad_accum
     }

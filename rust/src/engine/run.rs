@@ -29,8 +29,9 @@ use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::schedule::{plan, Phase};
 use crate::coordinator::trainer::{TrainReport, Trainer};
 use crate::data::dataset::encode_corpus;
-use crate::data::Batcher;
+use crate::data::{Batcher, Pipeline};
 use crate::error::{Error, Result};
+use crate::runtime::accum::GradAccumulator;
 use crate::runtime::stepper::Stepper;
 
 /// One observable unit of training progress.
@@ -78,7 +79,11 @@ pub struct Run<'t, 'd> {
     stepper: Option<Stepper>,
     /// The LM pre-pass model (parameter source for the first phase).
     pre: Option<Stepper>,
-    batcher: Option<Batcher>,
+    /// Prefetching training-batch source (background assembly thread).
+    pipeline: Option<Pipeline>,
+    /// Literal-resident gradient accumulator, created per phase when
+    /// `grad_accum > 1` and the method/artifacts support it.
+    accum: Option<GradAccumulator>,
     eval_batcher: Option<Batcher>,
     queue: VecDeque<StepEvent>,
     last_eval: Option<f32>,
@@ -101,7 +106,8 @@ impl<'t, 'd> Run<'t, 'd> {
             phase_open: false,
             stepper: None,
             pre,
-            batcher: None,
+            pipeline: None,
+            accum: None,
             eval_batcher: None,
             queue: VecDeque::new(),
             last_eval: None,
@@ -211,8 +217,17 @@ impl<'t, 'd> Run<'t, 'd> {
         if train_samples.is_empty() {
             return Err(Error::Config(format!("no training samples fit seq_len {s}")));
         }
-        self.batcher = Some(Batcher::new(train_samples, b, s, self.trainer.cfg.seed));
+        // training batches are assembled on a background thread so the
+        // gather/copy overlaps device execution; validation stays a
+        // plain synchronous batcher (it streams lazily)
+        self.pipeline =
+            Some(Pipeline::spawn(Batcher::new(train_samples, b, s, self.trainer.cfg.seed)));
         self.eval_batcher = Some(Batcher::new(eval_samples, b, s, self.trainer.cfg.seed));
+        let cfg = &self.trainer.cfg;
+        self.accum = (cfg.grad_accum > 1
+            && cfg.method.supports_grad_accum()
+            && stepper.supports_accumulation())
+        .then(|| GradAccumulator::for_stepper(&stepper));
         self.stepper = Some(stepper);
         self.phase_open = true;
         self.step_in_phase = 0;
@@ -229,61 +244,54 @@ impl<'t, 'd> Run<'t, 'd> {
     }
 
     /// One logged optimizer step: `grad_accum` microbatches, either as
-    /// true host-side accumulation (grad-only passes summed, one update
-    /// on the mean gradient) or as sequential fused steps. The recorded
-    /// `grad_norm` is the mean-gradient norm in both paths.
+    /// literal-resident accumulation (grad-only passes summed on device
+    /// through [`GradAccumulator`], one update on the mean gradient) or
+    /// as sequential fused steps. The recorded `grad_norm` is the
+    /// mean-gradient norm in both paths, and `device_time_s` counts the
+    /// same thing in both — PJRT execute seconds — so the paths report
+    /// comparable per-sample throughput.
     fn train_one(&mut self, phase: &Phase) -> Result<()> {
         let step = self.step_in_phase;
         let ga = self.trainer.cfg.grad_accum;
         let eval_every = self.trainer.cfg.eval_every;
-        let method_accum = self.trainer.cfg.method.supports_grad_accum();
         let lr = lr_at(&self.trainer.cfg.schedule, phase.peak_lr, step, phase.steps);
 
         let stepper = self.stepper.as_mut().expect("phase open");
-        let batcher = self.batcher.as_mut().expect("phase open");
+        let pipeline = self.pipeline.as_mut().expect("phase open");
         let (b, _s) = stepper.batch_shape();
-        let accumulate = ga > 1 && method_accum && stepper.supports_accumulation();
 
         let mut loss_acc = 0.0f32;
         let mut aux_acc = 0.0f32;
+        let mut device_s = 0.0f64;
         let grad_norm;
         let t0 = Instant::now();
-        if accumulate {
-            let mut grads: Option<Vec<Vec<f32>>> = None;
+        if let Some(accum) = self.accum.as_mut() {
             for _ in 0..ga {
-                let batch = batcher.next_batch();
-                let (g, loss, aux) = stepper.grad_step(&batch)?;
-                loss_acc += loss;
-                aux_acc += aux;
-                match grads.as_mut() {
-                    None => grads = Some(g),
-                    Some(acc) => {
-                        for (a, gi) in acc.iter_mut().zip(&g) {
-                            for (x, y) in a.iter_mut().zip(gi) {
-                                *x += *y;
-                            }
-                        }
-                    }
-                }
+                let batch = pipeline.next_batch()?;
+                let out = stepper.grad_step_literals(&batch)?;
+                pipeline.recycle(batch);
+                loss_acc += out.loss;
+                aux_acc += out.aux;
+                device_s += out.exec_time_s;
+                accum.add(out.grads)?;
             }
-            let mut grads = grads.expect("grad_accum >= 1");
-            let scale = 1.0 / ga as f32;
-            for g in grads.iter_mut() {
-                for x in g.iter_mut() {
-                    *x *= scale;
-                }
-            }
+            let mean = accum.finish()?;
+            device_s += accum.take_exec_time_s(); // accum_step + scale executes
             // the update consumes the already-averaged gradient, so its
             // post-clip norm IS the mean-gradient norm — no rescaling
-            grad_norm = stepper.apply_accumulated(&grads, lr)?;
+            let (gn, apply_s) = stepper.apply_accumulated(&mean, lr)?;
+            grad_norm = gn;
+            device_s += apply_s;
         } else {
             let mut gn_acc = 0.0f32;
             for _ in 0..ga {
-                let batch = batcher.next_batch();
+                let batch = pipeline.next_batch()?;
                 let stats = stepper.train_step(&batch, lr)?;
+                pipeline.recycle(batch);
                 loss_acc += stats.loss;
                 gn_acc += stats.grad_norm;
                 aux_acc += stats.router_aux;
+                device_s += stats.step_time_s;
             }
             grad_norm = gn_acc / ga as f32;
         }
@@ -298,6 +306,7 @@ impl<'t, 'd> Run<'t, 'd> {
             grad_norm,
             router_aux: aux_acc / gaf,
             step_time_s: time_acc,
+            device_time_s: device_s,
             samples_per_s: samples / time_acc.max(1e-9),
         };
         self.trainer.metrics.record_step(rec.clone());

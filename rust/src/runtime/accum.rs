@@ -1,0 +1,225 @@
+//! `GradAccumulator` — device-resident microbatch gradient accumulation.
+//!
+//! The pre-overhaul accumulate loop downloaded every trainable gradient
+//! to host `Vec<f32>`s each microbatch, summed them with scalar loops,
+//! and re-uploaded fresh literals for the update — exactly the
+//! full-gradient materialization the paper (and LOMO) identify as the
+//! dominant cost of full fine-tuning. This accumulator keeps the running
+//! sum as XLA `Literal`s end-to-end:
+//!
+//! * **Compiled path** (artifact set ships `accum_step` + `scale`): the
+//!   first microbatch's gradients are adopted as the running sum with
+//!   zero work; each later microbatch runs the compiled
+//!   `accum_step(acc…, g…) -> acc+g`; [`GradAccumulator::finish`] runs
+//!   `scale(acc…, 1/n) -> mean` (skipped when `n == 1`). The coordinator
+//!   never materializes a gradient as `Vec<f32>` and never touches an
+//!   element — summation and averaging are XLA programs. (Caveat shared
+//!   with every program in the stepper: `Program::run` is
+//!   literal-in/literal-out, so each execute still stages its inputs and
+//!   outputs through PJRT host buffers; keeping `PjRtBuffer`s device-side
+//!   across calls is the recorded next step — see ROADMAP.)
+//! * **Host fallback** (older artifact sets): each microbatch's
+//!   gradients are downloaded once and summed in place into scratch
+//!   buffers that are allocated on the first step of a phase and reused
+//!   for the rest of it; the mean is uploaded once per optimizer step.
+//!
+//! The accumulator is created once per phase (see
+//! [`crate::engine::Run`]) and recycled across optimizer steps, so the
+//! steady-state loop performs zero per-step heap churn on either path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::error::{Error, Result};
+use crate::runtime::literal::{elem_count, f32_literal, scalar_f32, to_f32_vec};
+use crate::runtime::pjrt::Program;
+use crate::runtime::stepper::Stepper;
+
+/// Running mean over microbatch gradients (trainable tensors, manifest
+/// `trainable_paths` order).
+pub struct GradAccumulator {
+    accum_prog: Option<Arc<Program>>,
+    scale_prog: Option<Arc<Program>>,
+    /// Trainable tensor shapes — sizes the fallback buffers and the
+    /// final upload.
+    shapes: Vec<Vec<usize>>,
+    /// Device path: the literal-resident running sum.
+    device: Option<Vec<Literal>>,
+    /// Fallback path: reusable host sum buffers (allocated lazily once).
+    host: Vec<Vec<f32>>,
+    host_live: bool,
+    /// Microbatches folded into the current sum.
+    count: u32,
+    /// PJRT execute seconds spent in accum_step/scale since the last
+    /// [`GradAccumulator::take_exec_time_s`] (0 on the host fallback).
+    exec_s: f64,
+}
+
+impl GradAccumulator {
+    /// Accumulator for `stepper`'s trainable set, using its compiled
+    /// accumulation pair when present.
+    pub fn for_stepper(stepper: &Stepper) -> Self {
+        Self::new(
+            stepper.accum_program(),
+            stepper.scale_program(),
+            stepper.trainable_shapes(),
+        )
+    }
+
+    /// Explicit constructor (tests force the fallback by passing `None`).
+    pub fn new(
+        accum_prog: Option<Arc<Program>>,
+        scale_prog: Option<Arc<Program>>,
+        shapes: Vec<Vec<usize>>,
+    ) -> Self {
+        GradAccumulator {
+            accum_prog,
+            scale_prog,
+            shapes,
+            device: None,
+            host: Vec::new(),
+            host_live: false,
+            count: 0,
+            exec_s: 0.0,
+        }
+    }
+
+    /// Drain the PJRT execute seconds spent inside `add`/`finish` since
+    /// the last call — the trainer folds this into the step's
+    /// `device_time_s` so accumulate and fused paths stay comparable.
+    pub fn take_exec_time_s(&mut self) -> f64 {
+        std::mem::take(&mut self.exec_s)
+    }
+
+    /// Whether gradients stay `Literal`s end-to-end (both programs
+    /// present); false means the host fallback is in use.
+    pub fn is_device_resident(&self) -> bool {
+        self.accum_prog.is_some() && self.scale_prog.is_some()
+    }
+
+    /// Microbatches folded into the current sum.
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+
+    /// Fold one microbatch's gradients (from
+    /// [`Stepper::grad_step_literals`]) into the running sum.
+    pub fn add(&mut self, grads: Vec<Literal>) -> Result<()> {
+        if grads.len() != self.shapes.len() {
+            return Err(Error::Layout(format!(
+                "accumulate: {} grads for {} trainable tensors",
+                grads.len(),
+                self.shapes.len()
+            )));
+        }
+        self.count += 1;
+        if self.is_device_resident() {
+            self.add_device(grads)
+        } else {
+            self.add_host(&grads)
+        }
+    }
+
+    fn add_device(&mut self, grads: Vec<Literal>) -> Result<()> {
+        match self.device.take() {
+            // first microbatch: adopt the gradients as the sum — no copy
+            None => {
+                self.device = Some(grads);
+                Ok(())
+            }
+            Some(acc) => {
+                let prog = self.accum_prog.as_ref().expect("device path");
+                let mut inputs: Vec<&Literal> = Vec::with_capacity(2 * acc.len());
+                inputs.extend(acc.iter());
+                inputs.extend(grads.iter());
+                let t0 = Instant::now();
+                let out = prog.run(&inputs)?;
+                self.exec_s += t0.elapsed().as_secs_f64();
+                if out.len() != self.shapes.len() {
+                    return Err(Error::Layout(format!(
+                        "accum_step returned {} outputs, want {}",
+                        out.len(),
+                        self.shapes.len()
+                    )));
+                }
+                self.device = Some(out);
+                Ok(())
+            }
+        }
+    }
+
+    fn add_host(&mut self, grads: &[Literal]) -> Result<()> {
+        if self.host.is_empty() {
+            // one-time allocation, reused for the rest of the phase
+            self.host = self.shapes.iter().map(|s| vec![0f32; elem_count(s)]).collect();
+        }
+        for (acc, lit) in self.host.iter_mut().zip(grads) {
+            let g = to_f32_vec(lit)?;
+            if g.len() != acc.len() {
+                return Err(Error::Layout(format!(
+                    "accumulate: gradient has {} elems, want {}",
+                    g.len(),
+                    acc.len()
+                )));
+            }
+            if self.host_live {
+                for (a, x) in acc.iter_mut().zip(&g) {
+                    *a += *x;
+                }
+            } else {
+                acc.copy_from_slice(&g);
+            }
+        }
+        self.host_live = true;
+        Ok(())
+    }
+
+    /// Average the accumulated sum and reset for the next optimizer
+    /// step. Returns the mean-gradient literals ready for
+    /// [`Stepper::apply_accumulated`].
+    pub fn finish(&mut self) -> Result<Vec<Literal>> {
+        if self.count == 0 {
+            return Err(Error::Training("finish() before any add()".into()));
+        }
+        let n = std::mem::take(&mut self.count);
+        if self.is_device_resident() {
+            let acc = self.device.take().ok_or_else(|| {
+                Error::Training("accumulator lost its device state".into())
+            })?;
+            if n == 1 {
+                return Ok(acc); // mean of one = the sum itself
+            }
+            let prog = self.scale_prog.as_ref().expect("device path");
+            let s = scalar_f32(1.0 / n as f32);
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(acc.len() + 1);
+            inputs.extend(acc.iter());
+            inputs.push(&s);
+            let t0 = Instant::now();
+            let out = prog.run(&inputs)?;
+            self.exec_s += t0.elapsed().as_secs_f64();
+            if out.len() != self.shapes.len() {
+                return Err(Error::Layout(format!(
+                    "scale returned {} outputs, want {}",
+                    out.len(),
+                    self.shapes.len()
+                )));
+            }
+            Ok(out)
+        } else {
+            let scale = 1.0 / n as f32;
+            let mut out = Vec::with_capacity(self.host.len());
+            for (acc, shape) in self.host.iter_mut().zip(&self.shapes) {
+                if n > 1 {
+                    for a in acc.iter_mut() {
+                        *a *= scale;
+                    }
+                }
+                out.push(f32_literal(acc, shape)?);
+            }
+            self.host_live = false; // buffers stay allocated for reuse
+            Ok(out)
+        }
+    }
+}

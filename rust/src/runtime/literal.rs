@@ -89,21 +89,39 @@ pub fn literal_from_bytes(bytes: &[u8], shape: &[usize], dtype: &str) -> Result<
     match dtype {
         "f32" => {
             let mut v = vec![0f32; bytes.len() / 4];
-            bytemuck_cast_f32(bytes, &mut v)?;
+            cast_f32_le(bytes, &mut v)?;
             f32_literal(&v, shape)
         }
         other => Err(Error::Parse(format!("unsupported blob dtype {other:?}"))),
     }
 }
 
-fn bytemuck_cast_f32(bytes: &[u8], out: &mut [f32]) -> Result<()> {
+/// Little-endian bytes → f32 (blob decode and checkpoint load both
+/// stream through here). The zipped iterators replace the old
+/// per-element indexed loop: `iter_mut().zip(chunks_exact(4))` carries
+/// no bounds checks, which is what lets the loop vectorize.
+pub fn cast_f32_le(bytes: &[u8], out: &mut [f32]) -> Result<()> {
     if bytes.len() != out.len() * 4 {
-        return Err(Error::Layout("byte length not a multiple of 4".into()));
+        return Err(Error::Layout(format!(
+            "cast_f32_le: {} bytes for {} floats",
+            bytes.len(),
+            out.len()
+        )));
     }
-    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-        out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    for (dst, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
     }
     Ok(())
+}
+
+/// f32 slice → little-endian bytes, appended to a reusable buffer
+/// (checkpoint writes clear + refill one buffer per tensor instead of
+/// issuing one 4-byte write per element).
+pub fn extend_f32_le(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
 }
 
 /// Ensure a literal has the expected element type `T`.
@@ -152,6 +170,31 @@ mod tests {
         let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
         let lit = literal_from_bytes(&bytes, &[3], "f32").unwrap();
         assert_eq!(to_f32_vec(&lit).unwrap(), vals);
+    }
+
+    #[test]
+    fn cast_f32_le_roundtrips_large_series() {
+        let vals: Vec<f32> = (0..4133).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes = Vec::new();
+        extend_f32_le(&vals, &mut bytes);
+        assert_eq!(bytes.len(), vals.len() * 4);
+        let mut back = vec![0f32; vals.len()];
+        cast_f32_le(&bytes, &mut back).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn cast_f32_le_rejects_length_mismatch() {
+        let mut out = vec![0f32; 2];
+        assert!(cast_f32_le(&[0u8; 7], &mut out).is_err());
+    }
+
+    #[test]
+    fn extend_f32_le_appends() {
+        let mut buf = vec![0xAAu8];
+        extend_f32_le(&[1.0], &mut buf);
+        assert_eq!(buf.len(), 5);
+        assert_eq!(buf[0], 0xAA);
     }
 
     #[test]

@@ -12,13 +12,15 @@
 //! `Stepper` step functions during training. Reach for this module when
 //! building new execution paths (servers, custom probes).
 
+pub mod accum;
 pub mod artifact;
 pub mod literal;
 pub mod pjrt;
 pub mod stepper;
 pub mod store;
 
+pub use accum::GradAccumulator;
 pub use artifact::{Artifact, ArtifactIndex, Manifest, TensorSpec};
 pub use pjrt::{Device, Program, ProgramCache};
-pub use stepper::{Batch, StepStats, Stepper};
+pub use stepper::{Batch, GradOut, StepStats, Stepper};
 pub use store::{OptState, ParamStore};

@@ -1,10 +1,10 @@
 //! `Stepper` — one variant's executable step functions bound to live state.
 //!
 //! Owns the compiled `train_step` / `grad_step` / `apply_step` /
-//! `eval_step` / `forward` programs plus the parameter and optimizer
-//! state, and exposes typed entry points the trainer calls every
-//! iteration. All buffer ordering logic (the flat manifest layout) is
-//! concentrated here.
+//! `accum_step` / `scale` / `eval_step` / `forward` programs plus the
+//! parameter and optimizer state, and exposes typed entry points the
+//! trainer calls every iteration. All buffer ordering logic (the flat
+//! manifest layout) is concentrated here.
 //!
 //! ## State representation (hot-path design)
 //!
@@ -59,6 +59,18 @@ pub struct StepStats {
     pub step_time_s: f64,
 }
 
+/// One gradient-only microbatch pass. Gradients stay device-resident
+/// (`Literal`s in manifest `trainable_paths` order) — feed them to
+/// [`crate::runtime::accum::GradAccumulator`] and
+/// [`Stepper::apply_accumulated`] without ever touching host memory.
+pub struct GradOut {
+    pub grads: Vec<Literal>,
+    pub loss: f32,
+    pub aux: f32,
+    /// Wall-clock of the PJRT execute call.
+    pub exec_time_s: f64,
+}
+
 pub struct Stepper {
     pub artifact: Artifact,
     /// Host mirror (lazily synchronized; see `materialize_params`).
@@ -71,6 +83,11 @@ pub struct Stepper {
     train: Arc<Program>,
     grad: Option<Arc<Program>>,
     apply: Option<Arc<Program>>,
+    /// Accumulation pair: running-sum and mean-scale programs over the
+    /// trainable gradients (optional — older artifact sets lack them and
+    /// fall back to host summation in `GradAccumulator`).
+    accum: Option<Arc<Program>>,
+    scale: Option<Arc<Program>>,
     eval: Arc<Program>,
     forward: Arc<Program>,
     /// 1-based optimizer step (Adam bias correction).
@@ -83,19 +100,20 @@ impl Stepper {
         let train = cache.get_or_load(device, artifact.hlo_path("train_step")?)?;
         let eval = cache.get_or_load(device, artifact.hlo_path("eval_step")?)?;
         let forward = cache.get_or_load(device, artifact.hlo_path("forward")?)?;
-        // grad/apply pair is optional (older artifact sets)
-        let grad = artifact
-            .hlo_path("grad_step")
-            .ok()
-            .filter(|p| p.exists())
-            .map(|p| cache.get_or_load(device, p))
-            .transpose()?;
-        let apply = artifact
-            .hlo_path("apply_step")
-            .ok()
-            .filter(|p| p.exists())
-            .map(|p| cache.get_or_load(device, p))
-            .transpose()?;
+        // grad/apply pair and the accumulation pair are optional
+        // (older artifact sets)
+        let optional = |kind: &str| -> Result<Option<Arc<Program>>> {
+            artifact
+                .hlo_path(kind)
+                .ok()
+                .filter(|p| p.exists())
+                .map(|p| cache.get_or_load(device, p))
+                .transpose()
+        };
+        let grad = optional("grad_step")?;
+        let apply = optional("apply_step")?;
+        let accum = optional("accum_step")?;
+        let scale = optional("scale")?;
         let params = ParamStore::from_blobs(&artifact)?;
         let opt = OptState::zeros(&artifact.manifest.io.opt_shapes);
         let param_lits = params.to_literals()?;
@@ -110,6 +128,8 @@ impl Stepper {
             train,
             grad,
             apply,
+            accum,
+            scale,
             eval,
             forward,
             step: 0,
@@ -239,9 +259,11 @@ impl Stepper {
         Ok(StepStats { loss, grad_norm, router_aux, step_time_s })
     }
 
-    /// Gradient-only microbatch pass: returns host gradients for the
-    /// trainable tensors (manifest `trainable_paths` order) + (loss, aux).
-    pub fn grad_step(&self, batch: &Batch) -> Result<(Vec<Vec<f32>>, f32, f32)> {
+    /// Gradient-only microbatch pass, gradients left device-resident:
+    /// the trainable-tensor `Literal`s (manifest `trainable_paths` order)
+    /// come back untouched, only the loss/aux scalars are read to host.
+    /// This is the steady-state accumulate hot path.
+    pub fn grad_step_literals(&self, batch: &Batch) -> Result<GradOut> {
         let prog = self.grad.as_ref().ok_or_else(|| {
             Error::Config("artifact set lacks grad_step (re-run make artifacts)".into())
         })?;
@@ -251,7 +273,9 @@ impl Stepper {
         inputs.push(&tok);
         inputs.push(&tgt);
         inputs.push(&msk);
+        let t0 = Instant::now();
         let outputs = prog.run(&inputs)?;
+        let exec_time_s = t0.elapsed().as_secs_f64();
         let n_t = self.artifact.trainable_indices().len();
         if outputs.len() != n_t + 2 {
             return Err(Error::Layout(format!(
@@ -260,47 +284,52 @@ impl Stepper {
                 n_t + 2
             )));
         }
-        let loss = scalar_to_f32(&outputs[n_t])?;
-        let aux = scalar_to_f32(&outputs[n_t + 1])?;
-        let grads = outputs[..n_t]
-            .iter()
-            .map(to_f32_vec)
-            .collect::<Result<Vec<_>>>()?;
-        Ok((grads, loss, aux))
+        let mut grads = outputs;
+        let tail = grads.split_off(n_t);
+        let loss = scalar_to_f32(&tail[0])?;
+        let aux = scalar_to_f32(&tail[1])?;
+        Ok(GradOut { grads, loss, aux, exec_time_s })
     }
 
-    /// Apply an accumulated (already averaged) gradient; returns the
-    /// post-clip gradient norm. Increments the optimizer step.
-    pub fn apply_accumulated(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<f32> {
+    /// Host-materialized variant of [`Stepper::grad_step_literals`]
+    /// (inspection, tests, the legacy host-summing bench baseline).
+    pub fn grad_step(&self, batch: &Batch) -> Result<(Vec<Vec<f32>>, f32, f32)> {
+        let out = self.grad_step_literals(batch)?;
+        let grads = out.grads.iter().map(to_f32_vec).collect::<Result<Vec<_>>>()?;
+        Ok((grads, out.loss, out.aux))
+    }
+
+    /// Apply an accumulated (already averaged) gradient held as device
+    /// literals — e.g. straight out of
+    /// [`crate::runtime::accum::GradAccumulator::finish`]. Returns the
+    /// post-clip gradient norm and the execute wall-clock. Increments the
+    /// optimizer step.
+    pub fn apply_accumulated(&mut self, grads: &[Literal], lr: f32) -> Result<(f32, f64)> {
         let prog = self.apply.as_ref().ok_or_else(|| {
             Error::Config("artifact set lacks apply_step (re-run make artifacts)".into())
         })?;
-        self.step += 1;
         let io = &self.artifact.manifest.io;
-        let t_idx = self.artifact.trainable_indices();
-        if grads.len() != t_idx.len() {
+        let n_t = self.artifact.trainable_indices().len();
+        if grads.len() != n_t {
             return Err(Error::Layout(format!(
-                "apply: {} grads for {} trainable tensors",
-                grads.len(),
-                t_idx.len()
+                "apply: {} grads for {n_t} trainable tensors",
+                grads.len()
             )));
         }
-        let grad_lits = t_idx
-            .iter()
-            .zip(grads)
-            .map(|(&i, g)| f32_literal(g, &self.artifact.manifest.tensors[i].shape))
-            .collect::<Result<Vec<_>>>()?;
+        self.step += 1;
         let lr_lit = scalar_f32(lr);
         let step_lit = scalar_f32(self.step as f32);
         let mut inputs: Vec<&Literal> =
-            Vec::with_capacity(io.n_params + 2 * io.n_opt + grad_lits.len() + 2);
+            Vec::with_capacity(io.n_params + 2 * io.n_opt + grads.len() + 2);
         inputs.extend(self.param_lits.iter());
         inputs.extend(self.m_lits.iter());
         inputs.extend(self.v_lits.iter());
-        inputs.extend(grad_lits.iter());
+        inputs.extend(grads.iter());
         inputs.push(&lr_lit);
         inputs.push(&step_lit);
+        let t0 = Instant::now();
         let outputs = prog.run(&inputs)?;
+        let exec_time_s = t0.elapsed().as_secs_f64();
         let np = io.n_params;
         let no = io.n_opt;
         if outputs.len() != np + 2 * no + 1 {
@@ -318,7 +347,28 @@ impl Stepper {
         self.m_lits = m_new;
         self.v_lits = v_new;
         self.host_dirty = true;
-        scalar_to_f32(&tail[0])
+        Ok((scalar_to_f32(&tail[0])?, exec_time_s))
+    }
+
+    /// Host-slice variant of [`Stepper::apply_accumulated`] (checkpoint
+    /// surgery, the legacy bench baseline): stages the gradients as fresh
+    /// literals, then delegates.
+    pub fn apply_accumulated_host(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<f32> {
+        let t_idx = self.artifact.trainable_indices();
+        if grads.len() != t_idx.len() {
+            return Err(Error::Layout(format!(
+                "apply: {} grads for {} trainable tensors",
+                grads.len(),
+                t_idx.len()
+            )));
+        }
+        let grad_lits = t_idx
+            .iter()
+            .zip(grads)
+            .map(|(&i, g)| f32_literal(g, &self.artifact.manifest.tensors[i].shape))
+            .collect::<Result<Vec<_>>>()?;
+        let (norm, _t) = self.apply_accumulated(&grad_lits, lr)?;
+        Ok(norm)
     }
 
     /// Loss-only validation pass (no state mutation).
@@ -364,5 +414,33 @@ impl Stepper {
     /// Has microbatch accumulation support (grad/apply artifacts)?
     pub fn supports_accumulation(&self) -> bool {
         self.grad.is_some() && self.apply.is_some()
+    }
+
+    /// Has the compiled accumulation pair (accum_step/scale artifacts),
+    /// i.e. can gradients stay device-resident across microbatches?
+    pub fn supports_device_accum(&self) -> bool {
+        self.accum.is_some() && self.scale.is_some()
+    }
+
+    /// Compiled running-sum program over the trainable gradients, if the
+    /// artifact set ships one.
+    pub fn accum_program(&self) -> Option<Arc<Program>> {
+        self.accum.clone()
+    }
+
+    /// Compiled mean-scale program over the trainable gradients, if the
+    /// artifact set ships one.
+    pub fn scale_program(&self) -> Option<Arc<Program>> {
+        self.scale.clone()
+    }
+
+    /// Shapes of the trainable tensors (manifest `trainable_paths`
+    /// order) — sizes the accumulator's host-fallback buffers.
+    pub fn trainable_shapes(&self) -> Vec<Vec<usize>> {
+        self.artifact
+            .trainable_indices()
+            .iter()
+            .map(|&i| self.artifact.manifest.tensors[i].shape.clone())
+            .collect()
     }
 }

@@ -53,19 +53,17 @@ impl ParamStore {
                 )));
             }
             let raw = &bytes[spec.offset..end];
-            let mut vals = vec![0f32; raw.len() / 4];
-            for (i, c) in raw.chunks_exact(4).enumerate() {
-                vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-            }
-            if vals.len() != spec.elem_count() {
+            if raw.len() / 4 != spec.elem_count() {
                 return Err(Error::Layout(format!(
                     "tensor {}: blob has {} elems, shape {:?} wants {}",
                     spec.name,
-                    vals.len(),
+                    raw.len() / 4,
                     spec.shape,
                     spec.elem_count()
                 )));
             }
+            let mut vals = vec![0f32; spec.elem_count()];
+            literal::cast_f32_le(raw, &mut vals)?;
             host.push(vals);
         }
         Self::from_host(artifact.manifest.tensors.clone(), host)
@@ -133,6 +131,12 @@ impl ParamStore {
     }
 
     /// Replace host state from step-function outputs (manifest order).
+    ///
+    /// Cold path by design: the stepper only calls this from
+    /// `materialize_params` (checkpointing, handoff, inspection), never
+    /// per step. Element counts are validated cheaply against the literal
+    /// metadata *before* any download, and each downloaded vector is moved
+    /// into place — no second element-wise copy.
     pub fn update_from_literals(&mut self, lits: &[Literal]) -> Result<()> {
         if lits.len() != self.specs.len() {
             return Err(Error::Layout(format!(
@@ -142,16 +146,17 @@ impl ParamStore {
             )));
         }
         for (i, lit) in lits.iter().enumerate() {
-            let v = literal::to_f32_vec(lit)?;
-            if v.len() != self.host[i].len() {
+            if lit.element_count() != self.host[i].len() {
                 return Err(Error::Layout(format!(
                     "update: tensor {} got {} elems, want {}",
                     self.specs[i].name,
-                    v.len(),
+                    lit.element_count(),
                     self.host[i].len()
                 )));
             }
-            self.host[i] = v;
+        }
+        for (dst, lit) in self.host.iter_mut().zip(lits) {
+            *dst = literal::to_f32_vec(lit)?;
         }
         Ok(())
     }
@@ -173,23 +178,25 @@ impl ParamStore {
         Ok(())
     }
 
-    /// L2 norm over all parameters (divergence tripwire).
+    /// L2 norm over all parameters (divergence tripwire). One pass:
+    /// per-tensor partial sums-of-squares, combined once — no flattened
+    /// re-iteration over the full element stream.
     pub fn global_norm(&self) -> f64 {
         self.host
             .iter()
-            .flat_map(|t| t.iter())
-            .map(|&x| (x as f64) * (x as f64))
+            .map(|t| t.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
             .sum::<f64>()
             .sqrt()
     }
 
-    /// Serialize to the `.rvt` checkpoint payload (name-tagged tensors).
-    pub fn snapshot(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+    /// Borrowed view of every tensor for the `.rvt` checkpoint writer
+    /// (name-tagged). No tensor data is cloned — the writer streams
+    /// straight out of the store.
+    pub fn snapshot(&self) -> impl Iterator<Item = (&str, &[usize], &[f32])> {
         self.specs
             .iter()
             .zip(&self.host)
-            .map(|(s, h)| (s.name.clone(), s.shape.clone(), h.clone()))
-            .collect()
+            .map(|(s, h)| (s.name.as_str(), s.shape.as_slice(), h.as_slice()))
     }
 }
 
@@ -239,5 +246,64 @@ impl OptState {
         (self.m.iter().map(|t| t.len()).sum::<usize>()
             + self.v.iter().map(|t| t.len()).sum::<usize>()) as u64
             * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        TensorSpec {
+            name: name.into(),
+            shape,
+            dtype: "f32".into(),
+            blob: "x".into(),
+            offset: 0,
+            nbytes: n * 4,
+        }
+    }
+
+    #[test]
+    fn global_norm_matches_hand_computed() {
+        // sum of squares = 4*1 + 9 + 16 = 29  (tensors [1,1,1,1], [3], [4])
+        let specs = vec![spec("a", vec![2, 2]), spec("b", vec![1]), spec("c", vec![1])];
+        let host = vec![vec![1.0; 4], vec![3.0], vec![4.0]];
+        let store = ParamStore::from_host(specs, host).unwrap();
+        let want = 29f64.sqrt();
+        assert!((store.global_norm() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_norm_empty_store_is_zero() {
+        let store = ParamStore::from_host(vec![], vec![]).unwrap();
+        assert_eq!(store.global_norm(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_borrows_every_tensor_in_order() {
+        let specs = vec![spec("a", vec![2]), spec("b", vec![3])];
+        let host = vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]];
+        let store = ParamStore::from_host(specs, host).unwrap();
+        let snap: Vec<_> = store.snapshot().collect();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[0].1, &[2]);
+        assert_eq!(snap[1].2, &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn update_from_literals_validates_before_download() {
+        let specs = vec![spec("a", vec![2])];
+        let host = vec![vec![0.0, 0.0]];
+        let mut store = ParamStore::from_host(specs, host).unwrap();
+        let wrong = literal::f32_literal(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        assert!(store.update_from_literals(&[wrong]).is_err());
+        // original state untouched by the failed update
+        assert_eq!(store.tensor("a").unwrap(), &[0.0, 0.0]);
+        let right = literal::f32_literal(&[7.0, 8.0], &[2]).unwrap();
+        store.update_from_literals(&[right]).unwrap();
+        assert_eq!(store.tensor("a").unwrap(), &[7.0, 8.0]);
     }
 }

@@ -11,7 +11,9 @@ use std::time::Instant;
 pub struct Timing {
     pub iters: usize,
     pub mean_s: f64,
+    /// p50.
     pub median_s: f64,
+    pub p95_s: f64,
     pub stddev_s: f64,
     pub min_s: f64,
     pub max_s: f64,
@@ -20,8 +22,9 @@ pub struct Timing {
 impl Timing {
     pub fn fmt_ms(&self) -> String {
         format!(
-            "median {:.2} ms  mean {:.2} ms ± {:.2}  (n={}, min {:.2}, max {:.2})",
+            "median {:.2} ms  p95 {:.2} ms  mean {:.2} ms ± {:.2}  (n={}, min {:.2}, max {:.2})",
             self.median_s * 1e3,
+            self.p95_s * 1e3,
             self.mean_s * 1e3,
             self.stddev_s * 1e3,
             self.iters,
@@ -52,10 +55,12 @@ pub fn summarize(times: &[f64]) -> Timing {
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = sorted.iter().sum::<f64>() / n as f64;
     let var = sorted.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    let pick = |q: usize| sorted.get(n * q / 100).or(sorted.last()).copied().unwrap_or(0.0);
     Timing {
         iters: n,
         mean_s: mean,
-        median_s: sorted[n / 2],
+        median_s: pick(50),
+        p95_s: pick(95),
         stddev_s: var.sqrt(),
         min_s: sorted.first().copied().unwrap_or(0.0),
         max_s: sorted.last().copied().unwrap_or(0.0),
@@ -89,6 +94,22 @@ mod tests {
         assert_eq!(t.min_s, 0.1);
         assert_eq!(t.max_s, 0.3);
         assert_eq!(t.median_s, 0.2);
+        assert_eq!(t.p95_s, 0.3); // 3*95/100 = index 2
+    }
+
+    #[test]
+    fn summarize_percentiles_large_series() {
+        let times: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let t = summarize(&times);
+        assert_eq!(t.median_s, 51.0); // index 50 of sorted 1..=100
+        assert_eq!(t.p95_s, 96.0); // index 95
+    }
+
+    #[test]
+    fn summarize_empty_is_safe() {
+        let t = summarize(&[]);
+        assert_eq!(t.median_s, 0.0);
+        assert_eq!(t.p95_s, 0.0);
     }
 
     #[test]
