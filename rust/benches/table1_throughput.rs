@@ -3,15 +3,24 @@
 //! batch shape, reported as samples/s plus the normalized ratio vs
 //! SFT+Checkpointing (the shape the paper's column implies).
 //!
-//! For every method that supports microbatch accumulation the bench also
-//! times a `grad_accum=2` optimizer step on both implementations of the
-//! accumulate path — `accum_device` (literal-resident, this PR) and
-//! `accum_host` (the pre-PR host-summing baseline, kept as
-//! `grad_step`/`apply_accumulated_host`) — so the before/after step-time
-//! delta is tracked on the same config from here on.
+//! Paths timed per method:
+//!
+//! * `fused` — one literal-path `train_step` per optimizer step.
+//! * `fused_buffers` — same step on the device-resident buffer path
+//!   (params + moments pinned as `PjRtBuffer`s; only batch up, scalars
+//!   down). The row records measured host transfers per step.
+//! * `accum_device` / `accum_host` (methods that support accumulation,
+//!   `grad_accum=2`) — the literal-resident accumulate loop vs the
+//!   legacy host-summing baseline (kept as
+//!   `grad_step`/`apply_accumulated_host`) so the step-time delta is
+//!   tracked on the same config from here on.
+//! * `accum_buffers` — the fully buffer-resident accumulate loop
+//!   (`grad_step_buffers` → `add_buffers`/`finish_buffers` →
+//!   `apply_accumulated_buffers`).
 //!
 //! Results go to stdout AND to `BENCH_throughput.json` (machine-readable:
-//! samples/s, tokens/s, step-time p50/p95 per method and path).
+//! samples/s, tokens/s, step-time p50/p95, host transfers per method and
+//! path).
 //!
 //!     cargo bench --bench table1_throughput
 
@@ -39,6 +48,7 @@ fn row_json(
     samples_per_step: usize,
     t: &Timing,
     device_resident: Option<bool>,
+    transfers_per_step: Option<(f64, f64)>,
 ) -> Json {
     let sps = samples_per_step as f64 / t.median_s.max(1e-12);
     let mut o = ObjBuilder::new()
@@ -53,6 +63,9 @@ fn row_json(
         .num("iters", t.iters as f64);
     if let Some(d) = device_resident {
         o = o.bool("device_resident", d);
+    }
+    if let Some((up, down)) = transfers_per_step {
+        o = o.num("uploads_per_step", up).num("downloads_per_step", down);
     }
     o.build()
 }
@@ -87,6 +100,7 @@ fn main() -> anyhow::Result<()> {
 
         // -- fused path: one train_step per optimizer step ----------------
         let mut times = Vec::new();
+        let t_start = device.transfer_stats();
         for i in 0..WARMUP + ITERS {
             let batch = batcher.next_batch();
             let stats = stepper
@@ -96,11 +110,65 @@ fn main() -> anyhow::Result<()> {
                 times.push(stats.step_time_s);
             }
         }
+        let n_steps = (WARMUP + ITERS) as f64;
+        let moved = device.transfer_stats().since(&t_start);
         let t = bench::summarize(&times);
         let sps = b as f64 / t.median_s;
         results.push((method, sps));
-        rows.push(row_json(method, "fused", b, s, b, &t, None));
+        rows.push(row_json(
+            method,
+            "fused",
+            b,
+            s,
+            b,
+            &t,
+            None,
+            Some((moved.uploads as f64 / n_steps, moved.downloads as f64 / n_steps)),
+        ));
         bench::row(method.label(), format!("{sps:>8.2} samples/s   ({})", t.fmt_ms()));
+
+        // -- fused path, buffer-resident state (this PR) -------------------
+        if stepper.enable_device_state().is_ok() {
+            let mut times = Vec::new();
+            let t_start = device.transfer_stats();
+            for i in 0..WARMUP + ITERS {
+                let batch = batcher.next_batch();
+                let stats = stepper
+                    .train_step(&batch, 1e-4)
+                    .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+                if i >= WARMUP {
+                    times.push(stats.step_time_s);
+                }
+            }
+            let moved = device.transfer_stats().since(&t_start);
+            // false here means the runtime could not untuple buffer
+            // outputs and the stepper fell back mid-bench
+            let resident = stepper.is_device_resident();
+            let tb = bench::summarize(&times);
+            let up = moved.uploads as f64 / n_steps;
+            let down = moved.downloads as f64 / n_steps;
+            rows.push(row_json(
+                method,
+                "fused_buffers",
+                b,
+                s,
+                b,
+                &tb,
+                Some(resident),
+                Some((up, down)),
+            ));
+            bench::row(
+                &format!("{} [fused buffers]", method.label()),
+                format!(
+                    "{:>8.2} samples/s   ({})  {up:.1} up / {down:.1} down per step",
+                    b as f64 / tb.median_s,
+                    tb.fmt_ms()
+                ),
+            );
+            stepper
+                .disable_device_state()
+                .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+        }
 
         if !(method.supports_grad_accum() && stepper.supports_accumulation()) {
             continue;
@@ -143,11 +211,88 @@ fn main() -> anyhow::Result<()> {
             n_samples,
             &td,
             Some(accum.is_device_resident()),
+            None,
         ));
         bench::row(
             &format!("{} [accum x{GRAD_ACCUM} device]", method.label()),
             format!("{:>8.2} samples/s   ({})", n_samples as f64 / td.median_s, td.fmt_ms()),
         );
+
+        // -- accumulate path, fully buffer-resident (this PR) --------------
+        if stepper.supports_device_accum() && stepper.enable_device_state().is_ok() {
+            let run_buffers = |stepper: &mut Stepper,
+                               batcher: &mut Batcher|
+             -> anyhow::Result<f64> {
+                let mut accum = GradAccumulator::for_stepper(stepper);
+                let t0 = std::time::Instant::now();
+                for _ in 0..GRAD_ACCUM {
+                    let batch = batcher.next_batch();
+                    let out = stepper
+                        .grad_step_buffers(&batch)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    accum.add_buffers(out.grads).map_err(|e| anyhow::anyhow!("{e}"))?;
+                }
+                let mean = accum.finish_buffers().map_err(|e| anyhow::anyhow!("{e}"))?;
+                stepper
+                    .apply_accumulated_buffers(&mean, 1e-4)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                Ok(t0.elapsed().as_secs_f64())
+            };
+            let mut times = Vec::new();
+            let t_start = device.transfer_stats();
+            let mut failed = None;
+            for i in 0..WARMUP + ITERS {
+                match run_buffers(&mut stepper, &mut batcher) {
+                    Ok(dt) if i >= WARMUP => times.push(dt),
+                    Ok(_) => {}
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            match failed {
+                Some(e) => {
+                    // buffer path unsupported on this runtime — recover the
+                    // literal state if it is still current, else surface
+                    println!("{variant:<16} accum_buffers SKIPPED ({e})");
+                    if stepper.can_abandon_buffers() {
+                        stepper.abandon_buffers().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    } else {
+                        stepper
+                            .disable_device_state()
+                            .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+                    }
+                }
+                None => {
+                    let moved = device.transfer_stats().since(&t_start);
+                    let up = moved.uploads as f64 / n_steps;
+                    let down = moved.downloads as f64 / n_steps;
+                    let tbuf = bench::summarize(&times);
+                    rows.push(row_json(
+                        method,
+                        "accum_buffers",
+                        b,
+                        s,
+                        n_samples,
+                        &tbuf,
+                        Some(true),
+                        Some((up, down)),
+                    ));
+                    bench::row(
+                        &format!("{} [accum x{GRAD_ACCUM} buffers]", method.label()),
+                        format!(
+                            "{:>8.2} samples/s   ({})  {up:.1} up / {down:.1} down per step",
+                            n_samples as f64 / tbuf.median_s,
+                            tbuf.fmt_ms()
+                        ),
+                    );
+                    stepper
+                        .disable_device_state()
+                        .map_err(|e| anyhow::anyhow!("{variant}: {e}"))?;
+                }
+            }
+        }
 
         // -- accumulate path, pre-PR host-summing baseline ----------------
         let mut times = Vec::new();
@@ -185,7 +330,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let th = bench::summarize(&times);
-        rows.push(row_json(method, "accum_host", b, s, n_samples, &th, None));
+        rows.push(row_json(method, "accum_host", b, s, n_samples, &th, None, None));
         bench::row(
             &format!("{} [accum x{GRAD_ACCUM} host]", method.label()),
             format!(

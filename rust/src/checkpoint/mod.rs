@@ -19,6 +19,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::runtime::literal::{cast_f32_le, extend_f32_le};
+use crate::runtime::stepper::Stepper;
 use crate::runtime::store::ParamStore;
 
 const MAGIC: &[u8; 4] = b"RVT1";
@@ -49,6 +50,17 @@ pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()
         f.write_all(&buf)?;
     }
     Ok(())
+}
+
+/// Snapshot a live stepper to `path`, materializing its host mirror
+/// first. On the device-resident path this is where the lazy download
+/// chain fires — `DeviceState::to_literals()` → `ParamStore` — so a
+/// checkpoint is the one deliberate full-state host transfer of a
+/// buffer-resident run.
+pub fn save_stepper(path: impl AsRef<Path>, stepper: &mut Stepper) -> Result<()> {
+    let step = stepper.step;
+    let params = stepper.materialize_params()?;
+    save(path, params, step)
 }
 
 /// A loaded checkpoint: (step, name → (shape, data)).

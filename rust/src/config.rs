@@ -123,6 +123,11 @@ pub struct RunConfig {
     pub data: DataConfig,
     /// Gradient-accumulation microbatches per logged step.
     pub grad_accum: usize,
+    /// Keep params + optimizer moments pinned as device buffers across
+    /// steps (`PjRtBuffer` path). Default on; the engine falls back to
+    /// the literal path automatically when the artifact set or runtime
+    /// cannot support it (see `docs/PERF.md`).
+    pub device_resident: bool,
     /// Validation cadence in optimizer steps (0 = only at stage ends).
     pub eval_every: u64,
     /// Max eval batches per validation pass (0 = score every batch).
@@ -141,6 +146,7 @@ impl RunConfig {
             schedule: ScheduleConfig::default(),
             data: DataConfig::default(),
             grad_accum: 1,
+            device_resident: true,
             eval_every: 50,
             eval_batches: 8,
             out_dir: PathBuf::from("runs/latest"),
@@ -166,6 +172,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("grad_accum").and_then(Json::as_usize) {
             cfg.grad_accum = v;
+        }
+        if let Some(v) = j.get("device_resident").and_then(Json::as_bool) {
+            cfg.device_resident = v;
         }
         if let Some(v) = j.get("eval_every").and_then(Json::as_u64) {
             cfg.eval_every = v;
@@ -235,6 +244,7 @@ impl RunConfig {
             .str("artifacts", self.artifacts.display().to_string())
             .str("method", self.method.name())
             .num("grad_accum", self.grad_accum as f64)
+            .bool("device_resident", self.device_resident)
             .num("eval_every", self.eval_every as f64)
             .num("eval_batches", self.eval_batches as f64)
             .str("out_dir", self.out_dir.display().to_string())
@@ -331,12 +341,20 @@ mod tests {
         c.schedule.stage2_steps = 99;
         c.data.pretrain_steps = 7;
         c.eval_batches = 3;
+        c.device_resident = false;
         let text = c.to_json().to_string();
         let c2 = RunConfig::from_json_str(&text).unwrap();
         assert_eq!(c2.method, Method::Galore);
         assert_eq!(c2.schedule.stage2_steps, 99);
         assert_eq!(c2.data.pretrain_steps, 7);
         assert_eq!(c2.eval_batches, 3);
+        assert!(!c2.device_resident);
+    }
+
+    #[test]
+    fn device_resident_defaults_on() {
+        let c = RunConfig::from_json_str("{}").unwrap();
+        assert!(c.device_resident);
     }
 
     #[test]

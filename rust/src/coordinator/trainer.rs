@@ -18,7 +18,7 @@ use crate::coordinator::schedule::plan;
 use crate::data::dataset::encode_lm_text;
 use crate::data::synthetic::Corpus;
 use crate::data::tokenizer::Tokenizer;
-use crate::data::Batcher;
+use crate::data::{Batcher, Pipeline};
 use crate::engine::run::{Run, StepEvent};
 use crate::engine::session::corpus_and_tokenizer;
 use crate::engine::Method;
@@ -89,16 +89,29 @@ impl<'d> Trainer<'d> {
         }
         let artifact = Artifact::load(&sft_dir)?;
         let mut stepper = Stepper::new(self.device, &self.cache, artifact)?;
+        if self.cfg.device_resident {
+            if let Err(e) = stepper.enable_device_state() {
+                eprintln!("[device] pre-pass buffer path unavailable ({e}); using literals");
+            }
+        }
         let (b, s) = stepper.batch_shape();
         let samples = encode_lm_text(&self.tokenizer, &self.corpus.pretrain_text(), s);
-        let mut batcher = Batcher::new(samples, b, s, self.cfg.seed ^ 0xface);
+        // the pre-pass streams through the same prefetch pipeline as
+        // training phases, so its batch assembly overlaps execution too
+        let mut pipeline = Pipeline::spawn(Batcher::new(samples, b, s, self.cfg.seed ^ 0xface));
         for step in 0..self.cfg.data.pretrain_steps {
-            let batch = batcher.next_batch();
+            let batch = pipeline.next_batch()?;
             let stats = stepper.train_step(&batch, self.cfg.data.pretrain_lr)?;
+            pipeline.recycle(batch);
             if step % 20 == 0 {
                 eprintln!("[pretrain] step {step} loss {:.4}", stats.loss);
             }
         }
+        // the pre-pass stepper only serves as a parameter source from
+        // here on (open_phase adoption); release its pinned device
+        // buffers now instead of holding a full extra state copy
+        // device-side for the rest of the run
+        stepper.disable_device_state()?;
         Ok(Some(stepper))
     }
 

@@ -1,7 +1,10 @@
-//! Double-buffered batch prefetch: a background thread assembles batches
+//! Prefetching batch pipeline: a background thread assembles batches
 //! from a [`Batcher`] while the device executes the current one, so
 //! tokenized-sample gather/copy overlaps PJRT execution instead of
-//! sitting on the critical path of every optimizer step.
+//! sitting on the critical path of every optimizer step. The queue
+//! depth defaults to double buffering and scales with `grad_accum`
+//! ([`Pipeline::depth_for`]) so an accumulation burst never drains the
+//! queue dry mid-step.
 //!
 //! Determinism is preserved by construction — the producer thread owns
 //! the `Batcher` and calls [`Batcher::fill_next`] in program order, so
@@ -21,10 +24,14 @@ use crate::data::batcher::Batcher;
 use crate::error::{Error, Result};
 use crate::runtime::stepper::Batch;
 
-/// How many assembled batches may sit ahead of the consumer. 2 =
-/// classic double buffering: one being refilled while one waits and one
-/// executes.
+/// Default prefetch depth. 2 = classic double buffering: one being
+/// refilled while one waits and one executes.
 const DEPTH: usize = 2;
+
+/// Deepest queue [`Pipeline::depth_for`] will pick — a full
+/// accumulation burst is bounded so recycled-buffer memory stays flat
+/// even for large `grad_accum`.
+const MAX_DEPTH: usize = 8;
 
 /// A prefetching wrapper around an epoch-shuffling [`Batcher`].
 pub struct Pipeline {
@@ -34,10 +41,24 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Prefetch depth for a `grad_accum` configuration: an optimizer
+    /// step drains `grad_accum` batches back to back, so keep one
+    /// burst plus a spare ready (floor: double buffering; cap:
+    /// [`MAX_DEPTH`]).
+    pub fn depth_for(grad_accum: usize) -> usize {
+        (grad_accum + 1).clamp(DEPTH, MAX_DEPTH)
+    }
+
     /// Move `batcher` to a background producer thread and start
-    /// prefetching immediately.
-    pub fn spawn(mut batcher: Batcher) -> Self {
-        let (tx, rx): (SyncSender<Batch>, Receiver<Batch>) = sync_channel(DEPTH);
+    /// prefetching immediately (double-buffered).
+    pub fn spawn(batcher: Batcher) -> Self {
+        Self::spawn_with_depth(batcher, DEPTH)
+    }
+
+    /// [`Pipeline::spawn`] with an explicit prefetch depth (how many
+    /// assembled batches may sit ahead of the consumer; min 1).
+    pub fn spawn_with_depth(mut batcher: Batcher, depth: usize) -> Self {
+        let (tx, rx): (SyncSender<Batch>, Receiver<Batch>) = sync_channel(depth.max(1));
         let (recycle_tx, recycle_rx): (Sender<Batch>, Receiver<Batch>) =
             std::sync::mpsc::channel();
         let producer = std::thread::Builder::new()
@@ -129,5 +150,26 @@ mod tests {
     fn drop_shuts_producer_down() {
         let pipe = Pipeline::spawn(Batcher::new(samples(8, 4), 2, 4, 0));
         drop(pipe); // must not hang even with batches in flight
+    }
+
+    #[test]
+    fn depth_for_scales_with_grad_accum_within_bounds() {
+        assert_eq!(Pipeline::depth_for(1), 2); // never below double buffering
+        assert_eq!(Pipeline::depth_for(2), 3);
+        assert_eq!(Pipeline::depth_for(4), 5);
+        assert_eq!(Pipeline::depth_for(64), 8); // capped
+    }
+
+    #[test]
+    fn deeper_pipeline_preserves_batcher_sequence() {
+        let mut sync = Batcher::new(samples(32, 8), 4, 8, 42);
+        let mut pipe = Pipeline::spawn_with_depth(Batcher::new(samples(32, 8), 4, 8, 42), 6);
+        for _ in 0..24 {
+            let got = pipe.next_batch().unwrap();
+            let want = sync.next_batch();
+            assert_eq!(got.tokens, want.tokens);
+            assert_eq!(got.targets, want.targets);
+            pipe.recycle(got);
+        }
     }
 }

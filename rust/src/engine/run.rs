@@ -32,7 +32,7 @@ use crate::data::dataset::encode_corpus;
 use crate::data::{Batcher, Pipeline};
 use crate::error::{Error, Result};
 use crate::runtime::accum::GradAccumulator;
-use crate::runtime::stepper::Stepper;
+use crate::runtime::stepper::{Batch, Stepper};
 
 /// One observable unit of training progress.
 #[derive(Debug, Clone)]
@@ -81,8 +81,10 @@ pub struct Run<'t, 'd> {
     pre: Option<Stepper>,
     /// Prefetching training-batch source (background assembly thread).
     pipeline: Option<Pipeline>,
-    /// Literal-resident gradient accumulator, created per phase when
-    /// `grad_accum > 1` and the method/artifacts support it.
+    /// Device-resident gradient accumulator (buffer path when the
+    /// stepper runs on pinned `PjRtBuffer`s, literal path otherwise),
+    /// created per phase when `grad_accum > 1` and the
+    /// method/artifacts support it.
     accum: Option<GradAccumulator>,
     eval_batcher: Option<Batcher>,
     queue: VecDeque<StepEvent>,
@@ -155,6 +157,11 @@ impl<'t, 'd> Run<'t, 'd> {
             .ok_or_else(|| Error::Config("run finished without executing a phase".into()))?;
         let trainer = self.trainer;
         stepper.materialize_params()?;
+        // training is over: release the pinned device buffers instead
+        // of handing back a stepper that holds a full extra copy of
+        // params + moments device-side (post-run eval/generate are
+        // cold paths and run fine on the literal state)
+        stepper.disable_device_state()?;
         let (first, last) = trainer.metrics.loss_delta().unwrap_or((0.0, 0.0));
         let report = TrainReport {
             method: trainer.cfg.method,
@@ -170,11 +177,7 @@ impl<'t, 'd> Run<'t, 'd> {
             .metrics
             .write_jsonl(trainer.cfg.out_dir.join("metrics.jsonl"))?;
         if trainer.cfg.save_checkpoint {
-            checkpoint::save(
-                &trainer.cfg.out_dir.join("final.rvt"),
-                &stepper.params,
-                stepper.step,
-            )?;
+            checkpoint::save_stepper(trainer.cfg.out_dir.join("final.rvt"), &mut stepper)?;
         }
         trainer.stepper = Some(stepper);
         Ok(report)
@@ -206,6 +209,10 @@ impl<'t, 'd> Run<'t, 'd> {
         if let Some(prev) = self.stepper.as_mut() {
             let params = prev.materialize_params()?;
             stepper.adopt_params(params)?;
+            // release the finished phase's pinned buffers BEFORE the
+            // new phase pins its own — never hold two full device
+            // states across a stage boundary
+            prev.disable_device_state()?;
         } else if let Some(pre) = self.pre.as_mut() {
             let params = pre.materialize_params()?;
             let copied = stepper.adopt_params(params)?;
@@ -217,17 +224,32 @@ impl<'t, 'd> Run<'t, 'd> {
         if train_samples.is_empty() {
             return Err(Error::Config(format!("no training samples fit seq_len {s}")));
         }
+        let grad_accum = self.trainer.cfg.grad_accum;
+        let seed = self.trainer.cfg.seed;
+        let device_resident = self.trainer.cfg.device_resident;
+        let supports_ga = self.trainer.cfg.method.supports_grad_accum();
         // training batches are assembled on a background thread so the
-        // gather/copy overlaps device execution; validation stays a
-        // plain synchronous batcher (it streams lazily)
-        self.pipeline =
-            Some(Pipeline::spawn(Batcher::new(train_samples, b, s, self.trainer.cfg.seed)));
-        self.eval_batcher = Some(Batcher::new(eval_samples, b, s, self.trainer.cfg.seed));
-        let cfg = &self.trainer.cfg;
-        self.accum = (cfg.grad_accum > 1
-            && cfg.method.supports_grad_accum()
-            && stepper.supports_accumulation())
-        .then(|| GradAccumulator::for_stepper(&stepper));
+        // gather/copy overlaps device execution; the prefetch depth
+        // scales with grad_accum (an optimizer step drains that many
+        // batches back to back). Validation stays a plain synchronous
+        // batcher (it streams lazily).
+        self.pipeline = Some(Pipeline::spawn_with_depth(
+            Batcher::new(train_samples, b, s, seed),
+            Pipeline::depth_for(grad_accum),
+        ));
+        self.eval_batcher = Some(Batcher::new(eval_samples, b, s, seed));
+        let use_accum = grad_accum > 1 && supports_ga && stepper.supports_accumulation();
+        self.accum = use_accum.then(|| GradAccumulator::for_stepper(&stepper));
+        // Device-resident execution (cfg.device_resident, default on):
+        // pin params + moments as PjRtBuffers for the phase. Skipped —
+        // automatic fallback to the literal path — when the accumulate
+        // path lacks the compiled accum_step/scale pair, or if the
+        // upload itself fails.
+        if device_resident && (!use_accum || stepper.supports_device_accum()) {
+            if let Err(e) = stepper.enable_device_state() {
+                eprintln!("[device] buffer path unavailable ({e}); using literal path");
+            }
+        }
         self.stepper = Some(stepper);
         self.phase_open = true;
         self.step_in_phase = 0;
@@ -244,12 +266,12 @@ impl<'t, 'd> Run<'t, 'd> {
     }
 
     /// One logged optimizer step: `grad_accum` microbatches, either as
-    /// literal-resident accumulation (grad-only passes summed on device
-    /// through [`GradAccumulator`], one update on the mean gradient) or
-    /// as sequential fused steps. The recorded `grad_norm` is the
-    /// mean-gradient norm in both paths, and `device_time_s` counts the
-    /// same thing in both — PJRT execute seconds — so the paths report
-    /// comparable per-sample throughput.
+    /// device-resident accumulation (grad-only passes summed through
+    /// [`GradAccumulator`] — as pinned buffers or staged literals — one
+    /// update on the mean gradient) or as sequential fused steps. The
+    /// recorded `grad_norm` is the mean-gradient norm in both paths,
+    /// and `device_time_s` counts the same thing in both — PJRT execute
+    /// seconds — so the paths report comparable per-sample throughput.
     fn train_one(&mut self, phase: &Phase) -> Result<()> {
         let step = self.step_in_phase;
         let ga = self.trainer.cfg.grad_accum;
@@ -266,22 +288,48 @@ impl<'t, 'd> Run<'t, 'd> {
         let grad_norm;
         let t0 = Instant::now();
         if let Some(accum) = self.accum.as_mut() {
-            for _ in 0..ga {
-                let batch = pipeline.next_batch()?;
-                let out = stepper.grad_step_literals(&batch)?;
-                pipeline.recycle(batch);
-                loss_acc += out.loss;
-                aux_acc += out.aux;
-                device_s += out.exec_time_s;
-                accum.add(out.grads)?;
-            }
-            let mean = accum.finish()?;
-            device_s += accum.take_exec_time_s(); // accum_step + scale executes
-            // the update consumes the already-averaged gradient, so its
-            // post-clip norm IS the mean-gradient norm — no rescaling
-            let (gn, apply_s) = stepper.apply_accumulated(&mean, lr)?;
+            let use_buffers = stepper.is_device_resident() && accum.supports_buffers();
+            let outcome = if use_buffers && !stepper.buffers_verified() {
+                // first buffer-path step of this stepper: fetch the
+                // burst up front so a fallback redo trains on the SAME
+                // data — the delivered sequence stays identical to a
+                // pure literal run
+                let mut batches = Vec::with_capacity(ga);
+                for _ in 0..ga {
+                    batches.push(pipeline.next_batch()?);
+                }
+                let r = match Self::accum_step_slice(stepper, &batches, accum, lr, true) {
+                    // the buffer path proved unsupported before any
+                    // state mutation — the literal state is still
+                    // current, so drop the buffers and redo the step
+                    Err(e @ (Error::Layout(_) | Error::Xla(_)))
+                        if stepper.can_abandon_buffers() =>
+                    {
+                        eprintln!(
+                            "[device] buffer accumulate unavailable ({e}); \
+                             falling back to literal path"
+                        );
+                        stepper.abandon_buffers()?;
+                        *accum = GradAccumulator::for_stepper(stepper);
+                        Self::accum_step_slice(stepper, &batches, accum, lr, false)
+                    }
+                    other => other,
+                };
+                for batch in batches {
+                    pipeline.recycle(batch);
+                }
+                r
+            } else {
+                // steady state (buffer path verified, or literal path):
+                // stream batches one at a time so assembly overlaps
+                // execution regardless of grad_accum vs queue depth
+                Self::accum_step_streaming(stepper, pipeline, accum, ga, lr, use_buffers)
+            };
+            let (l, a, d, gn) = outcome?;
+            loss_acc = l;
+            aux_acc = a;
+            device_s = d;
             grad_norm = gn;
-            device_s += apply_s;
         } else {
             let mut gn_acc = 0.0f32;
             for _ in 0..ga {
@@ -316,6 +364,102 @@ impl<'t, 'd> Run<'t, 'd> {
             self.validate_now()?;
         }
         Ok(())
+    }
+
+    /// One gradient microbatch folded into the accumulator, on either
+    /// path. Returns `(loss, aux, exec_s)`.
+    fn accum_microbatch(
+        stepper: &Stepper,
+        accum: &mut GradAccumulator,
+        batch: &Batch,
+        use_buffers: bool,
+    ) -> Result<(f32, f32, f64)> {
+        if use_buffers {
+            let out = stepper.grad_step_buffers(batch)?;
+            accum.add_buffers(out.grads)?;
+            Ok((out.loss, out.aux, out.exec_time_s))
+        } else {
+            let out = stepper.grad_step_literals(batch)?;
+            accum.add(out.grads)?;
+            Ok((out.loss, out.aux, out.exec_time_s))
+        }
+    }
+
+    /// Finish the accumulator and apply the mean gradient, on either
+    /// path. The update consumes the already-averaged gradient, so its
+    /// post-clip norm IS the mean-gradient norm — no rescaling.
+    /// Returns `(grad_norm, exec_s)` with the accum/scale execute
+    /// seconds folded in.
+    fn accum_apply(
+        stepper: &mut Stepper,
+        accum: &mut GradAccumulator,
+        lr: f32,
+        use_buffers: bool,
+    ) -> Result<(f32, f64)> {
+        if use_buffers {
+            let mean = accum.finish_buffers()?;
+            let accum_s = accum.take_exec_time_s();
+            let (grad_norm, apply_s) = stepper.apply_accumulated_buffers(&mean, lr)?;
+            Ok((grad_norm, accum_s + apply_s))
+        } else {
+            let mean = accum.finish()?;
+            let accum_s = accum.take_exec_time_s();
+            let (grad_norm, apply_s) = stepper.apply_accumulated(&mean, lr)?;
+            Ok((grad_norm, accum_s + apply_s))
+        }
+    }
+
+    /// One accumulate-path optimizer step over pre-fetched batches —
+    /// used for a stepper's first buffer step, where a fallback redo
+    /// must see the same data. Returns
+    /// `(loss_sum, aux_sum, device_exec_s, grad_norm)`.
+    fn accum_step_slice(
+        stepper: &mut Stepper,
+        batches: &[Batch],
+        accum: &mut GradAccumulator,
+        lr: f32,
+        use_buffers: bool,
+    ) -> Result<(f32, f32, f64, f32)> {
+        let mut loss_acc = 0.0f32;
+        let mut aux_acc = 0.0f32;
+        let mut device_s = 0.0f64;
+        for batch in batches {
+            let (loss, aux, t) = Self::accum_microbatch(stepper, accum, batch, use_buffers)?;
+            loss_acc += loss;
+            aux_acc += aux;
+            device_s += t;
+        }
+        let (grad_norm, apply_s) = Self::accum_apply(stepper, accum, lr, use_buffers)?;
+        device_s += apply_s;
+        Ok((loss_acc, aux_acc, device_s, grad_norm))
+    }
+
+    /// Steady-state accumulate step: batches are pulled and recycled
+    /// one at a time, so assembly overlaps execution even when
+    /// `grad_accum` exceeds the prefetch depth. Returns
+    /// `(loss_sum, aux_sum, device_exec_s, grad_norm)`.
+    fn accum_step_streaming(
+        stepper: &mut Stepper,
+        pipeline: &mut Pipeline,
+        accum: &mut GradAccumulator,
+        ga: usize,
+        lr: f32,
+        use_buffers: bool,
+    ) -> Result<(f32, f32, f64, f32)> {
+        let mut loss_acc = 0.0f32;
+        let mut aux_acc = 0.0f32;
+        let mut device_s = 0.0f64;
+        for _ in 0..ga {
+            let batch = pipeline.next_batch()?;
+            let (loss, aux, t) = Self::accum_microbatch(stepper, accum, &batch, use_buffers)?;
+            pipeline.recycle(batch);
+            loss_acc += loss;
+            aux_acc += aux;
+            device_s += t;
+        }
+        let (grad_norm, apply_s) = Self::accum_apply(stepper, accum, lr, use_buffers)?;
+        device_s += apply_s;
+        Ok((loss_acc, aux_acc, device_s, grad_norm))
     }
 
     /// End-of-phase validation, then rotate to the next phase.

@@ -38,6 +38,7 @@ COMMANDS:
   train         --artifacts DIR --method M [--stage1-steps N] [--stage2-steps N]
                 [--pretrain-steps N] [--eval-batches N] [--out-dir DIR]
                 [--config FILE.json] [--eval-suite] [--save-checkpoint]
+                [--no-device-resident]
   eval          --artifacts DIR --method M [--checkpoint FILE.rvt] [--questions N]
   plan-memory   [--seq N] [--budget-gb G] [--batch B] [--assumptions bf16_mixed|paper|f32]
   calibrate     [--artifacts DIR]
@@ -92,6 +93,9 @@ fn cmd_train(f: &Flags) -> Result<()> {
             c
         }
     };
+    if f.bool("no_device_resident") {
+        cfg.device_resident = false;
+    }
     if !cfg.method.is_two_stage() {
         cfg.schedule.stage1_steps = 0;
     }

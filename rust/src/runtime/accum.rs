@@ -7,21 +7,29 @@
 //! dominant cost of full fine-tuning. This accumulator keeps the running
 //! sum as XLA `Literal`s end-to-end:
 //!
-//! * **Compiled path** (artifact set ships `accum_step` + `scale`): the
-//!   first microbatch's gradients are adopted as the running sum with
-//!   zero work; each later microbatch runs the compiled
+//! * **Buffer path** (`accum_step` + `scale` present AND the stepper
+//!   runs device-resident): [`GradAccumulator::add_buffers`] /
+//!   [`GradAccumulator::finish_buffers`] thread `PjRtBuffer`s straight
+//!   from [`Stepper::grad_step_buffers`] through the compiled pair to
+//!   [`Stepper::apply_accumulated_buffers`]. Nothing crosses the host
+//!   boundary — not even as staged literals.
+//! * **Compiled literal path** (artifact set ships `accum_step` +
+//!   `scale`): the first microbatch's gradients are adopted as the
+//!   running sum with zero work; each later microbatch runs the compiled
 //!   `accum_step(acc…, g…) -> acc+g`; [`GradAccumulator::finish`] runs
 //!   `scale(acc…, 1/n) -> mean` (skipped when `n == 1`). The coordinator
 //!   never materializes a gradient as `Vec<f32>` and never touches an
-//!   element — summation and averaging are XLA programs. (Caveat shared
-//!   with every program in the stepper: `Program::run` is
-//!   literal-in/literal-out, so each execute still stages its inputs and
-//!   outputs through PJRT host buffers; keeping `PjRtBuffer`s device-side
-//!   across calls is the recorded next step — see ROADMAP.)
+//!   element, but each execute still stages its inputs and outputs
+//!   through PJRT host buffers (`Program::run`).
 //! * **Host fallback** (older artifact sets): each microbatch's
 //!   gradients are downloaded once and summed in place into scratch
 //!   buffers that are allocated on the first step of a phase and reused
 //!   for the rest of it; the mean is uploaded once per optimizer step.
+//!
+//! Donation note for the buffer path: `accum_step` and `scale` donate
+//! the running-sum arguments, so each fold consumes the previous sum
+//! buffers and adopts the outputs — exactly the replace-never-reuse
+//! rule the stepper follows for its own state.
 //!
 //! The accumulator is created once per phase (see
 //! [`crate::engine::Run`]) and recycled across optimizer steps, so the
@@ -30,11 +38,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use xla::Literal;
+use xla::{Literal, PjRtBuffer};
 
 use crate::error::{Error, Result};
 use crate::runtime::literal::{elem_count, f32_literal, scalar_f32, to_f32_vec};
-use crate::runtime::pjrt::Program;
+use crate::runtime::pjrt::{Device, Program};
 use crate::runtime::stepper::Stepper;
 
 /// Running mean over microbatch gradients (trainable tensors, manifest
@@ -47,6 +55,13 @@ pub struct GradAccumulator {
     shapes: Vec<Vec<usize>>,
     /// Device path: the literal-resident running sum.
     device: Option<Vec<Literal>>,
+    /// Buffer path: the buffer-resident running sum (never leaves the
+    /// device).
+    buffers: Option<Vec<PjRtBuffer>>,
+    /// Device handle for the buffer path's scale-scalar upload (set by
+    /// [`GradAccumulator::for_stepper`]; absent in fallback-forcing
+    /// tests).
+    device_handle: Option<Device>,
     /// Fallback path: reusable host sum buffers (allocated lazily once).
     host: Vec<Vec<f32>>,
     host_live: bool,
@@ -61,11 +76,13 @@ impl GradAccumulator {
     /// Accumulator for `stepper`'s trainable set, using its compiled
     /// accumulation pair when present.
     pub fn for_stepper(stepper: &Stepper) -> Self {
-        Self::new(
+        let mut acc = Self::new(
             stepper.accum_program(),
             stepper.scale_program(),
             stepper.trainable_shapes(),
-        )
+        );
+        acc.device_handle = Some(stepper.device().clone());
+        acc
     }
 
     /// Explicit constructor (tests force the fallback by passing `None`).
@@ -79,6 +96,8 @@ impl GradAccumulator {
             scale_prog,
             shapes,
             device: None,
+            buffers: None,
+            device_handle: None,
             host: Vec::new(),
             host_live: false,
             count: 0,
@@ -104,9 +123,20 @@ impl GradAccumulator {
         self.count
     }
 
+    /// Can this accumulator run the buffer path (compiled pair +
+    /// device handle present)?
+    pub fn supports_buffers(&self) -> bool {
+        self.accum_prog.is_some() && self.scale_prog.is_some() && self.device_handle.is_some()
+    }
+
     /// Fold one microbatch's gradients (from
     /// [`Stepper::grad_step_literals`]) into the running sum.
     pub fn add(&mut self, grads: Vec<Literal>) -> Result<()> {
+        if self.buffers.is_some() {
+            return Err(Error::Training(
+                "accumulator holds a buffer-path sum; do not mix add() and add_buffers()".into(),
+            ));
+        }
         if grads.len() != self.shapes.len() {
             return Err(Error::Layout(format!(
                 "accumulate: {} grads for {} trainable tensors",
@@ -120,6 +150,95 @@ impl GradAccumulator {
         } else {
             self.add_host(&grads)
         }
+    }
+
+    /// Fold one microbatch's buffer-resident gradients (from
+    /// [`Stepper::grad_step_buffers`]) into a buffer-resident running
+    /// sum. Requires the compiled accumulation pair.
+    pub fn add_buffers(&mut self, grads: Vec<PjRtBuffer>) -> Result<()> {
+        if !self.supports_buffers() {
+            return Err(Error::Config(
+                "artifact set lacks accum_step/scale; buffer-path accumulation unavailable".into(),
+            ));
+        }
+        if self.device.is_some() || self.host_live {
+            return Err(Error::Training(
+                "accumulator holds a literal-path sum; do not mix add_buffers() and add()".into(),
+            ));
+        }
+        if grads.len() != self.shapes.len() {
+            return Err(Error::Layout(format!(
+                "accumulate: {} grads for {} trainable tensors",
+                grads.len(),
+                self.shapes.len()
+            )));
+        }
+        self.count += 1;
+        match self.buffers.take() {
+            // first microbatch: adopt the gradient buffers as the sum
+            None => {
+                self.buffers = Some(grads);
+                Ok(())
+            }
+            Some(acc) => {
+                let prog = self.accum_prog.as_ref().expect("buffer path");
+                let out = {
+                    let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(2 * acc.len());
+                    inputs.extend(acc.iter());
+                    inputs.extend(grads.iter());
+                    let t0 = Instant::now();
+                    let out = prog.run_buffers(&inputs)?;
+                    self.exec_s += t0.elapsed().as_secs_f64();
+                    out
+                };
+                if out.len() != self.shapes.len() {
+                    return Err(Error::Layout(format!(
+                        "accum_step (buffers) returned {} outputs, want {}",
+                        out.len(),
+                        self.shapes.len()
+                    )));
+                }
+                self.buffers = Some(out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Average the buffer-resident sum and reset for the next optimizer
+    /// step. Returns the mean-gradient buffers ready for
+    /// [`Stepper::apply_accumulated_buffers`]. The scale scalar upload
+    /// is the only host transfer (and only when `n > 1`).
+    pub fn finish_buffers(&mut self) -> Result<Vec<PjRtBuffer>> {
+        if self.count == 0 {
+            return Err(Error::Training("finish_buffers() before any add_buffers()".into()));
+        }
+        let n = std::mem::take(&mut self.count);
+        let acc = self.buffers.take().ok_or_else(|| {
+            Error::Training("accumulator lost its buffer state".into())
+        })?;
+        if n == 1 {
+            return Ok(acc); // mean of one = the sum itself
+        }
+        let prog = self.scale_prog.as_ref().expect("buffer path");
+        let device = self.device_handle.as_ref().expect("buffer path");
+        let s = device.to_device(&scalar_f32(1.0 / n as f32))?;
+        let out = {
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(acc.len() + 1);
+            inputs.extend(acc.iter());
+            inputs.push(&s);
+            let t0 = Instant::now();
+            let out = prog.run_buffers(&inputs)?;
+            self.exec_s += t0.elapsed().as_secs_f64();
+            out
+        };
+        if out.len() != self.shapes.len() {
+            return Err(Error::Layout(format!(
+                "scale (buffers) returned {} outputs, want {}",
+                out.len(),
+                self.shapes.len()
+            )));
+        }
+        Ok(out)
     }
 
     fn add_device(&mut self, grads: Vec<Literal>) -> Result<()> {

@@ -21,6 +21,6 @@ pub mod store;
 
 pub use accum::GradAccumulator;
 pub use artifact::{Artifact, ArtifactIndex, Manifest, TensorSpec};
-pub use pjrt::{Device, Program, ProgramCache};
-pub use stepper::{Batch, GradOut, StepStats, Stepper};
-pub use store::{OptState, ParamStore};
+pub use pjrt::{Device, Program, ProgramCache, TransferSnapshot};
+pub use stepper::{Batch, GradOut, GradOutBuffers, StepStats, Stepper};
+pub use store::{DeviceState, OptState, ParamStore};

@@ -1,28 +1,104 @@
 //! PJRT execution: load HLO text, compile once, execute many.
 //!
 //! `Device` wraps the PJRT CPU client; `Program` is one compiled HLO
-//! module. The train loop holds its state as `Literal`s and calls
-//! `Program::run`, which returns the flattened output tuple. Executables
-//! are cached by file path in `ProgramCache` so repeated constructions
-//! (benches, eval passes) never recompile.
+//! module. Two execution surfaces exist:
+//!
+//! * [`Program::run`] — literal-in/literal-out. Every call stages its
+//!   inputs through host memory and downloads every output. Simple, and
+//!   the right tool for cold paths (checkpoint restore, reconstruction
+//!   probes, parameter surgery).
+//! * [`Program::run_buffers`] — buffer-in/buffer-out on `PjRtBuffer`s.
+//!   Nothing crosses the host boundary; callers keep state device-side
+//!   across calls and download only what they need (scalars, lazy
+//!   snapshots). This is the training hot path — see
+//!   [`crate::runtime::stepper::Stepper`] and `docs/PERF.md`.
+//!
+//! Executables are cached by file path in `ProgramCache` so repeated
+//! constructions (benches, eval passes) never recompile. Every `Device`
+//! carries [`TransferCounters`] — shared with the programs it loads and
+//! the buffers it uploads — so host↔device traffic is observable
+//! (`tests/hotpath.rs` pins the "no host staging on the buffer path"
+//! invariant with it).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, PrimitiveType,
+    XlaComputation,
+};
 
 use crate::error::{Error, Result};
 
+/// Host↔device transfer tally (atomic; shared across the device, its
+/// programs, and its device-resident state). Counts *transfers*, not
+/// bytes: one literal staged up or one buffer/output downloaded each
+/// tick the matching counter by one.
+#[derive(Default)]
+pub struct TransferCounters {
+    uploads: AtomicU64,
+    downloads: AtomicU64,
+}
+
+impl TransferCounters {
+    pub(crate) fn count_uploads(&self, n: u64) {
+        self.uploads.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_downloads(&self, n: u64) {
+        self.downloads.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads.load(Ordering::Relaxed),
+            downloads: self.downloads.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.uploads.store(0, Ordering::Relaxed);
+        self.downloads.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of a device's transfer counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub uploads: u64,
+    pub downloads: u64,
+}
+
+impl TransferSnapshot {
+    /// Transfers since an earlier snapshot of the same counters.
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads.saturating_sub(earlier.uploads),
+            downloads: self.downloads.saturating_sub(earlier.downloads),
+        }
+    }
+}
+
 /// PJRT device handle (CPU plugin; the xla crate also exposes gpu/tpu).
+///
+/// Cheap to clone: the client and transfer counters are shared. The
+/// `Stepper` keeps a clone so it can stage batches and scalars without
+/// threading a device reference through every call.
+#[derive(Clone)]
 pub struct Device {
-    client: PjRtClient,
+    client: Arc<PjRtClient>,
+    counters: Arc<TransferCounters>,
 }
 
 impl Device {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {
-        Ok(Device { client: PjRtClient::cpu()? })
+        Ok(Device {
+            client: Arc::new(PjRtClient::cpu()?),
+            counters: Arc::new(TransferCounters::default()),
+        })
     }
 
     pub fn platform_name(&self) -> String {
@@ -31,6 +107,34 @@ impl Device {
 
     pub fn device_count(&self) -> usize {
         self.client.device_count()
+    }
+
+    /// Stage one literal as a device buffer (counted as one upload).
+    pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.counters.count_uploads(1);
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Stage a batch of literals as device buffers.
+    pub fn to_device_many(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        lits.iter().map(|l| self.to_device(l)).collect()
+    }
+
+    /// Download one buffer back to a host literal (counted as one
+    /// download). Scalars and lazy snapshots go through here so the
+    /// transfer tally stays honest.
+    pub fn from_device(&self, buf: &PjRtBuffer) -> Result<Literal> {
+        self.counters.count_downloads(1);
+        Ok(buf.to_literal_sync()?)
+    }
+
+    /// Host↔device transfer totals since creation (or the last reset).
+    pub fn transfer_stats(&self) -> TransferSnapshot {
+        self.counters.snapshot()
+    }
+
+    pub fn reset_transfer_stats(&self) {
+        self.counters.reset()
     }
 
     /// Compile HLO text (the AOT interchange format) into a `Program`.
@@ -42,6 +146,7 @@ impl Device {
         Ok(Program {
             exe,
             source: path.to_path_buf(),
+            counters: self.counters.clone(),
         })
     }
 }
@@ -50,6 +155,7 @@ impl Device {
 pub struct Program {
     exe: PjRtLoadedExecutable,
     source: PathBuf,
+    counters: Arc<TransferCounters>,
 }
 
 impl Program {
@@ -57,21 +163,72 @@ impl Program {
         &self.source
     }
 
-    /// Execute with literal inputs; flatten the (single-tuple) output.
+    /// Execute with literal inputs; flatten the output list.
     ///
-    /// AOT lowering uses `return_tuple=True`, so PJRT hands back one tuple
-    /// buffer; we decompose it into the flat output list the manifest
-    /// describes. Accepts owned or borrowed literals — the hot path passes
-    /// `&Literal` state to avoid copies.
+    /// AOT lowering uses `return_tuple=True`, so the module root is one
+    /// tuple. Depending on the PJRT execute options the runtime hands
+    /// back either that single tuple buffer or the already-untupled
+    /// element buffers; [`flatten_output_literals`] normalizes both to
+    /// the flat output list the manifest describes. Accepts owned or
+    /// borrowed literals — cold paths pass `&Literal` state to avoid
+    /// copies.
     pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        self.counters.count_uploads(inputs.len() as u64);
         let result = self.exe.execute::<L>(inputs)?;
-        let buf = result
-            .first()
-            .and_then(|d| d.first())
+        let bufs = result
+            .into_iter()
+            .next()
             .ok_or_else(|| Error::Layout("program produced no output".into()))?;
-        let lit = buf.to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+        flatten_output_literals(bufs, &self.counters)
     }
+
+    /// Execute with device-buffer inputs; outputs stay device-side.
+    ///
+    /// No host staging happens in this call: inputs are already device
+    /// buffers and outputs are returned as buffers (the runtime untuples
+    /// the root tuple into per-output buffers). Callers validate the
+    /// output arity against the manifest — a single buffer where many
+    /// outputs were expected means the runtime did not untuple, which
+    /// the stepper treats as "buffer path unsupported" and falls back
+    /// from (see `Stepper::train_step`).
+    ///
+    /// Donation caveat: AOT state arguments are donated
+    /// (`donate_argnums` in `python/compile/aot.py`), so the input
+    /// buffers backing params/moments/accumulators are CONSUMED by a
+    /// successful execute. Never reuse them — adopt the outputs instead.
+    pub fn run_buffers<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let result = self.exe.execute_b::<B>(inputs)?;
+        let bufs = result
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Layout("program produced no output".into()))?;
+        if bufs.is_empty() {
+            return Err(Error::Layout("program produced no output".into()));
+        }
+        Ok(bufs)
+    }
+}
+
+/// Normalize an execute result to the flat literal list: either the
+/// runtime already untupled the root (one buffer per output) or it
+/// handed back a single tuple buffer to decompose.
+fn flatten_output_literals(
+    bufs: Vec<PjRtBuffer>,
+    counters: &TransferCounters,
+) -> Result<Vec<Literal>> {
+    if bufs.len() == 1 {
+        counters.count_downloads(1);
+        let lit = bufs[0].to_literal_sync()?;
+        if lit.primitive_type()? == PrimitiveType::Tuple {
+            return Ok(lit.to_tuple()?);
+        }
+        return Ok(vec![lit]);
+    }
+    counters.count_downloads(bufs.len() as u64);
+    bufs.iter().map(|b| Ok(b.to_literal_sync()?)).collect()
 }
 
 /// Path-keyed executable cache (compile once per process).
@@ -105,5 +262,30 @@ impl ProgramCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_counters_tally_and_reset() {
+        let c = TransferCounters::default();
+        c.count_uploads(3);
+        c.count_downloads(2);
+        c.count_uploads(1);
+        assert_eq!(c.snapshot(), TransferSnapshot { uploads: 4, downloads: 2 });
+        c.reset();
+        assert_eq!(c.snapshot(), TransferSnapshot { uploads: 0, downloads: 0 });
+    }
+
+    #[test]
+    fn snapshot_since_subtracts_saturating() {
+        let a = TransferSnapshot { uploads: 10, downloads: 4 };
+        let b = TransferSnapshot { uploads: 12, downloads: 9 };
+        assert_eq!(b.since(&a), TransferSnapshot { uploads: 2, downloads: 5 });
+        // a reset between snapshots must not underflow
+        assert_eq!(a.since(&b), TransferSnapshot { uploads: 0, downloads: 0 });
     }
 }

@@ -8,23 +8,43 @@
 //!
 //! ## State representation (hot-path design)
 //!
-//! Step outputs are XLA `Literal`s; the stepper keeps them AS literals
-//! and feeds them back by reference on the next call (`execute` takes
-//! `Borrow<Literal>`), so the steady-state loop performs **zero**
-//! host-side parameter copies. The `ParamStore` host mirror is
-//! materialized lazily — only for checkpointing, cross-stage adoption,
-//! or inspection (see EXPERIMENTS.md §Perf for the before/after).
+//! The stepper holds its state at up to three freshness levels, synced
+//! lazily downward:
+//!
+//! 1. **Device buffers** (`DeviceState`, optional) — params + Adam
+//!    moments pinned as `PjRtBuffer`s, threaded through
+//!    `Program::run_buffers`. Enabled via
+//!    [`Stepper::enable_device_state`]; while active, a training step
+//!    moves NOTHING across the host boundary except the batch upload
+//!    and the loss/grad-norm/aux scalar downloads.
+//! 2. **Literals** (`param_lits`/`m_lits`/`v_lits`) — the literal-path
+//!    state, fed by reference to `Program::run`. Stale while
+//!    `lits_dirty` (i.e. the device buffers are ahead); synchronized by
+//!    one bulk download when a literal-path consumer needs them.
+//! 3. **Host mirror** (`ParamStore`) — `Vec<f32>` tensors for
+//!    checkpointing, handoff, and inspection. Stale while `host_dirty`;
+//!    synchronized by [`Stepper::materialize_params`].
+//!
+//! Invariant: `lits_dirty` implies a device state exists and has been
+//! verified (`buffers_verified`), because only successful buffer-path
+//! state mutations set it. Literal-path reads are therefore always
+//! current when the buffer path is off or unverified.
+//!
+//! If the runtime cannot run the buffer path (output arity mismatch —
+//! see `Program::run_buffers`), the first buffer-path step fails while
+//! the literal state is still current, and the stepper falls back to
+//! the literal path automatically and permanently for its lifetime.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use xla::Literal;
+use xla::{Literal, PjRtBuffer};
 
 use crate::error::{Error, Result};
 use crate::runtime::artifact::Artifact;
 use crate::runtime::literal::{f32_literal, i32_literal, scalar_f32, scalar_to_f32, to_f32_vec};
 use crate::runtime::pjrt::{Device, Program, ProgramCache};
-use crate::runtime::store::{OptState, ParamStore};
+use crate::runtime::store::{DeviceState, OptState, ParamStore};
 
 /// One training/eval batch, already tokenized and masked.
 #[derive(Debug, Clone)]
@@ -71,12 +91,34 @@ pub struct GradOut {
     pub exec_time_s: f64,
 }
 
+/// Buffer-path twin of [`GradOut`]: the gradients never left the device
+/// — feed them to [`crate::runtime::accum::GradAccumulator::add_buffers`]
+/// and [`Stepper::apply_accumulated_buffers`].
+pub struct GradOutBuffers {
+    pub grads: Vec<PjRtBuffer>,
+    pub loss: f32,
+    pub aux: f32,
+    /// Wall-clock of the PJRT execute call.
+    pub exec_time_s: f64,
+}
+
 pub struct Stepper {
     pub artifact: Artifact,
     /// Host mirror (lazily synchronized; see `materialize_params`).
     pub params: ParamStore,
     host_dirty: bool,
-    /// Device-facing state: literals fed by reference every step.
+    /// Device handle (cheap clone of the creator's) for staging batches
+    /// and scalars on the buffer path.
+    device: Device,
+    /// Buffer-resident state, when enabled (authoritative while
+    /// `lits_dirty`).
+    device_state: Option<DeviceState>,
+    /// Literals are stale relative to the device buffers.
+    lits_dirty: bool,
+    /// The buffer path completed a state-mutating step at least once,
+    /// so its output convention is known-good on this runtime.
+    buffers_verified: bool,
+    /// Literal-facing state: fed by reference on the literal path.
     param_lits: Vec<Literal>,
     m_lits: Vec<Literal>,
     v_lits: Vec<Literal>,
@@ -122,6 +164,10 @@ impl Stepper {
             artifact,
             params,
             host_dirty: false,
+            device: device.clone(),
+            device_state: None,
+            lits_dirty: false,
+            buffers_verified: false,
             param_lits,
             m_lits,
             v_lits,
@@ -136,17 +182,99 @@ impl Stepper {
         })
     }
 
+    /// Pin params + moments as persistent device buffers and route
+    /// subsequent steps through `Program::run_buffers`. Idempotent.
+    pub fn enable_device_state(&mut self) -> Result<()> {
+        if self.device_state.is_some() {
+            return Ok(());
+        }
+        // literal state is current here: lits_dirty is only ever set
+        // while a device state exists
+        let ds =
+            DeviceState::upload(&self.device, &self.param_lits, &self.m_lits, &self.v_lits)?;
+        self.device_state = Some(ds);
+        self.buffers_verified = false;
+        Ok(())
+    }
+
+    /// Leave the buffer path: sync the literal state from the buffers,
+    /// then drop them. Idempotent.
+    pub fn disable_device_state(&mut self) -> Result<()> {
+        self.sync_literals()?;
+        self.device_state = None;
+        Ok(())
+    }
+
+    /// Is the buffer-resident path active?
+    pub fn is_device_resident(&self) -> bool {
+        self.device_state.is_some()
+    }
+
+    /// True when the device buffers can be dropped without losing state
+    /// (the literal state is still current — e.g. no buffer-path step
+    /// has succeeded yet). The engine uses this to fall back mid-phase.
+    pub fn can_abandon_buffers(&self) -> bool {
+        self.device_state.is_some() && !self.lits_dirty
+    }
+
+    /// Has a buffer-path state mutation succeeded on this stepper (so
+    /// the runtime's buffer output convention is known-good and no
+    /// fallback redo can happen anymore)?
+    pub fn buffers_verified(&self) -> bool {
+        self.buffers_verified
+    }
+
+    /// Drop the device buffers WITHOUT downloading them. Only legal
+    /// while [`Stepper::can_abandon_buffers`]; errors otherwise.
+    pub fn abandon_buffers(&mut self) -> Result<()> {
+        if self.device_state.is_none() {
+            return Ok(());
+        }
+        if self.lits_dirty {
+            return Err(Error::Training(
+                "cannot abandon device buffers: they hold the only current state".into(),
+            ));
+        }
+        self.device_state = None;
+        Ok(())
+    }
+
     /// Re-initialize the optimizer moments (stage switches reset Adam).
     pub fn reset_opt(&mut self) -> Result<()> {
         let opt = OptState::zeros(&self.artifact.manifest.io.opt_shapes);
         let (m, v) = opt.to_literals()?;
+        if let Some(ds) = self.device_state.as_mut() {
+            ds.reset_opt(&m, &v)?;
+        }
         self.m_lits = m;
         self.v_lits = v;
         Ok(())
     }
 
-    /// Sync the host mirror from the literal state (no-op when clean).
+    /// Sync the literal state from the device buffers (no-op when the
+    /// buffer path is off or not ahead). One bulk download.
+    fn sync_literals(&mut self) -> Result<()> {
+        if !self.lits_dirty {
+            return Ok(());
+        }
+        let ds = self
+            .device_state
+            .as_ref()
+            .ok_or_else(|| Error::Training("literal state lost its device source".into()))?;
+        let (p, m, v) = ds.to_literals()?;
+        self.param_lits = p;
+        self.m_lits = m;
+        self.v_lits = v;
+        self.lits_dirty = false;
+        self.host_dirty = true;
+        Ok(())
+    }
+
+    /// Sync the host mirror from the live state (no-op when clean).
+    /// On the buffer path this is where the lazy snapshot download
+    /// happens: device buffers → literals → host vectors.
     pub fn materialize_params(&mut self) -> Result<&ParamStore> {
+        self.sync_literals()?;
         if self.host_dirty {
             self.params.update_from_literals(&self.param_lits)?;
             self.host_dirty = false;
@@ -154,10 +282,17 @@ impl Stepper {
         Ok(&self.params)
     }
 
-    /// Rebuild the literal state after mutating the host mirror.
+    /// Rebuild the literal (and, if enabled, buffer) state after
+    /// mutating the host mirror.
     fn refresh_literals(&mut self) -> Result<()> {
         self.param_lits = self.params.to_literals()?;
         self.host_dirty = false;
+        self.lits_dirty = false;
+        if self.device_state.is_some() {
+            let ds =
+                DeviceState::upload(&self.device, &self.param_lits, &self.m_lits, &self.v_lits)?;
+            self.device_state = Some(ds);
+        }
         Ok(())
     }
 
@@ -169,8 +304,7 @@ impl Stepper {
     pub fn adopt_params(&mut self, other: &ParamStore) -> Result<usize> {
         self.materialize_params()?;
         let mut copied = 0;
-        let names: Vec<String> =
-            self.params.specs().iter().map(|s| s.name.clone()).collect();
+        let names: Vec<String> = self.params.specs().iter().map(|s| s.name.clone()).collect();
         for name in names {
             let candidates = [
                 name.clone(),
@@ -189,9 +323,12 @@ impl Stepper {
         Ok(copied)
     }
 
-    /// Overwrite host params (checkpoint restore) and refresh device state.
-    pub fn replace_params(&mut self, mutate: impl FnOnce(&mut ParamStore) -> Result<usize>)
-        -> Result<usize> {
+    /// Overwrite host params (checkpoint restore) and refresh device
+    /// state.
+    pub fn replace_params(
+        &mut self,
+        mutate: impl FnOnce(&mut ParamStore) -> Result<usize>,
+    ) -> Result<usize> {
         self.materialize_params()?;
         let n = mutate(&mut self.params)?;
         self.refresh_literals()?;
@@ -208,10 +345,110 @@ impl Stepper {
         ])
     }
 
+    /// Stage a batch as device buffers (tokens, targets, mask).
+    fn batch_buffers(&self, batch: &Batch) -> Result<Vec<PjRtBuffer>> {
+        let lits = self.batch_literals(batch)?;
+        self.device.to_device_many(&lits)
+    }
+
+    /// Download a scalar output buffer (loss, grad-norm, aux).
+    fn scalar_from_buffer(&self, buf: &PjRtBuffer) -> Result<f32> {
+        scalar_to_f32(&self.device.from_device(buf)?)
+    }
+
     /// Execute one fused optimizer step, updating state in place.
+    ///
+    /// Dispatches to the buffer path when
+    /// [`Stepper::enable_device_state`] was called; if that path proves
+    /// unsupported on its very first step (while the literal state is
+    /// still current), falls back to the literal path for the rest of
+    /// this stepper's life.
     pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
-        let io = &self.artifact.manifest.io;
+        // validate up front so a caller's bad batch surfaces as its own
+        // error instead of masquerading as a buffer-path failure below
+        batch.validate()?;
         self.step += 1;
+        if self.device_state.is_some() {
+            match self.train_step_buffers(batch, lr) {
+                Ok(stats) => return Ok(stats),
+                // only execute/arity failures mean "this runtime cannot
+                // run the buffer path" — and only before any buffer
+                // step has succeeded (the literal state is still
+                // current). Everything else propagates.
+                Err(e @ (Error::Layout(_) | Error::Xla(_)))
+                    if !self.buffers_verified && self.can_abandon_buffers() =>
+                {
+                    eprintln!(
+                        "[device] buffer path unavailable ({e}); falling back to literal path"
+                    );
+                    self.device_state = None;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.train_step_literals(batch, lr)
+    }
+
+    /// Buffer-path fused step: state buffers in, state buffers out;
+    /// only the three result scalars cross the host boundary (plus the
+    /// batch/lr/step upload every step needs).
+    fn train_step_buffers(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let np = self.artifact.manifest.io.n_params;
+        let no = self.artifact.manifest.io.n_opt;
+        // the timed window spans staging → execute → scalar download,
+        // matching what the literal path's `Program::run` wraps, so
+        // step times stay comparable across paths (benches rely on it)
+        let t0 = Instant::now();
+        let staged = self.batch_buffers(batch)?;
+        let lr_b = self.device.to_device(&scalar_f32(lr))?;
+        let step_b = self.device.to_device(&scalar_f32(self.step as f32))?;
+        let outputs = {
+            let ds = self.device_state.as_ref().expect("buffer path enabled");
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(np + 2 * no + 5);
+            inputs.extend(ds.params());
+            inputs.extend(ds.m());
+            inputs.extend(ds.v());
+            inputs.extend(staged.iter());
+            inputs.push(&lr_b);
+            inputs.push(&step_b);
+            self.train.run_buffers(&inputs)?
+        };
+        let expect = np + 2 * no + 3;
+        if outputs.len() != expect {
+            return Err(Error::Layout(format!(
+                "train_step (buffers) returned {} outputs, manifest wants {expect}",
+                outputs.len()
+            )));
+        }
+        let mut outputs = outputs;
+        let tail = outputs.split_off(np + 2 * no);
+        let v_new = outputs.split_off(np + no);
+        let m_new = outputs.split_off(np);
+        self.device_state
+            .as_mut()
+            .expect("buffer path enabled")
+            .replace(outputs, m_new, v_new)?;
+        self.lits_dirty = true;
+        self.host_dirty = true;
+        self.buffers_verified = true;
+        let loss = self.scalar_from_buffer(&tail[0])?;
+        let grad_norm = self.scalar_from_buffer(&tail[1])?;
+        let router_aux = self.scalar_from_buffer(&tail[2])?;
+        let step_time_s = t0.elapsed().as_secs_f64();
+        if !loss.is_finite() {
+            return Err(Error::Training(format!(
+                "non-finite loss {loss} at step {}",
+                self.step
+            )));
+        }
+        Ok(StepStats { loss, grad_norm, router_aux, step_time_s })
+    }
+
+    /// Literal-path fused step (staged through PJRT host buffers each
+    /// call). The pre-buffer hot path; still the fallback and the cold
+    /// paths' workhorse.
+    fn train_step_literals(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let io = &self.artifact.manifest.io;
         let [tok, tgt, msk] = self.batch_literals(batch)?;
         let lr_lit = scalar_f32(lr);
         let step_lit = scalar_f32(self.step as f32);
@@ -262,8 +499,16 @@ impl Stepper {
     /// Gradient-only microbatch pass, gradients left device-resident:
     /// the trainable-tensor `Literal`s (manifest `trainable_paths` order)
     /// come back untouched, only the loss/aux scalars are read to host.
-    /// This is the steady-state accumulate hot path.
+    /// This is the literal accumulate hot path; the buffer path uses
+    /// [`Stepper::grad_step_buffers`].
     pub fn grad_step_literals(&self, batch: &Batch) -> Result<GradOut> {
+        if self.lits_dirty {
+            return Err(Error::Training(
+                "literal grad path called while device buffers are ahead; \
+                 use grad_step_buffers or disable_device_state first"
+                    .into(),
+            ));
+        }
         let prog = self.grad.as_ref().ok_or_else(|| {
             Error::Config("artifact set lacks grad_step (re-run make artifacts)".into())
         })?;
@@ -291,6 +536,42 @@ impl Stepper {
         Ok(GradOut { grads, loss, aux, exec_time_s })
     }
 
+    /// Buffer-path gradient pass: params come from the pinned device
+    /// state, gradients come back as device buffers. `grad_step` does
+    /// not donate its inputs, so the parameter buffers stay live.
+    pub fn grad_step_buffers(&self, batch: &Batch) -> Result<GradOutBuffers> {
+        let prog = self.grad.as_ref().ok_or_else(|| {
+            Error::Config("artifact set lacks grad_step (re-run make artifacts)".into())
+        })?;
+        let ds = self.device_state.as_ref().ok_or_else(|| {
+            Error::Config("grad_step_buffers requires enable_device_state".into())
+        })?;
+        // timed window covers staging → execute → scalar download, like
+        // the literal path's `Program::run` (keeps exec times comparable)
+        let t0 = Instant::now();
+        let staged = self.batch_buffers(batch)?;
+        let outputs = {
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(ds.n_params() + 3);
+            inputs.extend(ds.params());
+            inputs.extend(staged.iter());
+            prog.run_buffers(&inputs)?
+        };
+        let n_t = self.artifact.trainable_indices().len();
+        if outputs.len() != n_t + 2 {
+            return Err(Error::Layout(format!(
+                "grad_step (buffers) returned {} outputs, want {}",
+                outputs.len(),
+                n_t + 2
+            )));
+        }
+        let mut grads = outputs;
+        let tail = grads.split_off(n_t);
+        let loss = self.scalar_from_buffer(&tail[0])?;
+        let aux = self.scalar_from_buffer(&tail[1])?;
+        let exec_time_s = t0.elapsed().as_secs_f64();
+        Ok(GradOutBuffers { grads, loss, aux, exec_time_s })
+    }
+
     /// Host-materialized variant of [`Stepper::grad_step_literals`]
     /// (inspection, tests, the legacy host-summing bench baseline).
     pub fn grad_step(&self, batch: &Batch) -> Result<(Vec<Vec<f32>>, f32, f32)> {
@@ -303,8 +584,10 @@ impl Stepper {
     /// literals — e.g. straight out of
     /// [`crate::runtime::accum::GradAccumulator::finish`]. Returns the
     /// post-clip gradient norm and the execute wall-clock. Increments the
-    /// optimizer step.
+    /// optimizer step. If the buffer path is active, syncs and leaves it
+    /// first (the two paths must not diverge).
     pub fn apply_accumulated(&mut self, grads: &[Literal], lr: f32) -> Result<(f32, f64)> {
+        self.disable_device_state()?;
         let prog = self.apply.as_ref().ok_or_else(|| {
             Error::Config("artifact set lacks apply_step (re-run make artifacts)".into())
         })?;
@@ -350,6 +633,75 @@ impl Stepper {
         Ok((scalar_to_f32(&tail[0])?, exec_time_s))
     }
 
+    /// Buffer-path update on the mean gradient (straight out of
+    /// [`crate::runtime::accum::GradAccumulator::finish_buffers`]): the
+    /// pinned state buffers are donated to `apply_step` and replaced by
+    /// its outputs; only the grad-norm scalar is downloaded. Increments
+    /// the optimizer step.
+    pub fn apply_accumulated_buffers(
+        &mut self,
+        grads: &[PjRtBuffer],
+        lr: f32,
+    ) -> Result<(f32, f64)> {
+        let prog = self.apply.as_ref().ok_or_else(|| {
+            Error::Config("artifact set lacks apply_step (re-run make artifacts)".into())
+        })?;
+        if self.device_state.is_none() {
+            return Err(Error::Config(
+                "apply_accumulated_buffers requires enable_device_state".into(),
+            ));
+        }
+        let np = self.artifact.manifest.io.n_params;
+        let no = self.artifact.manifest.io.n_opt;
+        let n_t = self.artifact.trainable_indices().len();
+        if grads.len() != n_t {
+            return Err(Error::Layout(format!(
+                "apply: {} grads for {n_t} trainable tensors",
+                grads.len()
+            )));
+        }
+        // the step counter advances only on success, so the engine's
+        // fallback redo of a failed buffer apply cannot double-count
+        let next_step = self.step + 1;
+        // timed window covers staging → execute → scalar download, like
+        // the literal path's `Program::run` (keeps exec times comparable)
+        let t0 = Instant::now();
+        let lr_b = self.device.to_device(&scalar_f32(lr))?;
+        let step_b = self.device.to_device(&scalar_f32(next_step as f32))?;
+        let outputs = {
+            let ds = self.device_state.as_ref().expect("buffer path enabled");
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(np + 2 * no + grads.len() + 2);
+            inputs.extend(ds.params());
+            inputs.extend(ds.m());
+            inputs.extend(ds.v());
+            inputs.extend(grads.iter());
+            inputs.push(&lr_b);
+            inputs.push(&step_b);
+            prog.run_buffers(&inputs)?
+        };
+        if outputs.len() != np + 2 * no + 1 {
+            return Err(Error::Layout(format!(
+                "apply_step (buffers) returned {} outputs, want {}",
+                outputs.len(),
+                np + 2 * no + 1
+            )));
+        }
+        let mut outputs = outputs;
+        let tail = outputs.split_off(np + 2 * no);
+        let v_new = outputs.split_off(np + no);
+        let m_new = outputs.split_off(np);
+        self.device_state
+            .as_mut()
+            .expect("buffer path enabled")
+            .replace(outputs, m_new, v_new)?;
+        self.step = next_step;
+        self.lits_dirty = true;
+        self.host_dirty = true;
+        self.buffers_verified = true;
+        let norm = self.scalar_from_buffer(&tail[0])?;
+        Ok((norm, t0.elapsed().as_secs_f64()))
+    }
+
     /// Host-slice variant of [`Stepper::apply_accumulated`] (checkpoint
     /// surgery, the legacy bench baseline): stages the gradients as fresh
     /// literals, then delegates.
@@ -371,8 +723,32 @@ impl Stepper {
         Ok(norm)
     }
 
-    /// Loss-only validation pass (no state mutation).
+    /// Loss-only validation pass (no state mutation). Runs on the
+    /// buffer path when it is active and verified — `eval_step` does
+    /// not donate, so the pinned state stays live — otherwise on the
+    /// (current, by invariant) literal state.
     pub fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        if let Some(ds) = self.device_state.as_ref() {
+            if self.buffers_verified {
+                let staged = self.batch_buffers(batch)?;
+                let outputs = {
+                    let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(ds.n_params() + 3);
+                    inputs.extend(ds.params());
+                    inputs.extend(staged.iter());
+                    self.eval.run_buffers(&inputs)?
+                };
+                if outputs.len() != 2 {
+                    return Err(Error::Layout(format!(
+                        "eval_step (buffers) returned {} outputs, want 2",
+                        outputs.len()
+                    )));
+                }
+                return Ok((
+                    self.scalar_from_buffer(&outputs[0])?,
+                    self.scalar_from_buffer(&outputs[1])?,
+                ));
+            }
+        }
         let [tok, tgt, msk] = self.batch_literals(batch)?;
         let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_lits.len() + 3);
         inputs.extend(self.param_lits.iter());
@@ -383,7 +759,9 @@ impl Stepper {
         Ok((scalar_to_f32(&outputs[0])?, scalar_to_f32(&outputs[1])?))
     }
 
-    /// Logits pass: returns [B*S*V] f32 (row-major `[B, S, V]`).
+    /// Logits pass: returns [B*S*V] f32 (row-major `[B, S, V]`). Uses
+    /// the pinned device params when the buffer path is active and
+    /// verified (the logits download is the only host transfer).
     pub fn forward(&self, tokens: &[i32]) -> Result<Vec<f32>> {
         let io = &self.artifact.manifest.io;
         let n = io.batch_size * io.seq_len;
@@ -395,6 +773,24 @@ impl Stepper {
             )));
         }
         let tok = i32_literal(tokens, &[io.batch_size, io.seq_len])?;
+        if let Some(ds) = self.device_state.as_ref() {
+            if self.buffers_verified {
+                let tok_b = self.device.to_device(&tok)?;
+                let outputs = {
+                    let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(ds.n_params() + 1);
+                    inputs.extend(ds.params());
+                    inputs.push(&tok_b);
+                    self.forward.run_buffers(&inputs)?
+                };
+                if outputs.len() != 1 {
+                    return Err(Error::Layout(format!(
+                        "forward (buffers) returned {} outputs, want 1",
+                        outputs.len()
+                    )));
+                }
+                return to_f32_vec(&self.device.from_device(&outputs[0])?);
+            }
+        }
         let mut inputs: Vec<&Literal> = Vec::with_capacity(self.param_lits.len() + 1);
         inputs.extend(self.param_lits.iter());
         inputs.push(&tok);
@@ -442,5 +838,11 @@ impl Stepper {
             .iter()
             .map(|&i| self.artifact.manifest.tensors[i].shape.clone())
             .collect()
+    }
+
+    /// Device handle shared by this stepper's programs and state (the
+    /// transfer-stats instrument lives here).
+    pub fn device(&self) -> &Device {
+        &self.device
     }
 }

@@ -9,11 +9,12 @@
 
 use std::collections::HashMap;
 
-use xla::Literal;
+use xla::{Literal, PjRtBuffer};
 
 use crate::error::{Error, Result};
 use crate::runtime::artifact::{Artifact, TensorSpec};
 use crate::runtime::literal;
+use crate::runtime::pjrt::Device;
 
 /// Flat, manifest-ordered parameter state.
 pub struct ParamStore {
@@ -197,6 +198,113 @@ impl ParamStore {
             .iter()
             .zip(&self.host)
             .map(|(s, h)| (s.name.as_str(), s.shape.as_slice(), h.as_slice()))
+    }
+}
+
+/// Device-resident training state: parameters plus Adam moments pinned
+/// as persistent `PjRtBuffer`s.
+///
+/// This is the buffer-path twin of the `Stepper`'s literal state. Once
+/// uploaded, the buffers are threaded through `run_buffers` calls for
+/// the rest of a phase; nothing here touches host memory until
+/// [`DeviceState::to_literals`] is asked for a snapshot (checkpointing,
+/// stage handoff, inspection).
+///
+/// Lifetime rule (donation): the AOT step functions donate their state
+/// arguments, so a successful state-mutating execute CONSUMES the
+/// buffers currently held here. Callers must immediately
+/// [`DeviceState::replace`] them with the execute's outputs and must
+/// never download a state buffer after it was fed to a donating
+/// program. `Stepper` is the only intended caller and upholds this.
+pub struct DeviceState {
+    params: Vec<PjRtBuffer>,
+    m: Vec<PjRtBuffer>,
+    v: Vec<PjRtBuffer>,
+    device: Device,
+}
+
+impl DeviceState {
+    /// Pin the given literal state on `device` (one upload per tensor).
+    pub fn upload(
+        device: &Device,
+        params: &[Literal],
+        m: &[Literal],
+        v: &[Literal],
+    ) -> Result<Self> {
+        Ok(DeviceState {
+            params: device.to_device_many(params)?,
+            m: device.to_device_many(m)?,
+            v: device.to_device_many(v)?,
+            device: device.clone(),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_opt(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Parameter buffers (manifest order). Borrow for `run_buffers`
+    /// input lists only.
+    pub fn params(&self) -> &[PjRtBuffer] {
+        &self.params
+    }
+
+    pub fn m(&self) -> &[PjRtBuffer] {
+        &self.m
+    }
+
+    pub fn v(&self) -> &[PjRtBuffer] {
+        &self.v
+    }
+
+    /// Adopt a state-mutating execute's outputs as the new pinned state
+    /// (the previous buffers were donated to that execute and are gone).
+    pub fn replace(
+        &mut self,
+        params: Vec<PjRtBuffer>,
+        m: Vec<PjRtBuffer>,
+        v: Vec<PjRtBuffer>,
+    ) -> Result<()> {
+        if params.len() != self.params.len() || m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(Error::Layout(format!(
+                "device state replace: got {}/{}/{} buffers, want {}/{}/{}",
+                params.len(),
+                m.len(),
+                v.len(),
+                self.params.len(),
+                self.m.len(),
+                self.v.len()
+            )));
+        }
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
+    /// Re-pin fresh optimizer moments (stage switches reset Adam).
+    pub fn reset_opt(&mut self, m: &[Literal], v: &[Literal]) -> Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            return Err(Error::Layout("device state reset_opt: arity mismatch".into()));
+        }
+        self.m = self.device.to_device_many(m)?;
+        self.v = self.device.to_device_many(v)?;
+        Ok(())
+    }
+
+    /// Materialize the pinned state as host literals (params, m, v).
+    /// This is the ONLY download point of the buffer path besides the
+    /// per-step scalars — snapshots and checkpoints go through here,
+    /// lazily, never the inner loop.
+    pub fn to_literals(&self) -> Result<(Vec<Literal>, Vec<Literal>, Vec<Literal>)> {
+        let dl = |bufs: &[PjRtBuffer]| -> Result<Vec<Literal>> {
+            bufs.iter().map(|b| self.device.from_device(b)).collect()
+        };
+        Ok((dl(&self.params)?, dl(&self.m)?, dl(&self.v)?))
     }
 }
 

@@ -59,7 +59,9 @@ fn every_variant_compiles_and_loads_params() {
 #[test]
 fn revffn_train_step_learns() {
     let (device, cache) = ctx();
-    let Some(mut stepper) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else { return };
+    let Some(mut stepper) = make_stepper_in(&device, &cache, Method::Revffn.variant(2)) else {
+        return;
+    };
     let mut batcher = data_for(&stepper, 64);
     let mut losses = Vec::new();
     for _ in 0..6 {
@@ -136,8 +138,12 @@ fn pretrain_transfer_standard_to_revffn() {
     // The pre-pass trains the standard model; the RevFFN scaffold adopts
     // the shared tensors by name (embed, layers.attn.*, layers.moe.*).
     let (device, cache) = ctx();
-    let Some(mut sft) = make_stepper_in(&device, &cache, Method::Sft.eval_variant()) else { return };
-    let Some(mut rev) = make_stepper_in(&device, &cache, Method::Revffn.variant(1)) else { return };
+    let Some(mut sft) = make_stepper_in(&device, &cache, Method::Sft.eval_variant()) else {
+        return;
+    };
+    let Some(mut rev) = make_stepper_in(&device, &cache, Method::Revffn.variant(1)) else {
+        return;
+    };
     let mut batcher = data_for(&sft, 16);
     sft.train_step(&batcher.next_batch(), 1e-3).unwrap();
     let sft_params = sft.materialize_params().unwrap();
