@@ -1,0 +1,101 @@
+"""CI smoke test for the `revffn serve` control plane.
+
+Speaks the NDJSON wire protocol (docs/SERVE.md) over plain sockets:
+submit a longish job, stream a handful of its StepEvents on a second
+connection, cancel it mid-run, confirm the event stream terminates with
+a `done` marker in state `cancelled`, then shut the server down.
+
+Usage: serve_smoke.py HOST PORT
+"""
+
+import json
+import socket
+import sys
+import time
+
+HOST, PORT = sys.argv[1], int(sys.argv[2])
+DEADLINE = time.time() + 120
+
+
+def connect():
+    last = None
+    while time.time() < DEADLINE:
+        try:
+            s = socket.create_connection((HOST, PORT), timeout=60)
+            s.settimeout(60)
+            return s
+        except OSError as e:  # server still booting
+            last = e
+            time.sleep(0.5)
+    raise SystemExit(f"could not connect to {HOST}:{PORT}: {last}")
+
+
+def send(sock, obj):
+    sock.sendall((json.dumps(obj) + "\n").encode())
+
+
+def lines(sock):
+    buf = b""
+    while True:
+        chunk = sock.recv(4096)
+        if not chunk:
+            return
+        buf += chunk
+        while b"\n" in buf:
+            line, buf = buf.split(b"\n", 1)
+            if line.strip():
+                yield json.loads(line)
+
+
+control = connect()
+control_lines = lines(control)
+
+send(control, {
+    "cmd": "submit",
+    "name": "smoke",
+    "config": {
+        "method": "revffn",
+        "eval_every": 0,
+        "eval_batches": 1,
+        "schedule": {"stage1_steps": 2, "stage2_steps": 200},
+        "data": {"pretrain_steps": 0, "n_train": 48, "n_eval": 16},
+    },
+})
+resp = next(control_lines)
+assert resp.get("ok"), f"submit failed: {resp}"
+assert resp.get("admitted"), f"job not admitted: {resp}"
+job = resp["job"]
+print(f"submitted {job} (peak {resp['peak_gb']:.4f} GB)")
+
+events = connect()
+send(events, {"cmd": "events", "job": job, "from": 0, "follow": True})
+seen_steps = 0
+cancelled = False
+for ev in lines(events):
+    if ev.get("done"):
+        assert cancelled, f"stream ended before cancel: {ev}"
+        assert ev["state"] == "cancelled", f"unexpected terminal state: {ev}"
+        print(f"event stream terminated: {ev}")
+        break
+    if ev.get("type") == "step":
+        seen_steps += 1
+        print(f"  step {ev['step']} loss {ev['loss']:.4f}")
+    if seen_steps >= 3 and not cancelled:
+        send(control, {"cmd": "cancel", "job": job})
+        resp = next(control_lines)
+        assert resp.get("ok") and resp.get("cancelled"), f"cancel failed: {resp}"
+        cancelled = True
+        print("cancelled mid-run")
+else:
+    raise SystemExit("event stream closed without a done marker")
+assert seen_steps >= 3, f"only {seen_steps} steps streamed"
+
+send(control, {"cmd": "status", "job": job})
+status = next(control_lines)
+assert status["jobs"][0]["state"] == "cancelled", f"bad status: {status}"
+print("status confirms cancellation")
+
+send(control, {"cmd": "shutdown"})
+resp = next(control_lines)
+assert resp.get("ok"), f"shutdown failed: {resp}"
+print("serve smoke test passed")

@@ -1,0 +1,158 @@
+//! Drive a running `revffn serve` instance: submit two concurrent
+//! fine-tuning jobs (RevFFN + SFT), stream both NDJSON event feeds as
+//! they interleave on the shared device, then print the final status
+//! table (including each job's admission price).
+//!
+//!     # terminal 1
+//!     cargo run --release -- serve --artifacts artifacts/tiny --budget-gb 8
+//!     # terminal 2
+//!     cargo run --release --example serve_client -- [HOST:PORT] [--shutdown]
+//!
+//! The wire protocol is documented in docs/SERVE.md.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use revffn::serve::protocol::Request;
+use revffn::util::json::{self, Json};
+
+/// Bridge the crate's `Result` into anyhow (the binary edge).
+fn ok<T>(r: revffn::Result<T>) -> anyhow::Result<T> {
+    r.map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn send(stream: &mut TcpStream, req: &Request) -> anyhow::Result<()> {
+    let mut line = req.to_line();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}: {line}"))
+}
+
+/// Stream one job's events on its own connection, printing each line
+/// with a job prefix, until the server sends the `done` marker.
+fn follow_events(addr: &str, job: String) -> anyhow::Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    send(&mut stream, &Request::Events { job: job.clone(), from: 0, follow: true })?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let j = read_line(&mut reader)?;
+        if j.get("done").and_then(Json::as_bool).unwrap_or(false) {
+            println!("[{job}] done ({})", ok(j.str_of("state"))?);
+            return Ok(());
+        }
+        let kind = j.str_of("type").unwrap_or_default();
+        match kind.as_str() {
+            "phase_started" => println!(
+                "[{job}] phase {} ({}) — {} steps",
+                ok(j.u64_of("phase"))?,
+                ok(j.str_of("label"))?,
+                ok(j.u64_of("steps"))?
+            ),
+            "step" => println!(
+                "[{job}] step {:>3} loss {:.4}",
+                ok(j.u64_of("step"))?,
+                j.f64_of("loss").unwrap_or(f64::NAN)
+            ),
+            "eval" => println!(
+                "[{job}] eval @ {} loss {:.4}",
+                ok(j.u64_of("step"))?,
+                j.f64_of("eval_loss").unwrap_or(f64::NAN)
+            ),
+            "phase_finished" => println!("[{job}] phase {} finished", ok(j.u64_of("phase"))?),
+            _ => println!("[{job}] {j}"),
+        }
+    }
+}
+
+fn submit(
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
+    config: &str,
+    name: &str,
+) -> anyhow::Result<String> {
+    let req = Request::Submit { config: ok(json::parse(config))?, name: Some(name.into()) };
+    send(stream, &req)?;
+    let resp = read_line(reader)?;
+    if !ok(resp.bool_of("ok"))? {
+        anyhow::bail!("submit {name}: {}", resp.str_of("error").unwrap_or_default());
+    }
+    let id = ok(resp.str_of("job"))?;
+    println!(
+        "submitted {name} as {id}: admitted={} peak {:.4} GB",
+        resp.bool_of("admitted").unwrap_or(false),
+        resp.f64_of("peak_gb").unwrap_or(f64::NAN)
+    );
+    Ok(id)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7433".into());
+    let shutdown = args.iter().any(|a| a == "--shutdown");
+
+    let mut control = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(control.try_clone()?);
+    println!("== submitting two concurrent jobs to {addr} ==");
+    let job_a = submit(
+        &mut reader,
+        &mut control,
+        r#"{"method":"revffn","eval_every":0,"eval_batches":1,
+            "schedule":{"stage1_steps":2,"stage2_steps":6},
+            "data":{"pretrain_steps":0,"n_train":64,"n_eval":16}}"#,
+        "revffn-demo",
+    )?;
+    let job_b = submit(
+        &mut reader,
+        &mut control,
+        r#"{"method":"sft","eval_every":0,"eval_batches":1,
+            "schedule":{"stage2_steps":6},
+            "data":{"pretrain_steps":0,"n_train":64,"n_eval":16}}"#,
+        "sft-demo",
+    )?;
+
+    // stream both feeds concurrently — the interleaving you see is the
+    // scheduler's round-robin over the shared device
+    let addr_a = addr.clone();
+    let addr_b = addr.clone();
+    let ta = std::thread::spawn(move || follow_events(&addr_a, job_a));
+    let tb = std::thread::spawn(move || follow_events(&addr_b, job_b));
+    ta.join().expect("job-a follower panicked")?;
+    tb.join().expect("job-b follower panicked")?;
+
+    send(&mut control, &Request::Status { job: None })?;
+    let status = read_line(&mut reader)?;
+    println!(
+        "\nbudget {:.3} GB, committed {:.3} GB",
+        ok(status.f64_of("budget_gb"))?,
+        ok(status.f64_of("committed_gb"))?
+    );
+    for row in ok(status.arr_of("jobs"))? {
+        println!(
+            "  {}  {:<12} {:<9} peak {:.4} GB  steps {}  last loss {:.4}",
+            ok(row.str_of("id"))?,
+            ok(row.str_of("name"))?,
+            ok(row.str_of("state"))?,
+            ok(row.f64_of("peak_gb"))?,
+            ok(row.u64_of("steps_done"))?,
+            row.f64_of("last_loss").unwrap_or(f64::NAN)
+        );
+    }
+
+    if shutdown {
+        send(&mut control, &Request::Shutdown)?;
+        let _ = read_line(&mut reader)?;
+        println!("server asked to shut down");
+    }
+    Ok(())
+}

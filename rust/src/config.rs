@@ -160,9 +160,14 @@ impl RunConfig {
         Self::from_json_str(&text)
     }
 
-    /// Parse from JSON; missing keys keep their defaults.
+    /// Parse from JSON text; missing keys keep their defaults.
     pub fn from_json_str(text: &str) -> Result<Self> {
-        let j = json::parse(text)?;
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Parse from a parsed JSON value; missing keys keep their defaults
+    /// (the serve control plane submits job configs this way).
+    pub fn from_json(j: &Json) -> Result<Self> {
         let mut cfg = RunConfig::default_tiny("artifacts/tiny");
         if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
             cfg.artifacts = v.into();
@@ -302,6 +307,137 @@ impl RunConfig {
     }
 }
 
+/// How `revffn serve` prices a submitted job for admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriceGeometry {
+    /// Price at the job's own artifact geometry (manifest model +
+    /// io batch/seq) — the honest number for what will actually run.
+    Manifest,
+    /// Price at the real Qwen1.5-MoE-A2.7B geometry (paper scale) with
+    /// the artifact's batch/seq — lets a tiny-artifact deployment
+    /// exercise a GB-scale budget and the Table-1 method ordering.
+    Qwen,
+}
+
+impl PriceGeometry {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "manifest" => Ok(PriceGeometry::Manifest),
+            "qwen" => Ok(PriceGeometry::Qwen),
+            other => Err(Error::Config(format!(
+                "unknown price geometry {other:?}; expected manifest | qwen"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PriceGeometry::Manifest => "manifest",
+            PriceGeometry::Qwen => "qwen",
+        }
+    }
+}
+
+/// Configuration of the `revffn serve` subsystem (scheduler + admission
+/// + control plane). JSON keys mirror the field names; every field has
+/// a working default so `revffn serve` runs with no file at all.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP listen address of the NDJSON control plane.
+    pub addr: String,
+    /// Default artifact config dir for submitted jobs that omit
+    /// `artifacts` in their config.
+    pub artifacts: PathBuf,
+    /// Admission budget in GB: the sum of the priced peak-VRAM of all
+    /// concurrently admitted jobs must stay within it.
+    pub budget_gb: f64,
+    /// Scheduling quantum: how many `StepEvent`s one job yields before
+    /// the scheduler rotates to the next admitted job.
+    pub quantum: u64,
+    /// Pricing assumptions preset (`bf16_mixed` | `paper` | `f32`).
+    pub assumptions: String,
+    /// Geometry jobs are priced at (see [`PriceGeometry`]).
+    pub price_geometry: PriceGeometry,
+    /// `out_dir` root for jobs that omit one (`<run_root>/<job-id>`).
+    pub run_root: PathBuf,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7433".into(),
+            artifacts: PathBuf::from("artifacts/tiny"),
+            budget_gb: 80.0,
+            quantum: 4,
+            assumptions: "bf16_mixed".into(),
+            price_geometry: PriceGeometry::Manifest,
+            run_root: PathBuf::from("runs/serve"),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Parse from JSON; missing keys keep their defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = j.get("addr").and_then(Json::as_str) {
+            cfg.addr = v.into();
+        }
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            cfg.artifacts = v.into();
+        }
+        if let Some(v) = j.get("budget_gb").and_then(Json::as_f64) {
+            cfg.budget_gb = v;
+        }
+        if let Some(v) = j.get("quantum").and_then(Json::as_u64) {
+            cfg.quantum = v;
+        }
+        if let Some(v) = j.get("assumptions").and_then(Json::as_str) {
+            cfg.assumptions = v.into();
+        }
+        if let Some(v) = j.get("price_geometry").and_then(Json::as_str) {
+            cfg.price_geometry = PriceGeometry::parse(v)?;
+        }
+        if let Some(v) = j.get("run_root").and_then(Json::as_str) {
+            cfg.run_root = v.into();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("addr", self.addr.clone())
+            .str("artifacts", self.artifacts.display().to_string())
+            .num("budget_gb", self.budget_gb)
+            .num("quantum", self.quantum as f64)
+            .str("assumptions", self.assumptions.clone())
+            .str("price_geometry", self.price_geometry.name())
+            .str("run_root", self.run_root.display().to_string())
+            .build()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.budget_gb.is_nan() || self.budget_gb <= 0.0 {
+            return Err(Error::Config("budget_gb must be > 0".into()));
+        }
+        if self.quantum == 0 {
+            return Err(Error::Config("quantum must be >= 1".into()));
+        }
+        self.assumptions()?;
+        Ok(())
+    }
+
+    /// Resolve the pricing-assumptions preset.
+    pub fn assumptions(&self) -> Result<crate::memory::Assumptions> {
+        crate::memory::Assumptions::parse(&self.assumptions)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +505,34 @@ mod tests {
     fn bad_lr_schedule_rejected() {
         let r = RunConfig::from_json_str(r#"{"schedule": {"lr_schedule": "step"}}"#);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn serve_config_roundtrip_and_defaults() {
+        let c = ServeConfig::from_json_str("{}").unwrap();
+        assert_eq!(c.addr, "127.0.0.1:7433");
+        assert_eq!(c.quantum, 4);
+        assert_eq!(c.price_geometry, PriceGeometry::Manifest);
+        let c2 = ServeConfig {
+            budget_gb: 12.5,
+            quantum: 1,
+            price_geometry: PriceGeometry::Qwen,
+            assumptions: "paper".into(),
+            ..ServeConfig::default()
+        };
+        let back = ServeConfig::from_json_str(&c2.to_json().to_string()).unwrap();
+        assert_eq!(back.budget_gb, 12.5);
+        assert_eq!(back.quantum, 1);
+        assert_eq!(back.price_geometry, PriceGeometry::Qwen);
+        assert!(!back.assumptions().unwrap().master_weights);
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        assert!(ServeConfig::from_json_str(r#"{"budget_gb": 0}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"quantum": 0}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"assumptions": "fp8"}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"price_geometry": "llama"}"#).is_err());
     }
 
     #[test]

@@ -62,29 +62,56 @@ impl Metrics {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Mean loss over the last `n` steps (smoothed final loss).
-    pub fn smoothed_loss(&self, n: usize) -> Option<f32> {
-        if self.steps.is_empty() {
+    /// Mean of the last `n` entries (the shared smoothing kernel).
+    fn tail_mean(losses: &[f32], n: usize) -> Option<f32> {
+        if losses.is_empty() {
             return None;
         }
-        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
-        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+        let tail = &losses[losses.len().saturating_sub(n)..];
+        Some(tail.iter().sum::<f32>() / tail.len() as f32)
     }
 
-    /// Median samples/s over all recorded steps (Table-1 throughput).
+    /// Mean loss over the last `n` steps (smoothed final loss, all
+    /// stages).
+    pub fn smoothed_loss(&self, n: usize) -> Option<f32> {
+        let losses: Vec<f32> = self.steps.iter().map(|r| r.loss).collect();
+        Self::tail_mean(&losses, n)
+    }
+
+    /// Median samples/s over the fine-tuning steps (Table-1
+    /// throughput). LM pre-pass records (stage 0) are excluded — they
+    /// run a different artifact — unless the run was pre-pass only.
     pub fn median_throughput(&self) -> Option<f64> {
-        if self.steps.is_empty() {
+        let mut v: Vec<f64> = self
+            .steps
+            .iter()
+            .filter(|r| r.stage != 0)
+            .map(|r| r.samples_per_s)
+            .collect();
+        if v.is_empty() {
+            v = self.steps.iter().map(|r| r.samples_per_s).collect();
+        }
+        if v.is_empty() {
             return None;
         }
-        let mut v: Vec<f64> = self.steps.iter().map(|r| r.samples_per_s).collect();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Some(v[v.len() / 2])
     }
 
-    /// First/last loss — the "did it learn" check.
+    /// First/last loss — the "did it learn" check. Both ends are
+    /// computed over the *fine-tuning* steps only (the LM pre-pass
+    /// streams through the metrics as stage 0 but measures a different
+    /// objective, so it must contaminate neither the first loss nor
+    /// the smoothed tail of a short run); a pre-pass-only run falls
+    /// back to all records.
     pub fn loss_delta(&self) -> Option<(f32, f32)> {
-        let first = self.steps.first()?.loss;
-        let last = self.smoothed_loss(10)?;
+        let mut losses: Vec<f32> =
+            self.steps.iter().filter(|r| r.stage != 0).map(|r| r.loss).collect();
+        if losses.is_empty() {
+            losses = self.steps.iter().map(|r| r.loss).collect();
+        }
+        let first = *losses.first()?;
+        let last = Self::tail_mean(&losses, 10)?;
         Some((first, last))
     }
 
@@ -106,14 +133,14 @@ impl Metrics {
                 .num("device_time_s", s.device_time_s)
                 .num("samples_per_s", s.samples_per_s)
                 .build();
-            writeln!(f, "{}", j.to_string())?;
+            writeln!(f, "{j}")?;
         }
         for e in &self.evals {
             let j = ObjBuilder::new()
                 .num("step", e.step as f64)
                 .num("eval_loss", e.eval_loss as f64)
                 .build();
-            writeln!(f, "{}", j.to_string())?;
+            writeln!(f, "{j}")?;
         }
         Ok(())
     }
@@ -155,6 +182,54 @@ mod tests {
             m.record_step(rec(i, 1.0, 10.0));
         }
         assert_eq!(m.median_throughput().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn prepass_records_excluded_from_summaries() {
+        let mut m = Metrics::new();
+        // stage-0 pre-pass: high LM loss, different throughput
+        for i in 0..5 {
+            let mut r = rec(i, 9.0, 50.0);
+            r.stage = 0;
+            m.record_step(r);
+        }
+        for i in 5..25 {
+            m.record_step(rec(i, 4.0 - (i - 5) as f32 * 0.1, 10.0));
+        }
+        let (first, last) = m.loss_delta().unwrap();
+        assert_eq!(first, 4.0, "first loss must be the first fine-tune step");
+        assert!(last < first);
+        assert_eq!(m.median_throughput().unwrap(), 10.0);
+    }
+
+    #[test]
+    fn short_run_final_loss_excludes_prepass_tail() {
+        // fewer than 10 fine-tune steps after a long pre-pass: the
+        // smoothed final loss must not average in stage-0 records
+        let mut m = Metrics::new();
+        for i in 0..60 {
+            let mut r = rec(i, 9.0, 50.0);
+            r.stage = 0;
+            m.record_step(r);
+        }
+        for i in 60..63 {
+            m.record_step(rec(i, 2.0, 10.0));
+        }
+        let (first, last) = m.loss_delta().unwrap();
+        assert_eq!(first, 2.0);
+        assert_eq!(last, 2.0, "final loss must be pure fine-tune: got {last}");
+    }
+
+    #[test]
+    fn prepass_only_run_still_summarizes() {
+        let mut m = Metrics::new();
+        for i in 0..4 {
+            let mut r = rec(i, 8.0 - i as f32, 5.0);
+            r.stage = 0;
+            m.record_step(r);
+        }
+        assert_eq!(m.loss_delta().unwrap().0, 8.0);
+        assert_eq!(m.median_throughput().unwrap(), 5.0);
     }
 
     #[test]

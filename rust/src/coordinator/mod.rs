@@ -1,9 +1,11 @@
-//! L3 coordination: the trainer (launch → pre-pass → two-stage schedule →
-//! metrics/checkpoints), LR schedules, and metrics sinks.
+//! L3 coordination: the trainer (schedule planning → LM pre-pass phase →
+//! fine-tuning stages → metrics/checkpoints), LR schedules, and metrics
+//! sinks.
 //!
 //! Since the engine API redesign, step execution lives in
 //! [`crate::engine::Run`]: `Trainer::start()` returns a `Run` whose
-//! `step()` yields `StepEvent`s one unit of work at a time, and
+//! `step()` yields `StepEvent`s one unit of work at a time (the LM
+//! pre-pass is a planned [`Phase`] and streams its events too), and
 //! `Trainer::run()` is the blocking compatibility loop over it. Method
 //! selection is typed ([`crate::engine::Method`]) and model loading for
 //! eval/generate goes through [`crate::engine::Session`].
@@ -14,5 +16,5 @@ pub mod schedule;
 pub mod trainer;
 
 pub use metrics::{Metrics, StepRecord};
-pub use schedule::{plan, Phase};
+pub use schedule::{plan, Phase, PhaseKind};
 pub use trainer::{TrainReport, Trainer};

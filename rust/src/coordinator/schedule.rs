@@ -1,4 +1,11 @@
-//! Two-stage training schedule (§3.3).
+//! Training schedule: optional LM pre-pass, then the two-stage plan (§3.3).
+//!
+//! The LM pre-pass (`cfg.data.pretrain_steps`) stands in for "start from
+//! a pre-trained checkpoint": it runs next-token prediction on the `sft`
+//! artifact and its parameters are adopted by the first fine-tuning
+//! stage. Since the serve redesign it is a planned phase like any other,
+//! so `Run::step()` streams its events and a scheduler can preempt
+//! mid-pre-pass.
 //!
 //! Stage 1 ("adapter warm-up"): only the projection adapters P↑/P↓ and
 //! the stream norms train, at a small LR — realised by executing the
@@ -13,10 +20,23 @@
 
 use crate::config::RunConfig;
 
+/// What a phase executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// LM pre-pass on the standard (`sft`) model — the "pre-trained
+    /// checkpoint" substitute. Records metrics as stage 0, runs no
+    /// validation, and always uses `grad_accum = 1` at a flat LR.
+    LmPrepass,
+    /// A fine-tuning stage of the configured method.
+    Train,
+}
+
 /// One executable phase of a run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Phase {
-    /// 1 or 2 — selects the artifact variant for RevFFN.
+    pub kind: PhaseKind,
+    /// 1 or 2 — selects the artifact variant for RevFFN. 0 for the LM
+    /// pre-pass (which always executes the `sft` variant).
     pub stage: u8,
     pub steps: u64,
     pub peak_lr: f32,
@@ -25,18 +45,30 @@ pub struct Phase {
 
 /// Expand a run config into its ordered phases.
 pub fn plan(cfg: &RunConfig) -> Vec<Phase> {
+    let mut phases = Vec::new();
+    if cfg.data.pretrain_steps > 0 {
+        phases.push(Phase {
+            kind: PhaseKind::LmPrepass,
+            stage: 0,
+            steps: cfg.data.pretrain_steps,
+            peak_lr: cfg.data.pretrain_lr,
+            label: "lm-prepass",
+        });
+    }
     let s = &cfg.schedule;
     if !cfg.method.is_two_stage() {
-        return vec![Phase {
+        phases.push(Phase {
+            kind: PhaseKind::Train,
             stage: 2,
             steps: s.stage2_steps,
             peak_lr: s.lr,
             label: "finetune",
-        }];
+        });
+        return phases;
     }
-    let mut phases = Vec::new();
     if s.stage1_steps > 0 {
         phases.push(Phase {
+            kind: PhaseKind::Train,
             stage: 1,
             steps: s.stage1_steps,
             peak_lr: s.stage1_lr,
@@ -45,6 +77,7 @@ pub fn plan(cfg: &RunConfig) -> Vec<Phase> {
     }
     if s.stage2_steps > 0 {
         phases.push(Phase {
+            kind: PhaseKind::Train,
             stage: 2,
             steps: s.stage2_steps,
             peak_lr: s.lr,
@@ -59,19 +92,52 @@ mod tests {
     use super::*;
     use crate::config::RunConfig;
 
+    /// Default tiny config with the pre-pass disabled (the historical
+    /// two-phase shape most tests assume).
+    fn cfg_no_prepass() -> RunConfig {
+        let mut cfg = RunConfig::default_tiny("a");
+        cfg.data.pretrain_steps = 0;
+        cfg
+    }
+
     #[test]
     fn revffn_has_two_phases() {
-        let cfg = RunConfig::default_tiny("a");
-        let p = plan(&cfg);
+        let p = plan(&cfg_no_prepass());
         assert_eq!(p.len(), 2);
         assert_eq!(p[0].stage, 1);
         assert_eq!(p[1].stage, 2);
+        assert!(p.iter().all(|ph| ph.kind == PhaseKind::Train));
         assert!(p[0].peak_lr < p[1].peak_lr, "stage-1 LR must be small (§3.3)");
     }
 
     #[test]
+    fn prepass_is_a_planned_phase() {
+        let mut cfg = cfg_no_prepass();
+        cfg.data.pretrain_steps = 40;
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].kind, PhaseKind::LmPrepass);
+        assert_eq!(p[0].stage, 0);
+        assert_eq!(p[0].steps, 40);
+        assert_eq!(p[0].peak_lr, cfg.data.pretrain_lr);
+        assert_eq!(p[1].stage, 1);
+        assert_eq!(p[2].stage, 2);
+    }
+
+    #[test]
+    fn prepass_precedes_single_stage_methods_too() {
+        let mut cfg = cfg_no_prepass();
+        cfg.method = crate::engine::Method::Sft;
+        cfg.data.pretrain_steps = 10;
+        let p = plan(&cfg);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].kind, PhaseKind::LmPrepass);
+        assert_eq!(p[1].label, "finetune");
+    }
+
+    #[test]
     fn ablation_without_stage1() {
-        let mut cfg = RunConfig::default_tiny("a");
+        let mut cfg = cfg_no_prepass();
         cfg.schedule.stage1_steps = 0;
         let p = plan(&cfg);
         assert_eq!(p.len(), 1);
@@ -80,7 +146,7 @@ mod tests {
 
     #[test]
     fn ablation_without_stage2() {
-        let mut cfg = RunConfig::default_tiny("a");
+        let mut cfg = cfg_no_prepass();
         cfg.schedule.stage2_steps = 0;
         let p = plan(&cfg);
         assert_eq!(p.len(), 1);
@@ -89,7 +155,7 @@ mod tests {
 
     #[test]
     fn baselines_are_single_phase() {
-        let mut cfg = RunConfig::default_tiny("a");
+        let mut cfg = cfg_no_prepass();
         cfg.method = crate::engine::Method::Lora;
         let p = plan(&cfg);
         assert_eq!(p.len(), 1);

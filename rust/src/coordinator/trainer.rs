@@ -1,6 +1,6 @@
-//! The training coordinator: corpus → tokenizer → optional LM pre-pass →
-//! two-stage fine-tuning with LR scheduling, gradient-accumulation,
-//! periodic validation, metrics and checkpointing.
+//! The training coordinator: corpus → tokenizer → schedule (optional LM
+//! pre-pass phase + fine-tuning stages) with LR scheduling,
+//! gradient-accumulation, periodic validation, metrics and checkpointing.
 //!
 //! This is the paper's launcher. It owns no math: every optimizer step
 //! is one PJRT execution of the AOT train_step artifact for the active
@@ -8,17 +8,18 @@
 //! itself lives in [`crate::engine::Run`]; [`Trainer::run`] is a thin
 //! compatibility loop over [`Trainer::start`] that adds stderr progress
 //! logging. External callers that want to interleave, pause, or observe
-//! runs should drive [`crate::engine::Run::step`] directly.
+//! runs should drive [`crate::engine::Run::step`] directly; the serve
+//! scheduler ([`crate::serve`]) multiplexes many owned runs
+//! ([`Trainer::into_run`]) over one shared device this way.
 
 use std::path::PathBuf;
 
 use crate::config::RunConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::schedule::plan;
-use crate::data::dataset::encode_lm_text;
 use crate::data::synthetic::Corpus;
 use crate::data::tokenizer::Tokenizer;
-use crate::data::{Batcher, Pipeline};
+use crate::data::Batcher;
 use crate::engine::run::{Run, StepEvent};
 use crate::engine::session::corpus_and_tokenizer;
 use crate::engine::Method;
@@ -32,16 +33,20 @@ use crate::runtime::stepper::Stepper;
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     pub method: Method,
+    /// Every recorded optimizer step, including the LM pre-pass phase.
     pub steps_run: u64,
     pub final_loss: f32,
+    /// First fine-tuning loss (the pre-pass measures a different
+    /// objective and is excluded — see `Metrics::loss_delta`).
     pub first_loss: f32,
     pub eval_loss: Option<f32>,
     pub median_samples_per_s: f64,
     pub wall_time_s: f64,
 }
 
-pub struct Trainer<'d> {
-    pub(crate) device: &'d Device,
+pub struct Trainer {
+    /// Shared device handle (cheap clone — Arc'd PJRT client).
+    pub(crate) device: Device,
     pub(crate) cache: ProgramCache,
     pub cfg: RunConfig,
     pub tokenizer: Tokenizer,
@@ -51,9 +56,16 @@ pub struct Trainer<'d> {
     pub stepper: Option<Stepper>,
 }
 
-impl<'d> Trainer<'d> {
+impl Trainer {
     /// Prepare data (generate corpus, train tokenizer, no XLA work yet).
-    pub fn new(device: &'d Device, cfg: RunConfig) -> Result<Self> {
+    pub fn new(device: &Device, cfg: RunConfig) -> Result<Self> {
+        Self::with_cache(device, ProgramCache::new(), cfg)
+    }
+
+    /// Like [`Trainer::new`], but sharing a compiled-program cache with
+    /// other trainers on the same device — the serve scheduler compiles
+    /// each artifact variant once across all concurrent jobs.
+    pub fn with_cache(device: &Device, cache: ProgramCache, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
         // vocab size comes from the artifact geometry: probe the variant
         // of the schedule's final phase
@@ -62,8 +74,8 @@ impl<'d> Trainer<'d> {
         let vocab = probe.manifest.model.vocab_size;
         let (corpus, tokenizer) = corpus_and_tokenizer(cfg.data.corpus_config(), vocab)?;
         Ok(Trainer {
-            device,
-            cache: ProgramCache::new(),
+            device: device.clone(),
+            cache,
             cfg,
             tokenizer,
             corpus,
@@ -74,51 +86,35 @@ impl<'d> Trainer<'d> {
 
     pub(crate) fn load_stepper(&self, stage: u8) -> Result<Stepper> {
         let artifact = Artifact::load(self.cfg.variant_dir(stage))?;
-        Stepper::new(self.device, &self.cache, artifact)
+        Stepper::new(&self.device, &self.cache, artifact)
     }
 
-    /// LM pre-pass on the standard model — the "pre-trained checkpoint"
-    /// substitute. Returns the pre-passed parameter store.
-    pub(crate) fn pretrain(&mut self) -> Result<Option<Stepper>> {
-        if self.cfg.data.pretrain_steps == 0 {
-            return Ok(None);
-        }
-        let sft_dir = self.cfg.artifacts.join(Method::Sft.eval_variant());
-        if !sft_dir.join("manifest.json").exists() {
-            return Ok(None); // artifact set without sft (pallas-only dirs)
-        }
-        let artifact = Artifact::load(&sft_dir)?;
-        let mut stepper = Stepper::new(self.device, &self.cache, artifact)?;
-        if self.cfg.device_resident {
-            if let Err(e) = stepper.enable_device_state() {
-                eprintln!("[device] pre-pass buffer path unavailable ({e}); using literals");
-            }
-        }
-        let (b, s) = stepper.batch_shape();
-        let samples = encode_lm_text(&self.tokenizer, &self.corpus.pretrain_text(), s);
-        // the pre-pass streams through the same prefetch pipeline as
-        // training phases, so its batch assembly overlaps execution too
-        let mut pipeline = Pipeline::spawn(Batcher::new(samples, b, s, self.cfg.seed ^ 0xface));
-        for step in 0..self.cfg.data.pretrain_steps {
-            let batch = pipeline.next_batch()?;
-            let stats = stepper.train_step(&batch, self.cfg.data.pretrain_lr)?;
-            pipeline.recycle(batch);
-            if step % 20 == 0 {
-                eprintln!("[pretrain] step {step} loss {:.4}", stats.loss);
-            }
-        }
-        // the pre-pass stepper only serves as a parameter source from
-        // here on (open_phase adoption); release its pinned device
-        // buffers now instead of holding a full extra state copy
-        // device-side for the rest of the run
-        stepper.disable_device_state()?;
-        Ok(Some(stepper))
+    /// Variant directory of the LM pre-pass model (always `sft`), if
+    /// the artifact set ships one (pallas-only dirs do not — the
+    /// pre-pass phase is skipped then).
+    pub(crate) fn prepass_dir(&self) -> Option<PathBuf> {
+        let dir = self.cfg.artifacts.join(Method::Sft.eval_variant());
+        dir.join("manifest.json").exists().then_some(dir)
     }
 
-    /// Begin a step-granular run over the planned schedule (runs the LM
-    /// pre-pass eagerly). Drive it with [`Run::step`], then call
-    /// [`Run::finish`] for the report.
-    pub fn start(&mut self) -> Result<Run<'_, 'd>> {
+    pub(crate) fn load_prepass_stepper(&self) -> Result<Stepper> {
+        let dir = self.prepass_dir().ok_or_else(|| {
+            crate::error::Error::Config("artifact set has no sft variant for the pre-pass".into())
+        })?;
+        let artifact = Artifact::load(dir)?;
+        Stepper::new(&self.device, &self.cache, artifact)
+    }
+
+    /// Begin a step-granular run over the planned schedule (including
+    /// the LM pre-pass phase, which streams its events too). Drive it
+    /// with [`Run::step`], then call [`Run::finish`] for the report.
+    pub fn start(&mut self) -> Result<Run<&mut Trainer>> {
+        Run::new(self)
+    }
+
+    /// Consume the trainer into an owned run — the form a scheduler
+    /// holds N of to multiplex concurrent jobs over one device.
+    pub fn into_run(self) -> Result<Run<Trainer>> {
         Run::new(self)
     }
 

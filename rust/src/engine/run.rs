@@ -4,13 +4,24 @@
 //! a [`Trainer`]'s config: each call to [`Run::step`] performs at most
 //! one unit of work (open a phase, execute one optimizer step, close a
 //! phase) and yields the resulting [`StepEvent`]. External callers — the
-//! CLI, the benches, the eval suite, future servers — can interleave,
-//! pause, or multiplex runs between calls; `Trainer::run()` is now a
-//! thin loop over this type.
+//! CLI, the benches, the eval suite, the serve scheduler — can
+//! interleave, pause, or multiplex runs between calls; `Trainer::run()`
+//! is a thin loop over this type, and [`crate::serve::Scheduler`] drives
+//! many owned runs round-robin over one shared device.
 //!
-//! Event order for a two-phase RevFFN run:
+//! A `Run` either borrows its trainer (`Trainer::start()` →
+//! `Run<&mut Trainer>`, the inline-driving form) or owns it
+//! (`Trainer::into_run()` → `Run<Trainer>`, the form a scheduler keeps
+//! N of). Both expose the same `step`/`finish` surface plus the
+//! suspend/resume handoff ([`Run::suspend`] releases the job's pinned
+//! device buffers via one lazy literal sync; [`Run::resume`] re-pins
+//! them), which is what lets a scheduler preempt between steps without
+//! perturbing the math — buffer↔literal state sync is bit-exact.
+//!
+//! Event order for a two-phase RevFFN run with an LM pre-pass:
 //!
 //! ```text
+//! PhaseStarted{stage:0} Step.. PhaseFinished{stage:0}        (lm-prepass)
 //! PhaseStarted{stage:1} Step.. [EvalPoint..] EvalPoint PhaseFinished{stage:1}
 //! PhaseStarted{stage:2} Step.. [EvalPoint..] EvalPoint PhaseFinished{stage:2}
 //! -> step() returns None; finish() yields the TrainReport
@@ -18,17 +29,18 @@
 //!
 //! Every `Step` / `EvalPoint` event mirrors exactly one record in
 //! `trainer.metrics`, so an observer sees the same stream the metrics
-//! sink persists.
+//! sink persists (pre-pass steps record as stage 0).
 
+use std::borrow::{Borrow, BorrowMut};
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::checkpoint;
 use crate::coordinator::lr::lr_at;
 use crate::coordinator::metrics::StepRecord;
-use crate::coordinator::schedule::{plan, Phase};
+use crate::coordinator::schedule::{plan, Phase, PhaseKind};
 use crate::coordinator::trainer::{TrainReport, Trainer};
-use crate::data::dataset::encode_corpus;
+use crate::data::dataset::{encode_corpus, encode_lm_text};
 use crate::data::{Batcher, Pipeline};
 use crate::error::{Error, Result};
 use crate::runtime::accum::GradAccumulator;
@@ -42,7 +54,8 @@ pub enum StepEvent {
     PhaseStarted {
         /// 0-based index into the planned phases.
         phase: usize,
-        /// 1 or 2 — the artifact stage this phase executes.
+        /// Artifact stage this phase executes: 1 or 2, or 0 for the LM
+        /// pre-pass (which runs the `sft` variant).
         stage: u8,
         label: &'static str,
         steps: u64,
@@ -57,28 +70,24 @@ pub enum StepEvent {
     /// metrics eval record.
     EvalPoint { step: u64, eval_loss: f32 },
     /// The phase's final validation ran; its stepper becomes the
-    /// parameter source for the next phase.
+    /// parameter source for the next phase. The LM pre-pass runs no
+    /// validation, so its `eval_loss` is NaN.
     PhaseFinished { phase: usize, stage: u8, eval_loss: f32 },
 }
 
 /// Observer hook: called with every event as it is yielded.
-pub type Observer<'a> = Box<dyn FnMut(&StepEvent) + 'a>;
+pub type Observer = Box<dyn FnMut(&StepEvent)>;
 
-/// An in-flight training run. Create via [`Trainer::start`].
-///
-/// Note: the LM pre-pass (`cfg.data.pretrain_steps`) still executes
-/// eagerly inside [`Trainer::start`], before the first `step()` — it is
-/// not yet part of the event stream (ROADMAP open item).
-pub struct Run<'t, 'd> {
-    trainer: &'t mut Trainer<'d>,
+/// An in-flight training run. Create via [`Trainer::start`] (borrowed)
+/// or [`Trainer::into_run`] (owned — for schedulers).
+pub struct Run<T: BorrowMut<Trainer>> {
+    trainer: T,
     phases: Vec<Phase>,
     phase_idx: usize,
     step_in_phase: u64,
     phase_open: bool,
     /// The live model of the current (or just-finished) phase.
     stepper: Option<Stepper>,
-    /// The LM pre-pass model (parameter source for the first phase).
-    pre: Option<Stepper>,
     /// Prefetching training-batch source (background assembly thread).
     pipeline: Option<Pipeline>,
     /// Device-resident gradient accumulator (buffer path when the
@@ -86,20 +95,20 @@ pub struct Run<'t, 'd> {
     /// created per phase when `grad_accum > 1` and the
     /// method/artifacts support it.
     accum: Option<GradAccumulator>,
+    /// Validation source (absent during the LM pre-pass).
     eval_batcher: Option<Batcher>,
     queue: VecDeque<StepEvent>,
     last_eval: Option<f32>,
-    observer: Option<Observer<'t>>,
+    observer: Option<Observer>,
     finished: bool,
 }
 
-impl<'t, 'd> Run<'t, 'd> {
-    pub(crate) fn new(trainer: &'t mut Trainer<'d>) -> Result<Self> {
-        let phases = plan(&trainer.cfg);
+impl<T: BorrowMut<Trainer>> Run<T> {
+    pub(crate) fn new(trainer: T) -> Result<Self> {
+        let phases = plan(&trainer.borrow().cfg);
         if phases.is_empty() {
             return Err(Error::Config("empty schedule".into()));
         }
-        let pre = trainer.pretrain()?;
         Ok(Run {
             trainer,
             phases,
@@ -107,7 +116,6 @@ impl<'t, 'd> Run<'t, 'd> {
             step_in_phase: 0,
             phase_open: false,
             stepper: None,
-            pre,
             pipeline: None,
             accum: None,
             eval_batcher: None,
@@ -120,7 +128,7 @@ impl<'t, 'd> Run<'t, 'd> {
 
     /// Install an observer invoked with every yielded event (metrics
     /// mirrors, progress bars, remote reporting…).
-    pub fn set_observer<F: FnMut(&StepEvent) + 't>(&mut self, f: F) {
+    pub fn set_observer<F: FnMut(&StepEvent) + 'static>(&mut self, f: F) {
         self.observer = Some(Box::new(f));
     }
 
@@ -146,6 +154,40 @@ impl<'t, 'd> Run<'t, 'd> {
         }
     }
 
+    /// Scheduler preemption surface: release this run's pinned device
+    /// buffers (one lazy `to_literals` sync — the literal state becomes
+    /// authoritative) so another run can own the device's memory. No-op
+    /// when nothing is pinned.
+    pub fn suspend(&mut self) -> Result<()> {
+        if let Some(stepper) = self.stepper.as_mut() {
+            stepper.disable_device_state()?;
+        }
+        Ok(())
+    }
+
+    /// Undo [`Run::suspend`]: re-pin params + moments as device buffers
+    /// for the next quantum. Mirrors `open_phase`'s gating — skipped
+    /// (with automatic literal-path execution) when the run is not
+    /// device-resident, no phase is open, or the accumulate path lacks
+    /// the compiled accum/scale pair.
+    pub fn resume(&mut self) -> Result<()> {
+        let device_resident = self.trainer.borrow().cfg.device_resident;
+        if !device_resident || !self.phase_open {
+            return Ok(());
+        }
+        let use_accum = self.accum.is_some();
+        if let Some(stepper) = self.stepper.as_mut() {
+            if !use_accum || stepper.supports_device_accum() {
+                if let Err(e) = stepper.enable_device_state() {
+                    eprintln!(
+                        "[device] buffer path unavailable on resume ({e}); using literal path"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Drive any remaining steps, then finalize: sync parameters to
     /// host, write `metrics.jsonl`, save the checkpoint if configured,
     /// hand the trained stepper back to the trainer, and summarize.
@@ -155,7 +197,7 @@ impl<'t, 'd> Run<'t, 'd> {
             .stepper
             .take()
             .ok_or_else(|| Error::Config("run finished without executing a phase".into()))?;
-        let trainer = self.trainer;
+        let trainer = self.trainer.borrow_mut();
         stepper.materialize_params()?;
         // training is over: release the pinned device buffers instead
         // of handing back a stepper that holds a full extra copy of
@@ -191,6 +233,14 @@ impl<'t, 'd> Run<'t, 'd> {
         }
         let phase = self.phases[self.phase_idx].clone();
         if !self.phase_open {
+            if phase.kind == PhaseKind::LmPrepass
+                && self.trainer.borrow().prepass_dir().is_none()
+            {
+                // artifact set without an sft variant (pallas-only
+                // dirs): skip the pre-pass, as the eager path used to
+                self.phase_idx += 1;
+                return Ok(());
+            }
             self.open_phase(&phase)?;
             return Ok(());
         }
@@ -203,41 +253,63 @@ impl<'t, 'd> Run<'t, 'd> {
     }
 
     /// Compile the phase's stepper, hand parameters off from the
-    /// previous phase (or the pre-pass), and batch the data.
+    /// previous phase (the LM pre-pass is just an earlier phase), and
+    /// batch the data.
     fn open_phase(&mut self, phase: &Phase) -> Result<()> {
-        let mut stepper = self.trainer.load_stepper(phase.stage)?;
+        let prepass = phase.kind == PhaseKind::LmPrepass;
+        let trainer = self.trainer.borrow_mut();
+        let mut stepper = if prepass {
+            trainer.load_prepass_stepper()?
+        } else {
+            trainer.load_stepper(phase.stage)?
+        };
         if let Some(prev) = self.stepper.as_mut() {
             let params = prev.materialize_params()?;
-            stepper.adopt_params(params)?;
+            let copied = stepper.adopt_params(params)?;
             // release the finished phase's pinned buffers BEFORE the
             // new phase pins its own — never hold two full device
             // states across a stage boundary
             prev.disable_device_state()?;
-        } else if let Some(pre) = self.pre.as_mut() {
-            let params = pre.materialize_params()?;
-            let copied = stepper.adopt_params(params)?;
-            eprintln!("[handoff] adopted {copied} pre-passed tensors");
+            if self.phases[self.phase_idx - 1].kind == PhaseKind::LmPrepass {
+                eprintln!("[handoff] adopted {copied} pre-passed tensors");
+            }
         }
         let (b, s) = stepper.batch_shape();
-        let train_samples = encode_corpus(&self.trainer.tokenizer, &self.trainer.corpus.train, s);
-        let eval_samples = encode_corpus(&self.trainer.tokenizer, &self.trainer.corpus.eval, s);
+        // the pre-pass trains next-token prediction on the raw corpus
+        // text; fine-tuning phases train on the instruction pairs
+        let (train_samples, batch_seed) = if prepass {
+            (
+                encode_lm_text(&trainer.tokenizer, &trainer.corpus.pretrain_text(), s),
+                trainer.cfg.seed ^ 0xface,
+            )
+        } else {
+            (
+                encode_corpus(&trainer.tokenizer, &trainer.corpus.train, s),
+                trainer.cfg.seed,
+            )
+        };
         if train_samples.is_empty() {
             return Err(Error::Config(format!("no training samples fit seq_len {s}")));
         }
-        let grad_accum = self.trainer.cfg.grad_accum;
-        let seed = self.trainer.cfg.seed;
-        let device_resident = self.trainer.cfg.device_resident;
-        let supports_ga = self.trainer.cfg.method.supports_grad_accum();
+        let grad_accum = if prepass { 1 } else { trainer.cfg.grad_accum };
+        let seed = trainer.cfg.seed;
+        let device_resident = trainer.cfg.device_resident;
+        let supports_ga = trainer.cfg.method.supports_grad_accum();
         // training batches are assembled on a background thread so the
         // gather/copy overlaps device execution; the prefetch depth
         // scales with grad_accum (an optimizer step drains that many
         // batches back to back). Validation stays a plain synchronous
         // batcher (it streams lazily).
         self.pipeline = Some(Pipeline::spawn_with_depth(
-            Batcher::new(train_samples, b, s, seed),
+            Batcher::new(train_samples, b, s, batch_seed),
             Pipeline::depth_for(grad_accum),
         ));
-        self.eval_batcher = Some(Batcher::new(eval_samples, b, s, seed));
+        self.eval_batcher = if prepass {
+            None
+        } else {
+            let eval_samples = encode_corpus(&trainer.tokenizer, &trainer.corpus.eval, s);
+            Some(Batcher::new(eval_samples, b, s, seed))
+        };
         let use_accum = grad_accum > 1 && supports_ga && stepper.supports_accumulation();
         self.accum = use_accum.then(|| GradAccumulator::for_stepper(&stepper));
         // Device-resident execution (cfg.device_resident, default on):
@@ -272,11 +344,18 @@ impl<'t, 'd> Run<'t, 'd> {
     /// recorded `grad_norm` is the mean-gradient norm in both paths,
     /// and `device_time_s` counts the same thing in both — PJRT execute
     /// seconds — so the paths report comparable per-sample throughput.
+    /// The LM pre-pass always runs single fused steps at a flat LR.
     fn train_one(&mut self, phase: &Phase) -> Result<()> {
+        let prepass = phase.kind == PhaseKind::LmPrepass;
         let step = self.step_in_phase;
-        let ga = self.trainer.cfg.grad_accum;
-        let eval_every = self.trainer.cfg.eval_every;
-        let lr = lr_at(&self.trainer.cfg.schedule, phase.peak_lr, step, phase.steps);
+        let trainer = self.trainer.borrow_mut();
+        let ga = if prepass { 1 } else { trainer.cfg.grad_accum };
+        let eval_every = if prepass { 0 } else { trainer.cfg.eval_every };
+        let lr = if prepass {
+            phase.peak_lr
+        } else {
+            lr_at(&trainer.cfg.schedule, phase.peak_lr, step, phase.steps)
+        };
 
         let stepper = self.stepper.as_mut().expect("phase open");
         let pipeline = self.pipeline.as_mut().expect("phase open");
@@ -357,7 +436,7 @@ impl<'t, 'd> Run<'t, 'd> {
             device_time_s: device_s,
             samples_per_s: samples / time_acc.max(1e-9),
         };
-        self.trainer.metrics.record_step(rec.clone());
+        trainer.metrics.record_step(rec.clone());
         self.queue.push_back(StepEvent::Step(rec));
 
         if eval_every > 0 && (step + 1) % eval_every == 0 {
@@ -462,9 +541,14 @@ impl<'t, 'd> Run<'t, 'd> {
         Ok((loss_acc, aux_acc, device_s, grad_norm))
     }
 
-    /// End-of-phase validation, then rotate to the next phase.
+    /// End-of-phase validation (skipped for the LM pre-pass, which has
+    /// no eval objective), then rotate to the next phase.
     fn close_phase(&mut self, phase: &Phase) -> Result<()> {
-        let eval_loss = self.validate_now()?;
+        let eval_loss = if phase.kind == PhaseKind::LmPrepass {
+            f32::NAN
+        } else {
+            self.validate_now()?
+        };
         self.queue.push_back(StepEvent::PhaseFinished {
             phase: self.phase_idx,
             stage: phase.stage,
@@ -478,10 +562,11 @@ impl<'t, 'd> Run<'t, 'd> {
     /// Run a validation pass, record it, and queue its event.
     fn validate_now(&mut self) -> Result<f32> {
         let stepper = self.stepper.as_ref().expect("phase open");
-        let eval_batcher = self.eval_batcher.as_ref().expect("phase open");
-        let eval_loss = self.trainer.validate(stepper, eval_batcher)?;
+        let eval_batcher = self.eval_batcher.as_ref().expect("phase has eval data");
+        let trainer = self.trainer.borrow_mut();
+        let eval_loss = trainer.validate(stepper, eval_batcher)?;
         let at = stepper.step;
-        self.trainer.metrics.record_eval(at, eval_loss);
+        trainer.metrics.record_eval(at, eval_loss);
         self.last_eval = Some(eval_loss);
         self.queue.push_back(StepEvent::EvalPoint { step: at, eval_loss });
         Ok(eval_loss)

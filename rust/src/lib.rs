@@ -45,6 +45,11 @@
 //!
 //! (`trainer.run()` remains as the blocking wrapper over the same loop.)
 //!
+//! Many runs can share one device: `revffn serve` ([`serve`]) drives N
+//! owned runs round-robin with peak-VRAM admission control and streams
+//! their events over a JSON-lines TCP control plane — see
+//! `docs/SERVE.md`.
+//!
 //! Inference and evaluation load through the session facade:
 //!
 //! ```no_run
@@ -67,6 +72,7 @@ pub mod error;
 pub mod eval;
 pub mod memory;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use engine::{Method, Run, Session, SessionBuilder, StepEvent};

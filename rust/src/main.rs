@@ -16,12 +16,16 @@
 //! * `reconstruct`  — measure reversible reconstruction error (§3.1) via
 //!                    `SessionBuilder::build_program`.
 //! * `generate`     — `Session::generate` autoregressive decoding.
+//! * `serve`        — the multi-run scheduling/serving control plane
+//!                    (`serve::serve`): N concurrent jobs over one
+//!                    device, admission-controlled by the analytic
+//!                    memory model, streaming NDJSON events over TCP.
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use revffn::config::RunConfig;
+use revffn::config::{PriceGeometry, RunConfig, ServeConfig};
 use revffn::coordinator::Trainer;
 use revffn::data::synthetic::{Corpus, CorpusConfig};
 use revffn::engine::{Method, Session};
@@ -46,6 +50,10 @@ COMMANDS:
   reconstruct   [--artifacts DIR]
   generate      --prompt TEXT [--artifacts DIR] [--method M] [--checkpoint F]
                 [--max-new-tokens N] [--temperature T] [--top-k K]
+  serve         [--artifacts DIR] [--addr HOST:PORT] [--budget-gb G]
+                [--quantum N] [--assumptions bf16_mixed|paper|f32]
+                [--price-geometry manifest|qwen] [--run-root DIR]
+                [--config FILE.json]
 
 METHODS: sft | lora | dora | ia3 | lomo | galore | revffn
 ";
@@ -65,6 +73,7 @@ fn main() -> Result<()> {
         "gen-data" => cmd_gen_data(&flags),
         "reconstruct" => cmd_reconstruct(&flags),
         "generate" => cmd_generate(&flags),
+        "serve" => cmd_serve(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -181,13 +190,48 @@ fn cmd_reconstruct(f: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let mut opts = match f.opt("config") {
+        Some(p) => ServeConfig::from_json_str(&std::fs::read_to_string(&p)?)
+            .map_err(|e| anyhow!("loading {p}: {e}"))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(v) = f.opt("artifacts") {
+        opts.artifacts = v.into();
+    }
+    if let Some(v) = f.opt("addr") {
+        opts.addr = v;
+    }
+    opts.budget_gb = f.f64("budget_gb", opts.budget_gb).map_err(|e| anyhow!("{e}"))?;
+    opts.quantum = f.u64("quantum", opts.quantum).map_err(|e| anyhow!("{e}"))?;
+    if let Some(v) = f.opt("assumptions") {
+        opts.assumptions = v;
+    }
+    if let Some(v) = f.opt("price_geometry") {
+        opts.price_geometry = PriceGeometry::parse(&v).map_err(|e| anyhow!("{e}"))?;
+    }
+    if let Some(v) = f.opt("run_root") {
+        opts.run_root = v.into();
+    }
+    opts.validate().map_err(|e| anyhow!("{e}"))?;
+    let handle = revffn::serve::serve(opts.clone()).map_err(|e| anyhow!("{e}"))?;
+    eprintln!(
+        "[serve] listening on {} — budget {:.3} GB, quantum {}, pricing {} @ {}",
+        handle.addr(),
+        opts.budget_gb,
+        opts.quantum,
+        opts.assumptions,
+        opts.price_geometry.name()
+    );
+    eprintln!(
+        "[serve] NDJSON verbs: submit | status | events | cancel | shutdown (docs/SERVE.md)"
+    );
+    handle.join().map_err(|e| anyhow!("{e}"))
+}
+
 fn cmd_plan_memory(f: &Flags) -> Result<()> {
     let assumptions = f.str("assumptions", "bf16_mixed");
-    let assume = match assumptions.as_str() {
-        "paper" => Assumptions::paper_calibrated(),
-        "f32" => Assumptions::f32_exact(),
-        _ => Assumptions::bf16_mixed(),
-    };
+    let assume = Assumptions::parse(&assumptions).map_err(|e| anyhow!("{e}"))?;
     let seq = f.u64("seq", 2048).map_err(|e| anyhow!("{e}"))?;
     let budget = f.f64("budget_gb", 80.0).map_err(|e| anyhow!("{e}"))?;
     let batch = f.opt("batch").map(|b| b.parse()).transpose()?;

@@ -154,6 +154,19 @@ pub struct Assumptions {
 }
 
 impl Assumptions {
+    /// Parse a named preset: `"bf16_mixed"`, `"paper"`, or `"f32"`
+    /// (the CLI `--assumptions` / serve-config vocabulary).
+    pub fn parse(name: &str) -> crate::error::Result<Self> {
+        match name {
+            "bf16_mixed" => Ok(Assumptions::bf16_mixed()),
+            "paper" => Ok(Assumptions::paper_calibrated()),
+            "f32" => Ok(Assumptions::f32_exact()),
+            other => Err(crate::error::Error::Config(format!(
+                "unknown assumptions preset {other:?}; expected bf16_mixed | paper | f32"
+            ))),
+        }
+    }
+
     /// bf16 compute, fp32 moments + master — the standard mixed-precision
     /// recipe (our principled default).
     pub fn bf16_mixed() -> Self {
@@ -535,5 +548,13 @@ mod tests {
     fn max_batch_zero_when_weights_dont_fit() {
         let m = model();
         assert_eq!(m.max_batch(Method::SftCheckpoint, 2048, 1.0), 0);
+    }
+
+    #[test]
+    fn assumptions_presets_parse_by_name() {
+        assert!(Assumptions::parse("bf16_mixed").unwrap().master_weights);
+        assert!(!Assumptions::parse("paper").unwrap().master_weights);
+        assert_eq!(Assumptions::parse("f32").unwrap().w_bytes, 4.0);
+        assert!(Assumptions::parse("fp8").is_err());
     }
 }

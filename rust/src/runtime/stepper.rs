@@ -118,6 +118,12 @@ pub struct Stepper {
     /// The buffer path completed a state-mutating step at least once,
     /// so its output convention is known-good on this runtime.
     buffers_verified: bool,
+    /// The buffer path failed its first probe on this runtime
+    /// (execute/arity) — permanently literal for this stepper's life.
+    /// [`Stepper::enable_device_state`] becomes a no-op, so
+    /// suspend/resume cycles (the serve scheduler preempts between
+    /// quanta) never re-upload state just to re-fail the probe.
+    buffer_path_unsupported: bool,
     /// Literal-facing state: fed by reference on the literal path.
     param_lits: Vec<Literal>,
     m_lits: Vec<Literal>,
@@ -168,6 +174,7 @@ impl Stepper {
             device_state: None,
             lits_dirty: false,
             buffers_verified: false,
+            buffer_path_unsupported: false,
             param_lits,
             m_lits,
             v_lits,
@@ -183,9 +190,11 @@ impl Stepper {
     }
 
     /// Pin params + moments as persistent device buffers and route
-    /// subsequent steps through `Program::run_buffers`. Idempotent.
+    /// subsequent steps through `Program::run_buffers`. Idempotent —
+    /// and a silent no-op once the buffer path has failed its probe on
+    /// this stepper (the fallback to literals is permanent).
     pub fn enable_device_state(&mut self) -> Result<()> {
-        if self.device_state.is_some() {
+        if self.device_state.is_some() || self.buffer_path_unsupported {
             return Ok(());
         }
         // literal state is current here: lits_dirty is only ever set
@@ -236,6 +245,7 @@ impl Stepper {
             ));
         }
         self.device_state = None;
+        self.buffer_path_unsupported = true;
         Ok(())
     }
 
@@ -382,6 +392,7 @@ impl Stepper {
                         "[device] buffer path unavailable ({e}); falling back to literal path"
                     );
                     self.device_state = None;
+                    self.buffer_path_unsupported = true;
                 }
                 Err(e) => return Err(e),
             }

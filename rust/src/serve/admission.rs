@@ -1,0 +1,209 @@
+//! Admission control: price each submitted job's peak VRAM with the
+//! analytic memory model and admit only while the sum fits the budget.
+//!
+//! This turns `memory::model` from a reporting tool into an operational
+//! gate, and it is where RevFFN's depth-independent activation live-set
+//! (§3.1) becomes a serving property instead of a table row: at the
+//! same `budget_gb`, more concurrent RevFFN fine-tuning jobs are
+//! admitted than SFT jobs, because each prices a smaller peak — the gap
+//! grows with batch·seq·layers (LOMO-style work, arXiv 2306.09782,
+//! similarly treats the memory budget as the first-class scheduling
+//! constraint). A job's price is fixed at submit time; the scheduler
+//! releases the reservation when the job finishes, fails, or is
+//! cancelled.
+
+use std::path::Path;
+
+use crate::engine::Method;
+use crate::error::Result;
+use crate::memory::{Assumptions, Geometry, MemoryModel};
+use crate::runtime::artifact::Artifact;
+
+/// Peak-VRAM price (GB) of one job at a geometry/method/batch/seq.
+pub fn price(geo: &Geometry, method: Method, assume: Assumptions, batch: u64, seq: u64) -> f64 {
+    MemoryModel::new(geo.clone(), assume).peak_gb(method.memory_method(), batch, seq)
+}
+
+/// A submitted job priced for admission.
+#[derive(Debug, Clone)]
+pub struct PricedJob {
+    pub peak_gb: f64,
+    pub batch: u64,
+    pub seq: u64,
+    /// Name of the geometry the price was computed at.
+    pub geometry: String,
+}
+
+/// Price a job from its artifact set: batch/seq come from the method's
+/// eval-variant manifest; the geometry does too unless `geometry`
+/// overrides it (e.g. pricing a tiny-artifact job at Qwen scale). Only
+/// the manifest is read — no XLA work.
+pub fn price_job(
+    artifacts: &Path,
+    method: Method,
+    assume: Assumptions,
+    geometry: Option<Geometry>,
+) -> Result<PricedJob> {
+    let artifact = Artifact::load(artifacts.join(method.eval_variant()))?;
+    let io = &artifact.manifest.io;
+    let (batch, seq) = (io.batch_size as u64, io.seq_len as u64);
+    let geo = geometry.unwrap_or_else(|| Geometry::from_manifest(&artifact.manifest.model));
+    Ok(PricedJob {
+        peak_gb: price(&geo, method, assume, batch, seq),
+        batch,
+        seq,
+        geometry: geo.name.clone(),
+    })
+}
+
+/// The budget ledger: tracks the summed peak-GB of admitted jobs.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    budget_gb: f64,
+    committed_gb: f64,
+    admitted: usize,
+}
+
+impl Admission {
+    pub fn new(budget_gb: f64) -> Self {
+        Admission { budget_gb, committed_gb: 0.0, admitted: 0 }
+    }
+
+    /// Reserve `peak_gb` if it fits. The comparison carries a tiny
+    /// relative epsilon so releasing and re-admitting identical jobs
+    /// never flips on accumulated float rounding.
+    pub fn try_admit(&mut self, peak_gb: f64) -> bool {
+        if self.committed_gb + peak_gb <= self.budget_gb * (1.0 + 1e-9) {
+            self.committed_gb += peak_gb;
+            self.admitted += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return a finished/cancelled job's reservation to the pool. When
+    /// the last job leaves, the ledger snaps back to exactly zero so
+    /// rounding drift cannot accumulate across job generations.
+    pub fn release(&mut self, peak_gb: f64) {
+        self.admitted = self.admitted.saturating_sub(1);
+        self.committed_gb = if self.admitted == 0 {
+            0.0
+        } else {
+            (self.committed_gb - peak_gb).max(0.0)
+        };
+    }
+
+    pub fn budget_gb(&self) -> f64 {
+        self.budget_gb
+    }
+
+    pub fn committed_gb(&self) -> f64 {
+        self.committed_gb
+    }
+
+    pub fn headroom_gb(&self) -> f64 {
+        (self.budget_gb - self.committed_gb).max(0.0)
+    }
+
+    /// Number of currently admitted jobs.
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fine-tuning-shaped workload where activations matter: deep
+    /// model, large batch, long sequences.
+    fn deep_geo() -> Geometry {
+        let mut g = Geometry::qwen15_moe_a27b();
+        g.n_layers = 48;
+        g
+    }
+
+    fn fit_count(geo: &Geometry, method: Method, budget_gb: f64) -> usize {
+        let p = price(geo, method, Assumptions::paper_calibrated(), 256, 4096);
+        let mut adm = Admission::new(budget_gb);
+        let mut n = 0;
+        while adm.try_admit(p) {
+            n += 1;
+            assert!(n < 1000, "runaway admission");
+        }
+        n
+    }
+
+    #[test]
+    fn revffn_prices_below_sft_at_training_shapes() {
+        let geo = deep_geo();
+        let a = Assumptions::paper_calibrated();
+        let rev = price(&geo, Method::Revffn, a, 256, 4096);
+        let sft = price(&geo, Method::Sft, a, 256, 4096);
+        assert!(rev < sft, "revffn {rev:.1} GB must undercut sft {sft:.1} GB");
+    }
+
+    #[test]
+    fn more_revffn_jobs_fit_than_sft_under_same_budget() {
+        // The acceptance-criterion property: RevFFN jobs price
+        // depth-independent activations, so a fixed budget admits more
+        // of them concurrently than SFT jobs.
+        let geo = deep_geo();
+        let sft_price = price(&geo, Method::Sft, Assumptions::paper_calibrated(), 256, 4096);
+        let budget = 4.5 * sft_price;
+        let n_sft = fit_count(&geo, Method::Sft, budget);
+        let n_rev = fit_count(&geo, Method::Revffn, budget);
+        assert!(n_sft >= 1);
+        assert!(
+            n_rev > n_sft,
+            "same budget must admit more revffn jobs: {n_rev} vs {n_sft}"
+        );
+    }
+
+    #[test]
+    fn revffn_price_grows_slower_with_depth_than_sft() {
+        // Doubling depth adds weights for everyone, but activation
+        // growth only for non-reversible methods.
+        let a = Assumptions::paper_calibrated();
+        let mut g = Geometry::qwen15_moe_a27b();
+        g.n_layers = 24;
+        let rev24 = price(&g, Method::Revffn, a, 64, 2048);
+        let sft24 = price(&g, Method::Sft, a, 64, 2048);
+        g.n_layers = 96;
+        let rev96 = price(&g, Method::Revffn, a, 64, 2048);
+        let sft96 = price(&g, Method::Sft, a, 64, 2048);
+        assert!(rev96 - rev24 < sft96 - sft24);
+    }
+
+    #[test]
+    fn release_frees_budget_for_queued_jobs() {
+        let mut adm = Admission::new(10.0);
+        assert!(adm.try_admit(6.0));
+        assert!(!adm.try_admit(6.0), "second job must not fit");
+        adm.release(6.0);
+        assert_eq!(adm.admitted(), 0);
+        assert_eq!(adm.committed_gb(), 0.0);
+        assert!(adm.try_admit(6.0), "released budget must re-admit");
+    }
+
+    #[test]
+    fn admission_ledger_tracks_sums() {
+        let mut adm = Admission::new(10.0);
+        assert!(adm.try_admit(3.0));
+        assert!(adm.try_admit(4.0));
+        assert!((adm.committed_gb() - 7.0).abs() < 1e-12);
+        assert!((adm.headroom_gb() - 3.0).abs() < 1e-12);
+        assert_eq!(adm.admitted(), 2);
+        assert!(!adm.try_admit(3.5));
+        adm.release(3.0);
+        assert!(adm.try_admit(3.5));
+    }
+
+    #[test]
+    fn single_job_over_budget_never_admits() {
+        let mut adm = Admission::new(1.0);
+        assert!(!adm.try_admit(1.5));
+        assert_eq!(adm.admitted(), 0);
+    }
+}

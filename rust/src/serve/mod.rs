@@ -1,0 +1,34 @@
+//! `revffn serve` — multi-run scheduling and serving with memory-model
+//! admission control.
+//!
+//! The subsystem that turns the step-granular engine into a multi-tenant
+//! service: N fine-tuning jobs share one device, interleaved at
+//! `StepEvent` granularity, admitted against an analytic peak-VRAM
+//! budget. Four pieces:
+//!
+//! * [`admission`] — prices each submitted job with `memory::model` at
+//!   its geometry/method and admits while the priced peaks fit
+//!   `budget_gb`. RevFFN jobs price depth-independent activations, so a
+//!   fixed budget admits more of them than SFT jobs (unit-tested).
+//! * [`scheduler`] — a cooperative round-robin [`Scheduler`] over owned
+//!   [`crate::engine::Run`]s, with per-job `DeviceState` handoff (pin
+//!   buffers on resume, release via a lazy literal sync on preemption)
+//!   and deterministic interleaving given the submission order.
+//! * [`protocol`] — the JSON-lines wire format (`submit` / `status` /
+//!   `events` / `cancel` / `shutdown`), built on the in-crate codec.
+//! * [`server`] — the `std::net` TCP control plane streaming each job's
+//!   `StepEvent`s as NDJSON.
+//!
+//! Entry points: `revffn serve` in the CLI, [`server::serve`] in code,
+//! or a bare [`Scheduler`] for in-process multiplexing (how
+//! `tests/serve.rs` pins solo-vs-interleaved bit-identity).
+
+pub mod admission;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use admission::Admission;
+pub use protocol::{JobState, Request};
+pub use scheduler::{Board, JobView, Scheduler, SubmitOutcome};
+pub use server::{serve, ServerHandle};

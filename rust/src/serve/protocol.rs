@@ -1,0 +1,401 @@
+//! The serve wire protocol: JSON-lines (NDJSON) over TCP.
+//!
+//! Every request and response is one JSON object per line. Four verbs:
+//!
+//! * `{"cmd":"submit","config":{…RunConfig…},"name":"…"}` →
+//!   `{"ok":true,"job":"job-0","admitted":true,"peak_gb":…}`
+//! * `{"cmd":"status"}` / `{"cmd":"status","job":"job-0"}` → one
+//!   status object with the budget ledger and per-job snapshots.
+//! * `{"cmd":"events","job":"job-0","from":0,"follow":true}` → streams
+//!   the job's `StepEvent`s as NDJSON lines, then a
+//!   `{"job":…,"done":true,…}` terminator (follow=false returns what
+//!   exists and terminates immediately).
+//! * `{"cmd":"cancel","job":"job-0"}` → `{"ok":true,"cancelled":…}`.
+//!
+//! Plus `{"cmd":"shutdown"}` to stop the server (tests, smoke scripts).
+//!
+//! Everything (de)serializes through the in-crate `util::json` codec —
+//! the wire format needs no dependency the build doesn't already carry.
+//! Non-finite floats (the pre-pass's NaN eval loss) serialize as JSON
+//! `null`, never as bare `NaN`.
+
+use crate::engine::StepEvent;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json, ObjBuilder};
+
+/// Lifecycle state of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Priced over the current headroom; waiting for budget (FIFO).
+    Queued,
+    /// Admitted and being driven by the scheduler.
+    Running,
+    Finished,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Finished => "finished",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "finished" => Ok(JobState::Finished),
+            "failed" => Ok(JobState::Failed),
+            "cancelled" => Ok(JobState::Cancelled),
+            other => Err(Error::Parse(format!("unknown job state {other:?}"))),
+        }
+    }
+
+    /// No further events will be produced in this state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Finished | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One parsed control-plane request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit { config: Json, name: Option<String> },
+    Status { job: Option<String> },
+    Events { job: String, from: u64, follow: bool },
+    Cancel { job: String },
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { config, name } => {
+                let mut b = ObjBuilder::new().str("cmd", "submit").val("config", config.clone());
+                if let Some(n) = name {
+                    b = b.str("name", n.clone());
+                }
+                b.build()
+            }
+            Request::Status { job } => {
+                let mut b = ObjBuilder::new().str("cmd", "status");
+                if let Some(j) = job {
+                    b = b.str("job", j.clone());
+                }
+                b.build()
+            }
+            Request::Events { job, from, follow } => ObjBuilder::new()
+                .str("cmd", "events")
+                .str("job", job.clone())
+                .num("from", *from as f64)
+                .bool("follow", *follow)
+                .build(),
+            Request::Cancel { job } => {
+                ObjBuilder::new().str("cmd", "cancel").str("job", job.clone()).build()
+            }
+            Request::Shutdown => ObjBuilder::new().str("cmd", "shutdown").build(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let cmd = j.str_of("cmd")?;
+        match cmd.as_str() {
+            "submit" => Ok(Request::Submit {
+                config: j.get("config").cloned().unwrap_or_else(|| Json::Obj(Default::default())),
+                name: j.get("name").and_then(Json::as_str).map(str::to_string),
+            }),
+            "status" => Ok(Request::Status {
+                job: j.get("job").and_then(Json::as_str).map(str::to_string),
+            }),
+            "events" => Ok(Request::Events {
+                job: j.str_of("job")?,
+                from: j.get("from").and_then(Json::as_u64).unwrap_or(0),
+                follow: j.get("follow").and_then(Json::as_bool).unwrap_or(true),
+            }),
+            "cancel" => Ok(Request::Cancel { job: j.str_of("job")? }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::Parse(format!("unknown cmd {other:?}"))),
+        }
+    }
+
+    /// One NDJSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_line(line: &str) -> Result<Request> {
+        Self::from_json(&json::parse(line.trim())?)
+    }
+}
+
+/// JSON number, or `null` when non-finite (NaN eval losses) — bare
+/// `NaN` is not valid JSON and would corrupt the stream.
+pub fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Serialize one job `StepEvent` as an NDJSON event line. `seq` is the
+/// job-local event sequence number (the `from` cursor of the `events`
+/// verb indexes it).
+pub fn event_json(job: &str, seq: u64, ev: &StepEvent) -> Json {
+    let b = ObjBuilder::new().str("job", job).num("seq", seq as f64);
+    match ev {
+        StepEvent::PhaseStarted { phase, stage, label, steps, peak_lr, batch_size, seq_len } => b
+            .str("type", "phase_started")
+            .num("phase", *phase as f64)
+            .num("stage", *stage as f64)
+            .str("label", *label)
+            .num("steps", *steps as f64)
+            .val("peak_lr", num_or_null(*peak_lr as f64))
+            .num("batch_size", *batch_size as f64)
+            .num("seq_len", *seq_len as f64)
+            .build(),
+        StepEvent::Step(rec) => b
+            .str("type", "step")
+            .num("step", rec.step as f64)
+            .num("stage", rec.stage as f64)
+            .val("loss", num_or_null(rec.loss as f64))
+            .val("lr", num_or_null(rec.lr as f64))
+            .val("grad_norm", num_or_null(rec.grad_norm as f64))
+            .val("router_aux", num_or_null(rec.router_aux as f64))
+            .num("step_time_s", rec.step_time_s)
+            .num("device_time_s", rec.device_time_s)
+            .num("samples_per_s", rec.samples_per_s)
+            .build(),
+        StepEvent::EvalPoint { step, eval_loss } => b
+            .str("type", "eval")
+            .num("step", *step as f64)
+            .val("eval_loss", num_or_null(*eval_loss as f64))
+            .build(),
+        StepEvent::PhaseFinished { phase, stage, eval_loss } => b
+            .str("type", "phase_finished")
+            .num("phase", *phase as f64)
+            .num("stage", *stage as f64)
+            .val("eval_loss", num_or_null(*eval_loss as f64))
+            .build(),
+    }
+}
+
+/// End-of-stream marker for the `events` verb.
+pub fn done_json(job: &str, state: JobState, events: u64) -> Json {
+    ObjBuilder::new()
+        .str("job", job)
+        .bool("done", true)
+        .str("state", state.name())
+        .num("events", events as f64)
+        .build()
+}
+
+/// Public snapshot of one job (the `status` verb's row).
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    pub id: String,
+    pub name: String,
+    pub method: String,
+    pub state: JobState,
+    pub peak_gb: f64,
+    /// Optimizer steps recorded so far.
+    pub steps_done: u64,
+    pub last_loss: Option<f32>,
+    pub eval_loss: Option<f32>,
+    /// Events produced so far (the `events` verb's cursor space).
+    pub events: u64,
+    pub error: Option<String>,
+}
+
+pub fn snapshot_json(s: &JobSnapshot) -> Json {
+    let mut b = ObjBuilder::new()
+        .str("id", s.id.clone())
+        .str("name", s.name.clone())
+        .str("method", s.method.clone())
+        .str("state", s.state.name())
+        .num("peak_gb", s.peak_gb)
+        .num("steps_done", s.steps_done as f64)
+        .val("last_loss", s.last_loss.map_or(Json::Null, |x| num_or_null(x as f64)))
+        .val("eval_loss", s.eval_loss.map_or(Json::Null, |x| num_or_null(x as f64)))
+        .num("events", s.events as f64);
+    if let Some(e) = &s.error {
+        b = b.str("error", e.clone());
+    }
+    b.build()
+}
+
+/// The full `status` response: budget ledger + job table.
+pub fn status_json(jobs: &[JobSnapshot], budget_gb: f64, committed_gb: f64) -> Json {
+    ObjBuilder::new()
+        .bool("ok", true)
+        .num("budget_gb", budget_gb)
+        .num("committed_gb", committed_gb)
+        .val("jobs", Json::Arr(jobs.iter().map(snapshot_json).collect()))
+        .build()
+}
+
+pub fn ok_json() -> Json {
+    ObjBuilder::new().bool("ok", true).build()
+}
+
+pub fn error_json(message: &str) -> Json {
+    ObjBuilder::new().bool("ok", false).str("error", message).build()
+}
+
+/// Response to a successful `submit`. `state` disambiguates
+/// `admitted:false` — `queued` will run later; `failed` never will
+/// (activation errored; the `status` verb carries the error text).
+pub fn submitted_json(job: &str, admitted: bool, peak_gb: f64, state: JobState) -> Json {
+    ObjBuilder::new()
+        .bool("ok", true)
+        .str("job", job)
+        .bool("admitted", admitted)
+        .num("peak_gb", peak_gb)
+        .str("state", state.name())
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::StepRecord;
+
+    #[test]
+    fn requests_roundtrip_through_lines() {
+        let cases = vec![
+            Request::Submit {
+                config: json::parse(r#"{"method":"revffn","eval_every":0}"#).unwrap(),
+                name: Some("job-a".into()),
+            },
+            Request::Submit {
+                config: json::parse("{}").unwrap(),
+                name: None,
+            },
+            Request::Status { job: None },
+            Request::Status { job: Some("job-3".into()) },
+            Request::Events { job: "job-0".into(), from: 17, follow: false },
+            Request::Cancel { job: "job-1".into() },
+            Request::Shutdown,
+        ];
+        for req in cases {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "one line per request");
+            let back = Request::from_line(&line).unwrap();
+            assert_eq!(back, req, "roundtrip failed for {line}");
+        }
+    }
+
+    #[test]
+    fn events_defaults_follow_and_from() {
+        let r = Request::from_line(r#"{"cmd":"events","job":"job-0"}"#).unwrap();
+        assert_eq!(r, Request::Events { job: "job-0".into(), from: 0, follow: true });
+    }
+
+    #[test]
+    fn unknown_cmd_rejected() {
+        assert!(Request::from_line(r#"{"cmd":"resubmit"}"#).is_err());
+        assert!(Request::from_line("not json").is_err());
+        assert!(Request::from_line(r#"{"cmd":"cancel"}"#).is_err(), "cancel needs a job");
+    }
+
+    #[test]
+    fn step_event_serializes_and_parses() {
+        let rec = StepRecord {
+            step: 7,
+            stage: 2,
+            loss: 1.25,
+            lr: 3e-4,
+            grad_norm: 0.5,
+            router_aux: 0.01,
+            step_time_s: 0.125,
+            device_time_s: 0.1,
+            samples_per_s: 64.0,
+        };
+        let j = event_json("job-0", 3, &StepEvent::Step(rec));
+        let line = j.to_string();
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back.str_of("type").unwrap(), "step");
+        assert_eq!(back.str_of("job").unwrap(), "job-0");
+        assert_eq!(back.u64_of("seq").unwrap(), 3);
+        assert_eq!(back.f64_of("loss").unwrap(), 1.25);
+        assert_eq!(back.u64_of("step").unwrap(), 7);
+    }
+
+    #[test]
+    fn nan_eval_loss_serializes_as_null() {
+        // the LM pre-pass finishes with a NaN eval loss — bare NaN
+        // would corrupt the NDJSON stream
+        let j = event_json(
+            "job-0",
+            9,
+            &StepEvent::PhaseFinished { phase: 0, stage: 0, eval_loss: f32::NAN },
+        );
+        let line = j.to_string();
+        let back = json::parse(&line).unwrap();
+        assert_eq!(back.req("eval_loss").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn phase_started_carries_shape() {
+        let ev = StepEvent::PhaseStarted {
+            phase: 1,
+            stage: 2,
+            label: "stage2-joint-finetune",
+            steps: 170,
+            peak_lr: 3e-4,
+            batch_size: 8,
+            seq_len: 128,
+        };
+        let back = json::parse(&event_json("j", 0, &ev).to_string()).unwrap();
+        assert_eq!(back.u64_of("steps").unwrap(), 170);
+        assert_eq!(back.u64_of("seq_len").unwrap(), 128);
+        assert_eq!(back.str_of("label").unwrap(), "stage2-joint-finetune");
+    }
+
+    #[test]
+    fn status_and_done_shapes() {
+        let snap = JobSnapshot {
+            id: "job-0".into(),
+            name: "a".into(),
+            method: "revffn".into(),
+            state: JobState::Running,
+            peak_gb: 1.5,
+            steps_done: 4,
+            last_loss: Some(2.0),
+            eval_loss: None,
+            events: 6,
+            error: None,
+        };
+        let st = json::parse(&status_json(&[snap], 8.0, 1.5).to_string()).unwrap();
+        assert!(st.bool_of("ok").unwrap());
+        assert_eq!(st.f64_of("budget_gb").unwrap(), 8.0);
+        let jobs = st.arr_of("jobs").unwrap();
+        assert_eq!(jobs[0].str_of("state").unwrap(), "running");
+        assert_eq!(jobs[0].req("eval_loss").unwrap(), &Json::Null);
+
+        let done = json::parse(&done_json("job-0", JobState::Finished, 6).to_string()).unwrap();
+        assert!(done.bool_of("done").unwrap());
+        assert_eq!(done.str_of("state").unwrap(), "finished");
+    }
+
+    #[test]
+    fn job_states_roundtrip() {
+        for s in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Finished,
+            JobState::Failed,
+            JobState::Cancelled,
+        ] {
+            assert_eq!(JobState::parse(s.name()).unwrap(), s);
+        }
+        assert!(!JobState::Queued.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
+    }
+}

@@ -1,0 +1,406 @@
+//! The cooperative multi-run scheduler.
+//!
+//! One `Scheduler` owns one shared [`Device`] and drives every admitted
+//! job's [`Run`] round-robin: each [`Scheduler::tick`] resumes the next
+//! active job (re-pinning its params + moments as device buffers),
+//! yields up to `quantum` [`StepEvent`]s from it, then — if another job
+//! is waiting for the device — suspends it again (one lazy
+//! `to_literals` sync releases the pinned buffers). Buffer↔literal
+//! state sync is bit-exact (pinned by `tests/hotpath.rs`), so an
+//! interleaved job computes exactly what it would have computed solo;
+//! `tests/serve.rs` asserts the losses are bit-identical.
+//!
+//! Scheduling is deterministic given the submission order: admission is
+//! strict FIFO (a queued job is never overtaken, even by a smaller
+//! one), the round-robin order is the admission order, and the quantum
+//! is fixed. Every yielded event is serialized onto the shared
+//! [`Board`] (an `Arc<Mutex<_>>` the TCP handlers read), so the control
+//! plane streams live NDJSON without touching the device thread.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{PriceGeometry, RunConfig, ServeConfig};
+use crate::coordinator::{TrainReport, Trainer};
+use crate::engine::{Run, StepEvent};
+use crate::error::{Error, Result};
+use crate::memory::{Assumptions, Geometry};
+use crate::runtime::pjrt::{Device, ProgramCache};
+use crate::serve::admission::{self, Admission};
+use crate::serve::protocol::{self, JobSnapshot, JobState};
+use crate::util::json::Json;
+
+/// Decision returned by [`Scheduler::submit`].
+#[derive(Debug, Clone)]
+pub struct SubmitOutcome {
+    pub id: String,
+    /// Admitted immediately (false = queued behind the budget, or the
+    /// activation failed — `state` disambiguates).
+    pub admitted: bool,
+    pub peak_gb: f64,
+    /// The job's state right after submission (`Running`, `Queued`, or
+    /// `Failed` when activation errored).
+    pub state: JobState,
+}
+
+/// Shared, lock-protected view of every job: snapshots, event logs, and
+/// the global emission timeline. TCP handlers read this; only the
+/// scheduler writes it.
+#[derive(Debug)]
+pub struct Board {
+    pub jobs: Vec<JobView>,
+    pub budget_gb: f64,
+    pub committed_gb: f64,
+    /// Job ids in event-emission order — the observable interleaving.
+    pub timeline: Vec<String>,
+}
+
+impl Board {
+    fn new(budget_gb: f64) -> Self {
+        Board { jobs: Vec::new(), budget_gb, committed_gb: 0.0, timeline: Vec::new() }
+    }
+
+    /// Look a job up by id.
+    pub fn job(&self, id: &str) -> Option<&JobView> {
+        self.jobs.iter().find(|j| j.snap.id == id)
+    }
+}
+
+/// One job's public state: snapshot + its NDJSON event log.
+#[derive(Debug)]
+pub struct JobView {
+    pub snap: JobSnapshot,
+    pub events: Vec<String>,
+    pub report: Option<TrainReport>,
+}
+
+/// Scheduler-private job record.
+struct Job {
+    id: String,
+    /// Present while queued; taken on activation.
+    cfg: Option<RunConfig>,
+    /// Present while running.
+    run: Option<Run<Trainer>>,
+    peak_gb: f64,
+    seq: u64,
+    state: JobState,
+}
+
+enum Quantum {
+    Progress,
+    Done,
+    Failed(String),
+}
+
+pub struct Scheduler {
+    device: Device,
+    /// Compiled programs are shared across jobs: N concurrent jobs on
+    /// the same variant compile it once.
+    cache: ProgramCache,
+    opts: ServeConfig,
+    assume: Assumptions,
+    admission: Admission,
+    jobs: Vec<Job>,
+    /// Round-robin order of admitted jobs (indices into `jobs`).
+    active: VecDeque<usize>,
+    /// FIFO admission queue (indices into `jobs`).
+    waiting: VecDeque<usize>,
+    board: Arc<Mutex<Board>>,
+}
+
+impl Scheduler {
+    pub fn new(device: Device, opts: ServeConfig) -> Result<Self> {
+        opts.validate()?;
+        let assume = opts.assumptions()?;
+        let board = Arc::new(Mutex::new(Board::new(opts.budget_gb)));
+        Ok(Scheduler {
+            device,
+            cache: ProgramCache::new(),
+            admission: Admission::new(opts.budget_gb),
+            assume,
+            opts,
+            jobs: Vec::new(),
+            active: VecDeque::new(),
+            waiting: VecDeque::new(),
+            board,
+        })
+    }
+
+    /// The shared job board (snapshots + event logs + timeline).
+    pub fn board(&self) -> Arc<Mutex<Board>> {
+        self.board.clone()
+    }
+
+    /// Id the next submitted job will get — the single source of the
+    /// id scheme (`submit` and the `out_dir` default both use it).
+    fn next_job_id(&self) -> String {
+        format!("job-{}", self.jobs.len())
+    }
+
+    /// Submit a job from its wire-format JSON config. Keys the config
+    /// omits fall back to the serve defaults (`artifacts` → the serve
+    /// artifact dir, `out_dir` → `<run_root>/<job-id>`).
+    pub fn submit_json(&mut self, config: &Json, name: Option<String>) -> Result<SubmitOutcome> {
+        let mut cfg = RunConfig::from_json(config)?;
+        if config.get("artifacts").is_none() {
+            cfg.artifacts = self.opts.artifacts.clone();
+        }
+        if config.get("out_dir").is_none() {
+            cfg.out_dir = self.opts.run_root.join(self.next_job_id());
+        }
+        self.submit(cfg, name)
+    }
+
+    /// Submit a fully-formed job config: price it, then admit (FIFO) or
+    /// queue it. A job pricing over the whole budget is rejected
+    /// outright — it could never run.
+    pub fn submit(&mut self, cfg: RunConfig, name: Option<String>) -> Result<SubmitOutcome> {
+        cfg.validate()?;
+        let geo = match self.opts.price_geometry {
+            PriceGeometry::Qwen => Some(Geometry::qwen15_moe_a27b()),
+            PriceGeometry::Manifest => None,
+        };
+        let priced = admission::price_job(&cfg.artifacts, cfg.method, self.assume, geo)?;
+        if priced.peak_gb > self.opts.budget_gb {
+            return Err(Error::Config(format!(
+                "job prices {:.3} GB at {} geometry — over the whole {:.3} GB budget",
+                priced.peak_gb, priced.geometry, self.opts.budget_gb
+            )));
+        }
+        let idx = self.jobs.len();
+        let id = self.next_job_id();
+        let name = name.unwrap_or_else(|| id.clone());
+        let method = cfg.method.name().to_string();
+        self.jobs.push(Job {
+            id: id.clone(),
+            cfg: Some(cfg),
+            run: None,
+            peak_gb: priced.peak_gb,
+            seq: 0,
+            state: JobState::Queued,
+        });
+        {
+            let mut board = self.board.lock().expect("board lock");
+            board.jobs.push(JobView {
+                snap: JobSnapshot {
+                    id: id.clone(),
+                    name,
+                    method,
+                    state: JobState::Queued,
+                    peak_gb: priced.peak_gb,
+                    steps_done: 0,
+                    last_loss: None,
+                    eval_loss: None,
+                    events: 0,
+                    error: None,
+                },
+                events: Vec::new(),
+                report: None,
+            });
+        }
+        // strict FIFO: never overtake an already-waiting job, even if
+        // this one would fit the headroom
+        let mut admitted = self.waiting.is_empty() && self.admission.try_admit(priced.peak_gb);
+        if admitted {
+            self.activate(idx);
+            // activation can fail (missing variant dir, bad artifacts):
+            // the reservation was already rolled back and the error is
+            // on the board — the submit reply must not claim admission
+            admitted = self.jobs[idx].state == JobState::Running;
+        } else {
+            self.waiting.push_back(idx);
+        }
+        self.sync_ledger();
+        Ok(SubmitOutcome { id, admitted, peak_gb: priced.peak_gb, state: self.jobs[idx].state })
+    }
+
+    /// Cancel a job. `Ok(true)` if it was queued or running, `Ok(false)`
+    /// if it had already reached a terminal state.
+    pub fn cancel(&mut self, id: &str) -> Result<bool> {
+        let idx = self
+            .jobs
+            .iter()
+            .position(|j| j.id == id)
+            .ok_or_else(|| Error::Config(format!("unknown job {id:?}")))?;
+        match self.jobs[idx].state {
+            JobState::Queued => {
+                self.waiting.retain(|&i| i != idx);
+                self.jobs[idx].cfg = None;
+                self.set_state(idx, JobState::Cancelled, None);
+                Ok(true)
+            }
+            JobState::Running => {
+                self.active.retain(|&i| i != idx);
+                // dropping the run releases its pinned buffers and
+                // prefetch thread
+                self.jobs[idx].run = None;
+                self.admission.release(self.jobs[idx].peak_gb);
+                self.set_state(idx, JobState::Cancelled, None);
+                self.drain_waiting();
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// Cancel every non-terminal job (server shutdown).
+    pub fn cancel_all(&mut self) {
+        for idx in 0..self.jobs.len() {
+            if matches!(self.jobs[idx].state, JobState::Queued | JobState::Running) {
+                let id = self.jobs[idx].id.clone();
+                let _ = self.cancel(&id);
+            }
+        }
+    }
+
+    /// Jobs not yet in a terminal state.
+    pub fn open_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| !j.state.is_terminal()).count()
+    }
+
+    /// State of one job, if it exists.
+    pub fn job_state(&self, id: &str) -> Option<JobState> {
+        self.jobs.iter().find(|j| j.id == id).map(|j| j.state)
+    }
+
+    /// Drive one quantum of the next active job. Returns `false` when
+    /// there is nothing to run (idle).
+    pub fn tick(&mut self) -> Result<bool> {
+        if self.active.is_empty() {
+            self.drain_waiting();
+        }
+        let Some(idx) = self.active.pop_front() else {
+            return Ok(false);
+        };
+        let mut run = self.jobs[idx].run.take().expect("running job holds a run");
+        let mut outcome = Quantum::Progress;
+        // resume: re-pin this job's state as device buffers for the
+        // quantum (no-op when the job is not device-resident)
+        if let Err(e) = run.resume() {
+            outcome = Quantum::Failed(format!("resume: {e}"));
+        } else {
+            for _ in 0..self.opts.quantum {
+                match run.step() {
+                    Ok(Some(ev)) => self.emit(idx, &ev),
+                    Ok(None) => {
+                        outcome = Quantum::Done;
+                        break;
+                    }
+                    Err(e) => {
+                        outcome = Quantum::Failed(e.to_string());
+                        break;
+                    }
+                }
+            }
+        }
+        match outcome {
+            Quantum::Progress => {
+                // preempt: hand the device to the next job. When this
+                // is the only active job, skip the suspend/resume churn
+                // — state handoff is lossless either way.
+                if !self.active.is_empty() {
+                    if let Err(e) = run.suspend() {
+                        drop(run);
+                        self.finalize(idx, JobState::Failed, Some(format!("suspend: {e}")));
+                        return Ok(true);
+                    }
+                }
+                self.jobs[idx].run = Some(run);
+                self.active.push_back(idx);
+            }
+            Quantum::Done => match run.finish() {
+                Ok(report) => {
+                    self.board.lock().expect("board lock").jobs[idx].report = Some(report);
+                    self.finalize(idx, JobState::Finished, None);
+                }
+                Err(e) => self.finalize(idx, JobState::Failed, Some(e.to_string())),
+            },
+            Quantum::Failed(msg) => {
+                drop(run);
+                self.finalize(idx, JobState::Failed, Some(msg));
+            }
+        }
+        Ok(true)
+    }
+
+    /// Drive until every submitted job reaches a terminal state
+    /// (inline/testing entry; the server calls [`Scheduler::tick`]).
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while self.tick()? {}
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+
+    fn activate(&mut self, idx: usize) {
+        let cfg = self.jobs[idx].cfg.take().expect("queued job holds a config");
+        match Trainer::with_cache(&self.device, self.cache.clone(), cfg)
+            .and_then(Trainer::into_run)
+        {
+            Ok(run) => {
+                self.jobs[idx].run = Some(run);
+                self.set_state(idx, JobState::Running, None);
+                self.active.push_back(idx);
+            }
+            Err(e) => {
+                self.admission.release(self.jobs[idx].peak_gb);
+                self.set_state(idx, JobState::Failed, Some(e.to_string()));
+            }
+        }
+    }
+
+    /// Terminal transition of an admitted job: record state, return its
+    /// reservation, and admit whoever now fits (FIFO).
+    fn finalize(&mut self, idx: usize, state: JobState, error: Option<String>) {
+        self.admission.release(self.jobs[idx].peak_gb);
+        self.set_state(idx, state, error);
+        self.drain_waiting();
+    }
+
+    fn drain_waiting(&mut self) {
+        while let Some(&idx) = self.waiting.front() {
+            if !self.admission.try_admit(self.jobs[idx].peak_gb) {
+                break;
+            }
+            self.waiting.pop_front();
+            self.activate(idx);
+        }
+        self.sync_ledger();
+    }
+
+    fn set_state(&mut self, idx: usize, state: JobState, error: Option<String>) {
+        self.jobs[idx].state = state;
+        let mut board = self.board.lock().expect("board lock");
+        board.jobs[idx].snap.state = state;
+        if error.is_some() {
+            board.jobs[idx].snap.error = error;
+        }
+        board.committed_gb = self.admission.committed_gb();
+    }
+
+    fn sync_ledger(&mut self) {
+        self.board.lock().expect("board lock").committed_gb = self.admission.committed_gb();
+    }
+
+    /// Serialize one event onto the board (log + snapshot + timeline).
+    fn emit(&mut self, idx: usize, ev: &StepEvent) {
+        let job = &mut self.jobs[idx];
+        let seq = job.seq;
+        job.seq += 1;
+        let id = job.id.clone();
+        let line = protocol::event_json(&id, seq, ev).to_string();
+        let mut board = self.board.lock().expect("board lock");
+        let view = &mut board.jobs[idx];
+        view.events.push(line);
+        view.snap.events = seq + 1;
+        match ev {
+            StepEvent::Step(rec) => {
+                view.snap.steps_done += 1;
+                view.snap.last_loss = Some(rec.loss);
+            }
+            StepEvent::EvalPoint { eval_loss, .. } => view.snap.eval_loss = Some(*eval_loss),
+            _ => {}
+        }
+        board.timeline.push(id);
+    }
+}

@@ -1,0 +1,369 @@
+//! The `revffn serve` TCP control plane.
+//!
+//! Three thread roles, all std-only:
+//!
+//! * **Scheduler thread** — creates the PJRT device (the client is not
+//!   `Send`, so it must be born here), owns the [`Scheduler`], and
+//!   loops: drain control messages (submit/cancel arrive over an mpsc
+//!   channel, in arrival order — which is what makes the interleaving
+//!   deterministic), then drive one [`Scheduler::tick`]. When idle it
+//!   parks on the channel with a timeout instead of spinning.
+//! * **Accept thread** — polls a non-blocking `TcpListener`, spawning a
+//!   handler thread per connection.
+//! * **Handler threads** — speak the NDJSON protocol: requests in,
+//!   responses out, and for the `events` verb a follow-loop that copies
+//!   new lines out of the shared [`Board`] until the job is terminal.
+//!
+//! Handlers never touch the device; everything they read comes off the
+//! board, everything they change goes through the control channel.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::runtime::Device;
+use crate::serve::protocol::{self, Request};
+use crate::serve::scheduler::{Board, Scheduler, SubmitOutcome};
+use crate::util::json::Json;
+
+/// How long the scheduler parks on the control channel when idle, and
+/// how often event followers re-poll the board.
+const POLL: Duration = Duration::from_millis(25);
+
+/// Control messages from handler threads to the scheduler thread.
+enum Control {
+    Submit {
+        config: Json,
+        name: Option<String>,
+        reply: Sender<std::result::Result<SubmitOutcome, String>>,
+    },
+    Cancel {
+        job: String,
+        reply: Sender<std::result::Result<bool, String>>,
+    },
+    /// Wake the scheduler loop so it notices the shutdown flag.
+    Shutdown,
+}
+
+/// A running serve instance. Dropping the handle does NOT stop the
+/// server — call [`ServerHandle::shutdown`] (or send the `shutdown`
+/// verb) and then [`ServerHandle::join`].
+pub struct ServerHandle {
+    addr: SocketAddr,
+    board: Arc<Mutex<Board>>,
+    ctl: Sender<Control>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address actually bound (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared job board (tests inspect it directly).
+    pub fn board(&self) -> Arc<Mutex<Board>> {
+        self.board.clone()
+    }
+
+    /// Ask every thread to stop (idempotent).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.ctl.send(Control::Shutdown);
+    }
+
+    /// Wait for the accept + scheduler threads to exit.
+    pub fn join(mut self) -> Result<()> {
+        for t in self.threads.drain(..) {
+            t.join().map_err(|_| Error::Training("server thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Bind the control plane and start serving. Returns once the listener
+/// is bound; scheduling runs on background threads until `shutdown`.
+pub fn serve(opts: ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&opts.addr).map_err(|e| {
+        Error::Io(std::io::Error::new(e.kind(), format!("bind {}: {e}", opts.addr)))
+    })?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (ctl_tx, ctl_rx) = channel::<Control>();
+
+    // the scheduler thread creates its own Device (PJRT clients are not
+    // Send); the board comes back over a bootstrap channel
+    let (board_tx, board_rx) = channel::<std::result::Result<Arc<Mutex<Board>>, String>>();
+    let sched_opts = opts.clone();
+    let sched_shutdown = shutdown.clone();
+    let sched_thread = std::thread::Builder::new()
+        .name("serve-scheduler".into())
+        .spawn(move || scheduler_thread(sched_opts, ctl_rx, board_tx, sched_shutdown))?;
+    let board = board_rx
+        .recv()
+        .map_err(|_| Error::Training("scheduler thread died during startup".into()))?
+        .map_err(Error::Training)?;
+
+    let accept_board = board.clone();
+    let accept_ctl = ctl_tx.clone();
+    let accept_shutdown = shutdown.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || accept_loop(listener, accept_ctl, accept_board, accept_shutdown))?;
+
+    Ok(ServerHandle {
+        addr,
+        board,
+        ctl: ctl_tx,
+        shutdown,
+        threads: vec![sched_thread, accept_thread],
+    })
+}
+
+fn scheduler_thread(
+    opts: ServeConfig,
+    ctl: Receiver<Control>,
+    board_tx: Sender<std::result::Result<Arc<Mutex<Board>>, String>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let sched = Device::cpu()
+        .map_err(|e| format!("creating PJRT device: {e}"))
+        .and_then(|device| {
+            Scheduler::new(device, opts).map_err(|e| format!("starting scheduler: {e}"))
+        });
+    let mut sched = match sched {
+        Ok(s) => {
+            let _ = board_tx.send(Ok(s.board()));
+            s
+        }
+        Err(msg) => {
+            let _ = board_tx.send(Err(msg));
+            return;
+        }
+    };
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            sched.cancel_all();
+            return;
+        }
+        // drain pending control messages in arrival order
+        while let Ok(msg) = ctl.try_recv() {
+            handle_control(&mut sched, msg);
+        }
+        match sched.tick() {
+            Ok(true) => {}
+            Ok(false) => {
+                // idle: park on the channel instead of spinning
+                match ctl.recv_timeout(POLL) {
+                    Ok(msg) => handle_control(&mut sched, msg),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            }
+            Err(e) => {
+                // tick() errors are per-job and recorded on the board;
+                // an error escaping here is a scheduler invariant break
+                eprintln!("[serve] scheduler error: {e}");
+                sched.cancel_all();
+                shutdown.store(true, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+fn handle_control(sched: &mut Scheduler, msg: Control) {
+    match msg {
+        Control::Submit { config, name, reply } => {
+            let r = sched.submit_json(&config, name).map_err(|e| e.to_string());
+            let _ = reply.send(r);
+        }
+        Control::Cancel { job, reply } => {
+            let r = sched.cancel(&job).map_err(|e| e.to_string());
+            let _ = reply.send(r);
+        }
+        Control::Shutdown => {}
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctl: Sender<Control>,
+    board: Arc<Mutex<Board>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let ctl = ctl.clone();
+                let board = board.clone();
+                let shutdown = shutdown.clone();
+                let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
+                    if let Err(e) = handle_connection(stream, ctl, board, shutdown) {
+                        eprintln!("[serve] connection: {e}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                eprintln!("[serve] accept: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+fn write_line(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    let mut line = j.to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    ctl: Sender<Control>,
+    board: Arc<Mutex<Board>>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::from_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                write_line(&mut out, &protocol::error_json(&e.to_string()))?;
+                continue;
+            }
+        };
+        match req {
+            Request::Submit { config, name } => {
+                let (reply_tx, reply_rx) = channel();
+                if ctl.send(Control::Submit { config, name, reply: reply_tx }).is_err() {
+                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    continue;
+                }
+                let resp = match reply_rx.recv() {
+                    Ok(Ok(o)) => protocol::submitted_json(&o.id, o.admitted, o.peak_gb, o.state),
+                    Ok(Err(msg)) => protocol::error_json(&msg),
+                    Err(_) => protocol::error_json("scheduler stopped"),
+                };
+                write_line(&mut out, &resp)?;
+            }
+            Request::Status { job } => {
+                let resp = {
+                    let b = board.lock().expect("board lock");
+                    let rows: Vec<_> = b
+                        .jobs
+                        .iter()
+                        .filter(|v| match job.as_deref() {
+                            Some(id) => v.snap.id == id,
+                            None => true,
+                        })
+                        .map(|v| v.snap.clone())
+                        .collect();
+                    if job.is_some() && rows.is_empty() {
+                        protocol::error_json("unknown job")
+                    } else {
+                        protocol::status_json(&rows, b.budget_gb, b.committed_gb)
+                    }
+                };
+                write_line(&mut out, &resp)?;
+            }
+            Request::Events { job, from, follow } => {
+                stream_events(&mut out, &board, &shutdown, &job, from, follow)?;
+            }
+            Request::Cancel { job } => {
+                let (reply_tx, reply_rx) = channel();
+                if ctl.send(Control::Cancel { job, reply: reply_tx }).is_err() {
+                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    continue;
+                }
+                let resp = match reply_rx.recv() {
+                    Ok(Ok(cancelled)) => crate::util::json::ObjBuilder::new()
+                        .bool("ok", true)
+                        .bool("cancelled", cancelled)
+                        .build(),
+                    Ok(Err(msg)) => protocol::error_json(&msg),
+                    Err(_) => protocol::error_json("scheduler stopped"),
+                };
+                write_line(&mut out, &resp)?;
+            }
+            Request::Shutdown => {
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = ctl.send(Control::Shutdown);
+                write_line(&mut out, &protocol::ok_json())?;
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Copy a job's event lines to the client from `from`, then (in follow
+/// mode) poll for new ones until the job reaches a terminal state.
+/// Always ends with a `done` marker line.
+fn stream_events(
+    out: &mut TcpStream,
+    board: &Arc<Mutex<Board>>,
+    shutdown: &Arc<AtomicBool>,
+    job: &str,
+    from: u64,
+    follow: bool,
+) -> Result<()> {
+    let mut cursor = from as usize;
+    loop {
+        let (batch, state) = {
+            let b = board.lock().expect("board lock");
+            let Some(view) = b.job(job) else {
+                write_line(out, &protocol::error_json("unknown job"))?;
+                return Ok(());
+            };
+            let lines: Vec<String> = view.events.get(cursor..).unwrap_or(&[]).to_vec();
+            (lines, view.snap.state)
+        };
+        for line in &batch {
+            out.write_all(line.as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+        if !batch.is_empty() {
+            out.flush()?;
+        }
+        cursor += batch.len();
+        let stop = state.is_terminal() || !follow || shutdown.load(Ordering::SeqCst);
+        if stop {
+            // drain anything that raced in between the copy and the
+            // terminal-state read
+            let (tail, state, total) = {
+                let b = board.lock().expect("board lock");
+                let view = b.job(job).expect("job existed above");
+                let lines: Vec<String> = view.events.get(cursor..).unwrap_or(&[]).to_vec();
+                (lines, view.snap.state, view.snap.events)
+            };
+            for line in &tail {
+                out.write_all(line.as_bytes())?;
+                out.write_all(b"\n")?;
+            }
+            write_line(out, &protocol::done_json(job, state, total))?;
+            return Ok(());
+        }
+        std::thread::sleep(POLL);
+    }
+}

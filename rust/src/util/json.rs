@@ -348,14 +348,17 @@ pub fn escape(s: &str) -> String {
     out
 }
 
-impl Json {
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
+/// Compact serialization (`json.to_string()` via the blanket
+/// `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut s = String::new();
         self.write(&mut s);
-        s
+        f.write_str(&s)
     }
+}
 
+impl Json {
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

@@ -1,0 +1,314 @@
+//! Serve-subsystem integration tests over the real AOT artifacts:
+//! concurrent jobs must interleave deterministically on one shared
+//! device and finish with losses bit-identical to running each job
+//! solo; admission must queue past-budget jobs FIFO and admit them as
+//! budget frees; the TCP control plane must speak the NDJSON protocol
+//! end to end.
+//!
+//! Like the other integration tests, everything skips silently when
+//! `artifacts/tiny` is absent (run `make artifacts` first).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+use revffn::config::{PriceGeometry, RunConfig, ServeConfig};
+use revffn::coordinator::Trainer;
+use revffn::engine::Method;
+use revffn::runtime::Device;
+use revffn::serve::protocol::{JobState, Request};
+use revffn::serve::{admission, Scheduler};
+use revffn::util::json::{self, Json};
+use revffn::util::ScratchDir;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    p.join("index.json").exists().then_some(p)
+}
+
+/// A short run of `method` (pre-pass off, eval only at stage ends).
+fn job_cfg(root: &Path, out: &Path, method: Method) -> RunConfig {
+    let mut cfg = RunConfig::default_tiny(root);
+    cfg.method = method;
+    cfg.schedule.stage1_steps = if method.is_two_stage() { 2 } else { 0 };
+    cfg.schedule.stage2_steps = 3;
+    cfg.schedule.warmup_steps = 1;
+    cfg.data.pretrain_steps = 0;
+    cfg.data.n_train = 48;
+    cfg.data.n_eval = 16;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.out_dir = out.into();
+    cfg
+}
+
+fn serve_opts(root: &Path, scratch: &Path, budget_gb: f64, quantum: u64) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        artifacts: root.to_path_buf(),
+        budget_gb,
+        quantum,
+        assumptions: "f32".into(),
+        price_geometry: PriceGeometry::Manifest,
+        run_root: scratch.join("serve"),
+    }
+}
+
+/// (type, step, loss-bits) triples of a job's step events — the
+/// deterministic projection (wall-clock fields excluded).
+fn step_signature(events: &[String]) -> Vec<(String, u64, u32)> {
+    events
+        .iter()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|j| j.str_of("type").unwrap() == "step")
+        .map(|j| {
+            (
+                j.str_of("type").unwrap(),
+                j.u64_of("step").unwrap(),
+                (j.f64_of("loss").unwrap() as f32).to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn two_jobs_interleave_and_match_solo_runs() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-interleave").unwrap();
+
+    // solo baselines: each job on its own device, blocking run
+    let solo_a = {
+        let device = Device::cpu().unwrap();
+        let mut t =
+            Trainer::new(&device, job_cfg(&root, &scratch.join("solo-a"), Method::Revffn))
+                .unwrap();
+        t.run().unwrap();
+        t.metrics.steps.iter().map(|r| (r.step, r.loss.to_bits())).collect::<Vec<_>>()
+    };
+    let solo_b = {
+        let device = Device::cpu().unwrap();
+        let mut t = Trainer::new(&device, job_cfg(&root, &scratch.join("solo-b"), Method::Sft))
+            .unwrap();
+        t.run().unwrap();
+        t.metrics.steps.iter().map(|r| (r.step, r.loss.to_bits())).collect::<Vec<_>>()
+    };
+
+    // scheduled: both jobs share one device, quantum 1 forces maximal
+    // interleaving (suspend/resume between every event)
+    let device = Device::cpu().unwrap();
+    let mut sched =
+        Scheduler::new(device, serve_opts(&root, &scratch, 1e9, 1)).unwrap();
+    let a = sched
+        .submit(job_cfg(&root, &scratch.join("sched-a"), Method::Revffn), Some("a".into()))
+        .unwrap();
+    let b = sched
+        .submit(job_cfg(&root, &scratch.join("sched-b"), Method::Sft), Some("b".into()))
+        .unwrap();
+    assert!(a.admitted && b.admitted);
+    sched.run_until_idle().unwrap();
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Finished));
+    assert_eq!(sched.job_state(&b.id), Some(JobState::Finished));
+
+    let board = sched.board();
+    let board = board.lock().unwrap();
+
+    // the timeline must actually interleave: some b event lands between
+    // two a events while both are active
+    let tl = &board.timeline;
+    let transitions = tl.windows(2).filter(|w| w[0] != w[1]).count();
+    assert!(transitions >= 2, "expected interleaving, timeline: {tl:?}");
+
+    // per-job losses bit-identical to the solo runs
+    let sig_a = step_signature(&board.jobs[0].events);
+    let sig_b = step_signature(&board.jobs[1].events);
+    let solo_sig = |solo: &[(u64, u32)]| -> Vec<(String, u64, u32)> {
+        solo.iter().map(|&(s, l)| ("step".to_string(), s, l)).collect()
+    };
+    assert_eq!(sig_a, solo_sig(&solo_a), "revffn losses must match the solo run bit-for-bit");
+    assert_eq!(sig_b, solo_sig(&solo_b), "sft losses must match the solo run bit-for-bit");
+
+    // reports recorded, budget fully released
+    assert!(board.jobs[0].report.is_some());
+    assert!(board.committed_gb == 0.0);
+}
+
+#[test]
+fn scheduling_is_deterministic_across_runs() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-determinism").unwrap();
+
+    let run_once = |tag: &str| -> (Vec<String>, Vec<Vec<(String, u64, u32)>>) {
+        let device = Device::cpu().unwrap();
+        let mut sched =
+            Scheduler::new(device, serve_opts(&root, &scratch, 1e9, 2)).unwrap();
+        sched
+            .submit(
+                job_cfg(&root, &scratch.join(format!("{tag}-a")), Method::Revffn),
+                None,
+            )
+            .unwrap();
+        sched
+            .submit(job_cfg(&root, &scratch.join(format!("{tag}-b")), Method::Sft), None)
+            .unwrap();
+        sched.run_until_idle().unwrap();
+        let board = sched.board();
+        let board = board.lock().unwrap();
+        let sigs = board.jobs.iter().map(|j| step_signature(&j.events)).collect();
+        (board.timeline.clone(), sigs)
+    };
+
+    let (tl1, sig1) = run_once("r1");
+    let (tl2, sig2) = run_once("r2");
+    assert_eq!(tl1, tl2, "same submissions must interleave identically");
+    assert_eq!(sig1, sig2, "per-job step streams must be identical");
+}
+
+#[test]
+fn admission_queues_past_budget_and_admits_fifo() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-admission").unwrap();
+
+    // budget fits exactly one tiny job at a time
+    let assume = revffn::memory::Assumptions::parse("f32").unwrap();
+    let priced = admission::price_job(&root, Method::Sft, assume, None).unwrap();
+    let budget = 1.5 * priced.peak_gb;
+
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, serve_opts(&root, &scratch, budget, 4)).unwrap();
+    let a = sched
+        .submit(job_cfg(&root, &scratch.join("adm-a"), Method::Sft), None)
+        .unwrap();
+    let b = sched
+        .submit(job_cfg(&root, &scratch.join("adm-b"), Method::Sft), None)
+        .unwrap();
+    assert!(a.admitted, "first job must be admitted");
+    assert!(!b.admitted, "second job must queue behind the budget");
+    assert_eq!(sched.job_state(&b.id), Some(JobState::Queued));
+
+    sched.run_until_idle().unwrap();
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Finished));
+    assert_eq!(sched.job_state(&b.id), Some(JobState::Finished), "queued job must run after");
+
+    // with serialized admission, every a event precedes every b event
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let last_a = board.timeline.iter().rposition(|id| id == &a.id).unwrap();
+    let first_b = board.timeline.iter().position(|id| id == &b.id).unwrap();
+    assert!(last_a < first_b, "budget-serialized jobs must not interleave");
+}
+
+#[test]
+fn oversized_job_rejected_outright() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-oversize").unwrap();
+    let device = Device::cpu().unwrap();
+    // a budget far below one tiny job's f32 peak
+    let mut sched =
+        Scheduler::new(device, serve_opts(&root, &scratch, 1e-6, 4)).unwrap();
+    let r = sched.submit(job_cfg(&root, &scratch.join("big"), Method::Sft), None);
+    assert!(r.is_err(), "a job pricing over the whole budget can never run");
+}
+
+#[test]
+fn tcp_control_plane_end_to_end() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-tcp").unwrap();
+    let handle = revffn::serve::serve(serve_opts(&root, &scratch, 1e9, 2)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let send = |stream: &mut TcpStream, req: &Request| {
+        let mut line = req.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.flush().unwrap();
+    };
+    let read = |reader: &mut BufReader<TcpStream>| -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("{e}: {line:?}"))
+    };
+
+    let mut control = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(control.try_clone().unwrap());
+
+    // submit one short job (config keys omitted fall back to serve
+    // defaults: artifacts dir, out_dir under run_root)
+    let cfg = json::parse(
+        r#"{"method":"revffn","eval_every":0,"eval_batches":1,
+            "schedule":{"stage1_steps":1,"stage2_steps":2},
+            "data":{"pretrain_steps":0,"n_train":48,"n_eval":16}}"#,
+    )
+    .unwrap();
+    send(&mut control, &Request::Submit { config: cfg, name: Some("tcp".into()) });
+    let resp = read(&mut reader);
+    assert!(resp.bool_of("ok").unwrap(), "submit failed: {resp}");
+    let job = resp.str_of("job").unwrap();
+    assert!(resp.bool_of("admitted").unwrap());
+    assert!(resp.f64_of("peak_gb").unwrap() > 0.0);
+
+    // follow the event stream on a second connection until done
+    let mut ev_stream = TcpStream::connect(&addr).unwrap();
+    send(&mut ev_stream, &Request::Events { job: job.clone(), from: 0, follow: true });
+    let mut ev_reader = BufReader::new(ev_stream.try_clone().unwrap());
+    let mut step_events = 0;
+    let mut phases = Vec::new();
+    loop {
+        let j = read(&mut ev_reader);
+        if j.get("done").and_then(Json::as_bool).unwrap_or(false) {
+            assert_eq!(j.str_of("state").unwrap(), "finished");
+            break;
+        }
+        assert_eq!(j.str_of("job").unwrap(), job);
+        match j.str_of("type").unwrap().as_str() {
+            "step" => step_events += 1,
+            "phase_started" => phases.push(j.u64_of("stage").unwrap()),
+            _ => {}
+        }
+    }
+    assert_eq!(step_events, 3, "1 stage-1 + 2 stage-2 steps");
+    assert_eq!(phases, vec![1, 2]);
+
+    // status reflects the finished job
+    send(&mut control, &Request::Status { job: Some(job.clone()) });
+    let status = read(&mut reader);
+    let rows = status.arr_of("jobs").unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].str_of("state").unwrap(), "finished");
+    assert_eq!(rows[0].u64_of("steps_done").unwrap(), 3);
+
+    // cancelling a finished job reports cancelled=false
+    send(&mut control, &Request::Cancel { job: job.clone() });
+    let c = read(&mut reader);
+    assert!(c.bool_of("ok").unwrap());
+    assert!(!c.bool_of("cancelled").unwrap());
+
+    // unknown job errors cleanly
+    send(&mut control, &Request::Cancel { job: "job-999".into() });
+    assert!(!read(&mut reader).bool_of("ok").unwrap());
+
+    send(&mut control, &Request::Shutdown);
+    assert!(read(&mut reader).bool_of("ok").unwrap());
+    handle.join().unwrap();
+}
+
+#[test]
+fn cancel_running_job_frees_budget() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-cancel").unwrap();
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, serve_opts(&root, &scratch, 1e9, 1)).unwrap();
+    let mut cfg = job_cfg(&root, &scratch.join("c"), Method::Sft);
+    cfg.schedule.stage2_steps = 50; // long enough to cancel mid-run
+    let a = sched.submit(cfg, None).unwrap();
+    // a few quanta, then cancel mid-flight
+    for _ in 0..4 {
+        assert!(sched.tick().unwrap());
+    }
+    assert!(sched.cancel(&a.id).unwrap());
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Cancelled));
+    assert!(!sched.tick().unwrap(), "no work after cancelling the only job");
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    assert_eq!(board.committed_gb, 0.0, "cancelled job must release its reservation");
+    assert!(board.jobs[0].snap.events > 0, "events before the cancel survive");
+}
