@@ -1,6 +1,8 @@
-//! `.rvt` checkpoint format — self-describing binary parameter snapshots.
+//! `.rvt` checkpoint format — self-describing binary training snapshots.
 //!
-//! Layout (little-endian):
+//! Two generations, one reader:
+//!
+//! **RVT1** (legacy, still readable): parameters only.
 //! ```text
 //! magic  "RVT1"            4 bytes
 //! step   u64               8 bytes
@@ -10,30 +12,104 @@
 //!   ndim u32, dims u32 * ndim
 //!   data f32 * prod(dims)
 //! ```
-//! Tensors are name-tagged (not positional) so checkpoints survive
-//! manifest reorderings and can be loaded into a different variant of
-//! the same model (e.g. stage-1 → stage-2 handoff across processes).
+//!
+//! **RVT2** (current): the RVT1 body followed by the full training
+//! state, so a resumed run continues *bit-identically* — Adam moments,
+//! the optimizer step counter, and the data-pipeline cursor all come
+//! back, not just the weights.
+//! ```text
+//! magic  "RVT2"
+//! <RVT1 body: step, count, named tensors>
+//! opt_flag u8 (1 = Adam moments follow)
+//!   n_opt u32
+//!   m tensors: (ndim u32, dims u32 * ndim, data f32 * prod) * n_opt
+//!   v tensors: same layout, same count
+//! cursor_flag u8 (1 = run cursor follows)
+//!   phase_idx u64, step_in_phase u64, batches_taken u64,
+//!   batch_seed u64, seq u64, steps_total u64
+//! ```
+//! Moments are positional (manifest `opt_shapes` order); parameters are
+//! name-tagged so checkpoints survive manifest reorderings and can be
+//! loaded into a different variant of the same model.
+//!
+//! The reader is hardened against corrupt or truncated files: every
+//! allocation is bounded by the bytes actually remaining in the file,
+//! and any structural violation surfaces as [`Error::Parse`] — a bad
+//! header can never trigger a multi-GB allocation.
+//!
+//! Periodic mid-run snapshots (`cfg.checkpoint_every`) are written
+//! atomically (write `.tmp`, then rename) under
+//! `out_dir/ckpt-p<phase>-s<step>.rvt`; [`latest_checkpoint`] finds the
+//! newest and [`prune_checkpoints`] enforces `cfg.keep_last`.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{Read, Seek, Write};
+use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::runtime::literal::{cast_f32_le, extend_f32_le};
 use crate::runtime::stepper::Stepper;
 use crate::runtime::store::ParamStore;
 
-const MAGIC: &[u8; 4] = b"RVT1";
+const MAGIC_V1: &[u8; 4] = b"RVT1";
+const MAGIC_V2: &[u8; 4] = b"RVT2";
 
-/// Write every tensor of `params` to `path`. Streams straight out of the
-/// store's borrowed snapshot — no tensor is cloned — and converts each
-/// tensor to bytes in one reused buffer (one `write_all` per tensor
-/// instead of one per element).
-pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent)?;
+/// Adam moment state of a checkpoint (manifest `opt_shapes` order,
+/// positional — moments have no names).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptMoments {
+    pub m: Vec<(Vec<usize>, Vec<f32>)>,
+    pub v: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+/// Where a run stood when the snapshot was taken — everything
+/// [`crate::engine::Run::restore`] needs to fast-forward to the exact
+/// step and replay the data pipeline from the right batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunCursor {
+    /// Index into the planned phases.
+    pub phase_idx: u64,
+    /// Optimizer steps completed inside that phase.
+    pub step_in_phase: u64,
+    /// Batches the run consumed from the phase's `Batcher` (the resumed
+    /// batcher skips this many to land on the next unseen batch).
+    pub batches_taken: u64,
+    /// Seed the phase's batcher was created with (validated on resume —
+    /// a mismatch means the config changed and replay would diverge).
+    pub batch_seed: u64,
+    /// Events the run had yielded (serve event-stream continuity).
+    pub seq: u64,
+    /// Optimizer steps completed across all phases (checkpoint cadence).
+    pub steps_total: u64,
+}
+
+/// A loaded checkpoint: params always; moments + cursor when the file
+/// is RVT2 and the writer included them.
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+    pub opt: Option<OptMoments>,
+    pub cursor: Option<RunCursor>,
+}
+
+// ---------------------------------------------------------------- write
+
+fn write_tensor_body(
+    f: &mut impl Write,
+    shape: &[usize],
+    data: &[f32],
+    buf: &mut Vec<u8>,
+) -> Result<()> {
+    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for d in shape {
+        f.write_all(&(*d as u32).to_le_bytes())?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
+    buf.clear();
+    extend_f32_le(data, buf);
+    f.write_all(buf)?;
+    Ok(())
+}
+
+fn write_params(f: &mut impl Write, params: &ParamStore, step: u64) -> Result<()> {
     f.write_all(&step.to_le_bytes())?;
     f.write_all(&(params.len() as u32).to_le_bytes())?;
     let mut buf: Vec<u8> = Vec::new();
@@ -41,82 +117,429 @@ pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()
         let nb = name.as_bytes();
         f.write_all(&(nb.len() as u32).to_le_bytes())?;
         f.write_all(nb)?;
-        f.write_all(&(shape.len() as u32).to_le_bytes())?;
-        for d in shape {
-            f.write_all(&(*d as u32).to_le_bytes())?;
-        }
-        buf.clear();
-        extend_f32_le(data, &mut buf);
-        f.write_all(&buf)?;
+        write_tensor_body(f, shape, data, &mut buf)?;
     }
     Ok(())
 }
 
-/// Snapshot a live stepper to `path`, materializing its host mirror
-/// first. On the device-resident path this is where the lazy download
-/// chain fires — `DeviceState::to_literals()` → `ParamStore` — so a
+/// Write a params-only RVT1 checkpoint (legacy format; kept so the
+/// compatibility path stays exercised and tools that only care about
+/// weights can write the smaller file).
+pub fn save(path: impl AsRef<Path>, params: &ParamStore, step: u64) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_V1)?;
+    write_params(&mut f, params, step)
+}
+
+/// Write a full-state RVT2 checkpoint atomically: the bytes land in
+/// `<path>.tmp` first and only a complete, flushed and fsynced file is
+/// renamed into place — a process crash mid-write can never leave a
+/// torn `.rvt` behind, and the data is durable before the rename so a
+/// power loss shortly after cannot journal the rename without the
+/// bytes. (Resume additionally falls back to the next-newest snapshot
+/// if the newest fails to parse — see [`latest_valid_checkpoint`].)
+pub fn save_state(
+    path: impl AsRef<Path>,
+    params: &ParamStore,
+    step: u64,
+    opt: Option<&OptMoments>,
+    cursor: Option<&RunCursor>,
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("rvt.tmp");
+    {
+        let file = std::fs::File::create(&tmp)?;
+        let mut f = std::io::BufWriter::new(file);
+        f.write_all(MAGIC_V2)?;
+        write_params(&mut f, params, step)?;
+        match opt {
+            Some(o) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&(o.m.len() as u32).to_le_bytes())?;
+                let mut buf: Vec<u8> = Vec::new();
+                for (shape, data) in o.m.iter().chain(o.v.iter()) {
+                    write_tensor_body(&mut f, shape, data, &mut buf)?;
+                }
+            }
+            None => f.write_all(&[0u8])?,
+        }
+        match cursor {
+            Some(c) => {
+                f.write_all(&[1u8])?;
+                for word in [
+                    c.phase_idx,
+                    c.step_in_phase,
+                    c.batches_taken,
+                    c.batch_seed,
+                    c.seq,
+                    c.steps_total,
+                ] {
+                    f.write_all(&word.to_le_bytes())?;
+                }
+            }
+            None => f.write_all(&[0u8])?,
+        }
+        f.flush()?;
+        f.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Snapshot a live stepper to `path` as RVT2 (params + moments + step;
+/// pass a cursor to make the file resumable by [`crate::engine::Run`]).
+/// On the device-resident path this is where the lazy download chain
+/// fires — `DeviceState::to_literals()` → host vectors — so a
 /// checkpoint is the one deliberate full-state host transfer of a
 /// buffer-resident run.
-pub fn save_stepper(path: impl AsRef<Path>, stepper: &mut Stepper) -> Result<()> {
+pub fn save_stepper_state(
+    path: impl AsRef<Path>,
+    stepper: &mut Stepper,
+    cursor: Option<&RunCursor>,
+) -> Result<()> {
     let step = stepper.step;
+    let shapes = stepper.opt_shapes().to_vec();
+    let (m, v) = stepper.opt_snapshot()?;
+    let opt = OptMoments {
+        m: shapes.iter().cloned().zip(m).collect(),
+        v: shapes.into_iter().zip(v).collect(),
+    };
     let params = stepper.materialize_params()?;
-    save(path, params, step)
+    save_state(path, params, step, Some(&opt), cursor)
 }
 
-/// A loaded checkpoint: (step, name → (shape, data)).
-pub struct Checkpoint {
-    pub step: u64,
-    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+/// [`save_stepper_state`] without a run cursor (end-of-run `final.rvt`:
+/// full state for inspection/eval, but the schedule is complete so
+/// there is nothing to resume).
+pub fn save_stepper(path: impl AsRef<Path>, stepper: &mut Stepper) -> Result<()> {
+    save_stepper_state(path, stepper, None)
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Parse("not an RVT1 checkpoint".into()));
+// ----------------------------------------------------------------- read
+
+/// Budgeted reader: tracks how many bytes can still legally be read so
+/// no header field can request an allocation beyond the file's actual
+/// size. Every shortfall is an [`Error::Parse`], never an abort or an
+/// oversized `vec!`.
+struct Reader<R: Read> {
+    r: R,
+    remaining: u64,
+}
+
+impl<R: Read> Reader<R> {
+    fn claim(&mut self, n: u64, what: &str) -> Result<()> {
+        if n > self.remaining {
+            return Err(Error::Parse(format!(
+                "truncated checkpoint: {what} wants {n} bytes, {} remain",
+                self.remaining
+            )));
+        }
+        Ok(())
     }
-    let mut b8 = [0u8; 8];
-    f.read_exact(&mut b8)?;
-    let step = u64::from_le_bytes(b8);
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let count = u32::from_le_bytes(b4) as usize;
-    let mut tensors = Vec::with_capacity(count);
-    let mut buf: Vec<u8> = Vec::new(); // reused byte buffer across tensors
-    for _ in 0..count {
-        f.read_exact(&mut b4)?;
-        let nlen = u32::from_le_bytes(b4) as usize;
-        let mut nb = vec![0u8; nlen];
-        f.read_exact(&mut nb)?;
-        let name = String::from_utf8(nb).map_err(|e| Error::Parse(e.to_string()))?;
-        f.read_exact(&mut b4)?;
-        let ndim = u32::from_le_bytes(b4) as usize;
+
+    fn fill(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        self.claim(buf.len() as u64, what)?;
+        self.r
+            .read_exact(buf)
+            .map_err(|e| Error::Parse(format!("truncated checkpoint reading {what}: {e}")))?;
+        self.remaining -= buf.len() as u64;
+        Ok(())
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<Vec<u8>> {
+        // claim BEFORE allocating: a corrupt length field must error,
+        // not reserve gigabytes
+        self.claim(n as u64, what)?;
+        let mut buf = vec![0u8; n];
+        self.fill(&mut buf, what)?;
+        Ok(buf)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b, what)?;
+        Ok(b[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.fill(&mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Shape + payload byte count of a tensor body, with every
+    /// dimension count and the element product bounded by the
+    /// remaining file size.
+    fn tensor_shape(&mut self, what: &str) -> Result<(Vec<usize>, u64)> {
+        let ndim = self.u32(what)? as usize;
+        self.claim(4 * ndim as u64, what)?;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            f.read_exact(&mut b4)?;
-            shape.push(u32::from_le_bytes(b4) as usize);
+            shape.push(self.u32(what)? as usize);
         }
-        let n: usize = shape.iter().product::<usize>().max(1);
-        let mut data = vec![0f32; n];
-        buf.resize(n * 4, 0);
-        f.read_exact(&mut buf)?;
-        cast_f32_le(&buf, &mut data)?;
-        tensors.push((name, shape, data));
+        let mut n: usize = 1;
+        for &d in &shape {
+            n = n.checked_mul(d).ok_or_else(|| {
+                Error::Parse(format!("corrupt checkpoint: {what} shape {shape:?} overflows"))
+            })?;
+        }
+        let n = n.max(1);
+        let nbytes = (n as u64).checked_mul(4).ok_or_else(|| {
+            Error::Parse(format!("corrupt checkpoint: {what} byte size overflows"))
+        })?;
+        self.claim(nbytes, what)?;
+        Ok((shape, nbytes))
     }
-    Ok(Checkpoint { step, tensors })
+
+    /// `(shape, data)` — the payload-materializing read.
+    fn tensor_body(&mut self, what: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let (shape, nbytes) = self.tensor_shape(what)?;
+        let raw = self.bytes(nbytes as usize, what)?;
+        let mut data = vec![0f32; (nbytes / 4) as usize];
+        cast_f32_le(&raw, &mut data)?;
+        Ok((shape, data))
+    }
+
+    fn cursor_body(&mut self) -> Result<RunCursor> {
+        Ok(RunCursor {
+            phase_idx: self.u64("cursor.phase_idx")?,
+            step_in_phase: self.u64("cursor.step_in_phase")?,
+            batches_taken: self.u64("cursor.batches_taken")?,
+            batch_seed: self.u64("cursor.batch_seed")?,
+            seq: self.u64("cursor.seq")?,
+            steps_total: self.u64("cursor.steps_total")?,
+        })
+    }
 }
 
-/// Restore matching tensors into `params`; returns how many matched.
-pub fn restore_into(ckpt: &Checkpoint, params: &mut ParamStore) -> Result<usize> {
-    let mut n = 0;
-    for (name, _shape, data) in &ckpt.tensors {
-        if params.tensor(name).is_some() {
-            params.set_tensor(name, data.clone())?;
-            n += 1;
+impl<R: Read + Seek> Reader<R> {
+    fn skip(&mut self, n: u64, what: &str) -> Result<()> {
+        self.claim(n, what)?;
+        self.r
+            .seek(std::io::SeekFrom::Current(n as i64))
+            .map_err(|e| Error::Parse(format!("truncated checkpoint skipping {what}: {e}")))?;
+        self.remaining -= n;
+        Ok(())
+    }
+
+    fn skip_tensor_body(&mut self, what: &str) -> Result<()> {
+        let (_shape, nbytes) = self.tensor_shape(what)?;
+        self.skip(nbytes, what)
+    }
+}
+
+fn open_reader(path: &Path) -> Result<(Reader<std::io::BufReader<std::fs::File>>, bool)> {
+    let file = std::fs::File::open(path)?;
+    let len = file.metadata()?.len();
+    let mut r = Reader { r: std::io::BufReader::new(file), remaining: len };
+    let mut magic = [0u8; 4];
+    r.fill(&mut magic, "magic")?;
+    let v2 = match &magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(Error::Parse("not an RVT1/RVT2 checkpoint".into())),
+    };
+    Ok((r, v2))
+}
+
+fn load_impl(path: &Path, want_opt: bool) -> Result<Checkpoint> {
+    let (mut r, v2) = open_reader(path)?;
+    let step = r.u64("step")?;
+    let count = r.u32("tensor count")? as usize;
+    // each tensor costs at least name_len(4) + ndim(4) + data(4) bytes
+    r.claim(12 * count as u64, "tensor table")?;
+    let mut tensors = Vec::with_capacity(count);
+    for i in 0..count {
+        let what = format!("tensor {i}");
+        let nlen = r.u32(&what)? as usize;
+        let nb = r.bytes(nlen, &what)?;
+        let name = String::from_utf8(nb)
+            .map_err(|e| Error::Parse(format!("corrupt checkpoint: tensor {i} name: {e}")))?;
+        let (shape, data) = r.tensor_body(&name)?;
+        tensors.push((name, shape, data));
+    }
+    if !v2 {
+        return Ok(Checkpoint { step, tensors, opt: None, cursor: None });
+    }
+    let opt = if r.u8("opt flag")? != 0 {
+        let n_opt = r.u32("opt count")? as usize;
+        r.claim(2 * 8 * n_opt as u64, "opt table")?;
+        if want_opt {
+            let mut read_set = |tag: &str| -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+                (0..n_opt).map(|i| r.tensor_body(&format!("{tag} moment {i}"))).collect()
+            };
+            let m = read_set("m")?;
+            let v = read_set("v")?;
+            Some(OptMoments { m, v })
+        } else {
+            // params-only consumers seek past the moment payloads —
+            // for a full-parameter method they are ~2x the weights
+            for i in 0..2 * n_opt {
+                r.skip_tensor_body(&format!("moment {i}"))?;
+            }
+            None
+        }
+    } else {
+        None
+    };
+    let cursor = if r.u8("cursor flag")? != 0 { Some(r.cursor_body()?) } else { None };
+    Ok(Checkpoint { step, tensors, opt, cursor })
+}
+
+/// Load a checkpoint in full (params + moments + cursor).
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    load_impl(path.as_ref(), true)
+}
+
+/// Load the parameters (and cursor) only, seeking past the Adam moment
+/// payloads instead of materializing them — the `Session`/eval path
+/// restores weights and discards moments, so reading them would cost
+/// ~3x the I/O and a transient 2x-model-size allocation for nothing.
+/// `opt` is always `None` in the result.
+pub fn load_params(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    load_impl(path.as_ref(), false)
+}
+
+/// Parse only the trailing [`RunCursor`] of a checkpoint, seeking over
+/// every tensor payload instead of materializing it — the serve submit
+/// path reads this to continue event numbering without paying for a
+/// full snapshot load. `Ok(None)` for RVT1 files or RVT2 files written
+/// without a cursor.
+pub fn load_cursor(path: impl AsRef<Path>) -> Result<Option<RunCursor>> {
+    let (mut r, v2) = open_reader(path.as_ref())?;
+    if !v2 {
+        return Ok(None);
+    }
+    let _step = r.u64("step")?;
+    let count = r.u32("tensor count")? as usize;
+    r.claim(12 * count as u64, "tensor table")?;
+    for i in 0..count {
+        let what = format!("tensor {i}");
+        let nlen = r.u32(&what)? as u64;
+        r.skip(nlen, &what)?;
+        r.skip_tensor_body(&what)?;
+    }
+    if r.u8("opt flag")? != 0 {
+        let n_opt = r.u32("opt count")? as usize;
+        r.claim(2 * 8 * n_opt as u64, "opt table")?;
+        for i in 0..2 * n_opt {
+            r.skip_tensor_body(&format!("moment {i}"))?;
         }
     }
+    if r.u8("cursor flag")? == 0 {
+        return Ok(None);
+    }
+    Ok(Some(r.cursor_body()?))
+}
+
+// -------------------------------------------------------------- restore
+
+/// Restore matching tensors into `params`; returns how many matched.
+/// A same-name tensor whose stored shape differs from the store's is an
+/// [`Error::Layout`] — restoring by flat element count alone would
+/// silently corrupt the run.
+pub fn restore_into(ckpt: &Checkpoint, params: &mut ParamStore) -> Result<usize> {
+    let mut n = 0;
+    for (name, shape, data) in &ckpt.tensors {
+        let Some(spec) = params.spec(name) else {
+            continue;
+        };
+        if &spec.shape != shape {
+            return Err(Error::Layout(format!(
+                "checkpoint tensor {name}: stored shape {shape:?} != model shape {:?}",
+                spec.shape
+            )));
+        }
+        params.set_tensor(name, data.clone())?;
+        n += 1;
+    }
     Ok(n)
+}
+
+// ---------------------------------------------- periodic-snapshot files
+
+const PERIODIC_PREFIX: &str = "ckpt-";
+
+/// Path of a periodic snapshot. Zero-padded so lexicographic filename
+/// order equals training order (`latest_checkpoint` and retention both
+/// rely on it).
+pub fn periodic_path(dir: impl AsRef<Path>, phase_idx: u64, step_in_phase: u64) -> PathBuf {
+    dir.as_ref().join(format!("{PERIODIC_PREFIX}p{phase_idx:02}-s{step_in_phase:08}.rvt"))
+}
+
+/// Sorted (oldest → newest) periodic snapshot files in `dir`.
+fn periodic_files(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with(PERIODIC_PREFIX) && n.ends_with(".rvt"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+/// Newest periodic snapshot in `dir` (`--resume` auto-discovery), or
+/// `None` when the directory holds none.
+pub fn latest_checkpoint(dir: impl AsRef<Path>) -> Option<PathBuf> {
+    periodic_files(dir.as_ref()).pop()
+}
+
+/// Newest periodic snapshot in `dir` that parses structurally (a cheap
+/// seek-based walk of the whole file — no tensor payload is
+/// materialized), falling back to older snapshots when the newest is
+/// torn. Atomic writes make torn files rare, but a power loss right
+/// after a rename can still leave one — and losing the run to its own
+/// freshest checkpoint is exactly what resume must survive.
+pub fn latest_valid_checkpoint(dir: impl AsRef<Path>) -> Option<PathBuf> {
+    let mut files = periodic_files(dir.as_ref());
+    while let Some(path) = files.pop() {
+        match load_cursor(&path) {
+            Ok(_) => return Some(path),
+            Err(e) => eprintln!(
+                "[checkpoint] skipping unreadable snapshot {}: {e}",
+                path.display()
+            ),
+        }
+    }
+    None
+}
+
+/// Delete the oldest periodic snapshots beyond `keep_last` (0 keeps
+/// everything). Deletion failures are reported but non-fatal — losing a
+/// stale snapshot must never kill the run that outgrew it.
+pub fn prune_checkpoints(dir: impl AsRef<Path>, keep_last: usize) {
+    if keep_last == 0 {
+        return;
+    }
+    let files = periodic_files(dir.as_ref());
+    if files.len() <= keep_last {
+        return;
+    }
+    for old in &files[..files.len() - keep_last] {
+        if let Err(e) = std::fs::remove_file(old) {
+            eprintln!("[checkpoint] could not prune {}: {e}", old.display());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -147,8 +570,26 @@ mod tests {
         ParamStore::from_host(specs, host).unwrap()
     }
 
+    fn moments() -> OptMoments {
+        OptMoments {
+            m: vec![(vec![4, 2], vec![0.25; 8]), (vec![2], vec![0.5; 2])],
+            v: vec![(vec![4, 2], vec![0.125; 8]), (vec![2], vec![1.5; 2])],
+        }
+    }
+
+    fn cursor() -> RunCursor {
+        RunCursor {
+            phase_idx: 1,
+            step_in_phase: 7,
+            batches_taken: 14,
+            batch_seed: 0xfeed,
+            seq: 21,
+            steps_total: 9,
+        }
+    }
+
     #[test]
-    fn save_load_roundtrip() {
+    fn rvt1_save_load_roundtrip() {
         let dir = crate::util::ScratchDir::new("ckpt").unwrap();
         let p = dir.join("ck.rvt");
         let s = store();
@@ -158,11 +599,37 @@ mod tests {
         assert_eq!(ck.tensors.len(), 2);
         assert_eq!(ck.tensors[0].0, "embed");
         assert_eq!(ck.tensors[0].2, vec![1.0; 8]);
+        assert!(ck.opt.is_none(), "RVT1 carries no moments");
+        assert!(ck.cursor.is_none(), "RVT1 carries no cursor");
+    }
+
+    #[test]
+    fn rvt2_full_state_roundtrip() {
+        let dir = crate::util::ScratchDir::new("ckpt2").unwrap();
+        let p = dir.join("full.rvt");
+        save_state(&p, &store(), 9, Some(&moments()), Some(&cursor())).unwrap();
+        let ck = load(&p).unwrap();
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.tensors.len(), 2);
+        assert_eq!(ck.opt.as_ref().unwrap(), &moments());
+        assert_eq!(ck.cursor.unwrap(), cursor());
+        // atomic write leaves no tmp file behind
+        assert!(!dir.join("full.rvt.tmp").exists());
+    }
+
+    #[test]
+    fn rvt2_without_optional_sections() {
+        let dir = crate::util::ScratchDir::new("ckpt3").unwrap();
+        let p = dir.join("lean.rvt");
+        save_state(&p, &store(), 3, None, None).unwrap();
+        let ck = load(&p).unwrap();
+        assert!(ck.opt.is_none());
+        assert!(ck.cursor.is_none());
     }
 
     #[test]
     fn restore_matches_by_name() {
-        let dir = crate::util::ScratchDir::new("ckpt").unwrap();
+        let dir = crate::util::ScratchDir::new("ckpt4").unwrap();
         let p = dir.join("ck.rvt");
         let mut s = store();
         s.set_tensor("norm_f", vec![9.0, 9.0]).unwrap();
@@ -175,10 +642,124 @@ mod tests {
     }
 
     #[test]
+    fn same_count_different_shape_rejected() {
+        // an 8-element [2, 4] must NOT restore into an 8-element [4, 2]
+        let dir = crate::util::ScratchDir::new("ckpt5").unwrap();
+        let p = dir.join("ck.rvt");
+        let transposed = ParamStore::from_host(
+            vec![TensorSpec {
+                name: "embed".into(),
+                shape: vec![2, 4],
+                dtype: "f32".into(),
+                blob: "x".into(),
+                offset: 0,
+                nbytes: 32,
+            }],
+            vec![vec![7.0; 8]],
+        )
+        .unwrap();
+        save(&p, &transposed, 1).unwrap();
+        let ck = load(&p).unwrap();
+        let mut target = store();
+        let err = restore_into(&ck, &mut target).unwrap_err();
+        assert!(matches!(err, Error::Layout(_)), "got {err}");
+        // target untouched by the failed restore
+        assert_eq!(target.tensor("embed").unwrap(), &[1.0; 8]);
+    }
+
+    #[test]
     fn bad_magic_rejected() {
-        let dir = crate::util::ScratchDir::new("ckpt2").unwrap();
+        let dir = crate::util::ScratchDir::new("ckpt6").unwrap();
         let p = dir.join("junk.rvt");
-        std::fs::write(&p, b"NOPE").unwrap();
-        assert!(load(&p).is_err());
+        std::fs::write(&p, b"NOPEnope").unwrap();
+        assert!(matches!(load(&p).unwrap_err(), Error::Parse(_)));
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_parse_error() {
+        let dir = crate::util::ScratchDir::new("ckpt7").unwrap();
+        let p = dir.join("full.rvt");
+        save_state(&p, &store(), 9, Some(&moments()), Some(&cursor())).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // chop at every prefix length: each must fail cleanly as Parse
+        let probe = dir.join("cut.rvt");
+        for cut in 0..bytes.len() {
+            std::fs::write(&probe, &bytes[..cut]).unwrap();
+            match load(&probe) {
+                Err(Error::Parse(_)) => {}
+                Err(other) => panic!("cut at {cut}: expected Parse, got {other}"),
+                Ok(_) => panic!("cut at {cut}: truncated file must not load"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_header_fields_error_without_allocating() {
+        let dir = crate::util::ScratchDir::new("ckpt8").unwrap();
+        let p = dir.join("ck.rvt");
+        save(&p, &store(), 1).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+
+        // name_len is the u32 right after magic+step+count (offset 16):
+        // claim a 4 GB name in a <1 KB file
+        let mut evil = bytes.clone();
+        evil[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &evil).unwrap();
+        assert!(matches!(load(&p).unwrap_err(), Error::Parse(_)));
+
+        // tensor count claims 4 billion tensors
+        let mut evil = bytes.clone();
+        evil[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &evil).unwrap();
+        assert!(matches!(load(&p).unwrap_err(), Error::Parse(_)));
+
+        // ndim for "embed" (offset 16 + 4 + 5) claims a billion dims
+        let mut evil = bytes.clone();
+        evil[25..29].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &evil).unwrap();
+        assert!(matches!(load(&p).unwrap_err(), Error::Parse(_)));
+
+        // dims whose product overflows usize
+        let mut evil = bytes;
+        evil[25..29].copy_from_slice(&2u32.to_le_bytes()); // ndim = 2
+        evil[29..33].copy_from_slice(&u32::MAX.to_le_bytes());
+        evil[33..37].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &evil).unwrap();
+        assert!(matches!(load(&p).unwrap_err(), Error::Parse(_)));
+    }
+
+    #[test]
+    fn periodic_paths_sort_chronologically() {
+        let a = periodic_path("out", 0, 2);
+        let b = periodic_path("out", 0, 10);
+        let c = periodic_path("out", 1, 1);
+        assert!(a.to_str().unwrap() < b.to_str().unwrap(), "step 2 before step 10");
+        assert!(b.to_str().unwrap() < c.to_str().unwrap(), "phase 0 before phase 1");
+    }
+
+    #[test]
+    fn latest_and_prune_respect_order_and_keep_last() {
+        let dir = crate::util::ScratchDir::new("ckpt9").unwrap();
+        let s = store();
+        for (phase, step) in [(0u64, 2u64), (0, 4), (1, 2), (1, 4)] {
+            save_state(periodic_path(&dir.path, phase, step), &s, step, None, None).unwrap();
+        }
+        assert_eq!(latest_checkpoint(&dir.path).unwrap(), periodic_path(&dir.path, 1, 4));
+
+        prune_checkpoints(&dir.path, 2);
+        let left: Vec<_> = periodic_files(&dir.path);
+        assert_eq!(left, vec![periodic_path(&dir.path, 1, 2), periodic_path(&dir.path, 1, 4)]);
+
+        // keep_last = 0 keeps everything
+        prune_checkpoints(&dir.path, 0);
+        assert_eq!(periodic_files(&dir.path).len(), 2);
+    }
+
+    #[test]
+    fn latest_checkpoint_ignores_final_and_missing_dirs() {
+        let dir = crate::util::ScratchDir::new("ckpt10").unwrap();
+        save(dir.join("final.rvt"), &store(), 5).unwrap();
+        assert!(latest_checkpoint(&dir.path).is_none(), "final.rvt is not a periodic snapshot");
+        assert!(latest_checkpoint(dir.join("nonexistent")).is_none());
     }
 }

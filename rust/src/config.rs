@@ -135,6 +135,13 @@ pub struct RunConfig {
     /// Where to write metrics / checkpoints (created if missing).
     pub out_dir: PathBuf,
     pub save_checkpoint: bool,
+    /// Periodic full-state snapshot cadence in optimizer steps (0 =
+    /// off). Snapshots are RVT2 files (`ckpt-p<phase>-s<step>.rvt`
+    /// under `out_dir`), written atomically, resumable via
+    /// `revffn train --resume` / the serve `resume` verb.
+    pub checkpoint_every: u64,
+    /// How many periodic snapshots to retain (0 = keep all).
+    pub keep_last: usize,
     pub seed: u64,
 }
 
@@ -151,6 +158,8 @@ impl RunConfig {
             eval_batches: 8,
             out_dir: PathBuf::from("runs/latest"),
             save_checkpoint: false,
+            checkpoint_every: 0,
+            keep_last: 3,
             seed: 0,
         }
     }
@@ -192,6 +201,12 @@ impl RunConfig {
         }
         if let Some(v) = j.get("save_checkpoint").and_then(Json::as_bool) {
             cfg.save_checkpoint = v;
+        }
+        if let Some(v) = j.get("checkpoint_every").and_then(Json::as_u64) {
+            cfg.checkpoint_every = v;
+        }
+        if let Some(v) = j.get("keep_last").and_then(Json::as_usize) {
+            cfg.keep_last = v;
         }
         if let Some(v) = j.get("seed").and_then(Json::as_u64) {
             cfg.seed = v;
@@ -254,6 +269,8 @@ impl RunConfig {
             .num("eval_batches", self.eval_batches as f64)
             .str("out_dir", self.out_dir.display().to_string())
             .bool("save_checkpoint", self.save_checkpoint)
+            .num("checkpoint_every", self.checkpoint_every as f64)
+            .num("keep_last", self.keep_last as f64)
             .num("seed", self.seed as f64)
             .val(
                 "schedule",
@@ -360,6 +377,25 @@ pub struct ServeConfig {
     pub price_geometry: PriceGeometry,
     /// `out_dir` root for jobs that omit one (`<run_root>/<job-id>`).
     pub run_root: PathBuf,
+    /// Host-side admission budget in GB: suspended jobs hold their
+    /// params + Adam moments as host literal snapshots, and admission
+    /// reserves that worst-case footprint too so a budget-full server
+    /// cannot be OOM'd by host mirrors. 0 = unbounded.
+    pub host_budget_gb: f64,
+    /// Per-job event-log ring-buffer capacity (lines). Long-lived
+    /// servers emit one NDJSON line per step per job; beyond the cap
+    /// the oldest lines are evicted and the log's base offset advances
+    /// (`events` subscribers past the base still stream gap-free).
+    /// 0 = unbounded.
+    pub event_log_cap: usize,
+    /// Default `checkpoint_every` applied to submitted jobs that omit
+    /// it (0 = leave off). Periodic snapshots are what make a `Failed`
+    /// job — or a restarted server — recoverable.
+    pub checkpoint_every: u64,
+    /// On startup, rescan `run_root` for interrupted jobs (a persisted
+    /// `job.json` plus a periodic snapshot) and resubmit them resuming
+    /// from their latest checkpoint.
+    pub recover: bool,
 }
 
 impl Default for ServeConfig {
@@ -372,6 +408,10 @@ impl Default for ServeConfig {
             assumptions: "bf16_mixed".into(),
             price_geometry: PriceGeometry::Manifest,
             run_root: PathBuf::from("runs/serve"),
+            host_budget_gb: 80.0,
+            event_log_cap: 4096,
+            checkpoint_every: 10,
+            recover: true,
         }
     }
 }
@@ -405,6 +445,22 @@ impl ServeConfig {
         if let Some(v) = j.get("run_root").and_then(Json::as_str) {
             cfg.run_root = v.into();
         }
+        // absent → track the device budget (a suspended job's host
+        // snapshot is always smaller than its device peak, so this
+        // default never starves admission — it only bounds the mirrors)
+        cfg.host_budget_gb = j
+            .get("host_budget_gb")
+            .and_then(Json::as_f64)
+            .unwrap_or(cfg.budget_gb);
+        if let Some(v) = j.get("event_log_cap").and_then(Json::as_usize) {
+            cfg.event_log_cap = v;
+        }
+        if let Some(v) = j.get("checkpoint_every").and_then(Json::as_u64) {
+            cfg.checkpoint_every = v;
+        }
+        if let Some(v) = j.get("recover").and_then(Json::as_bool) {
+            cfg.recover = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -418,12 +474,19 @@ impl ServeConfig {
             .str("assumptions", self.assumptions.clone())
             .str("price_geometry", self.price_geometry.name())
             .str("run_root", self.run_root.display().to_string())
+            .num("host_budget_gb", self.host_budget_gb)
+            .num("event_log_cap", self.event_log_cap as f64)
+            .num("checkpoint_every", self.checkpoint_every as f64)
+            .bool("recover", self.recover)
             .build()
     }
 
     pub fn validate(&self) -> Result<()> {
         if self.budget_gb.is_nan() || self.budget_gb <= 0.0 {
             return Err(Error::Config("budget_gb must be > 0".into()));
+        }
+        if self.host_budget_gb.is_nan() || self.host_budget_gb < 0.0 {
+            return Err(Error::Config("host_budget_gb must be >= 0 (0 = unbounded)".into()));
         }
         if self.quantum == 0 {
             return Err(Error::Config("quantum must be >= 1".into()));
@@ -478,6 +541,8 @@ mod tests {
         c.data.pretrain_steps = 7;
         c.eval_batches = 3;
         c.device_resident = false;
+        c.checkpoint_every = 25;
+        c.keep_last = 5;
         let text = c.to_json().to_string();
         let c2 = RunConfig::from_json_str(&text).unwrap();
         assert_eq!(c2.method, Method::Galore);
@@ -485,6 +550,15 @@ mod tests {
         assert_eq!(c2.data.pretrain_steps, 7);
         assert_eq!(c2.eval_batches, 3);
         assert!(!c2.device_resident);
+        assert_eq!(c2.checkpoint_every, 25);
+        assert_eq!(c2.keep_last, 5);
+    }
+
+    #[test]
+    fn checkpointing_defaults_off_with_retention() {
+        let c = RunConfig::from_json_str("{}").unwrap();
+        assert_eq!(c.checkpoint_every, 0, "periodic snapshots are opt-in");
+        assert_eq!(c.keep_last, 3);
     }
 
     #[test]
@@ -528,11 +602,41 @@ mod tests {
     }
 
     #[test]
+    fn serve_host_budget_defaults_to_device_budget() {
+        let c = ServeConfig::from_json_str(r#"{"budget_gb": 12.0}"#).unwrap();
+        assert_eq!(c.host_budget_gb, 12.0, "absent host budget tracks the device budget");
+        let c = ServeConfig::from_json_str(r#"{"budget_gb": 12.0, "host_budget_gb": 0}"#).unwrap();
+        assert_eq!(c.host_budget_gb, 0.0, "explicit 0 = unbounded");
+        let c =
+            ServeConfig::from_json_str(r#"{"budget_gb": 12.0, "host_budget_gb": 3.5}"#).unwrap();
+        assert_eq!(c.host_budget_gb, 3.5);
+    }
+
+    #[test]
+    fn serve_recovery_and_log_cap_roundtrip() {
+        let c = ServeConfig::from_json_str("{}").unwrap();
+        assert!(c.recover, "crash recovery is on by default");
+        assert_eq!(c.event_log_cap, 4096);
+        assert_eq!(c.checkpoint_every, 10, "serve jobs snapshot by default");
+        let c = ServeConfig::from_json_str(
+            r#"{"recover": false, "event_log_cap": 16, "checkpoint_every": 0}"#,
+        )
+        .unwrap();
+        assert!(!c.recover);
+        assert_eq!(c.event_log_cap, 16);
+        assert_eq!(c.checkpoint_every, 0);
+        let back = ServeConfig::from_json_str(&c.to_json().to_string()).unwrap();
+        assert!(!back.recover);
+        assert_eq!(back.event_log_cap, 16);
+    }
+
+    #[test]
     fn serve_config_rejects_bad_values() {
         assert!(ServeConfig::from_json_str(r#"{"budget_gb": 0}"#).is_err());
         assert!(ServeConfig::from_json_str(r#"{"quantum": 0}"#).is_err());
         assert!(ServeConfig::from_json_str(r#"{"assumptions": "fp8"}"#).is_err());
         assert!(ServeConfig::from_json_str(r#"{"price_geometry": "llama"}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"host_budget_gb": -1}"#).is_err());
     }
 
     #[test]

@@ -122,7 +122,24 @@ impl Trainer {
     /// over [`Trainer::start`] that logs progress to stderr). Returns
     /// the report; the trained model stays available in `self.stepper`.
     pub fn run(&mut self) -> Result<TrainReport> {
+        let run = self.start()?;
+        Self::drive(run)
+    }
+
+    /// Like [`Trainer::run`], but resuming from a full-state RVT2
+    /// checkpoint (see [`crate::checkpoint`]): params, Adam moments,
+    /// step counters and the data cursor are restored before the first
+    /// step, so the continuation is bit-identical to the uninterrupted
+    /// run. The report covers the resumed portion only.
+    pub fn run_resumed(&mut self, ckpt: crate::checkpoint::Checkpoint) -> Result<TrainReport> {
         let mut run = self.start()?;
+        run.restore(ckpt)?;
+        Self::drive(run)
+    }
+
+    /// The stderr-logging drive loop shared by [`Trainer::run`] and
+    /// [`Trainer::run_resumed`].
+    fn drive<T: std::borrow::BorrowMut<Trainer>>(mut run: Run<T>) -> Result<TrainReport> {
         let mut label = "";
         let mut phase_steps = 0u64;
         let mut local_step = 0u64;

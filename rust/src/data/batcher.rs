@@ -90,6 +90,27 @@ impl Batcher {
         }
     }
 
+    /// Advance past `n` batches without assembling them — the resume
+    /// path replays the data cursor this way. The epoch/shuffle/cursor
+    /// trajectory is identical to calling [`Batcher::fill_next`] `n`
+    /// times (the RNG is consumed at exactly the same points), so a
+    /// batcher skipped to position `n` delivers bit-identical batches
+    /// to one that actually consumed them.
+    pub fn skip_batches(&mut self, n: usize) {
+        if self.samples.is_empty() {
+            return;
+        }
+        for _ in 0..n {
+            for _ in 0..self.batch_size {
+                if self.cursor >= self.order.len() {
+                    self.epoch += 1;
+                    self.reshuffle();
+                }
+                self.cursor += 1;
+            }
+        }
+    }
+
     /// Number of full batches `sequential_batches` yields.
     pub fn n_sequential_batches(&self) -> usize {
         self.samples.len() / self.batch_size
@@ -173,6 +194,35 @@ mod tests {
         let b = Batcher::new(samples(100, 4), 2, 4, 0);
         // taking 3 of 50 must not require materializing the rest
         assert_eq!(b.sequential_batches().take(3).count(), 3);
+    }
+
+    #[test]
+    fn skip_batches_matches_consuming_them() {
+        // cross several epoch boundaries so the skipped path exercises
+        // the same reshuffle points as real consumption
+        for skip in [0usize, 1, 3, 7, 11] {
+            let mut consumed = Batcher::new(samples(10, 4), 4, 4, 99);
+            for _ in 0..skip {
+                consumed.next_batch();
+            }
+            let mut skipped = Batcher::new(samples(10, 4), 4, 4, 99);
+            skipped.skip_batches(skip);
+            assert_eq!(skipped.epoch, consumed.epoch, "epoch after skipping {skip}");
+            for _ in 0..5 {
+                assert_eq!(
+                    skipped.next_batch().tokens,
+                    consumed.next_batch().tokens,
+                    "divergence after skipping {skip}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn skip_batches_on_empty_batcher_is_a_noop() {
+        let mut b = Batcher::new(Vec::new(), 4, 4, 0);
+        b.skip_batches(100); // must not hang or panic
+        assert_eq!(b.epoch, 0);
     }
 
     #[test]

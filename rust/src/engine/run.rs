@@ -101,6 +101,22 @@ pub struct Run<T: BorrowMut<Trainer>> {
     last_eval: Option<f32>,
     observer: Option<Observer>,
     finished: bool,
+    /// Seed the open phase's training batcher was created with
+    /// (recorded into checkpoints, validated on resume).
+    batch_seed: u64,
+    /// Training batches consumed from the open phase's pipeline — the
+    /// data-cursor half of a full-state checkpoint. Counted on the
+    /// consumer side, NOT inside the batcher: the prefetch thread runs
+    /// ahead, so only batches the run actually trained on count.
+    batches_taken: u64,
+    /// Events yielded so far (serve event-stream continuity).
+    seq: u64,
+    /// Optimizer steps completed across all phases (periodic-snapshot
+    /// cadence: `cfg.checkpoint_every`).
+    steps_total: u64,
+    /// Checkpoint to fast-forward from, staged by [`Run::restore`] and
+    /// consumed when its phase opens.
+    pending_resume: Option<checkpoint::Checkpoint>,
 }
 
 impl<T: BorrowMut<Trainer>> Run<T> {
@@ -123,7 +139,64 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             last_eval: None,
             observer: None,
             finished: false,
+            batch_seed: 0,
+            batches_taken: 0,
+            seq: 0,
+            steps_total: 0,
+            pending_resume: None,
         })
+    }
+
+    /// Resume this run from a full-state checkpoint (an RVT2 file with
+    /// a run cursor — see [`crate::checkpoint`]). Must be called before
+    /// the first [`Run::step`]: the run fast-forwards to the cursor's
+    /// phase/step, restores params + Adam moments + the optimizer step
+    /// counter into that phase's stepper, and replays the data pipeline
+    /// to the next unseen batch — continuation is bit-identical to the
+    /// uninterrupted run.
+    ///
+    /// Params-only checkpoints (RVT1, or an end-of-run `final.rvt`) are
+    /// rejected: restoring weights without the moments silently resets
+    /// the optimizer and changes training dynamics. Load those through
+    /// [`crate::engine::SessionBuilder::checkpoint`] instead.
+    pub fn restore(&mut self, ckpt: checkpoint::Checkpoint) -> Result<()> {
+        if self.phase_open || self.phase_idx != 0 || self.finished || !self.queue.is_empty() {
+            return Err(Error::Config("restore() must precede the first step()".into()));
+        }
+        let cursor = ckpt.cursor.ok_or_else(|| {
+            Error::Config(
+                "checkpoint has no run cursor (params-only RVT1, or a final snapshot) — \
+                 it can seed a Session but cannot resume a run"
+                    .into(),
+            )
+        })?;
+        if ckpt.opt.is_none() {
+            return Err(Error::Config(
+                "checkpoint has no optimizer moments; resuming from it would silently \
+                 reset Adam"
+                    .into(),
+            ));
+        }
+        if cursor.phase_idx as usize >= self.phases.len() {
+            return Err(Error::Config(format!(
+                "checkpoint cursor at phase {} but the schedule plans {} phases — \
+                 was the config changed, or the run already complete?",
+                cursor.phase_idx,
+                self.phases.len()
+            )));
+        }
+        if cursor.step_in_phase > self.phases[cursor.phase_idx as usize].steps {
+            return Err(Error::Config(format!(
+                "checkpoint cursor at step {} of a {}-step phase — config mismatch",
+                cursor.step_in_phase,
+                self.phases[cursor.phase_idx as usize].steps
+            )));
+        }
+        self.phase_idx = cursor.phase_idx as usize;
+        self.seq = cursor.seq;
+        self.steps_total = cursor.steps_total;
+        self.pending_resume = Some(ckpt);
+        Ok(())
     }
 
     /// Install an observer invoked with every yielded event (metrics
@@ -145,6 +218,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
                 if let Some(obs) = self.observer.as_mut() {
                     obs(&ev);
                 }
+                self.seq += 1;
                 return Ok(Some(ev));
             }
             if self.finished {
@@ -236,6 +310,13 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             if phase.kind == PhaseKind::LmPrepass
                 && self.trainer.borrow().prepass_dir().is_none()
             {
+                if self.pending_resume.is_some() {
+                    return Err(Error::Config(
+                        "checkpoint resumes into the LM pre-pass but this artifact set \
+                         has no sft variant to run it on"
+                            .into(),
+                    ));
+                }
                 // artifact set without an sft variant (pallas-only
                 // dirs): skip the pre-pass, as the eager path used to
                 self.phase_idx += 1;
@@ -247,6 +328,8 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         if self.step_in_phase < phase.steps {
             self.train_one(&phase)?;
             self.step_in_phase += 1;
+            self.steps_total += 1;
+            self.maybe_checkpoint()?;
             return Ok(());
         }
         self.close_phase(&phase)
@@ -257,6 +340,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
     /// batch the data.
     fn open_phase(&mut self, phase: &Phase) -> Result<()> {
         let prepass = phase.kind == PhaseKind::LmPrepass;
+        let resume = self.pending_resume.take();
         let trainer = self.trainer.borrow_mut();
         let mut stepper = if prepass {
             trainer.load_prepass_stepper()?
@@ -291,6 +375,41 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         if train_samples.is_empty() {
             return Err(Error::Config(format!("no training samples fit seq_len {s}")));
         }
+        // Resuming into this phase: restore the checkpoint's full state
+        // into the freshly-loaded stepper (params are name-matched and
+        // shape-checked; Adam moments and the step counter come back
+        // too), and note how far the data cursor must be replayed.
+        let cursor = match &resume {
+            Some(ckpt) => {
+                let cursor = ckpt.cursor.expect("restore() validated the cursor");
+                if cursor.batch_seed != batch_seed {
+                    return Err(Error::Config(format!(
+                        "checkpoint batch seed {:#x} != this config's {batch_seed:#x} — \
+                         resuming would replay different data",
+                        cursor.batch_seed
+                    )));
+                }
+                let matched =
+                    stepper.replace_params(|p| checkpoint::restore_into(ckpt, p))?;
+                if matched != stepper.params.len() {
+                    return Err(Error::Config(format!(
+                        "checkpoint restored only {matched} of {} tensors — wrong \
+                         variant or artifact set?",
+                        stepper.params.len()
+                    )));
+                }
+                let opt = ckpt.opt.as_ref().expect("restore() validated the moments");
+                stepper.restore_opt(&opt.m, &opt.v)?;
+                stepper.set_step(ckpt.step);
+                eprintln!(
+                    "[resume] {}: step {}/{} (optimizer step {}, {} batches replayed)",
+                    phase.label, cursor.step_in_phase, phase.steps, ckpt.step,
+                    cursor.batches_taken
+                );
+                Some(cursor)
+            }
+            None => None,
+        };
         let grad_accum = if prepass { 1 } else { trainer.cfg.grad_accum };
         let seed = trainer.cfg.seed;
         let device_resident = trainer.cfg.device_resident;
@@ -299,11 +418,15 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         // gather/copy overlaps device execution; the prefetch depth
         // scales with grad_accum (an optimizer step drains that many
         // batches back to back). Validation stays a plain synchronous
-        // batcher (it streams lazily).
-        self.pipeline = Some(Pipeline::spawn_with_depth(
-            Batcher::new(train_samples, b, s, batch_seed),
-            Pipeline::depth_for(grad_accum),
-        ));
+        // batcher (it streams lazily). On resume the batcher skips the
+        // already-consumed batches BEFORE the prefetch thread starts,
+        // so the first delivered batch is the first unseen one.
+        let mut batcher = Batcher::new(train_samples, b, s, batch_seed);
+        if let Some(c) = &cursor {
+            batcher.skip_batches(c.batches_taken as usize);
+        }
+        self.pipeline =
+            Some(Pipeline::spawn_with_depth(batcher, Pipeline::depth_for(grad_accum)));
         self.eval_batcher = if prepass {
             None
         } else {
@@ -316,7 +439,8 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         // pin params + moments as PjRtBuffers for the phase. Skipped —
         // automatic fallback to the literal path — when the accumulate
         // path lacks the compiled accum_step/scale pair, or if the
-        // upload itself fails.
+        // upload itself fails. On resume this runs after the restore,
+        // so the pinned buffers hold the checkpointed state.
         if device_resident && (!use_accum || stepper.supports_device_accum()) {
             if let Err(e) = stepper.enable_device_state() {
                 eprintln!("[device] buffer path unavailable ({e}); using literal path");
@@ -324,7 +448,9 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         }
         self.stepper = Some(stepper);
         self.phase_open = true;
-        self.step_in_phase = 0;
+        self.batch_seed = batch_seed;
+        self.step_in_phase = cursor.map(|c| c.step_in_phase).unwrap_or(0);
+        self.batches_taken = cursor.map(|c| c.batches_taken).unwrap_or(0);
         self.queue.push_back(StepEvent::PhaseStarted {
             phase: self.phase_idx,
             stage: phase.stage,
@@ -438,10 +564,43 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         };
         trainer.metrics.record_step(rec.clone());
         self.queue.push_back(StepEvent::Step(rec));
+        // the step consumed exactly `ga` batches (the buffer-path
+        // fallback redo reuses its pre-fetched burst, never extras) —
+        // advance the data cursor the next checkpoint will record
+        self.batches_taken += ga as u64;
 
         if eval_every > 0 && (step + 1) % eval_every == 0 {
             self.validate_now()?;
         }
+        Ok(())
+    }
+
+    /// Periodic full-state snapshot (`cfg.checkpoint_every`), taken at
+    /// an optimizer-step boundary — the accumulator is always drained
+    /// here, so no partial microbatch state needs serializing. The
+    /// write is atomic (tmp + rename) and retention keeps the newest
+    /// `cfg.keep_last` files. On the device-resident path this is the
+    /// one deliberate full-state download per cadence interval.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let trainer = self.trainer.borrow();
+        let every = trainer.cfg.checkpoint_every;
+        if every == 0 || self.steps_total % every != 0 {
+            return Ok(());
+        }
+        let out_dir = trainer.cfg.out_dir.clone();
+        let keep_last = trainer.cfg.keep_last;
+        let cursor = checkpoint::RunCursor {
+            phase_idx: self.phase_idx as u64,
+            step_in_phase: self.step_in_phase,
+            batches_taken: self.batches_taken,
+            batch_seed: self.batch_seed,
+            seq: self.seq + self.queue.len() as u64,
+            steps_total: self.steps_total,
+        };
+        let stepper = self.stepper.as_mut().expect("phase open");
+        let path = checkpoint::periodic_path(&out_dir, cursor.phase_idx, cursor.step_in_phase);
+        checkpoint::save_stepper_state(&path, stepper, Some(&cursor))?;
+        checkpoint::prune_checkpoints(&out_dir, keep_last);
         Ok(())
     }
 

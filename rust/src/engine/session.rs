@@ -114,7 +114,9 @@ impl SessionBuilder {
         let artifact = Artifact::load(artifacts.join(&variant))?;
         let mut stepper = Stepper::new(&device, &cache, artifact)?;
         if let Some(path) = &ckpt {
-            let ck = checkpoint::load(path)?;
+            // params-only read: eval/generate never touch the Adam
+            // moments an RVT2 file carries, so don't materialize them
+            let ck = checkpoint::load_params(path)?;
             let n = stepper.replace_params(|p| checkpoint::restore_into(&ck, p))?;
             eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
         }
@@ -137,7 +139,7 @@ impl SessionBuilder {
         let program = cache.get_or_load(&device, artifact.hlo_path(kind)?)?;
         let mut params = ParamStore::from_blobs(&artifact)?;
         if let Some(path) = &ckpt {
-            let ck = checkpoint::load(path)?;
+            let ck = checkpoint::load_params(path)?;
             let n = checkpoint::restore_into(&ck, &mut params)?;
             eprintln!("[checkpoint] restored {n} tensors from step {}", ck.step);
         }

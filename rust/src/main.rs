@@ -42,6 +42,7 @@ COMMANDS:
   train         --artifacts DIR --method M [--stage1-steps N] [--stage2-steps N]
                 [--pretrain-steps N] [--eval-batches N] [--out-dir DIR]
                 [--config FILE.json] [--eval-suite] [--save-checkpoint]
+                [--checkpoint-every N] [--keep-last N] [--resume [FILE.rvt]]
                 [--no-device-resident]
   eval          --artifacts DIR --method M [--checkpoint FILE.rvt] [--questions N]
   plan-memory   [--seq N] [--budget-gb G] [--batch B] [--assumptions bf16_mixed|paper|f32]
@@ -51,9 +52,16 @@ COMMANDS:
   generate      --prompt TEXT [--artifacts DIR] [--method M] [--checkpoint F]
                 [--max-new-tokens N] [--temperature T] [--top-k K]
   serve         [--artifacts DIR] [--addr HOST:PORT] [--budget-gb G]
-                [--quantum N] [--assumptions bf16_mixed|paper|f32]
+                [--host-budget-gb G] [--quantum N] [--event-log-cap N]
+                [--checkpoint-every N] [--no-recover]
+                [--assumptions bf16_mixed|paper|f32]
                 [--price-geometry manifest|qwen] [--run-root DIR]
                 [--config FILE.json]
+
+`train --resume` without a file resumes from the newest periodic
+snapshot (ckpt-*.rvt) in --out-dir; periodic snapshots are written
+every --checkpoint-every steps (RVT2: params + Adam moments + data
+cursor — the continuation is bit-identical to an uninterrupted run).
 
 METHODS: sft | lora | dora | ia3 | lomo | galore | revffn
 ";
@@ -102,16 +110,42 @@ fn cmd_train(f: &Flags) -> Result<()> {
             c
         }
     };
+    cfg.checkpoint_every =
+        f.u64("checkpoint_every", cfg.checkpoint_every).map_err(|e| anyhow!("{e}"))?;
+    cfg.keep_last = f.u64("keep_last", cfg.keep_last as u64).map_err(|e| anyhow!("{e}"))? as usize;
     if f.bool("no_device_resident") {
         cfg.device_resident = false;
     }
     if !cfg.method.is_two_stage() {
         cfg.schedule.stage1_steps = 0;
     }
+    // --resume FILE.rvt, or bare --resume to auto-discover the newest
+    // periodic snapshot in out_dir
+    let resume_path = match f.opt("resume").as_deref() {
+        None => None,
+        Some("true") => Some(revffn::checkpoint::latest_valid_checkpoint(&cfg.out_dir).ok_or_else(
+            || {
+                anyhow!(
+                    "--resume: no periodic snapshot (ckpt-*.rvt) in {} — was the run \
+                     started with --checkpoint-every?",
+                    cfg.out_dir.display()
+                )
+            },
+        )?),
+        Some(path) => Some(PathBuf::from(path)),
+    };
     let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
     eprintln!("[device] {} x{}", device.platform_name(), device.device_count());
     let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow!("{e}"))?;
-    let report = trainer.run().map_err(|e| anyhow!("{e}"))?;
+    let report = match resume_path {
+        Some(path) => {
+            eprintln!("[resume] loading {}", path.display());
+            let ckpt = revffn::checkpoint::load(&path)
+                .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            trainer.run_resumed(ckpt).map_err(|e| anyhow!("{e}"))?
+        }
+        None => trainer.run().map_err(|e| anyhow!("{e}"))?,
+    };
     println!(
         "method={} steps={} loss {:.4} -> {:.4} (eval {:.4}) {:.1} samples/s, {:.0}s",
         report.method,
@@ -191,10 +225,21 @@ fn cmd_reconstruct(f: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(f: &Flags) -> Result<()> {
-    let mut opts = match f.opt("config") {
-        Some(p) => ServeConfig::from_json_str(&std::fs::read_to_string(&p)?)
-            .map_err(|e| anyhow!("loading {p}: {e}"))?,
-        None => ServeConfig::default(),
+    // track whether the config file SET host_budget_gb: only an
+    // explicit value survives flag overrides — otherwise the host
+    // budget keeps tracking the (possibly flag-overridden) device
+    // budget, as documented
+    let (mut opts, host_explicit) = match f.opt("config") {
+        Some(p) => {
+            let text = std::fs::read_to_string(&p)?;
+            let opts =
+                ServeConfig::from_json_str(&text).map_err(|e| anyhow!("loading {p}: {e}"))?;
+            let explicit = revffn::util::json::parse(&text)
+                .map(|j| j.get("host_budget_gb").is_some())
+                .unwrap_or(false);
+            (opts, explicit)
+        }
+        None => (ServeConfig::default(), false),
     };
     if let Some(v) = f.opt("artifacts") {
         opts.artifacts = v.into();
@@ -203,7 +248,21 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         opts.addr = v;
     }
     opts.budget_gb = f.f64("budget_gb", opts.budget_gb).map_err(|e| anyhow!("{e}"))?;
+    opts.host_budget_gb = if f.opt("host_budget_gb").is_some() {
+        f.f64("host_budget_gb", opts.host_budget_gb).map_err(|e| anyhow!("{e}"))?
+    } else if host_explicit {
+        opts.host_budget_gb
+    } else {
+        opts.budget_gb
+    };
     opts.quantum = f.u64("quantum", opts.quantum).map_err(|e| anyhow!("{e}"))?;
+    opts.event_log_cap =
+        f.u64("event_log_cap", opts.event_log_cap as u64).map_err(|e| anyhow!("{e}"))? as usize;
+    opts.checkpoint_every =
+        f.u64("checkpoint_every", opts.checkpoint_every).map_err(|e| anyhow!("{e}"))?;
+    if f.bool("no_recover") {
+        opts.recover = false;
+    }
     if let Some(v) = f.opt("assumptions") {
         opts.assumptions = v;
     }

@@ -421,6 +421,21 @@ impl MemoryModel {
         Breakdown::gb(self.breakdown(m, batch, seq).total)
     }
 
+    /// Bytes of a *host-side* full-state snapshot: all weights plus the
+    /// two Adam moments of the trainable set. This is what a suspended
+    /// job pins in host RAM as literal mirrors (and what a checkpoint
+    /// materializes) — always f32, regardless of the device-dtype
+    /// assumptions, because the runtime's host literals are f32.
+    pub fn host_state_bytes(&self, m: Method) -> f64 {
+        let trainable = self.trainable_params(m) as f64;
+        (self.total_weights(m) as f64 + 2.0 * trainable) * 4.0
+    }
+
+    /// [`MemoryModel::host_state_bytes`] in GB.
+    pub fn host_state_gb(&self, m: Method) -> f64 {
+        Breakdown::gb(self.host_state_bytes(m))
+    }
+
     /// Largest batch (doubling + linear refine) fitting `budget_gb`.
     pub fn max_batch(&self, m: Method, seq: u64, budget_gb: f64) -> u64 {
         if self.peak_gb(m, 1, seq) > budget_gb {
@@ -548,6 +563,25 @@ mod tests {
     fn max_batch_zero_when_weights_dont_fit() {
         let m = model();
         assert_eq!(m.max_batch(Method::SftCheckpoint, 2048, 1.0), 0);
+    }
+
+    #[test]
+    fn host_snapshot_smaller_than_device_peak_but_nonzero() {
+        // the admission host ledger reserves this: it must be a real
+        // cost (weights + both moments) yet below the device peak (no
+        // activations, no logits) at fine-tuning shapes
+        let m = model();
+        for method in Method::ALL {
+            let host = m.host_state_gb(method);
+            let peak = m.peak_gb(method, 32, 2048);
+            assert!(host > 0.0, "{method:?} host snapshot must cost something");
+            assert!(host < peak, "{method:?}: host {host:.1} GB vs peak {peak:.1} GB");
+        }
+        // full-parameter methods pin far bigger host mirrors than PEFT:
+        // LoRA's moments cover adapters only, SFT's cover everything
+        let lora = m.host_state_gb(Method::Lora);
+        let sft = m.host_state_gb(Method::SftCheckpoint);
+        assert!(sft > 1.5 * lora, "sft host {sft:.1} GB vs lora {lora:.1} GB");
     }
 
     #[test]

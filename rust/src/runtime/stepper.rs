@@ -345,6 +345,75 @@ impl Stepper {
         Ok(n)
     }
 
+    /// Manifest shapes of the Adam moments (positional — the checkpoint
+    /// format stores moments in this order).
+    pub fn opt_shapes(&self) -> &[Vec<usize>] {
+        &self.artifact.manifest.io.opt_shapes
+    }
+
+    /// Materialize the Adam moments as host vectors (manifest
+    /// `opt_shapes` order). On the buffer path this triggers the lazy
+    /// device → literal sync first, so the snapshot always reflects the
+    /// live state. Cold path: checkpoints only.
+    pub fn opt_snapshot(&mut self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        self.sync_literals()?;
+        let m = self.m_lits.iter().map(to_f32_vec).collect::<Result<Vec<_>>>()?;
+        let v = self.v_lits.iter().map(to_f32_vec).collect::<Result<Vec<_>>>()?;
+        Ok((m, v))
+    }
+
+    /// Overwrite the Adam moments from a checkpoint (positional,
+    /// shape-checked against the manifest `opt_shapes`) and re-pin the
+    /// device copies if the buffer path is active. The counterpart of
+    /// [`Stepper::reset_opt`] for resume — restoring params without the
+    /// moments silently resets the optimizer and changes training
+    /// dynamics, which is exactly the bug full-state checkpoints fix.
+    pub fn restore_opt(
+        &mut self,
+        m: &[(Vec<usize>, Vec<f32>)],
+        v: &[(Vec<usize>, Vec<f32>)],
+    ) -> Result<()> {
+        let shapes = &self.artifact.manifest.io.opt_shapes;
+        if m.len() != shapes.len() || v.len() != shapes.len() {
+            return Err(Error::Layout(format!(
+                "checkpoint has {}/{} moment tensors, manifest wants {}",
+                m.len(),
+                v.len(),
+                shapes.len()
+            )));
+        }
+        for (i, ((ms, _), (vs, _))) in m.iter().zip(v).enumerate() {
+            if ms != &shapes[i] || vs != &shapes[i] {
+                return Err(Error::Layout(format!(
+                    "checkpoint moment {i}: stored shapes {ms:?}/{vs:?} != manifest {:?}",
+                    shapes[i]
+                )));
+            }
+        }
+        // by invariant the literal state is current unless a device
+        // state exists; sync first so a later disable cannot clobber
+        // the restored moments with stale buffers
+        self.sync_literals()?;
+        let mk = |xs: &[(Vec<usize>, Vec<f32>)]| -> Result<Vec<Literal>> {
+            xs.iter().map(|(s, d)| f32_literal(d, s)).collect()
+        };
+        let m_lits = mk(m)?;
+        let v_lits = mk(v)?;
+        if let Some(ds) = self.device_state.as_mut() {
+            ds.reset_opt(&m_lits, &v_lits)?;
+        }
+        self.m_lits = m_lits;
+        self.v_lits = v_lits;
+        Ok(())
+    }
+
+    /// Set the optimizer step counter (checkpoint resume — Adam bias
+    /// correction depends on it, so a resumed run must continue from
+    /// the saved count, not from zero).
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
     fn batch_literals(&self, batch: &Batch) -> Result<[Literal; 3]> {
         batch.validate()?;
         let shape = [batch.batch_size, batch.seq_len];

@@ -113,6 +113,12 @@ impl ParamStore {
         self.name_index.get(name).map(|&i| self.host[i].as_slice())
     }
 
+    /// Spec of a named tensor (checkpoint restore validates stored
+    /// shapes against this).
+    pub fn spec(&self, name: &str) -> Option<&TensorSpec> {
+        self.name_index.get(name).map(|&i| &self.specs[i])
+    }
+
     pub fn tensor_by_index(&self, i: usize) -> &[f32] {
         &self.host[i]
     }

@@ -28,6 +28,12 @@ pub fn price(geo: &Geometry, method: Method, assume: Assumptions, batch: u64, se
 #[derive(Debug, Clone)]
 pub struct PricedJob {
     pub peak_gb: f64,
+    /// Host-RAM price of the job's full-state literal snapshot (params
+    /// + both Adam moments, f32) — what a *suspended* job pins in host
+    /// memory while another job owns the device, and what a checkpoint
+    /// materializes. Reserved up front: any admitted job may be
+    /// preempted, so the worst case is the honest admission cost.
+    pub host_gb: f64,
     pub batch: u64,
     pub seq: u64,
     /// Name of the geometry the price was computed at.
@@ -48,33 +54,58 @@ pub fn price_job(
     let io = &artifact.manifest.io;
     let (batch, seq) = (io.batch_size as u64, io.seq_len as u64);
     let geo = geometry.unwrap_or_else(|| Geometry::from_manifest(&artifact.manifest.model));
+    let model = MemoryModel::new(geo.clone(), assume);
     Ok(PricedJob {
-        peak_gb: price(&geo, method, assume, batch, seq),
+        peak_gb: model.peak_gb(method.memory_method(), batch, seq),
+        host_gb: model.host_state_gb(method.memory_method()),
         batch,
         seq,
         geometry: geo.name.clone(),
     })
 }
 
-/// The budget ledger: tracks the summed peak-GB of admitted jobs.
+/// The budget ledger: tracks the summed peak-GB of admitted jobs on
+/// the device side AND the summed host-snapshot GB on the host side. A
+/// job is admitted only when both fit — suspended jobs' host-side
+/// literal mirrors were previously invisible here, letting a
+/// budget-full server be OOM'd in host RAM.
 #[derive(Debug, Clone)]
 pub struct Admission {
     budget_gb: f64,
     committed_gb: f64,
+    host_budget_gb: f64,
+    host_committed_gb: f64,
     admitted: usize,
 }
 
 impl Admission {
+    /// Device budget only (host side unbounded).
     pub fn new(budget_gb: f64) -> Self {
-        Admission { budget_gb, committed_gb: 0.0, admitted: 0 }
+        Self::with_host_budget(budget_gb, f64::INFINITY)
     }
 
-    /// Reserve `peak_gb` if it fits. The comparison carries a tiny
-    /// relative epsilon so releasing and re-admitting identical jobs
-    /// never flips on accumulated float rounding.
-    pub fn try_admit(&mut self, peak_gb: f64) -> bool {
-        if self.committed_gb + peak_gb <= self.budget_gb * (1.0 + 1e-9) {
+    /// Device + host budgets (`host_budget_gb` caps the summed
+    /// suspended-snapshot footprint; pass `f64::INFINITY` to disable).
+    pub fn with_host_budget(budget_gb: f64, host_budget_gb: f64) -> Self {
+        Admission {
+            budget_gb,
+            committed_gb: 0.0,
+            host_budget_gb,
+            host_committed_gb: 0.0,
+            admitted: 0,
+        }
+    }
+
+    /// Reserve `peak_gb` device-side and `host_gb` host-side if BOTH
+    /// fit. The comparisons carry a tiny relative epsilon so releasing
+    /// and re-admitting identical jobs never flips on accumulated
+    /// float rounding.
+    pub fn try_admit(&mut self, peak_gb: f64, host_gb: f64) -> bool {
+        let device_ok = self.committed_gb + peak_gb <= self.budget_gb * (1.0 + 1e-9);
+        let host_ok = self.host_committed_gb + host_gb <= self.host_budget_gb * (1.0 + 1e-9);
+        if device_ok && host_ok {
             self.committed_gb += peak_gb;
+            self.host_committed_gb += host_gb;
             self.admitted += 1;
             true
         } else {
@@ -82,16 +113,18 @@ impl Admission {
         }
     }
 
-    /// Return a finished/cancelled job's reservation to the pool. When
-    /// the last job leaves, the ledger snaps back to exactly zero so
+    /// Return a finished/cancelled job's reservations to the pool. When
+    /// the last job leaves, both ledgers snap back to exactly zero so
     /// rounding drift cannot accumulate across job generations.
-    pub fn release(&mut self, peak_gb: f64) {
+    pub fn release(&mut self, peak_gb: f64, host_gb: f64) {
         self.admitted = self.admitted.saturating_sub(1);
-        self.committed_gb = if self.admitted == 0 {
-            0.0
+        if self.admitted == 0 {
+            self.committed_gb = 0.0;
+            self.host_committed_gb = 0.0;
         } else {
-            (self.committed_gb - peak_gb).max(0.0)
-        };
+            self.committed_gb = (self.committed_gb - peak_gb).max(0.0);
+            self.host_committed_gb = (self.host_committed_gb - host_gb).max(0.0);
+        }
     }
 
     pub fn budget_gb(&self) -> f64 {
@@ -100,6 +133,14 @@ impl Admission {
 
     pub fn committed_gb(&self) -> f64 {
         self.committed_gb
+    }
+
+    pub fn host_budget_gb(&self) -> f64 {
+        self.host_budget_gb
+    }
+
+    pub fn host_committed_gb(&self) -> f64 {
+        self.host_committed_gb
     }
 
     pub fn headroom_gb(&self) -> f64 {
@@ -128,7 +169,7 @@ mod tests {
         let p = price(geo, method, Assumptions::paper_calibrated(), 256, 4096);
         let mut adm = Admission::new(budget_gb);
         let mut n = 0;
-        while adm.try_admit(p) {
+        while adm.try_admit(p, 0.0) {
             n += 1;
             assert!(n < 1000, "runaway admission");
         }
@@ -179,31 +220,75 @@ mod tests {
     #[test]
     fn release_frees_budget_for_queued_jobs() {
         let mut adm = Admission::new(10.0);
-        assert!(adm.try_admit(6.0));
-        assert!(!adm.try_admit(6.0), "second job must not fit");
-        adm.release(6.0);
+        assert!(adm.try_admit(6.0, 0.0));
+        assert!(!adm.try_admit(6.0, 0.0), "second job must not fit");
+        adm.release(6.0, 0.0);
         assert_eq!(adm.admitted(), 0);
         assert_eq!(adm.committed_gb(), 0.0);
-        assert!(adm.try_admit(6.0), "released budget must re-admit");
+        assert!(adm.try_admit(6.0, 0.0), "released budget must re-admit");
     }
 
     #[test]
     fn admission_ledger_tracks_sums() {
         let mut adm = Admission::new(10.0);
-        assert!(adm.try_admit(3.0));
-        assert!(adm.try_admit(4.0));
+        assert!(adm.try_admit(3.0, 0.0));
+        assert!(adm.try_admit(4.0, 0.0));
         assert!((adm.committed_gb() - 7.0).abs() < 1e-12);
         assert!((adm.headroom_gb() - 3.0).abs() < 1e-12);
         assert_eq!(adm.admitted(), 2);
-        assert!(!adm.try_admit(3.5));
-        adm.release(3.0);
-        assert!(adm.try_admit(3.5));
+        assert!(!adm.try_admit(3.5, 0.0));
+        adm.release(3.0, 0.0);
+        assert!(adm.try_admit(3.5, 0.0));
     }
 
     #[test]
     fn single_job_over_budget_never_admits() {
         let mut adm = Admission::new(1.0);
-        assert!(!adm.try_admit(1.5));
+        assert!(!adm.try_admit(1.5, 0.0));
         assert_eq!(adm.admitted(), 0);
+    }
+
+    #[test]
+    fn host_budget_blocks_admission_even_with_device_headroom() {
+        // the host-mirror OOM fix: device budget fits three jobs, but
+        // their suspended snapshots only fit two host-side
+        let mut adm = Admission::with_host_budget(30.0, 5.0);
+        assert!(adm.try_admit(6.0, 2.0));
+        assert!(adm.try_admit(6.0, 2.0));
+        assert!(!adm.try_admit(6.0, 2.0), "third job must be blocked by the host ledger");
+        assert!((adm.host_committed_gb() - 4.0).abs() < 1e-12);
+        assert!((adm.committed_gb() - 12.0).abs() < 1e-12, "device side untouched by refusal");
+        adm.release(6.0, 2.0);
+        assert!(adm.try_admit(6.0, 2.0), "released host budget must re-admit");
+    }
+
+    #[test]
+    fn unbounded_host_budget_never_blocks() {
+        let mut adm = Admission::new(100.0);
+        for _ in 0..10 {
+            assert!(adm.try_admit(5.0, 1e12));
+        }
+        adm.release(5.0, 1e12);
+        assert_eq!(adm.admitted(), 9);
+    }
+
+    #[test]
+    fn both_ledgers_snap_to_zero_when_empty() {
+        let mut adm = Admission::with_host_budget(10.0, 10.0);
+        assert!(adm.try_admit(0.1 + 0.2, 0.1 + 0.2)); // float-noisy prices
+        adm.release(0.3, 0.3);
+        assert_eq!(adm.committed_gb(), 0.0);
+        assert_eq!(adm.host_committed_gb(), 0.0);
+    }
+
+    #[test]
+    fn priced_job_host_cost_below_device_peak() {
+        let geo = deep_geo();
+        let a = Assumptions::paper_calibrated();
+        let model = crate::memory::MemoryModel::new(geo.clone(), a);
+        let host = model.host_state_gb(Method::Revffn.memory_method());
+        let peak = price(&geo, Method::Revffn, a, 256, 4096);
+        assert!(host > 0.0);
+        assert!(host < peak, "host snapshot {host:.1} GB must undercut device peak {peak:.1} GB");
     }
 }

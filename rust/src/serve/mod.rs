@@ -30,5 +30,5 @@ pub mod server;
 
 pub use admission::Admission;
 pub use protocol::{JobState, Request};
-pub use scheduler::{Board, JobView, Scheduler, SubmitOutcome};
+pub use scheduler::{Board, EventLog, JobView, Scheduler, SubmitOutcome};
 pub use server::{serve, ServerHandle};

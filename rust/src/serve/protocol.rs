@@ -11,6 +11,9 @@
 //!   `{"job":…,"done":true,…}` terminator (follow=false returns what
 //!   exists and terminates immediately).
 //! * `{"cmd":"cancel","job":"job-0"}` → `{"ok":true,"cancelled":…}`.
+//! * `{"cmd":"resume","job":"job-0"}` → resubmits a failed/cancelled
+//!   job from its latest periodic snapshot as a new job:
+//!   `{"ok":true,"job":"job-3","resumed_from":"job-0","admitted":…}`.
 //!
 //! Plus `{"cmd":"shutdown"}` to stop the server (tests, smoke scripts).
 //!
@@ -70,6 +73,8 @@ pub enum Request {
     Status { job: Option<String> },
     Events { job: String, from: u64, follow: bool },
     Cancel { job: String },
+    /// Resubmit a failed/cancelled job from its latest checkpoint.
+    Resume { job: String },
     Shutdown,
 }
 
@@ -99,6 +104,9 @@ impl Request {
             Request::Cancel { job } => {
                 ObjBuilder::new().str("cmd", "cancel").str("job", job.clone()).build()
             }
+            Request::Resume { job } => {
+                ObjBuilder::new().str("cmd", "resume").str("job", job.clone()).build()
+            }
             Request::Shutdown => ObjBuilder::new().str("cmd", "shutdown").build(),
         }
     }
@@ -119,6 +127,7 @@ impl Request {
                 follow: j.get("follow").and_then(Json::as_bool).unwrap_or(true),
             }),
             "cancel" => Ok(Request::Cancel { job: j.str_of("job")? }),
+            "resume" => Ok(Request::Resume { job: j.str_of("job")? }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(Error::Parse(format!("unknown cmd {other:?}"))),
         }
@@ -230,12 +239,21 @@ pub fn snapshot_json(s: &JobSnapshot) -> Json {
     b.build()
 }
 
-/// The full `status` response: budget ledger + job table.
-pub fn status_json(jobs: &[JobSnapshot], budget_gb: f64, committed_gb: f64) -> Json {
+/// The full `status` response: device + host budget ledgers and the
+/// job table. `host_budget_gb` is the configured value (0 = unbounded).
+pub fn status_json(
+    jobs: &[JobSnapshot],
+    budget_gb: f64,
+    committed_gb: f64,
+    host_budget_gb: f64,
+    host_committed_gb: f64,
+) -> Json {
     ObjBuilder::new()
         .bool("ok", true)
         .num("budget_gb", budget_gb)
         .num("committed_gb", committed_gb)
+        .num("host_budget_gb", host_budget_gb)
+        .num("host_committed_gb", host_committed_gb)
         .val("jobs", Json::Arr(jobs.iter().map(snapshot_json).collect()))
         .build()
 }
@@ -255,6 +273,25 @@ pub fn submitted_json(job: &str, admitted: bool, peak_gb: f64, state: JobState) 
     ObjBuilder::new()
         .bool("ok", true)
         .str("job", job)
+        .bool("admitted", admitted)
+        .num("peak_gb", peak_gb)
+        .str("state", state.name())
+        .build()
+}
+
+/// Response to a successful `resume`: the continuation's submit
+/// outcome plus the id of the job it was resumed from.
+pub fn resumed_json(
+    resumed_from: &str,
+    job: &str,
+    admitted: bool,
+    peak_gb: f64,
+    state: JobState,
+) -> Json {
+    ObjBuilder::new()
+        .bool("ok", true)
+        .str("job", job)
+        .str("resumed_from", resumed_from)
         .bool("admitted", admitted)
         .num("peak_gb", peak_gb)
         .str("state", state.name())
@@ -281,6 +318,7 @@ mod tests {
             Request::Status { job: Some("job-3".into()) },
             Request::Events { job: "job-0".into(), from: 17, follow: false },
             Request::Cancel { job: "job-1".into() },
+            Request::Resume { job: "job-2".into() },
             Request::Shutdown,
         ];
         for req in cases {
@@ -302,6 +340,7 @@ mod tests {
         assert!(Request::from_line(r#"{"cmd":"resubmit"}"#).is_err());
         assert!(Request::from_line("not json").is_err());
         assert!(Request::from_line(r#"{"cmd":"cancel"}"#).is_err(), "cancel needs a job");
+        assert!(Request::from_line(r#"{"cmd":"resume"}"#).is_err(), "resume needs a job");
     }
 
     #[test]
@@ -372,9 +411,11 @@ mod tests {
             events: 6,
             error: None,
         };
-        let st = json::parse(&status_json(&[snap], 8.0, 1.5).to_string()).unwrap();
+        let st = json::parse(&status_json(&[snap], 8.0, 1.5, 8.0, 0.25).to_string()).unwrap();
         assert!(st.bool_of("ok").unwrap());
         assert_eq!(st.f64_of("budget_gb").unwrap(), 8.0);
+        assert_eq!(st.f64_of("host_budget_gb").unwrap(), 8.0);
+        assert_eq!(st.f64_of("host_committed_gb").unwrap(), 0.25);
         let jobs = st.arr_of("jobs").unwrap();
         assert_eq!(jobs[0].str_of("state").unwrap(), "running");
         assert_eq!(jobs[0].req("eval_loss").unwrap(), &Json::Null);
@@ -382,6 +423,16 @@ mod tests {
         let done = json::parse(&done_json("job-0", JobState::Finished, 6).to_string()).unwrap();
         assert!(done.bool_of("done").unwrap());
         assert_eq!(done.str_of("state").unwrap(), "finished");
+    }
+
+    #[test]
+    fn resumed_response_names_both_jobs() {
+        let j = resumed_json("job-0", "job-3", true, 1.25, JobState::Running);
+        let back = json::parse(&j.to_string()).unwrap();
+        assert!(back.bool_of("ok").unwrap());
+        assert_eq!(back.str_of("job").unwrap(), "job-3");
+        assert_eq!(back.str_of("resumed_from").unwrap(), "job-0");
+        assert_eq!(back.str_of("state").unwrap(), "running");
     }
 
     #[test]

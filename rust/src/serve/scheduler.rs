@@ -20,6 +20,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
+use crate::checkpoint;
 use crate::config::{PriceGeometry, RunConfig, ServeConfig};
 use crate::coordinator::{TrainReport, Trainer};
 use crate::engine::{Run, StepEvent};
@@ -51,13 +52,24 @@ pub struct Board {
     pub jobs: Vec<JobView>,
     pub budget_gb: f64,
     pub committed_gb: f64,
+    /// Configured host-snapshot budget (0 = unbounded; see
+    /// `ServeConfig::host_budget_gb`).
+    pub host_budget_gb: f64,
+    pub host_committed_gb: f64,
     /// Job ids in event-emission order — the observable interleaving.
     pub timeline: Vec<String>,
 }
 
 impl Board {
-    fn new(budget_gb: f64) -> Self {
-        Board { jobs: Vec::new(), budget_gb, committed_gb: 0.0, timeline: Vec::new() }
+    fn new(budget_gb: f64, host_budget_gb: f64) -> Self {
+        Board {
+            jobs: Vec::new(),
+            budget_gb,
+            committed_gb: 0.0,
+            host_budget_gb,
+            host_committed_gb: 0.0,
+            timeline: Vec::new(),
+        }
     }
 
     /// Look a job up by id.
@@ -66,22 +78,103 @@ impl Board {
     }
 }
 
+/// A job's NDJSON event log as a capped ring buffer. One line per
+/// `StepEvent` leaks memory on long-lived servers, so beyond `cap`
+/// lines the oldest are evicted and `base` advances: line `i` of the
+/// buffer carries event sequence number `base + i`. Subscribers whose
+/// cursor is past the base still stream gap-free; a subscriber that
+/// lagged behind an eviction is clamped forward to the base (see
+/// [`EventLog::lines_from`]).
+#[derive(Debug)]
+pub struct EventLog {
+    lines: VecDeque<String>,
+    base: u64,
+    cap: usize,
+}
+
+impl EventLog {
+    /// `cap` lines retained (0 = unbounded).
+    pub fn new(cap: usize) -> Self {
+        Self::with_base(cap, 0)
+    }
+
+    /// Ring starting at sequence `base` — a resumed job continues its
+    /// predecessor's numbering, so followers never see seq reset.
+    pub fn with_base(cap: usize, base: u64) -> Self {
+        EventLog { lines: VecDeque::new(), base, cap }
+    }
+
+    pub fn push(&mut self, line: String) {
+        self.lines.push_back(line);
+        if self.cap > 0 {
+            while self.lines.len() > self.cap {
+                self.lines.pop_front();
+                self.base += 1;
+            }
+        }
+    }
+
+    /// Sequence number of the oldest retained line.
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Total events ever pushed (= the next sequence number).
+    pub fn total(&self) -> u64 {
+        self.base + self.lines.len() as u64
+    }
+
+    /// Lines from sequence `seq` on, plus the sequence number the
+    /// returned slice actually starts at (clamped forward to the base
+    /// when `seq` points into the evicted region).
+    pub fn lines_from(&self, seq: u64) -> (Vec<String>, u64) {
+        let start = seq.max(self.base);
+        let idx = (start - self.base) as usize;
+        let lines = if idx >= self.lines.len() {
+            Vec::new()
+        } else {
+            self.lines.iter().skip(idx).cloned().collect()
+        };
+        (lines, start)
+    }
+
+    /// All retained lines, oldest first (tests, status dumps).
+    pub fn to_vec(&self) -> Vec<String> {
+        self.lines.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+}
+
 /// One job's public state: snapshot + its NDJSON event log.
 #[derive(Debug)]
 pub struct JobView {
     pub snap: JobSnapshot,
-    pub events: Vec<String>,
+    pub events: EventLog,
     pub report: Option<TrainReport>,
 }
 
 /// Scheduler-private job record.
 struct Job {
     id: String,
-    /// Present while queued; taken on activation.
-    cfg: Option<RunConfig>,
+    /// The job's config — activation clones from it (cold path), and
+    /// resume re-prices and re-activates from it after the job fails
+    /// or is cancelled.
+    cfg: RunConfig,
+    name: String,
     /// Present while running.
     run: Option<Run<Trainer>>,
+    /// Checkpoint to restore on activation (resume / recovery path).
+    resume_from: Option<std::path::PathBuf>,
     peak_gb: f64,
+    /// Host-side snapshot reservation (see `PricedJob::host_gb`).
+    host_gb: f64,
     seq: u64,
     state: JobState,
 }
@@ -112,11 +205,13 @@ impl Scheduler {
     pub fn new(device: Device, opts: ServeConfig) -> Result<Self> {
         opts.validate()?;
         let assume = opts.assumptions()?;
-        let board = Arc::new(Mutex::new(Board::new(opts.budget_gb)));
+        let board = Arc::new(Mutex::new(Board::new(opts.budget_gb, opts.host_budget_gb)));
+        let host_budget =
+            if opts.host_budget_gb > 0.0 { opts.host_budget_gb } else { f64::INFINITY };
         Ok(Scheduler {
             device,
             cache: ProgramCache::new(),
-            admission: Admission::new(opts.budget_gb),
+            admission: Admission::with_host_budget(opts.budget_gb, host_budget),
             assume,
             opts,
             jobs: Vec::new(),
@@ -139,22 +234,150 @@ impl Scheduler {
 
     /// Submit a job from its wire-format JSON config. Keys the config
     /// omits fall back to the serve defaults (`artifacts` → the serve
-    /// artifact dir, `out_dir` → `<run_root>/<job-id>`).
+    /// artifact dir, `out_dir` → a fresh directory under `run_root`).
     pub fn submit_json(&mut self, config: &Json, name: Option<String>) -> Result<SubmitOutcome> {
         let mut cfg = RunConfig::from_json(config)?;
         if config.get("artifacts").is_none() {
             cfg.artifacts = self.opts.artifacts.clone();
         }
         if config.get("out_dir").is_none() {
-            cfg.out_dir = self.opts.run_root.join(self.next_job_id());
+            cfg.out_dir = self.fresh_out_dir();
+        }
+        // serve jobs snapshot periodically by default so they stay
+        // recoverable — but only on true omission: an explicit
+        // `"checkpoint_every": 0` is an opt-out (each snapshot is a
+        // full-state device→host download plus a full-model write)
+        if config.get("checkpoint_every").is_none() {
+            cfg.checkpoint_every = self.opts.checkpoint_every;
         }
         self.submit(cfg, name)
+    }
+
+    /// A default `out_dir` that no other job — from this server life or
+    /// a previous one — is using. Job ids renumber from 0 every server
+    /// life, so `<run_root>/<job-id>` alone can collide with a leftover
+    /// directory whose snapshots/marker belong to an older job; probing
+    /// for an unused directory keeps checkpoint streams from ever
+    /// interleaving across jobs.
+    fn fresh_out_dir(&self) -> std::path::PathBuf {
+        let id = self.next_job_id();
+        let base = self.opts.run_root.join(&id);
+        if !base.exists() {
+            return base;
+        }
+        for k in 1.. {
+            let cand = self.opts.run_root.join(format!("{id}-{k}"));
+            if !cand.exists() {
+                return cand;
+            }
+        }
+        unreachable!("the candidate loop is unbounded")
     }
 
     /// Submit a fully-formed job config: price it, then admit (FIFO) or
     /// queue it. A job pricing over the whole budget is rejected
     /// outright — it could never run.
     pub fn submit(&mut self, cfg: RunConfig, name: Option<String>) -> Result<SubmitOutcome> {
+        self.submit_inner(cfg, name, None)
+    }
+
+    /// Resubmit a `Failed` or `Cancelled` job from its latest periodic
+    /// snapshot. The old job record stays terminal; the continuation
+    /// runs as a NEW job (fresh id, same name and out_dir) that
+    /// restores params + Adam moments + the data cursor before its
+    /// first step, and whose event numbering continues where the
+    /// original stream stopped.
+    pub fn resume_job(&mut self, id: &str) -> Result<SubmitOutcome> {
+        let job = self
+            .jobs
+            .iter()
+            .find(|j| j.id == id)
+            .ok_or_else(|| Error::Config(format!("unknown job {id:?}")))?;
+        match job.state {
+            JobState::Failed | JobState::Cancelled => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "job {id} is {}; only failed or cancelled jobs can resume",
+                    other.name()
+                )))
+            }
+        }
+        let cfg = job.cfg.clone();
+        let name = job.name.clone();
+        let ckpt = checkpoint::latest_valid_checkpoint(&cfg.out_dir).ok_or_else(|| {
+            Error::Config(format!(
+                "job {id} has no periodic snapshot under {} — set checkpoint_every",
+                cfg.out_dir.display()
+            ))
+        })?;
+        self.submit_inner(cfg, Some(name), Some(ckpt))
+    }
+
+    /// Rescan `run_root` for interrupted jobs (a persisted `job.json`
+    /// plus at least one periodic snapshot) and resubmit each resuming
+    /// from its latest checkpoint — how a restarted server gets its
+    /// jobs back. Returns how many were recovered; unrecoverable
+    /// directories are reported and skipped.
+    pub fn recover(&mut self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.opts.run_root) else {
+            return 0;
+        };
+        let mut dirs: Vec<_> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+        dirs.sort(); // deterministic recovery order
+        let mut recovered = 0;
+        for dir in dirs {
+            let marker = dir.join("job.json");
+            if !marker.exists() {
+                continue;
+            }
+            let parsed = std::fs::read_to_string(&marker)
+                .map_err(Error::Io)
+                .and_then(|text| {
+                    let j = crate::util::json::parse(&text)?;
+                    let name = j.get("name").and_then(Json::as_str).map(str::to_string);
+                    let cfg = RunConfig::from_json(
+                        j.get("config").ok_or_else(|| {
+                            Error::Parse("job.json lacks a config object".into())
+                        })?,
+                    )?;
+                    Ok((name, cfg))
+                });
+            let (name, cfg) = match parsed {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("[serve] not recovering {}: {e}", marker.display());
+                    continue;
+                }
+            };
+            // no snapshot yet (interrupted before the first cadence
+            // hit, or snapshots disabled): restart the job from
+            // scratch rather than silently losing it — an in-flight
+            // job must come back one way or the other
+            let ckpt = checkpoint::latest_valid_checkpoint(&cfg.out_dir);
+            if ckpt.is_none() {
+                eprintln!(
+                    "[serve] {}: no usable snapshot — restarting from scratch",
+                    marker.display()
+                );
+            }
+            match self.submit_inner(cfg, name, ckpt) {
+                Ok(o) => {
+                    let state = o.state.name();
+                    eprintln!("[serve] recovered {} as {} ({state})", dir.display(), o.id);
+                    recovered += 1;
+                }
+                Err(e) => eprintln!("[serve] could not recover {}: {e}", dir.display()),
+            }
+        }
+        recovered
+    }
+
+    fn submit_inner(
+        &mut self,
+        cfg: RunConfig,
+        name: Option<String>,
+        resume_from: Option<std::path::PathBuf>,
+    ) -> Result<SubmitOutcome> {
         cfg.validate()?;
         let geo = match self.opts.price_geometry {
             PriceGeometry::Qwen => Some(Geometry::qwen15_moe_a27b()),
@@ -171,12 +394,26 @@ impl Scheduler {
         let id = self.next_job_id();
         let name = name.unwrap_or_else(|| id.clone());
         let method = cfg.method.name().to_string();
+        // persist the job config next to its checkpoints so a restarted
+        // server can find and resume it (recover()); removed again when
+        // the job ends in a state with nothing left to recover
+        self.persist_job_file(&cfg, &name)?;
+        // a resumed job continues its predecessor's event numbering
+        // (cursor-only read — no tensor payload is materialized here)
+        let base_seq = resume_from
+            .as_deref()
+            .and_then(|p| checkpoint::load_cursor(p).ok().flatten())
+            .map(|c| c.seq)
+            .unwrap_or(0);
         self.jobs.push(Job {
             id: id.clone(),
-            cfg: Some(cfg),
+            cfg,
+            name: name.clone(),
             run: None,
+            resume_from,
             peak_gb: priced.peak_gb,
-            seq: 0,
+            host_gb: priced.host_gb,
+            seq: base_seq,
             state: JobState::Queued,
         });
         {
@@ -191,16 +428,17 @@ impl Scheduler {
                     steps_done: 0,
                     last_loss: None,
                     eval_loss: None,
-                    events: 0,
+                    events: base_seq,
                     error: None,
                 },
-                events: Vec::new(),
+                events: EventLog::with_base(self.opts.event_log_cap, base_seq),
                 report: None,
             });
         }
         // strict FIFO: never overtake an already-waiting job, even if
         // this one would fit the headroom
-        let mut admitted = self.waiting.is_empty() && self.admission.try_admit(priced.peak_gb);
+        let mut admitted =
+            self.waiting.is_empty() && self.admission.try_admit(priced.peak_gb, priced.host_gb);
         if admitted {
             self.activate(idx);
             // activation can fail (missing variant dir, bad artifacts):
@@ -214,9 +452,46 @@ impl Scheduler {
         Ok(SubmitOutcome { id, admitted, peak_gb: priced.peak_gb, state: self.jobs[idx].state })
     }
 
+    /// Write `<out_dir>/job.json` (`{"name": …, "config": {…}}`) — the
+    /// recovery marker `recover()` looks for.
+    fn persist_job_file(&self, cfg: &RunConfig, name: &str) -> Result<()> {
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let j = crate::util::json::ObjBuilder::new()
+            .str("name", name)
+            .val("config", cfg.to_json())
+            .build();
+        std::fs::write(cfg.out_dir.join("job.json"), format!("{j}\n"))?;
+        Ok(())
+    }
+
+    /// Remove the recovery marker once nothing is left to recover.
+    fn remove_job_file(&self, idx: usize) {
+        let _ = std::fs::remove_file(self.jobs[idx].cfg.out_dir.join("job.json"));
+    }
+
     /// Cancel a job. `Ok(true)` if it was queued or running, `Ok(false)`
-    /// if it had already reached a terminal state.
+    /// if it had already reached a terminal state. A user cancellation
+    /// removes the job's recovery marker — it must not resurrect on the
+    /// next server start (it stays resumable in-process via the
+    /// `resume` verb while its snapshots exist).
     pub fn cancel(&mut self, id: &str) -> Result<bool> {
+        self.cancel_impl(id, false)
+    }
+
+    /// Cancel every non-terminal job (server shutdown). Recovery
+    /// markers stay on disk: a shutdown is a server-wide stop, not a
+    /// per-job decision, so the next server life recovers these jobs
+    /// from their latest snapshots.
+    pub fn cancel_all(&mut self) {
+        for idx in 0..self.jobs.len() {
+            if matches!(self.jobs[idx].state, JobState::Queued | JobState::Running) {
+                let id = self.jobs[idx].id.clone();
+                let _ = self.cancel_impl(&id, true);
+            }
+        }
+    }
+
+    fn cancel_impl(&mut self, id: &str, keep_marker: bool) -> Result<bool> {
         let idx = self
             .jobs
             .iter()
@@ -225,8 +500,10 @@ impl Scheduler {
         match self.jobs[idx].state {
             JobState::Queued => {
                 self.waiting.retain(|&i| i != idx);
-                self.jobs[idx].cfg = None;
                 self.set_state(idx, JobState::Cancelled, None);
+                if !keep_marker {
+                    self.remove_job_file(idx);
+                }
                 Ok(true)
             }
             JobState::Running => {
@@ -234,22 +511,15 @@ impl Scheduler {
                 // dropping the run releases its pinned buffers and
                 // prefetch thread
                 self.jobs[idx].run = None;
-                self.admission.release(self.jobs[idx].peak_gb);
+                self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
                 self.set_state(idx, JobState::Cancelled, None);
+                if !keep_marker {
+                    self.remove_job_file(idx);
+                }
                 self.drain_waiting();
                 Ok(true)
             }
             _ => Ok(false),
-        }
-    }
-
-    /// Cancel every non-terminal job (server shutdown).
-    pub fn cancel_all(&mut self) {
-        for idx in 0..self.jobs.len() {
-            if matches!(self.jobs[idx].state, JobState::Queued | JobState::Running) {
-                let id = self.jobs[idx].id.clone();
-                let _ = self.cancel(&id);
-            }
         }
     }
 
@@ -333,33 +603,46 @@ impl Scheduler {
     // ------------------------------------------------------------------
 
     fn activate(&mut self, idx: usize) {
-        let cfg = self.jobs[idx].cfg.take().expect("queued job holds a config");
-        match Trainer::with_cache(&self.device, self.cache.clone(), cfg)
+        let cfg = self.jobs[idx].cfg.clone();
+        let resume_from = self.jobs[idx].resume_from.take();
+        let built = Trainer::with_cache(&self.device, self.cache.clone(), cfg)
             .and_then(Trainer::into_run)
-        {
+            .and_then(|mut run| {
+                if let Some(path) = &resume_from {
+                    let ckpt = checkpoint::load(path)?;
+                    run.restore(ckpt)?;
+                }
+                Ok(run)
+            });
+        match built {
             Ok(run) => {
                 self.jobs[idx].run = Some(run);
                 self.set_state(idx, JobState::Running, None);
                 self.active.push_back(idx);
             }
             Err(e) => {
-                self.admission.release(self.jobs[idx].peak_gb);
+                self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
                 self.set_state(idx, JobState::Failed, Some(e.to_string()));
             }
         }
     }
 
     /// Terminal transition of an admitted job: record state, return its
-    /// reservation, and admit whoever now fits (FIFO).
+    /// reservation, and admit whoever now fits (FIFO). The recovery
+    /// marker survives only a `Failed` exit — that is the one state
+    /// with something left to bring back.
     fn finalize(&mut self, idx: usize, state: JobState, error: Option<String>) {
-        self.admission.release(self.jobs[idx].peak_gb);
+        self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
         self.set_state(idx, state, error);
+        if state != JobState::Failed {
+            self.remove_job_file(idx);
+        }
         self.drain_waiting();
     }
 
     fn drain_waiting(&mut self) {
         while let Some(&idx) = self.waiting.front() {
-            if !self.admission.try_admit(self.jobs[idx].peak_gb) {
+            if !self.admission.try_admit(self.jobs[idx].peak_gb, self.jobs[idx].host_gb) {
                 break;
             }
             self.waiting.pop_front();
@@ -376,10 +659,13 @@ impl Scheduler {
             board.jobs[idx].snap.error = error;
         }
         board.committed_gb = self.admission.committed_gb();
+        board.host_committed_gb = self.admission.host_committed_gb();
     }
 
     fn sync_ledger(&mut self) {
-        self.board.lock().expect("board lock").committed_gb = self.admission.committed_gb();
+        let mut board = self.board.lock().expect("board lock");
+        board.committed_gb = self.admission.committed_gb();
+        board.host_committed_gb = self.admission.host_committed_gb();
     }
 
     /// Serialize one event onto the board (log + snapshot + timeline).
@@ -402,5 +688,69 @@ impl Scheduler {
             _ => {}
         }
         board.timeline.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_log_uncapped_keeps_everything() {
+        let mut log = EventLog::new(0);
+        for i in 0..100 {
+            log.push(format!("e{i}"));
+        }
+        assert_eq!(log.len(), 100);
+        assert_eq!(log.base(), 0);
+        assert_eq!(log.total(), 100);
+        let (lines, start) = log.lines_from(97);
+        assert_eq!(start, 97);
+        assert_eq!(lines, vec!["e97", "e98", "e99"]);
+    }
+
+    #[test]
+    fn event_log_evicts_oldest_and_advances_base() {
+        let mut log = EventLog::new(4);
+        for i in 0..10 {
+            log.push(format!("e{i}"));
+        }
+        assert_eq!(log.len(), 4, "ring holds cap lines");
+        assert_eq!(log.base(), 6, "six oldest evicted");
+        assert_eq!(log.total(), 10, "total counts evicted lines too");
+        assert_eq!(log.to_vec(), vec!["e6", "e7", "e8", "e9"]);
+    }
+
+    #[test]
+    fn event_log_from_is_gap_free_after_eviction() {
+        let mut log = EventLog::new(3);
+        for i in 0..8 {
+            log.push(format!("e{i}"));
+        }
+        // a subscriber that lagged into the evicted region is clamped
+        // forward to the base — it never receives lines whose seq
+        // numbers would skip around within the returned batch
+        let (lines, start) = log.lines_from(0);
+        assert_eq!(start, log.base());
+        assert_eq!(lines, vec!["e5", "e6", "e7"]);
+        // a caught-up subscriber reads exactly the tail
+        let (lines, start) = log.lines_from(7);
+        assert_eq!(start, 7);
+        assert_eq!(lines, vec!["e7"]);
+        // a cursor at the end gets nothing
+        let (lines, start) = log.lines_from(8);
+        assert_eq!(start, 8);
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn event_log_with_base_continues_numbering() {
+        let mut log = EventLog::with_base(0, 42);
+        log.push("e42".into());
+        assert_eq!(log.base(), 42);
+        assert_eq!(log.total(), 43);
+        let (lines, start) = log.lines_from(0);
+        assert_eq!(start, 42, "pre-resume seqs live in the predecessor's log");
+        assert_eq!(lines, vec!["e42"]);
     }
 }

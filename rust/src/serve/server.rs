@@ -47,6 +47,11 @@ enum Control {
         job: String,
         reply: Sender<std::result::Result<bool, String>>,
     },
+    /// Resubmit a failed/cancelled job from its latest snapshot.
+    Resume {
+        job: String,
+        reply: Sender<std::result::Result<SubmitOutcome, String>>,
+    },
     /// Wake the scheduler loop so it notices the shutdown flag.
     Shutdown,
 }
@@ -134,6 +139,7 @@ fn scheduler_thread(
     board_tx: Sender<std::result::Result<Arc<Mutex<Board>>, String>>,
     shutdown: Arc<AtomicBool>,
 ) {
+    let recover = opts.recover;
     let sched = Device::cpu()
         .map_err(|e| format!("creating PJRT device: {e}"))
         .and_then(|device| {
@@ -149,6 +155,15 @@ fn scheduler_thread(
             return;
         }
     };
+    // crash recovery: rescan run_root for interrupted jobs (persisted
+    // job.json + a periodic snapshot) and resume them from their
+    // latest checkpoints before taking new traffic
+    if recover {
+        let n = sched.recover();
+        if n > 0 {
+            eprintln!("[serve] recovered {n} interrupted job(s) from disk");
+        }
+    }
     loop {
         if shutdown.load(Ordering::SeqCst) {
             sched.cancel_all();
@@ -188,6 +203,10 @@ fn handle_control(sched: &mut Scheduler, msg: Control) {
         }
         Control::Cancel { job, reply } => {
             let r = sched.cancel(&job).map_err(|e| e.to_string());
+            let _ = reply.send(r);
+        }
+        Control::Resume { job, reply } => {
+            let r = sched.resume_job(&job).map_err(|e| e.to_string());
             let _ = reply.send(r);
         }
         Control::Shutdown => {}
@@ -282,7 +301,13 @@ fn handle_connection(
                     if job.is_some() && rows.is_empty() {
                         protocol::error_json("unknown job")
                     } else {
-                        protocol::status_json(&rows, b.budget_gb, b.committed_gb)
+                        protocol::status_json(
+                            &rows,
+                            b.budget_gb,
+                            b.committed_gb,
+                            b.host_budget_gb,
+                            b.host_committed_gb,
+                        )
                     }
                 };
                 write_line(&mut out, &resp)?;
@@ -306,6 +331,21 @@ fn handle_connection(
                 };
                 write_line(&mut out, &resp)?;
             }
+            Request::Resume { job } => {
+                let (reply_tx, reply_rx) = channel();
+                if ctl.send(Control::Resume { job: job.clone(), reply: reply_tx }).is_err() {
+                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    continue;
+                }
+                let resp = match reply_rx.recv() {
+                    Ok(Ok(o)) => {
+                        protocol::resumed_json(&job, &o.id, o.admitted, o.peak_gb, o.state)
+                    }
+                    Ok(Err(msg)) => protocol::error_json(&msg),
+                    Err(_) => protocol::error_json("scheduler stopped"),
+                };
+                write_line(&mut out, &resp)?;
+            }
             Request::Shutdown => {
                 shutdown.store(true, Ordering::SeqCst);
                 let _ = ctl.send(Control::Shutdown);
@@ -320,6 +360,12 @@ fn handle_connection(
 /// Copy a job's event lines to the client from `from`, then (in follow
 /// mode) poll for new ones until the job reaches a terminal state.
 /// Always ends with a `done` marker line.
+///
+/// The per-job log is a capped ring (`ServeConfig::event_log_cap`): a
+/// cursor pointing into the evicted region is clamped forward to the
+/// log's base offset, so the delivered lines are always a contiguous,
+/// gap-free run (each line self-describes its `seq`; a follower that
+/// keeps up never observes an eviction).
 fn stream_events(
     out: &mut TcpStream,
     board: &Arc<Mutex<Board>>,
@@ -328,7 +374,7 @@ fn stream_events(
     from: u64,
     follow: bool,
 ) -> Result<()> {
-    let mut cursor = from as usize;
+    let mut cursor = from;
     loop {
         let (batch, state) = {
             let b = board.lock().expect("board lock");
@@ -336,7 +382,8 @@ fn stream_events(
                 write_line(out, &protocol::error_json("unknown job"))?;
                 return Ok(());
             };
-            let lines: Vec<String> = view.events.get(cursor..).unwrap_or(&[]).to_vec();
+            let (lines, start) = view.events.lines_from(cursor);
+            cursor = start;
             (lines, view.snap.state)
         };
         for line in &batch {
@@ -346,7 +393,7 @@ fn stream_events(
         if !batch.is_empty() {
             out.flush()?;
         }
-        cursor += batch.len();
+        cursor += batch.len() as u64;
         let stop = state.is_terminal() || !follow || shutdown.load(Ordering::SeqCst);
         if stop {
             // drain anything that raced in between the copy and the
@@ -354,7 +401,7 @@ fn stream_events(
             let (tail, state, total) = {
                 let b = board.lock().expect("board lock");
                 let view = b.job(job).expect("job existed above");
-                let lines: Vec<String> = view.events.get(cursor..).unwrap_or(&[]).to_vec();
+                let (lines, _start) = view.events.lines_from(cursor);
                 (lines, view.snap.state, view.snap.events)
             };
             for line in &tail {

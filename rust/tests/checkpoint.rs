@@ -1,0 +1,249 @@
+//! Crash-safety tests for the `.rvt` checkpoint format that need no
+//! XLA device or artifacts — they run everywhere (tier-1).
+//!
+//! Complementing the unit tests in `checkpoint/mod.rs` (targeted
+//! corrupt-header cases), these sweep randomized corruption over real
+//! RVT2 bytes: whatever the mutation, `load` must return a clean error
+//! — never panic, never allocate past the file size — and a valid file
+//! must keep round-tripping the full training state.
+
+use revffn::checkpoint::{
+    latest_checkpoint, latest_valid_checkpoint, load, load_cursor, load_params, periodic_path,
+    prune_checkpoints, restore_into, save, save_state, OptMoments, RunCursor,
+};
+use revffn::error::Error;
+use revffn::runtime::artifact::TensorSpec;
+use revffn::runtime::store::ParamStore;
+use revffn::util::{Rng, ScratchDir};
+
+fn spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    TensorSpec {
+        name: name.into(),
+        shape,
+        dtype: "f32".into(),
+        blob: "x".into(),
+        offset: 0,
+        nbytes: n * 4,
+    }
+}
+
+fn store() -> ParamStore {
+    let specs = vec![
+        spec("embed", vec![6, 3]),
+        spec("layer.0.w", vec![3, 3]),
+        spec("norm_f", vec![3]),
+    ];
+    let host = vec![
+        (0..18).map(|i| i as f32 * 0.5).collect(),
+        (0..9).map(|i| -(i as f32)).collect(),
+        vec![1.0, 2.0, 3.0],
+    ];
+    ParamStore::from_host(specs, host).unwrap()
+}
+
+fn moments() -> OptMoments {
+    OptMoments {
+        m: vec![(vec![3, 3], vec![0.25; 9]), (vec![3], vec![0.5; 3])],
+        v: vec![(vec![3, 3], vec![0.0625; 9]), (vec![3], vec![1.5; 3])],
+    }
+}
+
+fn cursor() -> RunCursor {
+    RunCursor {
+        phase_idx: 1,
+        step_in_phase: 11,
+        batches_taken: 22,
+        batch_seed: 0xdead_beef,
+        seq: 35,
+        steps_total: 13,
+    }
+}
+
+#[test]
+fn full_state_survives_the_roundtrip() {
+    let dir = ScratchDir::new("rvt2-roundtrip").unwrap();
+    let p = dir.join("state.rvt");
+    save_state(&p, &store(), 13, Some(&moments()), Some(&cursor())).unwrap();
+
+    let ck = load(&p).unwrap();
+    assert_eq!(ck.step, 13);
+    assert_eq!(ck.cursor.unwrap(), cursor());
+    assert_eq!(ck.opt.unwrap(), moments());
+    let mut fresh = store();
+    fresh.set_tensor("norm_f", vec![0.0; 3]).unwrap();
+    assert_eq!(restore_into(&ck, &mut fresh).unwrap(), 3);
+    assert_eq!(fresh.tensor("norm_f").unwrap(), &[1.0, 2.0, 3.0]);
+
+    // the cursor-only fast path reads the same cursor without
+    // materializing tensors
+    assert_eq!(load_cursor(&p).unwrap(), Some(cursor()));
+
+    // the params-only fast path seeks past the moments but delivers
+    // identical tensors + cursor
+    let lean = load_params(&p).unwrap();
+    assert_eq!(lean.step, 13);
+    assert_eq!(lean.tensors, load(&p).unwrap().tensors);
+    assert!(lean.opt.is_none(), "load_params must not materialize moments");
+    assert_eq!(lean.cursor.unwrap(), cursor());
+}
+
+#[test]
+fn rvt1_files_still_load_params_only() {
+    let dir = ScratchDir::new("rvt1-compat").unwrap();
+    let p = dir.join("old.rvt");
+    save(&p, &store(), 7).unwrap();
+    let ck = load(&p).unwrap();
+    assert_eq!(ck.step, 7);
+    assert_eq!(ck.tensors.len(), 3);
+    assert!(ck.opt.is_none());
+    assert!(ck.cursor.is_none());
+    assert_eq!(load_cursor(&p).unwrap(), None, "RVT1 has no cursor to fast-read");
+}
+
+/// Randomized corruption sweep: flip/overwrite bytes all over valid
+/// RVT2 bytes. Every mutant must either load (the mutation hit tensor
+/// payload, which carries no structure) or fail with a typed error —
+/// never panic, never OOM on a fabricated length field.
+#[test]
+fn randomly_corrupted_files_fail_cleanly() {
+    let dir = ScratchDir::new("rvt2-fuzz").unwrap();
+    let p = dir.join("state.rvt");
+    save_state(&p, &store(), 13, Some(&moments()), Some(&cursor())).unwrap();
+    let pristine = std::fs::read(&p).unwrap();
+
+    let mut rng = Rng::seed_from_u64(0x5eed);
+    let probe = dir.join("mutant.rvt");
+    for round in 0..500 {
+        let mut bytes = pristine.clone();
+        match round % 3 {
+            // single-byte flip
+            0 => {
+                let i = rng.gen_range(0..bytes.len());
+                bytes[i] ^= (rng.next_u32() % 255 + 1) as u8;
+            }
+            // 4-byte overwrite (fabricates length/dim fields)
+            1 => {
+                let i = rng.gen_range(0..bytes.len().saturating_sub(4));
+                let v = rng.next_u32().to_le_bytes();
+                bytes[i..i + 4].copy_from_slice(&v);
+            }
+            // truncate at a random point
+            _ => {
+                bytes.truncate(rng.gen_range(0..bytes.len()));
+            }
+        }
+        std::fs::write(&probe, &bytes).unwrap();
+        match load(&probe) {
+            Ok(_) => {} // payload-only damage: structurally fine
+            Err(Error::Parse(_)) | Err(Error::Layout(_)) => {}
+            Err(other) => panic!("round {round}: unexpected error class {other}"),
+        }
+        // the seek-based readers must be equally robust
+        match load_cursor(&probe) {
+            Ok(_) => {}
+            Err(Error::Parse(_)) | Err(Error::Layout(_)) => {}
+            Err(other) => panic!("round {round}: load_cursor error class {other}"),
+        }
+        match load_params(&probe) {
+            Ok(_) => {}
+            Err(Error::Parse(_)) | Err(Error::Layout(_)) => {}
+            Err(other) => panic!("round {round}: load_params error class {other}"),
+        }
+    }
+}
+
+/// A length field pointing gigabytes past the end of the file must be
+/// rejected up front — bounded by the file size — instead of reserving
+/// a huge buffer and failing on read.
+#[test]
+fn fabricated_lengths_never_outallocate_the_file() {
+    let dir = ScratchDir::new("rvt2-bound").unwrap();
+    let p = dir.join("state.rvt");
+    save_state(&p, &store(), 1, Some(&moments()), None).unwrap();
+    let pristine = std::fs::read(&p).unwrap();
+    let probe = dir.join("evil.rvt");
+    // overwrite every aligned u32 position with u32::MAX — any length
+    // or dim field it lands on now claims ~4 GB
+    for at in (4..pristine.len().saturating_sub(4)).step_by(4) {
+        let mut bytes = pristine.clone();
+        bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&probe, &bytes).unwrap();
+        match load(&probe) {
+            Ok(_) | Err(Error::Parse(_)) | Err(Error::Layout(_)) => {}
+            Err(other) => panic!("offset {at}: unexpected error class {other}"),
+        }
+    }
+}
+
+#[test]
+fn retention_keeps_newest_and_writes_are_atomic() {
+    let dir = ScratchDir::new("rvt2-retain").unwrap();
+    let s = store();
+    for step in 1..=6u64 {
+        save_state(periodic_path(&dir.path, 0, step), &s, step, None, None).unwrap();
+        prune_checkpoints(&dir.path, 2);
+    }
+    // only the two newest remain, no tmp residue, latest wins
+    let names: Vec<String> = {
+        let mut v: Vec<String> = std::fs::read_dir(&dir.path)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(names, vec!["ckpt-p00-s00000005.rvt", "ckpt-p00-s00000006.rvt"]);
+    assert_eq!(latest_checkpoint(&dir.path).unwrap(), periodic_path(&dir.path, 0, 6));
+    // every surviving file is complete and loadable (atomicity: a
+    // half-written file would have been left as .tmp, never .rvt)
+    for n in names {
+        load(dir.join(&n)).unwrap();
+    }
+}
+
+#[test]
+fn torn_newest_snapshot_falls_back_to_older_one() {
+    // a power loss right after rename can leave the newest file
+    // truncated — discovery must fall back to the intact predecessor
+    // instead of losing the run to its own freshest checkpoint
+    let dir = ScratchDir::new("rvt2-torn").unwrap();
+    let s = store();
+    save_state(periodic_path(&dir.path, 0, 2), &s, 2, None, Some(&cursor())).unwrap();
+    save_state(periodic_path(&dir.path, 0, 4), &s, 4, None, Some(&cursor())).unwrap();
+    // tear the newest: keep only the first 40 bytes
+    let newest = periodic_path(&dir.path, 0, 4);
+    let bytes = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &bytes[..40]).unwrap();
+
+    assert_eq!(latest_checkpoint(&dir.path).unwrap(), newest, "raw discovery is unchanged");
+    assert_eq!(
+        latest_valid_checkpoint(&dir.path).unwrap(),
+        periodic_path(&dir.path, 0, 2),
+        "valid discovery must skip the torn file"
+    );
+
+    // both torn: nothing to resume
+    let older = periodic_path(&dir.path, 0, 2);
+    let bytes = std::fs::read(&older).unwrap();
+    std::fs::write(&older, &bytes[..7]).unwrap();
+    assert!(latest_valid_checkpoint(&dir.path).is_none());
+}
+
+#[test]
+fn cursor_extremes_roundtrip() {
+    let dir = ScratchDir::new("rvt2-extremes").unwrap();
+    let p = dir.join("edge.rvt");
+    let edge = RunCursor {
+        phase_idx: 0,
+        step_in_phase: u64::MAX,
+        batches_taken: u64::MAX,
+        batch_seed: u64::MAX,
+        seq: 0,
+        steps_total: u64::MAX,
+    };
+    save_state(&p, &store(), u64::MAX, None, Some(&edge)).unwrap();
+    let ck = load(&p).unwrap();
+    assert_eq!(ck.step, u64::MAX);
+    assert_eq!(ck.cursor.unwrap(), edge);
+}

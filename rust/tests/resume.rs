@@ -1,0 +1,202 @@
+//! Kill-and-resume bit-parity over the real AOT artifacts — the
+//! headline crash-safety guarantee: a run killed at an arbitrary step
+//! and resumed from its latest periodic snapshot reproduces the
+//! uninterrupted run exactly — same losses, same grad norms, same
+//! final parameters, bit for bit — because the snapshot restores the
+//! Adam moments, the optimizer step counter and the data-pipeline
+//! cursor, not just the weights.
+//!
+//! Like the other integration tests, everything skips silently when
+//! `artifacts/tiny` is absent (run `make artifacts` first).
+
+use std::path::{Path, PathBuf};
+
+use revffn::checkpoint;
+use revffn::config::RunConfig;
+use revffn::coordinator::Trainer;
+use revffn::engine::{Method, StepEvent};
+use revffn::runtime::Device;
+use revffn::util::ScratchDir;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    p.join("index.json").exists().then_some(p)
+}
+
+/// A 2+4-step RevFFN run snapshotting every step (pre-pass off).
+fn cfg(root: &Path, out: &Path, grad_accum: usize) -> RunConfig {
+    let mut cfg = RunConfig::default_tiny(root);
+    cfg.method = Method::Revffn;
+    cfg.schedule.stage1_steps = 2;
+    cfg.schedule.stage2_steps = 4;
+    cfg.schedule.warmup_steps = 1;
+    cfg.data.pretrain_steps = 0;
+    cfg.data.n_train = 48;
+    cfg.data.n_eval = 16;
+    cfg.grad_accum = grad_accum;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.checkpoint_every = 1;
+    cfg.keep_last = 0; // keep every snapshot so any kill point resumes
+    cfg.out_dir = out.into();
+    cfg
+}
+
+/// (stage, step) → (loss bits, grad-norm bits) of a finished trainer.
+fn signature(t: &Trainer) -> Vec<((u8, u64), (u32, u32))> {
+    t.metrics
+        .steps
+        .iter()
+        .map(|r| ((r.stage, r.step), (r.loss.to_bits(), r.grad_norm.to_bits())))
+        .collect()
+}
+
+/// Final parameters as (name, bits) — the strictest equality there is.
+fn param_bits(t: &Trainer) -> Vec<(String, Vec<u32>)> {
+    t.stepper
+        .as_ref()
+        .expect("finished run leaves a stepper")
+        .params
+        .snapshot()
+        .map(|(n, _s, d)| (n.to_string(), d.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+/// Train uninterrupted; then for each kill point, train a second copy,
+/// kill it after `kill_after` optimizer steps, resume from the newest
+/// snapshot on disk, and demand the combined trajectory and final
+/// params match the baseline bit-for-bit.
+fn kill_resume_case(tag: &str, grad_accum: usize, kill_points: &[usize]) {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new(tag).unwrap();
+
+    let baseline = {
+        let device = Device::cpu().unwrap();
+        let mut t = Trainer::new(&device, cfg(&root, &scratch.join("solo"), grad_accum)).unwrap();
+        t.run().unwrap();
+        (signature(&t), param_bits(&t))
+    };
+
+    for &kill_after in kill_points {
+        let out = scratch.join(format!("kill-{kill_after}"));
+
+        // phase 1 of the "crash": drive step-granularly, then drop the
+        // run mid-schedule without finish() — state survives only as
+        // the periodic snapshots
+        {
+            let device = Device::cpu().unwrap();
+            let mut t = Trainer::new(&device, cfg(&root, &out, grad_accum)).unwrap();
+            let mut run = t.start().unwrap();
+            let mut steps = 0usize;
+            while steps < kill_after {
+                match run.step().unwrap() {
+                    Some(StepEvent::Step(_)) => steps += 1,
+                    Some(_) => {}
+                    None => panic!("schedule ended before the kill point {kill_after}"),
+                }
+            }
+        }
+        let ckpt_path = checkpoint::latest_checkpoint(&out)
+            .unwrap_or_else(|| panic!("no snapshot before kill point {kill_after}"));
+
+        // phase 2: a fresh process (fresh trainer) resumes and finishes
+        let device = Device::cpu().unwrap();
+        let mut t = Trainer::new(&device, cfg(&root, &out, grad_accum)).unwrap();
+        let ckpt = checkpoint::load(&ckpt_path).unwrap();
+        t.run_resumed(ckpt).unwrap();
+
+        // the resumed tail must be a suffix of the baseline trajectory…
+        let tail = signature(&t);
+        let full = &baseline.0;
+        assert!(tail.len() <= full.len(), "kill {kill_after}: resumed run overran the schedule");
+        assert_eq!(
+            &full[full.len() - tail.len()..],
+            &tail[..],
+            "kill {kill_after}: resumed losses/grad-norms diverged from the uninterrupted run"
+        );
+        // …and the final parameters identical to the last bit
+        assert_eq!(
+            baseline.1,
+            param_bits(&t),
+            "kill {kill_after}: final params diverged from the uninterrupted run"
+        );
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_across_stages() {
+    // kill points land mid-stage-1, at the stage boundary, and
+    // mid-stage-2 — every structurally distinct resume position
+    kill_resume_case("resume-fused", 1, &[1, 2, 4]);
+}
+
+#[test]
+fn kill_and_resume_with_grad_accum_replays_the_microbatch_cursor() {
+    // grad_accum > 1: each optimizer step drains several batches, so
+    // the cursor replay must skip batches_taken = steps × ga exactly
+    kill_resume_case("resume-accum", 2, &[3]);
+}
+
+#[test]
+fn params_only_checkpoints_cannot_resume_a_run() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("resume-reject").unwrap();
+    let device = Device::cpu().unwrap();
+    let c = cfg(&root, &scratch.join("r"), 1);
+    let mut t = Trainer::new(&device, c).unwrap();
+    let mut run = t.start().unwrap();
+    // drive a couple of events so a snapshot exists
+    for _ in 0..4 {
+        run.step().unwrap();
+    }
+    drop(run);
+    let path = checkpoint::latest_checkpoint(&scratch.join("r")).unwrap();
+
+    // strip the checkpoint down (simulates an RVT1 file or a final
+    // snapshot) — a fresh run must refuse to resume from it
+    let full = checkpoint::load(&path).unwrap();
+    let mut t2 = Trainer::new(&device, cfg(&root, &scratch.join("r"), 1)).unwrap();
+    let mut run2 = t2.start().unwrap();
+    let no_moments = checkpoint::Checkpoint {
+        step: full.step,
+        tensors: full.tensors.clone(),
+        opt: None,
+        cursor: full.cursor,
+    };
+    assert!(
+        run2.restore(no_moments).is_err(),
+        "moment-less checkpoints must be rejected (silent Adam reset)"
+    );
+    let no_cursor = checkpoint::Checkpoint {
+        step: full.step,
+        tensors: full.tensors,
+        opt: full.opt,
+        cursor: None,
+    };
+    assert!(run2.restore(no_cursor).is_err(), "cursor-less checkpoints must be rejected");
+}
+
+#[test]
+fn resume_rejects_mismatched_configs() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("resume-mismatch").unwrap();
+    let device = Device::cpu().unwrap();
+    let mut t = Trainer::new(&device, cfg(&root, &scratch.join("m"), 1)).unwrap();
+    let mut run = t.start().unwrap();
+    for _ in 0..4 {
+        run.step().unwrap();
+    }
+    drop(run);
+    let ckpt_path = checkpoint::latest_checkpoint(&scratch.join("m")).unwrap();
+
+    // a different data seed would replay different batches — the
+    // recorded batch seed must catch it at restore/open time
+    let mut other = cfg(&root, &scratch.join("m"), 1);
+    other.seed = 999;
+    let mut t2 = Trainer::new(&device, other).unwrap();
+    let ckpt = checkpoint::load(&ckpt_path).unwrap();
+    assert!(
+        t2.run_resumed(ckpt).is_err(),
+        "resume must refuse a checkpoint recorded under a different batch seed"
+    );
+}

@@ -51,6 +51,10 @@ fn serve_opts(root: &Path, scratch: &Path, budget_gb: f64, quantum: u64) -> Serv
         assumptions: "f32".into(),
         price_geometry: PriceGeometry::Manifest,
         run_root: scratch.join("serve"),
+        // tests manage checkpoints explicitly per-job
+        checkpoint_every: 0,
+        recover: false,
+        ..ServeConfig::default()
     }
 }
 
@@ -119,8 +123,8 @@ fn two_jobs_interleave_and_match_solo_runs() {
     assert!(transitions >= 2, "expected interleaving, timeline: {tl:?}");
 
     // per-job losses bit-identical to the solo runs
-    let sig_a = step_signature(&board.jobs[0].events);
-    let sig_b = step_signature(&board.jobs[1].events);
+    let sig_a = step_signature(&board.jobs[0].events.to_vec());
+    let sig_b = step_signature(&board.jobs[1].events.to_vec());
     let solo_sig = |solo: &[(u64, u32)]| -> Vec<(String, u64, u32)> {
         solo.iter().map(|&(s, l)| ("step".to_string(), s, l)).collect()
     };
@@ -153,7 +157,7 @@ fn scheduling_is_deterministic_across_runs() {
         sched.run_until_idle().unwrap();
         let board = sched.board();
         let board = board.lock().unwrap();
-        let sigs = board.jobs.iter().map(|j| step_signature(&j.events)).collect();
+        let sigs = board.jobs.iter().map(|j| step_signature(&j.events.to_vec())).collect();
         (board.timeline.clone(), sigs)
     };
 
@@ -311,4 +315,177 @@ fn cancel_running_job_frees_budget() {
     let board = board.lock().unwrap();
     assert_eq!(board.committed_gb, 0.0, "cancelled job must release its reservation");
     assert!(board.jobs[0].snap.events > 0, "events before the cancel survive");
+}
+
+/// Per-job (stage, step) → loss-bits map of a board job's step events.
+/// Keyed on both because the optimizer step counter restarts per phase.
+fn step_map(events: &[String]) -> std::collections::HashMap<(u64, u64), u32> {
+    events
+        .iter()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|j| j.str_of("type").unwrap() == "step")
+        .map(|j| {
+            (
+                (j.u64_of("stage").unwrap(), j.u64_of("step").unwrap()),
+                (j.f64_of("loss").unwrap() as f32).to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn cancelled_job_resumes_bit_identically() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-resume").unwrap();
+
+    // solo baseline for the whole schedule
+    let solo = {
+        let device = Device::cpu().unwrap();
+        let mut t =
+            Trainer::new(&device, job_cfg(&root, &scratch.join("solo"), Method::Revffn)).unwrap();
+        t.run().unwrap();
+        t.metrics
+            .steps
+            .iter()
+            .map(|r| ((r.stage as u64, r.step), r.loss.to_bits()))
+            .collect::<std::collections::HashMap<_, _>>()
+    };
+
+    // scheduled job with periodic snapshots, killed (cancelled) mid-run
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, serve_opts(&root, &scratch, 1e9, 1)).unwrap();
+    let mut cfg = job_cfg(&root, &scratch.join("job"), Method::Revffn);
+    cfg.checkpoint_every = 1;
+    cfg.keep_last = 0; // keep every snapshot
+    let a = sched.submit(cfg, Some("crashy".into())).unwrap();
+    assert!(a.admitted);
+    // enough quanta (1 event each) to clear a couple of optimizer steps
+    for _ in 0..6 {
+        assert!(sched.tick().unwrap());
+    }
+    assert!(sched.cancel(&a.id).unwrap());
+
+    // bring it back from its latest snapshot and drive to completion
+    let resumed = sched.resume_job(&a.id).expect("cancelled job with snapshots must resume");
+    assert_ne!(resumed.id, a.id, "the continuation is a new job");
+    assert!(resumed.admitted);
+    sched.run_until_idle().unwrap();
+    assert_eq!(sched.job_state(&resumed.id), Some(JobState::Finished));
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Cancelled), "original stays terminal");
+
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let original = board.job(&a.id).unwrap();
+    let cont = board.job(&resumed.id).unwrap();
+
+    // every step either job recorded matches the solo run bit-for-bit —
+    // THE crash-safety guarantee: resume restores moments + data
+    // cursor, so the continuation is the same training trajectory
+    for (key, loss) in
+        step_map(&original.events.to_vec()).iter().chain(step_map(&cont.events.to_vec()).iter())
+    {
+        assert_eq!(
+            Some(loss),
+            solo.get(key).as_deref(),
+            "stage/step {key:?} diverged from the solo run"
+        );
+    }
+    // the continuation reached the end of the schedule
+    let solo_last = *solo.keys().max().unwrap();
+    assert!(
+        step_map(&cont.events.to_vec()).contains_key(&solo_last),
+        "resumed job must run through the final stage/step {solo_last:?}"
+    );
+    // event numbering continued from the snapshot instead of resetting
+    assert!(cont.events.base() > 0, "resumed log starts at the cursor's seq");
+
+    // resuming a finished job is refused
+    assert!(sched.resume_job(&resumed.id).is_err());
+}
+
+#[test]
+fn restarted_scheduler_recovers_jobs_from_disk() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-recover").unwrap();
+    let opts = {
+        let mut o = serve_opts(&root, &scratch, 1e9, 1);
+        o.checkpoint_every = 1; // serve-level default cadence
+        o
+    };
+
+    // first server life: submit over the wire shape (checkpoint_every
+    // OMITTED → the serve default cadence applies; an explicit 0 would
+    // opt out), run a few quanta, then drop the scheduler with the job
+    // mid-flight (the "crash")
+    let out_dir = opts.run_root.join("job-0");
+    let a = {
+        let device = Device::cpu().unwrap();
+        let mut sched = Scheduler::new(device, opts.clone()).unwrap();
+        let cfg_json = json::parse(&format!(
+            r#"{{"method":"revffn","eval_every":0,"eval_batches":1,"out_dir":{:?},
+                "schedule":{{"stage1_steps":2,"stage2_steps":3,"warmup_steps":1}},
+                "data":{{"pretrain_steps":0,"n_train":48,"n_eval":16}}}}"#,
+            out_dir.to_str().unwrap()
+        ))
+        .unwrap();
+        let a = sched.submit_json(&cfg_json, Some("survivor".into())).unwrap();
+        assert!(a.admitted);
+        for _ in 0..6 {
+            assert!(sched.tick().unwrap());
+        }
+        a
+    };
+    assert!(
+        revffn::checkpoint::latest_checkpoint(&out_dir).is_some(),
+        "serve default cadence must have produced snapshots"
+    );
+    assert!(
+        opts.run_root.join("job-0").join("job.json").exists(),
+        "running job must leave its recovery marker"
+    );
+
+    // second server life: recover() finds the marker + snapshots
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, opts.clone()).unwrap();
+    assert_eq!(sched.recover(), 1, "one interrupted job must come back");
+    sched.run_until_idle().unwrap();
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    assert_eq!(board.jobs.len(), 1);
+    assert_eq!(board.jobs[0].snap.state, JobState::Finished);
+    assert_eq!(board.jobs[0].snap.name, "survivor", "recovered under its original name");
+    let _ = a;
+    assert!(
+        !opts.run_root.join("job-0").join("job.json").exists(),
+        "finished job must clear its recovery marker"
+    );
+}
+
+#[test]
+fn event_log_cap_keeps_streams_bounded_and_contiguous() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-logcap").unwrap();
+    let opts = {
+        let mut o = serve_opts(&root, &scratch, 1e9, 4);
+        o.event_log_cap = 3;
+        o
+    };
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, opts).unwrap();
+    let a = sched.submit(job_cfg(&root, &scratch.join("cap"), Method::Sft), None).unwrap();
+    sched.run_until_idle().unwrap();
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let view = board.job(&a.id).unwrap();
+    assert!(view.snap.events > 3, "job emits more events than the cap");
+    assert_eq!(view.events.len(), 3, "ring retains exactly the cap");
+    assert_eq!(
+        view.events.base() + view.events.len() as u64,
+        view.snap.events,
+        "base + retained = total: the stream is contiguous"
+    );
+    // a subscriber from 0 is clamped to the base, not served a gap
+    let (lines, start) = view.events.lines_from(0);
+    assert_eq!(start, view.events.base());
+    assert_eq!(lines.len(), 3);
 }
