@@ -1,0 +1,205 @@
+//! Pass 1 (cross-artifact) — `.rvt` checkpoint vs. manifest (CK rules).
+//!
+//! Answers "would `restore_into` / `restore_opt` accept this file
+//! against this variant?" without materializing a single payload: the
+//! checkpoint is walked with [`crate::checkpoint::summarize`] (shapes
+//! only, bounded reader) and compared to the manifest's tensor specs
+//! and `io.opt_shapes` — the exact comparisons the runtime restore path
+//! makes, minus the data.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::analysis::Finding;
+use crate::checkpoint;
+use crate::runtime::artifact::Artifact;
+
+/// Check one checkpoint against one variant directory's manifest.
+pub fn check_checkpoint(ckpt: &Path, variant_dir: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let subject = ckpt.display().to_string();
+
+    let art = match Artifact::load(variant_dir) {
+        Ok(a) => a,
+        Err(e) => {
+            out.push(Finding::error(
+                "AR001",
+                variant_dir.display().to_string(),
+                format!("cannot load manifest to check against: {e}"),
+            ));
+            return out;
+        }
+    };
+    let m = &art.manifest;
+
+    // ---- CK001: the file itself must be structurally sound -----------
+    let sum = match checkpoint::summarize(ckpt) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Finding::error("CK001", subject, format!("unreadable checkpoint: {e}")));
+            return out;
+        }
+    };
+
+    // ---- CK002 / CK003: named tensors vs. manifest specs -------------
+    // `restore_into` skips unknown names silently and rejects same-name
+    // shape mismatches with Error::Layout; statically the former is a
+    // warning (probably the wrong variant) and the latter an error.
+    let specs: HashMap<&str, &Vec<usize>> =
+        m.tensors.iter().map(|t| (t.name.as_str(), &t.shape)).collect();
+    let mut matched = 0usize;
+    for (name, shape) in &sum.tensors {
+        match specs.get(name.as_str()) {
+            Some(want) => {
+                if *want != shape {
+                    out.push(Finding::error(
+                        "CK002",
+                        format!("{subject}#{name}"),
+                        format!(
+                            "stored shape {shape:?} != manifest shape {want:?} — restore_into would reject"
+                        ),
+                    ));
+                } else {
+                    matched += 1;
+                }
+            }
+            None => out.push(Finding::warning(
+                "CK003",
+                format!("{subject}#{name}"),
+                format!("tensor {name:?} matches nothing in variant {:?} — restore_into would silently skip it", m.variant),
+            )),
+        }
+    }
+    if matched == 0 && !sum.tensors.is_empty() {
+        out.push(Finding::warning(
+            "CK003",
+            subject.clone(),
+            format!(
+                "none of the {} stored tensors match variant {:?} — restoring would be a no-op",
+                sum.tensors.len(),
+                m.variant
+            ),
+        ));
+    }
+
+    // ---- CK004: Adam moments vs. io.opt_shapes (positional) ----------
+    if let Some((ms, vs)) = &sum.opt_shapes {
+        let want = &m.io.opt_shapes;
+        if ms.len() != want.len() || vs.len() != want.len() {
+            out.push(Finding::error(
+                "CK004",
+                subject.clone(),
+                format!(
+                    "moment count m={} v={} != manifest n_opt {} — restore_opt would reject",
+                    ms.len(),
+                    vs.len(),
+                    want.len()
+                ),
+            ));
+        } else {
+            for (i, (got, expect)) in ms.iter().chain(vs.iter()).zip(want.iter().chain(want.iter())).enumerate()
+            {
+                if got != expect {
+                    let (tag, idx) = if i < ms.len() { ("m", i) } else { ("v", i - ms.len()) };
+                    out.push(Finding::error(
+                        "CK004",
+                        format!("{subject}#{tag}[{idx}]"),
+                        format!("moment shape {got:?} != manifest opt_shape {expect:?}"),
+                    ));
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{save_state, OptMoments};
+    use crate::runtime::artifact::TensorSpec;
+    use crate::runtime::store::ParamStore;
+    use crate::util::ScratchDir;
+
+    fn write_variant(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "variant": "sft", "method": "sft",
+              "model": {"name": "tiny", "vocab_size": 64, "d_model": 8, "n_layers": 2,
+                        "n_heads": 2, "n_kv_heads": 2, "n_experts": 4, "top_k": 2,
+                        "d_ff_expert": 16, "d_ff_shared": 16, "max_seq_len": 16},
+              "io": {"n_params": 2, "n_opt": 1, "optimizer": "adam",
+                     "trainable": [true, false], "trainable_paths": ["embed"],
+                     "opt_shapes": [[4, 2]], "batch_size": 2, "seq_len": 4},
+              "tensors": [
+                {"name": "embed", "shape": [4, 2], "dtype": "f32", "blob": "standard", "offset": 0, "nbytes": 32},
+                {"name": "norm_f", "shape": [2], "dtype": "f32", "blob": "standard", "offset": 32, "nbytes": 8}
+              ],
+              "artifacts": {}
+            }"#,
+        )
+        .unwrap();
+    }
+
+    fn store(embed_shape: Vec<usize>) -> ParamStore {
+        let nbytes = embed_shape.iter().product::<usize>() * 4;
+        let specs = vec![
+            TensorSpec {
+                name: "embed".into(),
+                shape: embed_shape.clone(),
+                dtype: "f32".into(),
+                blob: "x".into(),
+                offset: 0,
+                nbytes,
+            },
+            TensorSpec {
+                name: "norm_f".into(),
+                shape: vec![2],
+                dtype: "f32".into(),
+                blob: "x".into(),
+                offset: nbytes,
+                nbytes: 8,
+            },
+        ];
+        let n = embed_shape.iter().product::<usize>();
+        ParamStore::from_host(specs, vec![vec![0.5; n], vec![1.0; 2]]).unwrap()
+    }
+
+    #[test]
+    fn clean_checkpoint_passes() {
+        let dir = ScratchDir::new("ckchk").unwrap();
+        write_variant(&dir.join("sft"));
+        let ck = dir.join("ok.rvt");
+        let opt = OptMoments { m: vec![(vec![4, 2], vec![0.1; 8])], v: vec![(vec![4, 2], vec![0.2; 8])] };
+        save_state(&ck, &store(vec![4, 2]), 5, Some(&opt), None).unwrap();
+        let f = check_checkpoint(&ck, &dir.join("sft"));
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_ck002_and_moment_mismatch_ck004() {
+        let dir = ScratchDir::new("ckchk2").unwrap();
+        write_variant(&dir.join("sft"));
+        let ck = dir.join("bad.rvt");
+        let opt = OptMoments { m: vec![(vec![5, 2], vec![0.1; 10])], v: vec![(vec![5, 2], vec![0.2; 10])] };
+        save_state(&ck, &store(vec![5, 2]), 5, Some(&opt), None).unwrap();
+        let f = check_checkpoint(&ck, &dir.join("sft"));
+        assert!(f.iter().any(|x| x.rule == "CK002"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "CK004"), "{f:?}");
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_ck001() {
+        let dir = ScratchDir::new("ckchk3").unwrap();
+        write_variant(&dir.join("sft"));
+        let ck = dir.join("torn.rvt");
+        save_state(&ck, &store(vec![4, 2]), 5, None, None).unwrap();
+        let full = std::fs::read(&ck).unwrap();
+        std::fs::write(&ck, &full[..full.len() / 3]).unwrap();
+        let f = check_checkpoint(&ck, &dir.join("sft"));
+        assert!(f.iter().any(|x| x.rule == "CK001"), "{f:?}");
+    }
+}

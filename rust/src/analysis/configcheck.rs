@@ -1,0 +1,211 @@
+//! Pass 1 (cross-artifact) — config vs. memory model (CF rules).
+//!
+//! A `ServeConfig` whose declared budget cannot fit the priced peak of
+//! a method it serves, or a train `RunConfig` whose job prices over the
+//! budget it will be admitted against, fails at submit time on a live
+//! server — this pass prices the same jobs statically with
+//! [`crate::serve::admission::price_job`] (manifest-only, no XLA) and
+//! reports the collision up front.
+
+use std::path::{Path, PathBuf};
+
+use crate::analysis::Finding;
+use crate::config::{PriceGeometry, RunConfig, ServeConfig};
+use crate::engine::Method;
+use crate::memory::{Assumptions, Geometry};
+use crate::serve::admission;
+use crate::util::json::{self, Json};
+
+/// CLI overrides for [`check_config`].
+#[derive(Debug, Default)]
+pub struct ConfigCheckOpts {
+    /// Price against this artifact dir instead of the config's own.
+    pub artifacts: Option<PathBuf>,
+    /// Budget to check a `RunConfig` against (a run config declares no
+    /// budget of its own; without this, pricing is skipped).
+    pub budget_gb: Option<f64>,
+    /// Assumptions preset override (`bf16_mixed` | `paper` | `f32`).
+    pub assumptions: Option<String>,
+}
+
+/// Keys that mark a JSON document as a `ServeConfig` rather than a
+/// train `RunConfig`.
+const SERVE_KEYS: &[&str] =
+    &["addr", "budget_gb", "quantum", "price_geometry", "run_root", "host_budget_gb", "event_log_cap"];
+
+/// Check one config file (serve or run — detected by its keys).
+pub fn check_config(path: &Path, opts: &ConfigCheckOpts) -> Vec<Finding> {
+    let subject = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![Finding::error("CF001", subject, format!("unreadable: {e}"))],
+    };
+    let j = match json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return vec![Finding::error("CF001", subject, format!("{e}"))],
+    };
+    let is_serve = SERVE_KEYS.iter().any(|k| j.get(k).is_some());
+    if is_serve {
+        check_serve(&j, &subject, opts)
+    } else {
+        check_run(&j, &subject, opts)
+    }
+}
+
+fn resolve_assumptions(
+    cfg_preset: &str,
+    opts: &ConfigCheckOpts,
+    subject: &str,
+    out: &mut Vec<Finding>,
+) -> Option<Assumptions> {
+    let preset = opts.assumptions.as_deref().unwrap_or(cfg_preset);
+    match Assumptions::parse(preset) {
+        Ok(a) => Some(a),
+        Err(e) => {
+            out.push(Finding::error("CF001", subject.to_string(), format!("{e}")));
+            None
+        }
+    }
+}
+
+fn check_serve(j: &Json, subject: &str, opts: &ConfigCheckOpts) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let cfg = match ServeConfig::from_json(j) {
+        Ok(c) => c,
+        Err(e) => {
+            out.push(Finding::error("CF001", subject.to_string(), format!("{e}")));
+            return out;
+        }
+    };
+    let Some(assume) = resolve_assumptions(&cfg.assumptions, opts, subject, &mut out) else {
+        return out;
+    };
+    let artifacts = opts.artifacts.clone().unwrap_or_else(|| cfg.artifacts.clone());
+    if !artifacts.is_dir() {
+        out.push(Finding::warning(
+            "CF004",
+            subject.to_string(),
+            format!("artifact dir {} not present — pricing skipped", artifacts.display()),
+        ));
+        return out;
+    }
+    let geometry = match cfg.price_geometry {
+        PriceGeometry::Manifest => None,
+        PriceGeometry::Qwen => Some(Geometry::qwen15_moe_a27b()),
+    };
+    for method in Method::ALL {
+        if !artifacts.join(method.eval_variant()).join("manifest.json").is_file() {
+            continue;
+        }
+        match admission::price_job(&artifacts, method, assume, geometry.clone()) {
+            Ok(priced) => {
+                if priced.peak_gb > cfg.budget_gb {
+                    out.push(Finding::error(
+                        "CF002",
+                        format!("{subject}#{method}"),
+                        format!(
+                            "priced peak {:.3} GB ({} @ {}) exceeds budget_gb {:.3} — \
+                             this job could never be admitted",
+                            priced.peak_gb, method, priced.geometry, cfg.budget_gb
+                        ),
+                    ));
+                }
+                if cfg.host_budget_gb > 0.0 && priced.host_gb > cfg.host_budget_gb {
+                    out.push(Finding::warning(
+                        "CF003",
+                        format!("{subject}#{method}"),
+                        format!(
+                            "host snapshot price {:.3} GB exceeds host_budget_gb {:.3}",
+                            priced.host_gb, cfg.host_budget_gb
+                        ),
+                    ));
+                }
+            }
+            Err(e) => out.push(Finding::warning(
+                "CF004",
+                format!("{subject}#{method}"),
+                format!("pricing failed: {e}"),
+            )),
+        }
+    }
+    out
+}
+
+fn check_run(j: &Json, subject: &str, opts: &ConfigCheckOpts) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let cfg = match RunConfig::from_json(j).and_then(|c| c.validate().map(|_| c)) {
+        Ok(c) => c,
+        Err(e) => {
+            out.push(Finding::error("CF001", subject.to_string(), format!("{e}")));
+            return out;
+        }
+    };
+    let Some(budget) = opts.budget_gb else { return out };
+    let Some(assume) = resolve_assumptions("bf16_mixed", opts, subject, &mut out) else {
+        return out;
+    };
+    let artifacts = opts.artifacts.clone().unwrap_or_else(|| cfg.artifacts.clone());
+    match admission::price_job(&artifacts, cfg.method, assume, None) {
+        Ok(priced) => {
+            if priced.peak_gb > budget {
+                out.push(Finding::error(
+                    "CF002",
+                    format!("{subject}#{}", cfg.method),
+                    format!(
+                        "priced peak {:.3} GB exceeds budget {budget:.3} GB",
+                        priced.peak_gb
+                    ),
+                ));
+            }
+        }
+        Err(e) => out.push(Finding::warning(
+            "CF004",
+            subject.to_string(),
+            format!("pricing failed: {e}"),
+        )),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ScratchDir;
+
+    #[test]
+    fn invalid_serve_config_is_cf001() {
+        let dir = ScratchDir::new("cfchk").unwrap();
+        let p = dir.join("serve.json");
+        std::fs::write(&p, r#"{"budget_gb": -1}"#).unwrap();
+        let f = check_config(&p, &ConfigCheckOpts::default());
+        assert!(f.iter().any(|x| x.rule == "CF001"), "{f:?}");
+    }
+
+    #[test]
+    fn run_config_detected_and_validated() {
+        let dir = ScratchDir::new("cfchk2").unwrap();
+        let p = dir.join("run.json");
+        std::fs::write(&p, r#"{"method": "lomo", "grad_accum": 4}"#).unwrap();
+        let f = check_config(&p, &ConfigCheckOpts::default());
+        assert!(f.iter().any(|x| x.rule == "CF001"), "lomo+accum must fail: {f:?}");
+    }
+
+    #[test]
+    fn unparseable_json_is_cf001() {
+        let dir = ScratchDir::new("cfchk3").unwrap();
+        let p = dir.join("x.json");
+        std::fs::write(&p, "{nope").unwrap();
+        let f = check_config(&p, &ConfigCheckOpts::default());
+        assert_eq!(f[0].rule, "CF001");
+    }
+
+    #[test]
+    fn serve_config_without_artifacts_warns_cf004() {
+        let dir = ScratchDir::new("cfchk4").unwrap();
+        let p = dir.join("serve.json");
+        std::fs::write(&p, r#"{"budget_gb": 8, "artifacts": "/nonexistent/art"}"#).unwrap();
+        let f = check_config(&p, &ConfigCheckOpts::default());
+        assert!(f.iter().any(|x| x.rule == "CF004"), "{f:?}");
+        assert!(f.iter().all(|x| x.rule != "CF002"));
+    }
+}

@@ -1,0 +1,464 @@
+//! Pass 1 — artifact contract checking (AR rules).
+//!
+//! Statically cross-checks each variant's compiled-program inventory and
+//! I/O signatures against what the runtime will actually feed them. The
+//! expected flat calling convention is the one `StepBuilder` lowers and
+//! `Stepper`/`GradAccumulator` drive:
+//!
+//! ```text
+//! train_step  (params, m, v, tokens, targets, mask, lr, step) -> (params', m', v', loss, gnorm, aux)
+//! grad_step   (params, tokens, targets, mask)                 -> (grads…, loss, aux)
+//! apply_step  (params, m, v, grads, lr, step)                 -> (params', m', v', gnorm)
+//! accum_step  (acc…, grads…)                                  -> (acc'…)
+//! scale       (acc…, scale)                                   -> (grads…)
+//! forward     (params, tokens)                                -> (logits)
+//! eval_step   (params, tokens, targets, mask)                 -> (loss, aux)
+//! reconstruct (params, tokens)                                -> (err)
+//! ```
+//!
+//! where `params` are the manifest tensors in order, `m`/`v` the Adam
+//! moments at `io.opt_shapes`, grads the trainable tensors, tokens and
+//! targets `s32[B,S]`, mask `f32[B,S]`, and lr/step/scale `f32[]`
+//! scalars. Donation (`input_output_alias`) may only name the mutable
+//! state prefix — donating a data input would corrupt the caller.
+
+use std::path::Path;
+
+use crate::analysis::hlo::{self, TensorTy};
+use crate::analysis::Finding;
+use crate::engine::Method;
+use crate::runtime::artifact::{Artifact, ArtifactIndex, Manifest};
+use crate::runtime::literal::dtype_bytes;
+
+/// Manifest dtype string → HLO element-type spelling.
+fn hlo_dtype(manifest_dtype: &str) -> String {
+    match manifest_dtype {
+        "i32" => "s32".into(),
+        "i64" => "s64".into(),
+        other => other.into(),
+    }
+}
+
+fn ty(dtype: &str, dims: &[usize]) -> TensorTy {
+    TensorTy { dtype: dtype.into(), dims: dims.to_vec() }
+}
+
+/// Expected interface of one program kind, derived from the manifest.
+struct Spec {
+    /// `(label, type)` per input, in parameter order.
+    inputs: Vec<(String, TensorTy)>,
+    out_arity: usize,
+    /// Output slots with a manifest-determined type (`(index, label,
+    /// type)`); slots not listed (losses, aux) are arity-checked only.
+    out_checked: Vec<(usize, String, TensorTy)>,
+    /// Donation may only name parameters `< donate_bound` (the mutable
+    /// state prefix; 0 = the program must not donate at all).
+    donate_bound: usize,
+}
+
+/// Build the expected interface for `kind`, or `None` for kinds the
+/// checker does not know (they get an existence check only).
+fn expected_io(kind: &str, m: &Manifest) -> Option<Spec> {
+    let io = &m.io;
+    let params: Vec<(String, TensorTy)> = m
+        .tensors
+        .iter()
+        .map(|t| (t.name.clone(), ty(&hlo_dtype(&t.dtype), &t.shape)))
+        .collect();
+    let moments = |tag: &str| -> Vec<(String, TensorTy)> {
+        io.opt_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (format!("{tag}[{i}]"), ty("f32", s)))
+            .collect()
+    };
+    let grads: Vec<(String, TensorTy)> = m
+        .tensors
+        .iter()
+        .zip(&io.trainable)
+        .filter(|(_, &t)| t)
+        .map(|(t, _)| (format!("grad[{}]", t.name), ty("f32", &t.shape)))
+        .collect();
+    let np = params.len();
+    let no = io.opt_shapes.len();
+    let nt = grads.len();
+    let bs = [io.batch_size, io.seq_len];
+    let tokens = ("tokens".to_string(), ty("s32", &bs));
+    let targets = ("targets".to_string(), ty("s32", &bs));
+    let mask = ("mask".to_string(), ty("f32", &bs));
+    let scalar = |label: &str| (label.to_string(), ty("f32", &[]));
+    // the state prefix (params, m, v) comes back unchanged in shape
+    let state_out = |inputs: &[(String, TensorTy)]| -> Vec<(usize, String, TensorTy)> {
+        inputs.iter().take(np + 2 * no).cloned().enumerate().map(|(i, (l, t))| (i, l, t)).collect()
+    };
+    let grads_out = || -> Vec<(usize, String, TensorTy)> {
+        grads.iter().cloned().enumerate().map(|(i, (l, t))| (i, l, t)).collect()
+    };
+
+    let spec = match kind {
+        "train_step" => {
+            let mut inputs = params;
+            inputs.extend(moments("m"));
+            inputs.extend(moments("v"));
+            inputs.extend([tokens, targets, mask, scalar("lr"), scalar("step")]);
+            let out_checked = state_out(&inputs);
+            Spec { inputs, out_arity: np + 2 * no + 3, out_checked, donate_bound: np + 2 * no }
+        }
+        "grad_step" => {
+            let mut inputs = params;
+            inputs.extend([tokens, targets, mask]);
+            Spec { inputs, out_arity: nt + 2, out_checked: grads_out(), donate_bound: 0 }
+        }
+        "apply_step" => {
+            let mut inputs = params;
+            inputs.extend(moments("m"));
+            inputs.extend(moments("v"));
+            inputs.extend(grads.clone());
+            inputs.extend([scalar("lr"), scalar("step")]);
+            let out_checked = state_out(&inputs);
+            Spec { inputs, out_arity: np + 2 * no + 1, out_checked, donate_bound: np + 2 * no }
+        }
+        "accum_step" => {
+            let mut inputs: Vec<(String, TensorTy)> =
+                grads.iter().cloned().map(|(l, t)| (l.replace("grad[", "acc["), t)).collect();
+            inputs.extend(grads.clone());
+            Spec { inputs, out_arity: nt, out_checked: grads_out(), donate_bound: nt }
+        }
+        "scale" => {
+            let mut inputs: Vec<(String, TensorTy)> =
+                grads.iter().cloned().map(|(l, t)| (l.replace("grad[", "acc["), t)).collect();
+            inputs.push(scalar("scale"));
+            Spec { inputs, out_arity: nt, out_checked: grads_out(), donate_bound: nt }
+        }
+        "forward" | "reconstruct" => {
+            let mut inputs = params;
+            inputs.push(tokens);
+            Spec { inputs, out_arity: 1, out_checked: Vec::new(), donate_bound: 0 }
+        }
+        "eval_step" => {
+            let mut inputs = params;
+            inputs.extend([tokens, targets, mask]);
+            Spec { inputs, out_arity: 2, out_checked: Vec::new(), donate_bound: 0 }
+        }
+        _ => return None,
+    };
+    Some(spec)
+}
+
+/// All AR checks for one loaded variant.
+pub fn check_variant(art: &Artifact) -> Vec<Finding> {
+    let m = &art.manifest;
+    let v = m.variant.clone();
+    let mut out = Vec::new();
+
+    // ---- AR002: manifest internal consistency ------------------------
+    let nt = m.io.trainable.iter().filter(|&&t| t).count();
+    let mut ar002 = |msg: String| out.push(Finding::error("AR002", v.clone(), msg));
+    if m.io.n_params != m.tensors.len() {
+        ar002(format!("io.n_params {} != tensors.len() {}", m.io.n_params, m.tensors.len()));
+    }
+    if m.io.trainable.len() != m.tensors.len() {
+        ar002(format!(
+            "io.trainable.len() {} != tensors.len() {}",
+            m.io.trainable.len(),
+            m.tensors.len()
+        ));
+    }
+    if m.io.trainable_paths.len() != nt {
+        ar002(format!(
+            "io.trainable_paths.len() {} != trainable count {nt}",
+            m.io.trainable_paths.len()
+        ));
+    }
+    if m.io.opt_shapes.len() != m.io.n_opt {
+        ar002(format!("io.opt_shapes.len() {} != io.n_opt {}", m.io.opt_shapes.len(), m.io.n_opt));
+    }
+    if m.io.n_opt > nt {
+        ar002(format!("io.n_opt {} > trainable count {nt}", m.io.n_opt));
+    }
+    if m.io.batch_size == 0 || m.io.seq_len == 0 {
+        ar002(format!("degenerate geometry batch={} seq={}", m.io.batch_size, m.io.seq_len));
+    }
+    for t in &m.tensors {
+        match dtype_bytes(&t.dtype) {
+            Ok(b) => {
+                if t.nbytes != t.elem_count() * b {
+                    out.push(Finding::error(
+                        "AR002",
+                        format!("{v}/{}", t.name),
+                        format!(
+                            "nbytes {} != {} elements x {b} bytes ({})",
+                            t.nbytes,
+                            t.elem_count(),
+                            t.dtype
+                        ),
+                    ));
+                }
+            }
+            Err(_) => out.push(Finding::error(
+                "AR002",
+                format!("{v}/{}", t.name),
+                format!("unknown dtype {:?}", t.dtype),
+            )),
+        }
+    }
+
+    // ---- AR010: router tensors frozen in RevFFN stages (§3.3) --------
+    if v.starts_with("revffn_stage") {
+        for (spec, &tr) in m.tensors.iter().zip(&m.io.trainable) {
+            if tr && spec.name.contains(".moe.router") {
+                out.push(Finding::error(
+                    "AR010",
+                    format!("{v}/{}", spec.name),
+                    "router tensor marked trainable in a RevFFN stage".to_string(),
+                ));
+            }
+        }
+    }
+
+    // ---- AR003: program presence per Method capability ---------------
+    if let Some(method) = Method::from_variant(&v) {
+        for k in method.required_programs() {
+            if !m.artifacts.contains_key(*k) {
+                out.push(Finding::error(
+                    "AR003",
+                    format!("{v}/{k}"),
+                    format!("required program {k:?} missing from artifact inventory"),
+                ));
+            }
+        }
+        for pair in method.paired_programs() {
+            let [a, b] = *pair;
+            let (ha, hb) = (m.artifacts.contains_key(a), m.artifacts.contains_key(b));
+            if ha != hb {
+                let (present, absent) = if ha { (a, b) } else { (b, a) };
+                out.push(Finding::error(
+                    "AR003",
+                    format!("{v}/{absent}"),
+                    format!(
+                        "{present:?} present without its pair {absent:?} — the capability would fail at first use"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- per program: AR004..AR009 -----------------------------------
+    let mut kinds: Vec<&String> = m.artifacts.keys().collect();
+    kinds.sort();
+    for kind in kinds {
+        let subject = format!("{v}/{kind}");
+        let path = match art.hlo_path(kind) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                out.push(Finding::error(
+                    "AR004",
+                    subject,
+                    format!("listed program file {} unreadable: {e}", path.display()),
+                ));
+                continue;
+            }
+        };
+        let Some(spec) = expected_io(kind, m) else { continue };
+        let Some(sig) = hlo::parse_signature(&text) else {
+            out.push(Finding::warning(
+                "AR009",
+                subject,
+                "HLO signature unparseable — interface checks skipped".to_string(),
+            ));
+            continue;
+        };
+        if sig.params.len() != spec.inputs.len() {
+            out.push(Finding::error(
+                "AR005",
+                subject.clone(),
+                format!("input arity {} != expected {}", sig.params.len(), spec.inputs.len()),
+            ));
+        } else {
+            for (i, ((label, want), got)) in spec.inputs.iter().zip(&sig.params).enumerate() {
+                if want != got {
+                    out.push(Finding::error(
+                        "AR007",
+                        format!("{subject}#{i}"),
+                        format!(
+                            "input {label}: manifest expects {} but program takes {}",
+                            want.render(),
+                            got.render()
+                        ),
+                    ));
+                }
+            }
+        }
+        if sig.outputs.len() != spec.out_arity {
+            out.push(Finding::error(
+                "AR006",
+                subject.clone(),
+                format!("output arity {} != expected {}", sig.outputs.len(), spec.out_arity),
+            ));
+        } else {
+            for (idx, label, want) in &spec.out_checked {
+                if &sig.outputs[*idx] != want {
+                    out.push(Finding::error(
+                        "AR007",
+                        format!("{subject}#out{idx}"),
+                        format!(
+                            "output {label}: manifest expects {} but program returns {}",
+                            want.render(),
+                            sig.outputs[*idx].render()
+                        ),
+                    ));
+                }
+            }
+        }
+        if let Some(aliased) = &sig.aliased {
+            for &i in aliased {
+                if i >= spec.donate_bound {
+                    out.push(Finding::error(
+                        "AR008",
+                        subject.clone(),
+                        format!(
+                            "donates parameter {i} outside the mutable state prefix (< {}) — \
+                             the runtime still needs that buffer",
+                            spec.donate_bound
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    out
+}
+
+/// Check a whole artifact config directory (`artifacts/<cfg>`): every
+/// variant listed in `index.json`, or every subdirectory carrying a
+/// `manifest.json` when there is no index.
+pub fn check_artifacts(dir: &Path) -> Vec<Finding> {
+    let subject = dir.display().to_string();
+    if !dir.is_dir() {
+        return vec![Finding::error("AR001", subject, "artifact directory does not exist")];
+    }
+    let variants: Vec<String> = if dir.join("index.json").exists() {
+        match ArtifactIndex::load(dir) {
+            Ok(idx) => idx.variants,
+            Err(e) => {
+                return vec![Finding::error("AR001", subject, format!("index.json: {e}"))];
+            }
+        }
+    } else {
+        let mut found = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                if entry.path().join("manifest.json").is_file() {
+                    found.push(entry.file_name().to_string_lossy().into_owned());
+                }
+            }
+        }
+        found.sort();
+        found
+    };
+    if variants.is_empty() {
+        return vec![Finding::error("AR001", subject, "no variants found (no index.json, no */manifest.json)")];
+    }
+    let mut out = Vec::new();
+    for v in &variants {
+        let vdir = dir.join(v);
+        match Artifact::load(&vdir) {
+            Ok(art) => {
+                if art.manifest.variant != *v {
+                    out.push(Finding::error(
+                        "AR002",
+                        v.clone(),
+                        format!(
+                            "manifest says variant {:?} but lives in directory {v:?}",
+                            art.manifest.variant
+                        ),
+                    ));
+                }
+                out.extend(check_variant(&art));
+            }
+            Err(e) => out.push(Finding::error("AR001", v.clone(), format!("{e}"))),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "variant": "sft", "method": "sft",
+          "model": {"name": "tiny", "vocab_size": 64, "d_model": 8, "n_layers": 2,
+                    "n_heads": 2, "n_kv_heads": 2, "n_experts": 4, "top_k": 2,
+                    "d_ff_expert": 16, "d_ff_shared": 16, "max_seq_len": 16},
+          "io": {"n_params": 2, "n_opt": 1, "optimizer": "adam",
+                 "trainable": [true, false], "trainable_paths": ["embed"],
+                 "opt_shapes": [[4, 2]], "batch_size": 2, "seq_len": 4},
+          "tensors": [
+            {"name": "embed", "shape": [4, 2], "dtype": "f32", "blob": "standard", "offset": 0, "nbytes": 32},
+            {"name": "norm_f", "shape": [2], "dtype": "f32", "blob": "standard", "offset": 32, "nbytes": 8}
+          ],
+          "artifacts": {"train_step": "train_step.hlo.txt"}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn expected_train_step_interface() {
+        let m = manifest();
+        let s = expected_io("train_step", &m).unwrap();
+        // 2 params + 1 m + 1 v + tokens/targets/mask/lr/step
+        assert_eq!(s.inputs.len(), 9);
+        assert_eq!(s.inputs[0].1.render(), "f32[4,2]");
+        assert_eq!(s.inputs[4].0, "tokens");
+        assert_eq!(s.inputs[4].1.render(), "s32[2,4]");
+        assert_eq!(s.inputs[8].1.render(), "f32[]");
+        assert_eq!(s.out_arity, 2 + 2 + 3);
+        assert_eq!(s.out_checked.len(), 4);
+        assert_eq!(s.donate_bound, 4);
+    }
+
+    #[test]
+    fn expected_pair_and_eval_interfaces() {
+        let m = manifest();
+        let g = expected_io("grad_step", &m).unwrap();
+        assert_eq!(g.inputs.len(), 5);
+        assert_eq!(g.out_arity, 3, "1 trainable grad + loss + aux");
+        assert_eq!(g.donate_bound, 0);
+        let a = expected_io("apply_step", &m).unwrap();
+        assert_eq!(a.inputs.len(), 2 + 2 + 1 + 2);
+        assert_eq!(a.out_arity, 5);
+        let acc = expected_io("accum_step", &m).unwrap();
+        assert_eq!(acc.inputs.len(), 2);
+        assert_eq!(acc.out_arity, 1);
+        assert_eq!(acc.donate_bound, 1);
+        let sc = expected_io("scale", &m).unwrap();
+        assert_eq!(sc.inputs.len(), 2);
+        assert_eq!(sc.inputs[1].1.render(), "f32[]");
+        assert!(expected_io("mystery_kind", &m).is_none());
+    }
+
+    #[test]
+    fn internal_consistency_catches_bad_nbytes() {
+        let mut m = manifest();
+        m.tensors[0].nbytes = 31;
+        let art = Artifact { dir: std::path::PathBuf::from("/nonexistent"), manifest: m };
+        let f = check_variant(&art);
+        assert!(f.iter().any(|f| f.rule == "AR002" && f.subject.contains("embed")));
+    }
+
+    #[test]
+    fn missing_artifact_dir_is_ar001() {
+        let f = check_artifacts(Path::new("/nonexistent/artifacts"));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "AR001");
+    }
+}

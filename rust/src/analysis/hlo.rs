@@ -1,0 +1,237 @@
+//! Minimal HLO-text signature reader.
+//!
+//! The AOT layer (`python/compile/aot.py`) serializes every program as
+//! `as_hlo_text()` output. For contract checking we only need the ENTRY
+//! computation's interface — parameter types, the ROOT tuple's element
+//! types, and the `input_output_alias` donation map — not a real HLO
+//! parser. The reader is deliberately tolerant: anything it cannot
+//! understand yields `None`, which the contract pass reports as an
+//! AR009 *warning* (checks skipped), never a spurious error against
+//! real compiler output.
+
+/// One flat tensor type, e.g. `f32[4,8]` or `s32[]` (scalar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorTy {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorTy {
+    pub fn render(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+/// The ENTRY computation's interface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    /// Parameter types in parameter-number order.
+    pub params: Vec<TensorTy>,
+    /// ROOT tuple element types (`return_tuple=True` at AOT time, so
+    /// the root is always a tuple; a non-tuple root parses as one
+    /// element).
+    pub outputs: Vec<TensorTy>,
+    /// Parameter numbers named in `input_output_alias` — the donated
+    /// inputs. `None` when the module header carries no alias map (the
+    /// program donates nothing, or the text predates aliasing).
+    pub aliased: Option<Vec<usize>>,
+}
+
+/// Parse `f32[4,8]{1,0}` / `s32[]` → [`TensorTy`]. Trailing layout or
+/// metadata after `]` is ignored.
+fn parse_tensor_ty(tok: &str) -> Option<TensorTy> {
+    let open = tok.find('[')?;
+    let close = tok[open..].find(']')? + open;
+    let dtype = tok[..open].trim().to_string();
+    if dtype.is_empty() || !dtype.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return None;
+    }
+    let inner = &tok[open + 1..close];
+    let mut dims = Vec::new();
+    if !inner.trim().is_empty() {
+        for part in inner.split(',') {
+            dims.push(part.trim().parse::<usize>().ok()?);
+        }
+    }
+    Some(TensorTy { dtype, dims })
+}
+
+/// Split a tuple type body (the text between the outer parens) at
+/// top-level commas — bracket/brace/paren aware, so `f32[4,8]{1,0}`
+/// stays one token.
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0;
+    for (i, c) in body.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(body[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(body[start..].trim());
+    out
+}
+
+/// Extract a balanced `{...}` / `(...)` span starting at `open_idx`
+/// (which must point at the opening delimiter). Returns the inner text.
+fn balanced_span(text: &str, open_idx: usize, open: char, close: char) -> Option<&str> {
+    let bytes = text.as_bytes();
+    if bytes.get(open_idx) != Some(&(open as u8)) {
+        return None;
+    }
+    let mut depth = 0usize;
+    for (i, c) in text[open_idx..].char_indices() {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(&text[open_idx + 1..open_idx + i]);
+            }
+        }
+    }
+    None
+}
+
+/// Parse the ENTRY computation's signature out of full HLO text.
+pub fn parse_signature(text: &str) -> Option<Signature> {
+    // --- ENTRY block: from the `ENTRY` header line to the closing `}`
+    let mut in_entry = false;
+    let mut params: Vec<(usize, TensorTy)> = Vec::new();
+    let mut outputs: Option<Vec<TensorTy>> = None;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if !in_entry {
+            if trimmed.starts_with("ENTRY ") || trimmed.starts_with("ENTRY%") {
+                in_entry = true;
+            }
+            continue;
+        }
+        if trimmed == "}" {
+            break;
+        }
+        // instruction lines: `%name = <type> <op>(...)`
+        let Some(eq) = trimmed.find(" = ") else { continue };
+        let rest = &trimmed[eq + 3..];
+        if let Some(ppos) = rest.find("parameter(") {
+            let ty_tok = rest[..ppos].trim();
+            let after = &rest[ppos + "parameter(".len()..];
+            let digits: String = after.chars().take_while(|c| c.is_ascii_digit()).collect();
+            let idx = digits.parse::<usize>().ok()?;
+            params.push((idx, parse_tensor_ty(ty_tok)?));
+        }
+        if trimmed.starts_with("ROOT ") || trimmed.starts_with("ROOT%") {
+            let tys = if rest.starts_with('(') {
+                let body = balanced_span(rest, 0, '(', ')')?;
+                split_top_level(body)
+                    .into_iter()
+                    .map(parse_tensor_ty)
+                    .collect::<Option<Vec<_>>>()?
+            } else {
+                let tok = rest.split_whitespace().next()?;
+                vec![parse_tensor_ty(tok)?]
+            };
+            outputs = Some(tys);
+        }
+    }
+    if !in_entry {
+        return None;
+    }
+    // parameter numbers must be dense 0..n
+    params.sort_by_key(|(i, _)| *i);
+    for (expect, (got, _)) in params.iter().enumerate() {
+        if *got != expect {
+            return None;
+        }
+    }
+    let params: Vec<TensorTy> = params.into_iter().map(|(_, t)| t).collect();
+    let outputs = outputs?;
+
+    // --- donation map on the HloModule header (anywhere in the text)
+    let aliased = text.find("input_output_alias=").and_then(|pos| {
+        let brace = pos + "input_output_alias=".len();
+        let body = balanced_span(text, brace, '{', '}')?;
+        // entries look like `{0}: (3, {}, may-alias)` — the first
+        // integer after each `: (` is the donated parameter number
+        let mut out = Vec::new();
+        let mut rest = body;
+        while let Some(p) = rest.find(": (") {
+            let after = &rest[p + 3..];
+            let digits: String = after.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(n) = digits.parse::<usize>() {
+                out.push(n);
+            }
+            rest = after;
+        }
+        out.sort_unstable();
+        out.dedup();
+        Some(out)
+    });
+
+    Some(Signature { params, outputs, aliased })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule train_step.42, input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, may-alias) }, entry_computation_layout={(f32[4,2]{1,0},f32[])->(f32[4,2]{1,0},f32[])}
+
+%fused_add (a.0: f32[4,2], b.0: f32[4,2]) -> f32[4,2] {
+  %a.0 = f32[4,2]{1,0} parameter(0)
+  %b.0 = f32[4,2]{1,0} parameter(1)
+  ROOT %r.0 = f32[4,2]{1,0} add(%a.0, %b.0)
+}
+
+ENTRY %main.42 (Arg_0.1: f32[4,2], Arg_1.2: f32[]) -> (f32[4,2], f32[]) {
+  %Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[] parameter(1), metadata={op_name="lr"}
+  %t.3 = s32[2,4]{1,0} constant({...})
+  ROOT %tuple.9 = (f32[4,2]{1,0}, f32[]) tuple(%Arg_0.1, %Arg_1.2)
+}
+"#;
+
+    #[test]
+    fn parses_entry_signature_not_fusions() {
+        let sig = parse_signature(SAMPLE).unwrap();
+        assert_eq!(sig.params.len(), 2, "fusion params must not leak in");
+        assert_eq!(sig.params[0], TensorTy { dtype: "f32".into(), dims: vec![4, 2] });
+        assert_eq!(sig.params[1], TensorTy { dtype: "f32".into(), dims: vec![] });
+        assert_eq!(sig.outputs.len(), 2);
+        assert_eq!(sig.outputs[1].render(), "f32[]");
+        assert_eq!(sig.aliased, Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn no_alias_header_means_none() {
+        let text = "HloModule fwd\n\nENTRY %m (a: s32[2,4]) -> (f32[]) {\n  %a = s32[2,4]{1,0} parameter(0)\n  ROOT %t = (f32[]) tuple()\n}\n";
+        let sig = parse_signature(text).unwrap();
+        assert_eq!(sig.params[0].dtype, "s32");
+        assert_eq!(sig.outputs.len(), 1);
+        assert!(sig.aliased.is_none());
+    }
+
+    #[test]
+    fn garbage_degrades_to_none() {
+        assert!(parse_signature("not hlo at all").is_none());
+        assert!(parse_signature("ENTRY %m () -> f32[] {\n}\n").is_none(), "no ROOT");
+        // gap in parameter numbering
+        let gap = "ENTRY %m (a: f32[]) -> (f32[]) {\n  %a = f32[] parameter(1)\n  ROOT %t = (f32[]) tuple(%a)\n}\n";
+        assert!(parse_signature(gap).is_none());
+    }
+
+    #[test]
+    fn tensor_ty_parsing() {
+        assert_eq!(parse_tensor_ty("f32[4,8]{1,0}").unwrap().dims, vec![4, 8]);
+        assert_eq!(parse_tensor_ty("s32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(parse_tensor_ty("f32").is_none());
+        assert!(parse_tensor_ty("[4]").is_none());
+    }
+}

@@ -1,0 +1,317 @@
+//! Pass 2 — repo invariant lint (LN rules).
+//!
+//! A small comment/string-aware scanner over `rust/src/**` enforcing
+//! invariants that rustc cannot:
+//!
+//! * **LN001** — no panicking `unwrap()` / `expect()` / `panic!` /
+//!   `unreachable!` / `todo!` in `serve/` non-test code. A panic in a
+//!   handler tears down that connection; in the scheduler thread it
+//!   kills every job on the device.
+//! * **LN002** — no raw `Mutex::lock()` on the shared `Board` outside
+//!   the single poisoned-lock policy helper (`serve/lock.rs`).
+//! * **LN003** — no allocation sized from wire-derived lengths
+//!   (`with_capacity`, `vec![0; n]`) in `serve/` — the bounded `Reader`
+//!   in `checkpoint/` (claim-before-allocate) is the sanctioned
+//!   pattern for untrusted sizes.
+//!
+//! The scanner strips line/block comments (nested), string literals
+//! (incl. raw and byte strings), and char literals before matching, and
+//! stops at the file's trailing `#[cfg(test)]` block (repo convention:
+//! tests last), so test code may panic freely.
+
+use std::path::Path;
+
+use crate::analysis::Finding;
+
+/// Replace comments, string literals, and char literals with spaces,
+/// preserving newlines (line numbers survive stripping).
+fn strip(text: &str) -> String {
+    #[derive(Clone, Copy, PartialEq)]
+    enum S {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        Raw(usize),
+    }
+    let cs: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut s = S::Code;
+    let mut i = 0;
+    // `r##"` (any number of hashes) starting at i? → (advance, hashes)
+    let raw_start = |i: usize| -> Option<(usize, usize)> {
+        if cs.get(i) != Some(&'r') {
+            return None;
+        }
+        if i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_') {
+            return None;
+        }
+        let mut j = i + 1;
+        while cs.get(j) == Some(&'#') {
+            j += 1;
+        }
+        (cs.get(j) == Some(&'"')).then(|| (j + 1 - i, j - (i + 1)))
+    };
+    while i < cs.len() {
+        let c = cs[i];
+        match s {
+            S::Code => {
+                if c == '/' && cs.get(i + 1) == Some(&'/') {
+                    s = S::Line;
+                    out.push(' ');
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    s = S::Block(1);
+                    out.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    s = S::Str;
+                    out.push(' ');
+                    i += 1;
+                } else if let Some((adv, hashes)) = raw_start(i) {
+                    s = S::Raw(hashes);
+                    out.push(' ');
+                    i += adv;
+                } else if c == 'b' && cs.get(i + 1) == Some(&'"') {
+                    s = S::Str;
+                    out.push(' ');
+                    i += 2;
+                } else if c == 'b' && raw_start(i + 1).is_some() {
+                    let (adv, hashes) = raw_start(i + 1).unwrap_or((1, 0));
+                    s = S::Raw(hashes);
+                    out.push(' ');
+                    i += 1 + adv;
+                } else if c == '\'' {
+                    // char literal vs. lifetime
+                    if cs.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < cs.len() && cs[j] != '\'' && j - i < 12 {
+                            j += 1;
+                        }
+                        if cs.get(j) == Some(&'\'') {
+                            out.push(' ');
+                            i = j + 1;
+                            continue;
+                        }
+                        out.push(c);
+                        i += 1;
+                    } else if cs.get(i + 2) == Some(&'\'') && cs.get(i + 1) != Some(&'\'') {
+                        out.push(' ');
+                        i += 3;
+                    } else {
+                        // lifetime — keep the tick, harmless
+                        out.push(c);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            S::Line => {
+                if c == '\n' {
+                    out.push('\n');
+                    s = S::Code;
+                }
+                i += 1;
+            }
+            S::Block(d) => {
+                if c == '*' && cs.get(i + 1) == Some(&'/') {
+                    s = if d == 1 { S::Code } else { S::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                    s = S::Block(d + 1);
+                    i += 2;
+                } else {
+                    if c == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+            S::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    s = S::Code;
+                    i += 1;
+                } else {
+                    if c == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+            S::Raw(h) => {
+                if c == '"' && (0..h).all(|k| cs.get(i + 1 + k) == Some(&'#')) {
+                    s = S::Code;
+                    i += h + 1;
+                } else {
+                    if c == '\n' {
+                        out.push('\n');
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+const LN001_PATTERNS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+const LN003_PATTERNS: &[&str] = &["with_capacity(", "vec![0"];
+
+/// Lint one file's text. `rel` is the path relative to the source root
+/// (`serve/server.rs` style) — it decides which rules apply.
+pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
+    let norm = rel.replace('\\', "/");
+    let in_serve = norm.starts_with("serve/") || norm.contains("/serve/");
+    if !in_serve {
+        return Vec::new();
+    }
+    let is_lock_helper = norm.ends_with("serve/lock.rs") || norm == "serve/lock.rs";
+    let stripped = strip(text);
+    let mut out = Vec::new();
+    for (lineno, line) in stripped.lines().enumerate() {
+        if line.trim() == "#[cfg(test)]" {
+            break;
+        }
+        let subject = format!("{norm}:{}", lineno + 1);
+        for pat in LN001_PATTERNS {
+            if line.contains(pat) {
+                out.push(Finding::error(
+                    "LN001",
+                    subject.clone(),
+                    format!(
+                        "panicking {} in serve code — return an error response / job-failure event instead",
+                        pat.trim_start_matches('.')
+                    ),
+                ));
+            }
+        }
+        if !is_lock_helper && line.contains(".lock()") {
+            out.push(Finding::error(
+                "LN002",
+                subject.clone(),
+                "raw Mutex::lock() on the shared Board — go through serve::lock::board (the single poisoned-lock policy)".to_string(),
+            ));
+        }
+        for pat in LN003_PATTERNS {
+            if line.contains(pat) {
+                out.push(Finding::error(
+                    "LN003",
+                    subject.clone(),
+                    format!(
+                        "allocation via {pat}…) in serve code — sizes here can be wire-derived; use the bounded claim-before-allocate Reader pattern (checkpoint/)"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Recursively lint every `.rs` file under `root` (normally `rust/src`).
+pub fn lint_sources(root: &Path) -> Vec<Finding> {
+    if !root.is_dir() {
+        return vec![Finding::error(
+            "LN000",
+            root.display().to_string(),
+            "source root does not exist",
+        )];
+    }
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files);
+    files.sort();
+    let mut out = Vec::new();
+    for rel in files {
+        match std::fs::read_to_string(root.join(&rel)) {
+            Ok(text) => out.extend(lint_text(&rel, &text)),
+            Err(e) => out.push(Finding::error("LN000", rel, format!("unreadable: {e}"))),
+        }
+    }
+    out
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            if let Ok(rel) = p.strip_prefix(root) {
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_panics_in_serve_code() {
+        let f = lint_text("serve/server.rs", "fn f(x: Option<u8>) { x.unwrap(); }\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "LN001");
+        assert_eq!(f[0].subject, "serve/server.rs:1");
+        let f = lint_text("serve/scheduler.rs", "let y = m.lock().expect(\"board\");\n");
+        assert!(f.iter().any(|x| x.rule == "LN001"));
+        assert!(f.iter().any(|x| x.rule == "LN002"));
+    }
+
+    #[test]
+    fn comments_strings_and_tests_are_exempt() {
+        let src = "\
+// this .unwrap() is a comment\n\
+/* and panic!( in /* nested */ blocks too */\n\
+let s = \".expect( in a string\";\n\
+let r = r#\"vec![0; raw .unwrap()\"#;\n\
+let c = '\"';\n\
+let q = \"quote\";\n\
+#[cfg(test)]\n\
+mod tests { fn t() { x.unwrap(); } }\n";
+        assert!(lint_text("serve/protocol.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "let g = m.lock().unwrap_or_else(PoisonError::into_inner);\n";
+        let f = lint_text("serve/lock.rs", src);
+        assert!(f.is_empty(), "lock helper is exempt from LN002, unwrap_or_else from LN001: {f:?}");
+        let f = lint_text("serve/server.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN002");
+    }
+
+    #[test]
+    fn non_serve_files_have_no_serve_rules() {
+        assert!(lint_text("util/json.rs", "x.unwrap(); m.lock(); vec![0; n];\n").is_empty());
+    }
+
+    #[test]
+    fn wire_sized_allocations_flagged() {
+        let f = lint_text("serve/server.rs", "let b = Vec::with_capacity(n); let z = vec![0u8; n];\n");
+        assert_eq!(f.iter().filter(|x| x.rule == "LN003").count(), 2);
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_derail_stripper() {
+        let src = "if c == '\"' { x.unwrap() }\n";
+        let f = lint_text("serve/server.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN001");
+    }
+
+    #[test]
+    fn own_source_tree_is_clean() {
+        // the acceptance gate: zero findings on rust/src/** — enforced
+        // here and in the static CI job
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+        let f = lint_sources(&root);
+        assert!(f.is_empty(), "lint findings on rust/src: {f:#?}");
+    }
+}

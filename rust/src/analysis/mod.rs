@@ -1,0 +1,189 @@
+//! `revffn check` — device-free static contract analysis.
+//!
+//! Every correctness claim the repo makes (bit-identical resume,
+//! buffer-vs-literal parity, solo-vs-interleaved serve parity) rests on
+//! program/manifest contracts that are otherwise only validated by
+//! executing on a PJRT device. This module checks them statically — no
+//! XLA, no device, no Python — so a stale artifact set, a
+//! shape-mismatched `.rvt`, or a truncated program inventory is caught
+//! in the always-on CI job instead of as a runtime crash mid-run.
+//!
+//! Four passes, each a pure function from inputs to [`Finding`]s:
+//!
+//! * [`contract::check_artifacts`] — artifact dir vs. what `Stepper` /
+//!   `GradAccumulator` / `DeviceState` will feed the programs (AR rules)
+//! * [`ckpt::check_checkpoint`] — `.rvt` structure vs. a manifest:
+//!   would `restore_into` / `restore_opt` accept it? (CK rules)
+//! * [`configcheck::check_config`] — run/serve config vs. the analytic
+//!   memory model: does the priced peak fit the budget? (CF rules)
+//! * [`lint::lint_sources`] — comment/string-aware source scan of
+//!   `rust/src/**` enforcing repo invariants (LN rules)
+//!
+//! Rule IDs are stable and documented in `docs/ANALYSIS.md`; adding a
+//! rule means adding a `Finding` emission and a catalog row, nothing
+//! else. Output is human text or machine JSON (`--json`), and the CLI
+//! exits nonzero iff any error-severity finding exists.
+
+pub mod ckpt;
+pub mod configcheck;
+pub mod contract;
+pub mod hlo;
+pub mod lint;
+
+pub use ckpt::check_checkpoint;
+pub use configcheck::check_config;
+pub use contract::check_artifacts;
+pub use lint::lint_sources;
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// How bad a finding is. `Error` findings fail the CLI (nonzero exit);
+/// `Warning`s are advisory (degraded checks, soft budgets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One rule violation: a stable rule ID, a subject (variant, file:line,
+/// config path — whatever locates the defect), and a human message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub subject: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn error(rule: &'static str, subject: impl Into<String>, message: impl Into<String>) -> Self {
+        Finding { rule, severity: Severity::Error, subject: subject.into(), message: message.into() }
+    }
+
+    pub fn warning(
+        rule: &'static str,
+        subject: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Finding {
+            rule,
+            severity: Severity::Warning,
+            subject: subject.into(),
+            message: message.into(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("rule", self.rule)
+            .str("severity", self.severity.name())
+            .str("subject", &self.subject)
+            .str("message", &self.message)
+            .build()
+    }
+}
+
+/// All findings of one `revffn check` invocation.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn new(findings: Vec<Finding>) -> Self {
+        Report { findings }
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// True when nothing error-severity was found.
+    pub fn ok(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Does any finding carry this rule ID? (test/assertion helper)
+    pub fn has(&self, rule: &str) -> bool {
+        self.findings.iter().any(|f| f.rule == rule)
+    }
+
+    /// Machine output: `{"ok", "errors", "warnings", "findings": [...]}`
+    /// — schema documented in `docs/ANALYSIS.md`.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self.findings.iter().map(Finding::to_json).collect();
+        ObjBuilder::new()
+            .bool("ok", self.ok())
+            .num("errors", self.errors() as f64)
+            .num("warnings", self.warnings() as f64)
+            .val("findings", Json::Arr(findings))
+            .build()
+    }
+
+    /// Human output: one `severity[RULE] subject: message` line per
+    /// finding plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}[{}] {}: {}\n",
+                f.severity.name(),
+                f.rule,
+                f.subject,
+                f.message
+            ));
+        }
+        out.push_str(&format!(
+            "check: {} error(s), {} warning(s)\n",
+            self.errors(),
+            self.warnings()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_and_json_shape() {
+        let r = Report::new(vec![
+            Finding::error("AR005", "sft/train_step", "arity 8 != 9"),
+            Finding::warning("AR009", "sft/scale", "unparseable"),
+        ]);
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 1);
+        assert!(!r.ok());
+        assert!(r.has("AR005"));
+        assert!(!r.has("CK001"));
+        let j = r.to_json();
+        assert!(!j.bool_of("ok").unwrap());
+        assert_eq!(j.u64_of("errors").unwrap(), 1);
+        assert_eq!(j.arr_of("findings").unwrap().len(), 2);
+        assert_eq!(j.arr_of("findings").unwrap()[0].str_of("rule").unwrap(), "AR005");
+        let text = r.render_text();
+        assert!(text.contains("error[AR005] sft/train_step"));
+        assert!(text.contains("1 error(s), 1 warning(s)"));
+    }
+
+    #[test]
+    fn empty_report_is_ok() {
+        let r = Report::default();
+        assert!(r.ok());
+        assert!(r.to_json().bool_of("ok").unwrap());
+    }
+}

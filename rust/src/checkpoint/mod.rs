@@ -444,6 +444,65 @@ pub fn load_cursor(path: impl AsRef<Path>) -> Result<Option<RunCursor>> {
     Ok(Some(r.cursor_body()?))
 }
 
+/// Structural summary of a checkpoint: tensor names + shapes and moment
+/// shapes, with every payload seeked over instead of materialized.
+/// `revffn check` cross-checks this against a manifest (the same
+/// comparison [`restore_into`] / `restore_opt` make at load time)
+/// without RAM proportional to the weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointSummary {
+    pub step: u64,
+    pub tensors: Vec<(String, Vec<usize>)>,
+    /// `(m shapes, v shapes)` when the file carries Adam moments.
+    pub opt_shapes: Option<(Vec<Vec<usize>>, Vec<Vec<usize>>)>,
+    pub cursor: Option<RunCursor>,
+}
+
+/// Walk a checkpoint's structure (names, shapes, flags) with every
+/// payload skipped. Same hardened bounded reader as [`load`]: corrupt
+/// or truncated files surface as [`Error::Parse`], never as an
+/// oversized allocation.
+pub fn summarize(path: impl AsRef<Path>) -> Result<CheckpointSummary> {
+    let (mut r, v2) = open_reader(path.as_ref())?;
+    let step = r.u64("step")?;
+    let count = r.u32("tensor count")? as usize;
+    r.claim(12 * count as u64, "tensor table")?;
+    let mut tensors = Vec::with_capacity(count);
+    for i in 0..count {
+        let what = format!("tensor {i}");
+        let nlen = r.u32(&what)? as usize;
+        let nb = r.bytes(nlen, &what)?;
+        let name = String::from_utf8(nb)
+            .map_err(|e| Error::Parse(format!("corrupt checkpoint: tensor {i} name: {e}")))?;
+        let (shape, nbytes) = r.tensor_shape(&name)?;
+        r.skip(nbytes, &name)?;
+        tensors.push((name, shape));
+    }
+    if !v2 {
+        return Ok(CheckpointSummary { step, tensors, opt_shapes: None, cursor: None });
+    }
+    let opt_shapes = if r.u8("opt flag")? != 0 {
+        let n_opt = r.u32("opt count")? as usize;
+        r.claim(2 * 8 * n_opt as u64, "opt table")?;
+        let mut sets = [Vec::with_capacity(n_opt), Vec::with_capacity(n_opt)];
+        for (which, set) in sets.iter_mut().enumerate() {
+            let tag = if which == 0 { "m" } else { "v" };
+            for i in 0..n_opt {
+                let what = format!("{tag} moment {i}");
+                let (shape, nbytes) = r.tensor_shape(&what)?;
+                r.skip(nbytes, &what)?;
+                set.push(shape);
+            }
+        }
+        let [m, v] = sets;
+        Some((m, v))
+    } else {
+        None
+    };
+    let cursor = if r.u8("cursor flag")? != 0 { Some(r.cursor_body()?) } else { None };
+    Ok(CheckpointSummary { step, tensors, opt_shapes, cursor })
+}
+
 // -------------------------------------------------------------- restore
 
 /// Restore matching tensors into `params`; returns how many matched.
@@ -601,6 +660,39 @@ mod tests {
         assert_eq!(ck.tensors[0].2, vec![1.0; 8]);
         assert!(ck.opt.is_none(), "RVT1 carries no moments");
         assert!(ck.cursor.is_none(), "RVT1 carries no cursor");
+    }
+
+    #[test]
+    fn summarize_matches_full_load_without_payloads() {
+        let dir = crate::util::ScratchDir::new("cksum").unwrap();
+        let p = dir.join("ck.rvt");
+        let s = store();
+        save_state(&p, &s, 9, Some(&moments()), Some(&cursor())).unwrap();
+        let sm = summarize(&p).unwrap();
+        assert_eq!(sm.step, 9);
+        assert_eq!(
+            sm.tensors,
+            vec![("embed".to_string(), vec![4, 2]), ("norm_f".to_string(), vec![2])]
+        );
+        let (m, v) = sm.opt_shapes.expect("moments present");
+        assert_eq!(m, vec![vec![4, 2], vec![2]]);
+        assert_eq!(v, m);
+        assert_eq!(sm.cursor, Some(cursor()));
+        // RVT1: params only
+        save(&p, &s, 3).unwrap();
+        let sm = summarize(&p).unwrap();
+        assert!(sm.opt_shapes.is_none());
+        assert!(sm.cursor.is_none());
+    }
+
+    #[test]
+    fn summarize_rejects_truncated_file() {
+        let dir = crate::util::ScratchDir::new("cktrunc").unwrap();
+        let p = dir.join("ck.rvt");
+        save_state(&p, &store(), 9, Some(&moments()), Some(&cursor())).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        assert!(matches!(summarize(&p), Err(Error::Parse(_)) | Err(Error::Io(_))));
     }
 
     #[test]

@@ -177,6 +177,24 @@ impl Method {
     pub fn memory_method(self) -> memory::Method {
         self.spec().memory
     }
+
+    /// Program kinds `Stepper::load` requires unconditionally for any
+    /// variant of this method — a manifest missing one of these can
+    /// never train or eval. (`revffn check` AR003 enforces this
+    /// statically; every future method inherits the check through the
+    /// registry.)
+    pub fn required_programs(self) -> &'static [&'static str] {
+        &["train_step", "eval_step", "forward"]
+    }
+
+    /// Program kinds that are optional but must appear as complete
+    /// pairs: `grad_step`/`apply_step` unlock host-side accumulation,
+    /// `accum_step`/`scale` unlock the device-resident accumulator. A
+    /// half-present pair means the artifact set was truncated or
+    /// hand-edited, and the capability would fail at first use.
+    pub fn paired_programs(self) -> &'static [[&'static str; 2]] {
+        &[["grad_step", "apply_step"], ["accum_step", "scale"]]
+    }
 }
 
 impl fmt::Display for Method {

@@ -63,6 +63,7 @@
 //! println!("mmlu-like {:.1}%", scores.mmlu_like);
 //! ```
 
+pub mod analysis;
 pub mod checkpoint;
 pub mod config;
 pub mod coordinator;

@@ -20,6 +20,10 @@
 //!                    (`serve::serve`): N concurrent jobs over one
 //!                    device, admission-controlled by the analytic
 //!                    memory model, streaming NDJSON events over TCP.
+//! * `check`        — device-free static analysis (`analysis` module):
+//!                    artifact/manifest contracts, checkpoint-vs-manifest
+//!                    compatibility, config-vs-budget pricing, and the
+//!                    repo invariant lint. See docs/ANALYSIS.md.
 
 use std::path::PathBuf;
 
@@ -57,6 +61,11 @@ COMMANDS:
                 [--assumptions bf16_mixed|paper|f32]
                 [--price-geometry manifest|qwen] [--run-root DIR]
                 [--config FILE.json]
+  check         [--artifacts DIR] [--checkpoint FILE.rvt] [--method M]
+                [--variant V] [--config FILE.json] [--budget-gb G]
+                [--assumptions A] [--lint] [--src DIR] [--json]
+                (static analysis, no device needed — `check --help`,
+                docs/ANALYSIS.md)
 
 `train --resume` without a file resumes from the newest periodic
 snapshot (ckpt-*.rvt) in --out-dir; periodic snapshots are written
@@ -82,6 +91,7 @@ fn main() -> Result<()> {
         "reconstruct" => cmd_reconstruct(&flags),
         "generate" => cmd_generate(&flags),
         "serve" => cmd_serve(&flags),
+        "check" => cmd_check(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -286,6 +296,93 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         "[serve] NDJSON verbs: submit | status | events | cancel | shutdown (docs/SERVE.md)"
     );
     handle.join().map_err(|e| anyhow!("{e}"))
+}
+
+const CHECK_USAGE: &str = "\
+revffn check — device-free static contract analysis (docs/ANALYSIS.md)
+
+USAGE: revffn check [passes...] [--json]
+
+PASSES (at least one):
+  --artifacts DIR       contract-check every variant in an artifact dir
+                        (AR rules: presence, arity, shapes/dtypes,
+                        donation indices, internal manifest consistency)
+  --checkpoint F.rvt    check a .rvt against a variant's manifest — would
+                        restore_into accept it? (CK rules; needs
+                        --artifacts, picks --method M's eval variant or
+                        an explicit --variant V)
+  --config FILE.json    validate a run/serve config and price it against
+                        the analytic memory model (CF rules;
+                        [--budget-gb G] [--assumptions bf16_mixed|paper|f32]
+                        override/extend what the config declares)
+  --lint                repo invariant lint over Rust sources (LN rules;
+                        [--src DIR] defaults to rust/src or src)
+
+OUTPUT: human text, or --json for
+  {\"ok\", \"errors\", \"warnings\", \"findings\": [{rule, severity, subject, message}]}
+Exit status is nonzero iff any error-severity finding exists.
+";
+
+fn cmd_check(f: &Flags) -> Result<()> {
+    if f.bool("help") {
+        print!("{CHECK_USAGE}");
+        return Ok(());
+    }
+    let mut findings = Vec::new();
+    let mut ran_any = false;
+
+    let artifacts = f.opt("artifacts").map(PathBuf::from);
+    if let Some(dir) = &artifacts {
+        findings.extend(revffn::analysis::check_artifacts(dir));
+        ran_any = true;
+    }
+    if let Some(ck) = f.opt("checkpoint") {
+        let Some(dir) = &artifacts else {
+            bail!("--checkpoint needs --artifacts to know which manifest to check against\n{CHECK_USAGE}");
+        };
+        let variant = match f.opt("variant") {
+            Some(v) => v,
+            None => method_flag(f)?.eval_variant().to_string(),
+        };
+        findings.extend(revffn::analysis::check_checkpoint(
+            &PathBuf::from(ck),
+            &dir.join(variant),
+        ));
+        ran_any = true;
+    }
+    if let Some(cfg) = f.opt("config") {
+        let opts = revffn::analysis::configcheck::ConfigCheckOpts {
+            artifacts: artifacts.clone(),
+            budget_gb: f.opt("budget_gb").map(|s| s.parse::<f64>()).transpose()?,
+            assumptions: f.opt("assumptions"),
+        };
+        findings.extend(revffn::analysis::check_config(&PathBuf::from(cfg), &opts));
+        ran_any = true;
+    }
+    if f.bool("lint") {
+        let src = match f.opt("src") {
+            Some(s) => PathBuf::from(s),
+            // works from the repo root and from rust/
+            None if PathBuf::from("rust/src").is_dir() => PathBuf::from("rust/src"),
+            None => PathBuf::from("src"),
+        };
+        findings.extend(revffn::analysis::lint_sources(&src));
+        ran_any = true;
+    }
+    if !ran_any {
+        bail!("nothing to check — pass at least one of --artifacts / --checkpoint / --config / --lint\n{CHECK_USAGE}");
+    }
+
+    let report = revffn::analysis::Report::new(findings);
+    if f.bool("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.ok() {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn cmd_plan_memory(f: &Flags) -> Result<()> {

@@ -1,0 +1,44 @@
+//! Poisoned-lock policy for the shared [`Board`].
+//!
+//! Every thread in the serve plane — handlers, the event streamer, the
+//! scheduler loop — reads or writes the board through this one helper, so
+//! the crate has exactly one answer to "what happens when the mutex is
+//! poisoned": recover the guard and keep serving. The board holds only
+//! monitoring state (job snapshots, event rings, the admission ledger
+//! mirror); a writer that panicked mid-update can at worst leave a stale
+//! snapshot, which the next `sync_ledger`/`set_state` overwrites. Tearing
+//! down every connection over that would turn a transient panic into a
+//! full control-plane outage.
+//!
+//! Lint rule LN002 (`revffn check --lint`) rejects any other `.lock()`
+//! call site under `serve/`, which keeps this policy single-homed.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use crate::serve::scheduler::Board;
+
+/// Acquire the board, recovering from a poisoned mutex.
+pub fn board(m: &Mutex<Board>) -> MutexGuard<'_, Board> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_after_poison() {
+        let b = Arc::new(Mutex::new(Board::default()));
+        let b2 = b.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = b2.lock().unwrap();
+            panic!("poison the board");
+        })
+        .join();
+        assert!(b.lock().is_err(), "mutex should be poisoned");
+        // the policy helper still hands out a usable guard
+        let g = board(&b);
+        assert!(g.jobs.is_empty());
+    }
+}

@@ -24,6 +24,7 @@
 //! `tests/serve.rs` pins solo-vs-interleaved bit-identity).
 
 pub mod admission;
+pub mod lock;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;

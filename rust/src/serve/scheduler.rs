@@ -28,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::memory::{Assumptions, Geometry};
 use crate::runtime::pjrt::{Device, ProgramCache};
 use crate::serve::admission::{self, Admission};
+use crate::serve::lock;
 use crate::serve::protocol::{self, JobSnapshot, JobState};
 use crate::util::json::Json;
 
@@ -75,6 +76,12 @@ impl Board {
     /// Look a job up by id.
     pub fn job(&self, id: &str) -> Option<&JobView> {
         self.jobs.iter().find(|j| j.snap.id == id)
+    }
+}
+
+impl Default for Board {
+    fn default() -> Self {
+        Board::new(0.0, 0.0)
     }
 }
 
@@ -265,13 +272,14 @@ impl Scheduler {
         if !base.exists() {
             return base;
         }
-        for k in 1.. {
+        let mut k = 1u64;
+        loop {
             let cand = self.opts.run_root.join(format!("{id}-{k}"));
             if !cand.exists() {
                 return cand;
             }
+            k += 1;
         }
-        unreachable!("the candidate loop is unbounded")
     }
 
     /// Submit a fully-formed job config: price it, then admit (FIFO) or
@@ -417,7 +425,7 @@ impl Scheduler {
             state: JobState::Queued,
         });
         {
-            let mut board = self.board.lock().expect("board lock");
+            let mut board = lock::board(&self.board);
             board.jobs.push(JobView {
                 snap: JobSnapshot {
                     id: id.clone(),
@@ -542,7 +550,13 @@ impl Scheduler {
         let Some(idx) = self.active.pop_front() else {
             return Ok(false);
         };
-        let mut run = self.jobs[idx].run.take().expect("running job holds a run");
+        // invariant: an active job holds a run. If it somehow does not,
+        // fail that one job instead of killing the scheduler thread (and
+        // with it every other job on the device).
+        let Some(mut run) = self.jobs[idx].run.take() else {
+            self.finalize(idx, JobState::Failed, Some("scheduler invariant: active job lost its run".into()));
+            return Ok(true);
+        };
         let mut outcome = Quantum::Progress;
         // resume: re-pin this job's state as device buffers for the
         // quantum (no-op when the job is not device-resident)
@@ -580,7 +594,7 @@ impl Scheduler {
             }
             Quantum::Done => match run.finish() {
                 Ok(report) => {
-                    self.board.lock().expect("board lock").jobs[idx].report = Some(report);
+                    lock::board(&self.board).jobs[idx].report = Some(report);
                     self.finalize(idx, JobState::Finished, None);
                 }
                 Err(e) => self.finalize(idx, JobState::Failed, Some(e.to_string())),
@@ -653,7 +667,7 @@ impl Scheduler {
 
     fn set_state(&mut self, idx: usize, state: JobState, error: Option<String>) {
         self.jobs[idx].state = state;
-        let mut board = self.board.lock().expect("board lock");
+        let mut board = lock::board(&self.board);
         board.jobs[idx].snap.state = state;
         if error.is_some() {
             board.jobs[idx].snap.error = error;
@@ -663,7 +677,7 @@ impl Scheduler {
     }
 
     fn sync_ledger(&mut self) {
-        let mut board = self.board.lock().expect("board lock");
+        let mut board = lock::board(&self.board);
         board.committed_gb = self.admission.committed_gb();
         board.host_committed_gb = self.admission.host_committed_gb();
     }
@@ -675,7 +689,7 @@ impl Scheduler {
         job.seq += 1;
         let id = job.id.clone();
         let line = protocol::event_json(&id, seq, ev).to_string();
-        let mut board = self.board.lock().expect("board lock");
+        let mut board = lock::board(&self.board);
         let view = &mut board.jobs[idx];
         view.events.push(line);
         view.snap.events = seq + 1;

@@ -28,6 +28,7 @@ use std::time::Duration;
 use crate::config::ServeConfig;
 use crate::error::{Error, Result};
 use crate::runtime::Device;
+use crate::serve::lock;
 use crate::serve::protocol::{self, Request};
 use crate::serve::scheduler::{Board, Scheduler, SubmitOutcome};
 use crate::util::json::Json;
@@ -288,7 +289,7 @@ fn handle_connection(
             }
             Request::Status { job } => {
                 let resp = {
-                    let b = board.lock().expect("board lock");
+                    let b = lock::board(&board);
                     let rows: Vec<_> = b
                         .jobs
                         .iter()
@@ -377,7 +378,7 @@ fn stream_events(
     let mut cursor = from;
     loop {
         let (batch, state) = {
-            let b = board.lock().expect("board lock");
+            let b = lock::board(board);
             let Some(view) = b.job(job) else {
                 write_line(out, &protocol::error_json("unknown job"))?;
                 return Ok(());
@@ -399,8 +400,13 @@ fn stream_events(
             // drain anything that raced in between the copy and the
             // terminal-state read
             let (tail, state, total) = {
-                let b = board.lock().expect("board lock");
-                let view = b.job(job).expect("job existed above");
+                let b = lock::board(board);
+                // jobs are never removed from the board, but a missing
+                // view must close the stream cleanly, not kill the handler
+                let Some(view) = b.job(job) else {
+                    write_line(out, &protocol::error_json("unknown job"))?;
+                    return Ok(());
+                };
                 let (lines, _start) = view.events.lines_from(cursor);
                 (lines, view.snap.state, view.snap.events)
             };

@@ -147,9 +147,17 @@ impl GetOr for BTreeMap<String, Json> {
 // Parsing
 // ----------------------------------------------------------------------
 
+/// Maximum object/array nesting. The parser recurses once per level, so
+/// unbounded depth lets a hostile document (e.g. `[[[[…`) overflow the
+/// stack of whatever thread is parsing — on the serve plane that is a
+/// connection-handler thread fed straight from the wire. 128 is far past
+/// any manifest or config this repo writes and well inside the default
+/// thread stack.
+pub const MAX_DEPTH: usize = 128;
+
 pub fn parse(text: &str) -> Result<Json> {
     let bytes = text.as_bytes();
-    let mut p = Parser { b: bytes, i: 0 };
+    let mut p = Parser { b: bytes, i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -162,9 +170,25 @@ pub fn parse(text: &str) -> Result<Json> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(Error::Parse(format!(
+                "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                self.i
+            )));
+        }
+        Ok(())
+    }
+
+    fn exit(&mut self) {
+        self.depth -= 1;
+    }
+
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -211,11 +235,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
             self.i += 1;
+            self.exit();
             return Ok(Json::Obj(m));
         }
         loop {
@@ -231,6 +257,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b'}' => {
                     self.i += 1;
+                    self.exit();
                     return Ok(Json::Obj(m));
                 }
                 c => return Err(Error::Parse(format!("expected , or }} found {:?}", c as char))),
@@ -239,11 +266,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
+        self.enter()?;
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek()? == b']' {
             self.i += 1;
+            self.exit();
             return Ok(Json::Arr(v));
         }
         loop {
@@ -254,6 +283,7 @@ impl<'a> Parser<'a> {
                 b',' => self.i += 1,
                 b']' => {
                     self.i += 1;
+                    self.exit();
                     return Ok(Json::Arr(v));
                 }
                 c => return Err(Error::Parse(format!("expected , or ] found {:?}", c as char))),
@@ -513,5 +543,36 @@ mod tests {
             text.push(']');
         }
         assert!(parse(&text).is_ok());
+    }
+
+    fn nested_arrays(depth: usize) -> String {
+        let mut text = String::new();
+        for _ in 0..depth {
+            text.push('[');
+        }
+        text.push('1');
+        for _ in 0..depth {
+            text.push(']');
+        }
+        text
+    }
+
+    #[test]
+    fn nesting_at_depth_limit_parses() {
+        assert!(parse(&nested_arrays(MAX_DEPTH)).is_ok());
+        // mixed object/array nesting also counts levels
+        let mixed = format!("{{\"k\":{}}}", nested_arrays(MAX_DEPTH - 1));
+        assert!(parse(&mixed).is_ok());
+    }
+
+    #[test]
+    fn nesting_beyond_depth_limit_errors() {
+        let err = parse(&nested_arrays(MAX_DEPTH + 1)).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "got: {err}");
+        // far beyond the limit must error, not overflow the stack
+        assert!(parse(&nested_arrays(100_000)).is_err());
+        // siblings at legal depth do not accumulate
+        let wide = format!("[{}, {}]", nested_arrays(MAX_DEPTH - 1), nested_arrays(MAX_DEPTH - 1));
+        assert!(parse(&wide).is_ok());
     }
 }

@@ -1,0 +1,102 @@
+//! `revffn check` end-to-end over the committed seeded-defect fixtures
+//! (`tests/fixtures/check/`): every planted defect must be caught with
+//! its stable rule ID, and the clean fixture must produce zero findings
+//! — the same invariants the CI static job enforces through the CLI.
+
+use std::path::PathBuf;
+
+use revffn::analysis::configcheck::ConfigCheckOpts;
+use revffn::analysis::{check_artifacts, check_checkpoint, check_config, Report};
+
+fn fixture(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/check").join(rel)
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let report = Report::new(check_artifacts(&fixture("clean")));
+    assert!(
+        report.ok() && report.findings.is_empty(),
+        "clean fixture must produce zero findings:\n{}",
+        report.render_text()
+    );
+}
+
+#[test]
+fn missing_pair_half_is_ar003() {
+    // accum_step was removed from the inventory while scale stayed —
+    // grad-accum submissions would fail at first use
+    let report = Report::new(check_artifacts(&fixture("missing_accum")));
+    assert!(report.has("AR003"), "expected AR003:\n{}", report.render_text());
+    assert!(!report.ok());
+    let f = report.findings.iter().find(|f| f.rule == "AR003").unwrap();
+    assert!(f.subject.contains("accum_step"), "wrong subject: {}", f.subject);
+}
+
+#[test]
+fn fabricated_manifest_shape_is_ar007() {
+    // manifest claims embed is [5,2]; the compiled program still takes
+    // f32[4,2] — feeding it manifest-shaped buffers would abort
+    let report = Report::new(check_artifacts(&fixture("bad_shape")));
+    assert!(report.has("AR007"), "expected AR007:\n{}", report.render_text());
+    assert!(!report.has("AR002"), "fixture must be internally consistent");
+}
+
+#[test]
+fn dtype_flip_is_ar007() {
+    // manifest says embed is f16 (nbytes consistent at 2 bytes/elem),
+    // but the program takes f32[4,2]
+    let report = Report::new(check_artifacts(&fixture("dtype_flip")));
+    assert!(report.has("AR007"), "expected AR007:\n{}", report.render_text());
+    assert!(!report.has("AR002"));
+    let f = report.findings.iter().find(|f| f.rule == "AR007").unwrap();
+    assert!(f.message.contains("f16"), "message should name the dtype: {}", f.message);
+}
+
+#[test]
+fn truncated_checkpoint_is_ck001() {
+    let report =
+        Report::new(check_checkpoint(&fixture("truncated.rvt"), &fixture("clean/sft")));
+    assert!(report.has("CK001"), "expected CK001:\n{}", report.render_text());
+}
+
+#[test]
+fn over_budget_serve_config_is_cf002() {
+    let opts = ConfigCheckOpts {
+        artifacts: Some(fixture("clean")),
+        ..Default::default()
+    };
+    let report = Report::new(check_config(&fixture("over_budget_serve.json"), &opts));
+    assert!(report.has("CF002"), "expected CF002:\n{}", report.render_text());
+    assert!(!report.ok());
+}
+
+#[test]
+fn ok_serve_config_passes() {
+    let opts = ConfigCheckOpts {
+        artifacts: Some(fixture("clean")),
+        ..Default::default()
+    };
+    let report = Report::new(check_config(&fixture("serve_ok.json"), &opts));
+    assert!(report.ok(), "serve_ok must exit clean:\n{}", report.render_text());
+}
+
+#[test]
+fn all_rule_ids_are_stable_strings() {
+    // defense against typo'd rule IDs drifting: the catalog in
+    // docs/ANALYSIS.md is the source of truth; anything emitted by the
+    // fixture sweep must be in it
+    let catalog = [
+        "AR001", "AR002", "AR003", "AR004", "AR005", "AR006", "AR007", "AR008", "AR009",
+        "AR010", "CK001", "CK002", "CK003", "CK004", "CF001", "CF002", "CF003", "CF004",
+        "LN000", "LN001", "LN002", "LN003",
+    ];
+    let mut findings = Vec::new();
+    for dir in ["clean", "missing_accum", "bad_shape", "dtype_flip"] {
+        findings.extend(check_artifacts(&fixture(dir)));
+    }
+    findings.extend(check_checkpoint(&fixture("truncated.rvt"), &fixture("clean/sft")));
+    for f in &findings {
+        assert!(catalog.contains(&f.rule), "rule {} not in the documented catalog", f.rule);
+    }
+}

@@ -1,0 +1,154 @@
+//! Wire-protocol robustness: arbitrary and mutated bytes through the
+//! NDJSON request path must never panic, must produce a well-formed
+//! `error_json` reply when rejected, and valid requests must round-trip
+//! exactly. A committed seed corpus (`tests/fixtures/wire_corpus.txt`)
+//! pins the regression cases; the property tests explore around them.
+
+use revffn::serve::protocol::{error_json, Request};
+use revffn::util::json::{self, Json, ObjBuilder};
+use revffn::util::prop::{gen, prop_check};
+use revffn::util::rng::Rng;
+
+/// The invariant every hostile line must satisfy: parsing returns (no
+/// panic — the call itself proves that), and a rejection converts into
+/// an `error_json` reply that is itself valid JSON with `ok:false`.
+fn survives(line: &str) -> bool {
+    match Request::from_line(line) {
+        Ok(req) => {
+            // accepted input must re-serialize and re-parse to itself
+            matches!(Request::from_line(&req.to_line()), Ok(back) if back == req)
+        }
+        Err(e) => {
+            let reply = error_json(&e.to_string()).to_string();
+            match json::parse(&reply) {
+                Ok(j) => matches!(j.bool_of("ok"), Ok(false)) && j.str_of("error").is_ok(),
+                Err(_) => false,
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_cases_never_panic_and_reject_cleanly() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/wire_corpus.txt");
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut cases = 0;
+    for line in text.lines() {
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        cases += 1;
+        assert!(survives(line), "corpus case failed invariant: {line:?}");
+    }
+    assert!(cases >= 25, "corpus unexpectedly small: {cases} cases");
+    // the blank-line case, explicitly (corpus readers skip blank rows)
+    assert!(survives(""));
+    assert!(survives("   \t  "));
+}
+
+#[test]
+fn prop_arbitrary_text_never_panics() {
+    prop_check("wire-arbitrary-text", 300, 23,
+        |rng| gen::string(rng, 120),
+        |s| survives(s));
+}
+
+#[test]
+fn prop_arbitrary_jsonish_never_panics() {
+    // bias toward JSON punctuation so the parser gets past byte 0
+    prop_check("wire-jsonish", 300, 29,
+        |rng| {
+            let n = rng.gen_range(0..100);
+            (0..n)
+                .map(|_| {
+                    let jsonish = b"{}[]\",:0123456789.eE+-truefalsnl ";
+                    jsonish[rng.gen_range(0..jsonish.len())] as char
+                })
+                .collect::<String>()
+        },
+        |s| survives(s));
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    let job = format!("job-{}", rng.gen_range(0..100));
+    match rng.gen_range(0..6) {
+        0 => Request::Submit {
+            config: ObjBuilder::new()
+                .str("method", "revffn")
+                .num("eval_every", rng.gen_range(0..50) as f64)
+                .build(),
+            name: if rng.gen_range(0..2) == 0 { None } else { Some(job) },
+        },
+        1 => Request::Status { job: if rng.gen_range(0..2) == 0 { None } else { Some(job) } },
+        2 => Request::Events {
+            job,
+            from: rng.gen_range(0..10_000) as u64,
+            follow: rng.gen_range(0..2) == 0,
+        },
+        3 => Request::Cancel { job },
+        4 => Request::Resume { job },
+        _ => Request::Shutdown,
+    }
+}
+
+#[test]
+fn prop_valid_requests_roundtrip() {
+    prop_check("wire-roundtrip", 200, 31,
+        |rng| random_request(rng),
+        |req| matches!(Request::from_line(&req.to_line()), Ok(back) if back == *req));
+}
+
+#[test]
+fn prop_mutated_valid_lines_never_panic() {
+    prop_check("wire-mutation", 300, 37,
+        |rng| {
+            let line = random_request(rng).to_line();
+            let mut bytes = line.into_bytes();
+            for _ in 0..rng.gen_range(1..4) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let pos = rng.gen_range(0..bytes.len());
+                match rng.gen_range(0..3) {
+                    0 => bytes[pos] = 0x20 + (rng.gen_range(0..0x5f) as u8),
+                    1 => {
+                        bytes.remove(pos);
+                    }
+                    _ => bytes.insert(pos, b"{}[]\","[rng.gen_range(0..6)]),
+                }
+            }
+            String::from_utf8_lossy(&bytes).into_owned()
+        },
+        |s| survives(s));
+}
+
+#[test]
+fn deep_nesting_is_a_parse_error_not_a_crash() {
+    // a hostile peer can send unbounded `[[[[…` — the codec's recursion
+    // cap (util::json::MAX_DEPTH) must turn that into Error::Parse long
+    // before the handler thread's stack is at risk
+    for n in [200usize, 100_000] {
+        let line = format!("{}{}", "[".repeat(n), "]".repeat(n));
+        let err = Request::from_line(&line).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "unexpected error: {err}");
+        assert!(survives(&line));
+        // same payload smuggled inside an otherwise-valid submit
+        let smuggled = format!(r#"{{"cmd":"submit","config":{{"x":{}{}}}}}"#,
+            "[".repeat(n), "]".repeat(n));
+        assert!(survives(&smuggled));
+    }
+}
+
+#[test]
+fn error_replies_are_single_line_json() {
+    // NDJSON framing: a reply must never contain a raw newline, even
+    // when the rejected input did
+    let e = Request::from_line("{\"cmd\":\n\"nope\"").unwrap_err();
+    let reply = error_json(&e.to_string()).to_string();
+    assert!(!reply.contains('\n'), "reply broke NDJSON framing: {reply:?}");
+    assert!(matches!(json::parse(&reply).unwrap().bool_of("ok"), Ok(false)));
+    // and a rejected-but-parseable line too
+    let j: Json = json::parse("{\"cmd\":\"nope\"}").unwrap();
+    let e = Request::from_json(&j).unwrap_err();
+    assert!(!error_json(&e.to_string()).to_string().contains('\n'));
+}
