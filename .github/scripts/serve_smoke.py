@@ -1,11 +1,19 @@
-"""CI smoke test for the `revffn serve` control plane.
+"""CI smoke tests for the `revffn serve` control plane.
 
-Speaks the NDJSON wire protocol (docs/SERVE.md) over plain sockets:
-submit a longish job, stream a handful of its StepEvents on a second
-connection, cancel it mid-run, confirm the event stream terminates with
-a `done` marker in state `cancelled`, then shut the server down.
+Speaks the NDJSON wire protocol (docs/SERVE.md) over plain sockets.
+Two modes:
 
-Usage: serve_smoke.py HOST PORT
+* default ("cancel"): submit a longish job, stream a handful of its
+  StepEvents on a second connection, cancel it mid-run, confirm the
+  event stream terminates with a `done` marker in state `cancelled`,
+  then shut the server down.
+* "chaos": the server was started with an injected execute fault
+  (REVFFN_FAULTS / --faults, docs/ROBUSTNESS.md). Submit a short
+  snapshotting job, follow its events to the end, and assert the
+  supervisor retried it (status reports attempts >= 1) and it still
+  FINISHED — the fault is absorbed, not surfaced.
+
+Usage: serve_smoke.py HOST PORT [cancel|chaos]
 """
 
 import json
@@ -14,6 +22,7 @@ import sys
 import time
 
 HOST, PORT = sys.argv[1], int(sys.argv[2])
+MODE = sys.argv[3] if len(sys.argv) > 3 else "cancel"
 DEADLINE = time.time() + 120
 
 
@@ -47,55 +56,97 @@ def lines(sock):
                 yield json.loads(line)
 
 
-control = connect()
-control_lines = lines(control)
+def submit(control, control_lines, name, config):
+    send(control, {"cmd": "submit", "name": name, "config": config})
+    resp = next(control_lines)
+    assert resp.get("ok"), f"submit failed: {resp}"
+    assert resp.get("admitted"), f"job not admitted: {resp}"
+    print(f"submitted {resp['job']} (peak {resp['peak_gb']:.4f} GB)")
+    return resp["job"]
 
-send(control, {
-    "cmd": "submit",
-    "name": "smoke",
-    "config": {
+
+def shutdown(control, control_lines):
+    send(control, {"cmd": "shutdown"})
+    resp = next(control_lines)
+    assert resp.get("ok"), f"shutdown failed: {resp}"
+
+
+def cancel_mode(control, control_lines):
+    job = submit(control, control_lines, "smoke", {
         "method": "revffn",
         "eval_every": 0,
         "eval_batches": 1,
         "schedule": {"stage1_steps": 2, "stage2_steps": 200},
         "data": {"pretrain_steps": 0, "n_train": 48, "n_eval": 16},
-    },
-})
-resp = next(control_lines)
-assert resp.get("ok"), f"submit failed: {resp}"
-assert resp.get("admitted"), f"job not admitted: {resp}"
-job = resp["job"]
-print(f"submitted {job} (peak {resp['peak_gb']:.4f} GB)")
+    })
 
-events = connect()
-send(events, {"cmd": "events", "job": job, "from": 0, "follow": True})
-seen_steps = 0
-cancelled = False
-for ev in lines(events):
-    if ev.get("done"):
-        assert cancelled, f"stream ended before cancel: {ev}"
-        assert ev["state"] == "cancelled", f"unexpected terminal state: {ev}"
-        print(f"event stream terminated: {ev}")
-        break
-    if ev.get("type") == "step":
-        seen_steps += 1
-        print(f"  step {ev['step']} loss {ev['loss']:.4f}")
-    if seen_steps >= 3 and not cancelled:
-        send(control, {"cmd": "cancel", "job": job})
-        resp = next(control_lines)
-        assert resp.get("ok") and resp.get("cancelled"), f"cancel failed: {resp}"
-        cancelled = True
-        print("cancelled mid-run")
+    events = connect()
+    send(events, {"cmd": "events", "job": job, "from": 0, "follow": True})
+    seen_steps = 0
+    cancelled = False
+    for ev in lines(events):
+        if ev.get("done"):
+            assert cancelled, f"stream ended before cancel: {ev}"
+            assert ev["state"] == "cancelled", f"unexpected terminal state: {ev}"
+            print(f"event stream terminated: {ev}")
+            break
+        if ev.get("type") == "step":
+            seen_steps += 1
+            print(f"  step {ev['step']} loss {ev['loss']:.4f}")
+        if seen_steps >= 3 and not cancelled:
+            send(control, {"cmd": "cancel", "job": job})
+            resp = next(control_lines)
+            assert resp.get("ok") and resp.get("cancelled"), f"cancel failed: {resp}"
+            cancelled = True
+            print("cancelled mid-run")
+    else:
+        raise SystemExit("event stream closed without a done marker")
+    assert seen_steps >= 3, f"only {seen_steps} steps streamed"
+
+    send(control, {"cmd": "status", "job": job})
+    status = next(control_lines)
+    assert status["jobs"][0]["state"] == "cancelled", f"bad status: {status}"
+    print("status confirms cancellation")
+    shutdown(control, control_lines)
+    print("serve smoke test passed")
+
+
+def chaos_mode(control, control_lines):
+    job = submit(control, control_lines, "chaos", {
+        "method": "revffn",
+        "eval_every": 0,
+        "eval_batches": 1,
+        "checkpoint_every": 2,
+        "schedule": {"stage1_steps": 2, "stage2_steps": 4},
+        "data": {"pretrain_steps": 0, "n_train": 48, "n_eval": 16},
+    })
+
+    events = connect()
+    send(events, {"cmd": "events", "job": job, "from": 0, "follow": True})
+    for ev in lines(events):
+        if ev.get("type") == "step":
+            print(f"  step {ev['step']} loss {ev['loss']:.4f}")
+        if ev.get("done"):
+            assert ev["state"] == "finished", f"fault not absorbed: {ev}"
+            print(f"event stream terminated: {ev}")
+            break
+    else:
+        raise SystemExit("event stream closed without a done marker")
+
+    send(control, {"cmd": "status", "job": job})
+    status = next(control_lines)
+    row = status["jobs"][0]
+    assert row["state"] == "finished", f"bad status: {status}"
+    assert row.get("attempts", 0) >= 1, \
+        f"the injected fault must have forced a supervised retry: {row}"
+    print(f"job retried {row['attempts']} time(s) and finished")
+    shutdown(control, control_lines)
+    print("serve chaos smoke test passed")
+
+
+control = connect()
+control_lines = lines(control)
+if MODE == "chaos":
+    chaos_mode(control, control_lines)
 else:
-    raise SystemExit("event stream closed without a done marker")
-assert seen_steps >= 3, f"only {seen_steps} steps streamed"
-
-send(control, {"cmd": "status", "job": job})
-status = next(control_lines)
-assert status["jobs"][0]["state"] == "cancelled", f"bad status: {status}"
-print("status confirms cancellation")
-
-send(control, {"cmd": "shutdown"})
-resp = next(control_lines)
-assert resp.get("ok"), f"shutdown failed: {resp}"
-print("serve smoke test passed")
+    cancel_mode(control, control_lines)

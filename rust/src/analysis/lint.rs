@@ -13,6 +13,11 @@
 //!   (`with_capacity`, `vec![0; n]`) in `serve/` — the bounded `Reader`
 //!   in `checkpoint/` (claim-before-allocate) is the sanctioned
 //!   pattern for untrusted sizes.
+//! * **LN004** — no raw `thread::sleep` anywhere in `rust/src/**`
+//!   outside `util/retry.rs`: ad-hoc sleeps become unbounded retry
+//!   loops with no jitter and no cap. Waits go through
+//!   `util::retry::Backoff` (retry delays) or `util::retry::pause`
+//!   (the one sanctioned sleep wrapper).
 //!
 //! The scanner strips line/block comments (nested), string literals
 //! (incl. raw and byte strings), and char literals before matching, and
@@ -167,10 +172,8 @@ const LN003_PATTERNS: &[&str] = &["with_capacity(", "vec![0"];
 pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
     let norm = rel.replace('\\', "/");
     let in_serve = norm.starts_with("serve/") || norm.contains("/serve/");
-    if !in_serve {
-        return Vec::new();
-    }
     let is_lock_helper = norm.ends_with("serve/lock.rs") || norm == "serve/lock.rs";
+    let is_backoff_helper = norm.ends_with("util/retry.rs") || norm == "util/retry.rs";
     let stripped = strip(text);
     let mut out = Vec::new();
     for (lineno, line) in stripped.lines().enumerate() {
@@ -178,35 +181,44 @@ pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
             break;
         }
         let subject = format!("{norm}:{}", lineno + 1);
-        for pat in LN001_PATTERNS {
-            if line.contains(pat) {
+        if in_serve {
+            for pat in LN001_PATTERNS {
+                if line.contains(pat) {
+                    out.push(Finding::error(
+                        "LN001",
+                        subject.clone(),
+                        format!(
+                            "panicking {} in serve code — return an error response / job-failure event instead",
+                            pat.trim_start_matches('.')
+                        ),
+                    ));
+                }
+            }
+            if !is_lock_helper && line.contains(".lock()") {
                 out.push(Finding::error(
-                    "LN001",
+                    "LN002",
                     subject.clone(),
-                    format!(
-                        "panicking {} in serve code — return an error response / job-failure event instead",
-                        pat.trim_start_matches('.')
-                    ),
+                    "raw Mutex::lock() on the shared Board — go through serve::lock::board (the single poisoned-lock policy)".to_string(),
                 ));
             }
+            for pat in LN003_PATTERNS {
+                if line.contains(pat) {
+                    out.push(Finding::error(
+                        "LN003",
+                        subject.clone(),
+                        format!(
+                            "allocation via {pat}…) in serve code — sizes here can be wire-derived; use the bounded claim-before-allocate Reader pattern (checkpoint/)"
+                        ),
+                    ));
+                }
+            }
         }
-        if !is_lock_helper && line.contains(".lock()") {
+        if !is_backoff_helper && line.contains("thread::sleep(") {
             out.push(Finding::error(
-                "LN002",
+                "LN004",
                 subject.clone(),
-                "raw Mutex::lock() on the shared Board — go through serve::lock::board (the single poisoned-lock policy)".to_string(),
+                "raw thread::sleep — waits go through util::retry (Backoff::delay for retry delays, retry::pause for sanctioned sleeps)".to_string(),
             ));
-        }
-        for pat in LN003_PATTERNS {
-            if line.contains(pat) {
-                out.push(Finding::error(
-                    "LN003",
-                    subject.clone(),
-                    format!(
-                        "allocation via {pat}…) in serve code — sizes here can be wire-derived; use the bounded claim-before-allocate Reader pattern (checkpoint/)"
-                    ),
-                ));
-            }
         }
     }
     out
@@ -290,6 +302,23 @@ mod tests { fn t() { x.unwrap(); } }\n";
     #[test]
     fn non_serve_files_have_no_serve_rules() {
         assert!(lint_text("util/json.rs", "x.unwrap(); m.lock(); vec![0; n];\n").is_empty());
+    }
+
+    #[test]
+    fn raw_sleep_flagged_everywhere_but_the_backoff_helper() {
+        // serve code
+        let f = lint_text("serve/server.rs", "std::thread::sleep(POLL);\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN004");
+        // LN004 is repo-wide, not serve-only
+        let f = lint_text("coordinator/trainer.rs", "thread::sleep(Duration::from_millis(5));\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN004");
+        // the one sanctioned home of the real sleep
+        assert!(lint_text("util/retry.rs", "std::thread::sleep(d);\n").is_empty());
+        // comments and test blocks stay exempt
+        let src = "// thread::sleep( in prose\n#[cfg(test)]\nmod tests { fn t() { std::thread::sleep(d); } }\n";
+        assert!(lint_text("engine/run.rs", src).is_empty());
     }
 
     #[test]

@@ -49,6 +49,7 @@ use crate::error::{Error, Result};
 use crate::runtime::literal::{cast_f32_le, extend_f32_le};
 use crate::runtime::stepper::Stepper;
 use crate::runtime::store::ParamStore;
+use crate::util::faults::{self, FaultKind, FaultSite};
 
 const MAGIC_V1: &[u8; 4] = b"RVT1";
 const MAGIC_V2: &[u8; 4] = b"RVT2";
@@ -153,6 +154,21 @@ pub fn save_state(
         std::fs::create_dir_all(parent)?;
     }
     let tmp = path.with_extension("rvt.tmp");
+    // Injected checkpoint faults (docs/ROBUSTNESS.md): `error` fails the
+    // write up front, `torn` truncates the payload and skips the fsync
+    // but still renames — fabricating exactly the crash the validating
+    // reader and `latest_valid_checkpoint` exist to catch.
+    let mut torn = false;
+    match faults::hit(FaultSite::CkptWrite) {
+        None => {}
+        Some(FaultKind::Torn) => torn = true,
+        Some(FaultKind::Delay(ms)) => {
+            crate::util::retry::pause(std::time::Duration::from_millis(ms))
+        }
+        Some(FaultKind::Error) => {
+            return Err(Error::Training("injected fault: ckpt_write".into()))
+        }
+    }
     {
         let file = std::fs::File::create(&tmp)?;
         let mut f = std::io::BufWriter::new(file);
@@ -186,8 +202,18 @@ pub fn save_state(
             None => f.write_all(&[0u8])?,
         }
         f.flush()?;
-        f.get_ref().sync_all()?;
+        if !torn {
+            faults::failpoint(FaultSite::CkptFsync)?;
+            f.get_ref().sync_all()?;
+        }
     }
+    if torn {
+        let len = std::fs::metadata(&tmp)?.len();
+        let keep = ((len as f64) * faults::torn_fraction()) as u64;
+        let f = std::fs::OpenOptions::new().write(true).open(&tmp)?;
+        f.set_len(keep.min(len.saturating_sub(1)))?;
+    }
+    faults::failpoint(FaultSite::CkptRename)?;
     std::fs::rename(&tmp, path)?;
     Ok(())
 }

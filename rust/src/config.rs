@@ -396,6 +396,30 @@ pub struct ServeConfig {
     /// `job.json` plus a periodic snapshot) and resubmit them resuming
     /// from their latest checkpoint.
     pub recover: bool,
+    /// Supervised-retry budget: how many times a failed job is retried
+    /// from its latest valid snapshot before quarantine (0 = a failure
+    /// is terminal; docs/ROBUSTNESS.md).
+    pub retry_max_attempts: u32,
+    /// Exponential-backoff base delay between retries, ms.
+    pub retry_base_ms: u64,
+    /// Backoff ceiling, ms.
+    pub retry_max_ms: u64,
+    /// Step watchdog: a job whose single scheduler quantum exceeds this
+    /// wall-clock deadline is marked failed (snapshot preserved, slot
+    /// released, supervised retry applies). 0 = watchdog off.
+    pub quantum_deadline_ms: u64,
+    /// Max concurrent control-plane connections (0 = unbounded);
+    /// connections past the cap get one error line and are dropped.
+    pub conn_limit: usize,
+    /// Socket read/write timeout on accepted connections, ms (0 =
+    /// none). Slow `events` consumers are disconnected — never blocked
+    /// on — when a write stalls past it.
+    pub io_timeout_ms: u64,
+    /// Fault-injection plan for chaos drills (`SITE[@AT[xTIMES]]:KIND`
+    /// clauses; see `util::faults` / docs/ROBUSTNESS.md). `None` in
+    /// production — every hook stays a no-op. The `REVFFN_FAULTS`
+    /// environment variable overrides this.
+    pub faults: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -412,6 +436,13 @@ impl Default for ServeConfig {
             event_log_cap: 4096,
             checkpoint_every: 10,
             recover: true,
+            retry_max_attempts: 3,
+            retry_base_ms: 250,
+            retry_max_ms: 10_000,
+            quantum_deadline_ms: 0,
+            conn_limit: 64,
+            io_timeout_ms: 60_000,
+            faults: None,
         }
     }
 }
@@ -461,12 +492,33 @@ impl ServeConfig {
         if let Some(v) = j.get("recover").and_then(Json::as_bool) {
             cfg.recover = v;
         }
+        if let Some(v) = j.get("retry_max_attempts").and_then(Json::as_u64) {
+            cfg.retry_max_attempts = v as u32;
+        }
+        if let Some(v) = j.get("retry_base_ms").and_then(Json::as_u64) {
+            cfg.retry_base_ms = v;
+        }
+        if let Some(v) = j.get("retry_max_ms").and_then(Json::as_u64) {
+            cfg.retry_max_ms = v;
+        }
+        if let Some(v) = j.get("quantum_deadline_ms").and_then(Json::as_u64) {
+            cfg.quantum_deadline_ms = v;
+        }
+        if let Some(v) = j.get("conn_limit").and_then(Json::as_usize) {
+            cfg.conn_limit = v;
+        }
+        if let Some(v) = j.get("io_timeout_ms").and_then(Json::as_u64) {
+            cfg.io_timeout_ms = v;
+        }
+        if let Some(v) = j.get("faults").and_then(Json::as_str) {
+            cfg.faults = Some(v.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
 
     pub fn to_json(&self) -> Json {
-        ObjBuilder::new()
+        let mut b = ObjBuilder::new()
             .str("addr", self.addr.clone())
             .str("artifacts", self.artifacts.display().to_string())
             .num("budget_gb", self.budget_gb)
@@ -478,7 +530,16 @@ impl ServeConfig {
             .num("event_log_cap", self.event_log_cap as f64)
             .num("checkpoint_every", self.checkpoint_every as f64)
             .bool("recover", self.recover)
-            .build()
+            .num("retry_max_attempts", self.retry_max_attempts as f64)
+            .num("retry_base_ms", self.retry_base_ms as f64)
+            .num("retry_max_ms", self.retry_max_ms as f64)
+            .num("quantum_deadline_ms", self.quantum_deadline_ms as f64)
+            .num("conn_limit", self.conn_limit as f64)
+            .num("io_timeout_ms", self.io_timeout_ms as f64);
+        if let Some(f) = &self.faults {
+            b = b.str("faults", f.clone());
+        }
+        b.build()
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -490,6 +551,13 @@ impl ServeConfig {
         }
         if self.quantum == 0 {
             return Err(Error::Config("quantum must be >= 1".into()));
+        }
+        if self.retry_max_ms < self.retry_base_ms {
+            return Err(Error::Config("retry_max_ms must be >= retry_base_ms".into()));
+        }
+        if let Some(spec) = &self.faults {
+            // surface a bad chaos plan at config time, not mid-drill
+            crate::util::faults::FaultPlan::parse(spec)?;
         }
         self.assumptions()?;
         Ok(())
@@ -637,6 +705,41 @@ mod tests {
         assert!(ServeConfig::from_json_str(r#"{"assumptions": "fp8"}"#).is_err());
         assert!(ServeConfig::from_json_str(r#"{"price_geometry": "llama"}"#).is_err());
         assert!(ServeConfig::from_json_str(r#"{"host_budget_gb": -1}"#).is_err());
+        assert!(
+            ServeConfig::from_json_str(r#"{"retry_base_ms": 500, "retry_max_ms": 100}"#).is_err(),
+            "backoff ceiling below base"
+        );
+        assert!(
+            ServeConfig::from_json_str(r#"{"faults": "warp_core@1:error"}"#).is_err(),
+            "bad fault plans surface at config time"
+        );
+    }
+
+    #[test]
+    fn serve_supervision_knobs_roundtrip_with_defaults() {
+        let c = ServeConfig::from_json_str("{}").unwrap();
+        assert_eq!(c.retry_max_attempts, 3, "supervised retries are on by default");
+        assert_eq!(c.retry_base_ms, 250);
+        assert_eq!(c.retry_max_ms, 10_000);
+        assert_eq!(c.quantum_deadline_ms, 0, "watchdog is opt-in");
+        assert_eq!(c.conn_limit, 64);
+        assert_eq!(c.io_timeout_ms, 60_000);
+        assert!(c.faults.is_none(), "no chaos in production defaults");
+
+        let c = ServeConfig::from_json_str(
+            r#"{"retry_max_attempts": 0, "retry_base_ms": 10, "retry_max_ms": 40,
+                "quantum_deadline_ms": 2000, "conn_limit": 0, "io_timeout_ms": 0,
+                "faults": "pjrt_execute@3:error; ckpt_write@1:torn"}"#,
+        )
+        .unwrap();
+        let back = ServeConfig::from_json_str(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.retry_max_attempts, 0);
+        assert_eq!(back.retry_base_ms, 10);
+        assert_eq!(back.retry_max_ms, 40);
+        assert_eq!(back.quantum_deadline_ms, 2000);
+        assert_eq!(back.conn_limit, 0);
+        assert_eq!(back.io_timeout_ms, 0);
+        assert_eq!(back.faults.as_deref(), Some("pjrt_execute@3:error; ckpt_write@1:torn"));
     }
 
     #[test]

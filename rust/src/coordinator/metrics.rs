@@ -117,10 +117,49 @@ impl Metrics {
 
     /// Write JSON-lines: one object per step + per eval.
     pub fn write_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
+        self.write_jsonl_lines(path.as_ref(), &[])
+    }
+
+    /// Like [`Metrics::write_jsonl`], but first preserves records
+    /// already in the file that this collection does not supersede. A
+    /// resumed run holds only post-resume records in memory and must
+    /// not erase the history its predecessor wrote; steps replayed
+    /// since the snapshot DO supersede their stale file versions. Step
+    /// records are keyed by `(stage, step)`, eval records by `step`
+    /// (an eval line carries no `stage`).
+    pub fn write_jsonl_merged(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let step_keys: std::collections::HashSet<(u64, u64)> =
+            self.steps.iter().map(|s| (s.stage as u64, s.step)).collect();
+        let eval_keys: std::collections::HashSet<u64> =
+            self.evals.iter().map(|e| e.step).collect();
+        let mut kept: Vec<String> = Vec::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in text.lines() {
+                let Ok(j) = crate::util::json::parse(line) else {
+                    continue; // drop an unparsable (e.g. torn) line
+                };
+                let Ok(step) = j.u64_of("step") else { continue };
+                let superseded = match j.get("stage").and_then(crate::util::json::Json::as_u64) {
+                    Some(stage) => step_keys.contains(&(stage, step)),
+                    None => eval_keys.contains(&step),
+                };
+                if !superseded {
+                    kept.push(line.to_string());
+                }
+            }
+        }
+        self.write_jsonl_lines(path, &kept)
+    }
+
+    fn write_jsonl_lines(&self, path: &Path, prefix: &[String]) -> Result<()> {
+        if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::fs::File::create(path)?;
+        for line in prefix {
+            writeln!(f, "{line}")?;
+        }
         for s in &self.steps {
             let j = ObjBuilder::new()
                 .num("step", s.step as f64)
@@ -230,6 +269,58 @@ mod tests {
         }
         assert_eq!(m.loss_delta().unwrap().0, 8.0);
         assert_eq!(m.median_throughput().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn merged_write_preserves_predecessor_history() {
+        let dir = crate::util::ScratchDir::new("metrics-merge").unwrap();
+        let p = dir.join("metrics.jsonl");
+        // the predecessor run wrote steps 0..4 and an eval at 2
+        let mut before = Metrics::new();
+        for i in 0..4 {
+            before.record_step(rec(i, 5.0, 1.0));
+        }
+        before.record_eval(2, 4.5);
+        before.write_jsonl(&p).unwrap();
+        // the resumed run replays from the snapshot at step 2: its
+        // memory holds steps 2..6 (fresher) and an eval at 4
+        let mut after = Metrics::new();
+        for i in 2..6 {
+            after.record_step(rec(i, 3.0, 2.0));
+        }
+        after.record_eval(4, 2.5);
+        after.write_jsonl_merged(&p).unwrap();
+
+        let text = std::fs::read_to_string(&p).unwrap();
+        let parsed: Vec<crate::util::json::Json> =
+            text.lines().map(|l| crate::util::json::parse(l).unwrap()).collect();
+        let steps: Vec<(u64, f64)> = parsed
+            .iter()
+            .filter(|j| j.get("stage").is_some())
+            .map(|j| (j.u64_of("step").unwrap(), j.f64_of("loss").unwrap()))
+            .collect();
+        // pre-snapshot history survives; replayed steps are deduped to
+        // their fresh versions
+        assert_eq!(
+            steps,
+            vec![(0, 5.0), (1, 5.0), (2, 3.0), (3, 3.0), (4, 3.0), (5, 3.0)]
+        );
+        let evals: Vec<(u64, f64)> = parsed
+            .iter()
+            .filter(|j| j.get("eval_loss").is_some())
+            .map(|j| (j.u64_of("step").unwrap(), j.f64_of("eval_loss").unwrap()))
+            .collect();
+        assert_eq!(evals, vec![(2, 4.5), (4, 2.5)]);
+    }
+
+    #[test]
+    fn merged_write_without_existing_file_equals_plain_write() {
+        let dir = crate::util::ScratchDir::new("metrics-merge-fresh").unwrap();
+        let p = dir.join("metrics.jsonl");
+        let mut m = Metrics::new();
+        m.record_step(rec(0, 5.0, 1.0));
+        m.write_jsonl_merged(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 1);
     }
 
     #[test]

@@ -117,6 +117,10 @@ pub struct Run<T: BorrowMut<Trainer>> {
     /// Checkpoint to fast-forward from, staged by [`Run::restore`] and
     /// consumed when its phase opens.
     pending_resume: Option<checkpoint::Checkpoint>,
+    /// Whether this run restored from a checkpoint — `finish` then
+    /// merges `metrics.jsonl` instead of overwriting the predecessor's
+    /// records (the in-memory metrics only cover post-resume steps).
+    resumed: bool,
 }
 
 impl<T: BorrowMut<Trainer>> Run<T> {
@@ -144,6 +148,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             seq: 0,
             steps_total: 0,
             pending_resume: None,
+            resumed: false,
         })
     }
 
@@ -196,6 +201,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         self.seq = cursor.seq;
         self.steps_total = cursor.steps_total;
         self.pending_resume = Some(ckpt);
+        self.resumed = true;
         Ok(())
     }
 
@@ -289,9 +295,12 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             wall_time_s: trainer.metrics.wall_time_s(),
         };
         std::fs::create_dir_all(&trainer.cfg.out_dir)?;
-        trainer
-            .metrics
-            .write_jsonl(trainer.cfg.out_dir.join("metrics.jsonl"))?;
+        let metrics_path = trainer.cfg.out_dir.join("metrics.jsonl");
+        if self.resumed {
+            trainer.metrics.write_jsonl_merged(metrics_path)?;
+        } else {
+            trainer.metrics.write_jsonl(metrics_path)?;
+        }
         if trainer.cfg.save_checkpoint {
             checkpoint::save_stepper(trainer.cfg.out_dir.join("final.rvt"), &mut stepper)?;
         }

@@ -60,7 +60,12 @@ COMMANDS:
                 [--checkpoint-every N] [--no-recover]
                 [--assumptions bf16_mixed|paper|f32]
                 [--price-geometry manifest|qwen] [--run-root DIR]
+                [--retry-max-attempts N] [--retry-base-ms MS]
+                [--retry-max-ms MS] [--quantum-deadline-ms MS]
+                [--conn-limit N] [--io-timeout-ms MS] [--faults SPEC]
                 [--config FILE.json]
+                (supervised retries, watchdog, fault injection:
+                docs/ROBUSTNESS.md; REVFFN_FAULTS overrides --faults)
   check         [--artifacts DIR] [--checkpoint FILE.rvt] [--method M]
                 [--variant V] [--config FILE.json] [--budget-gb G]
                 [--assumptions A] [--lint] [--src DIR] [--json]
@@ -282,6 +287,19 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     if let Some(v) = f.opt("run_root") {
         opts.run_root = v.into();
     }
+    opts.retry_max_attempts = f
+        .u64("retry_max_attempts", u64::from(opts.retry_max_attempts))
+        .map_err(|e| anyhow!("{e}"))? as u32;
+    opts.retry_base_ms = f.u64("retry_base_ms", opts.retry_base_ms).map_err(|e| anyhow!("{e}"))?;
+    opts.retry_max_ms = f.u64("retry_max_ms", opts.retry_max_ms).map_err(|e| anyhow!("{e}"))?;
+    opts.quantum_deadline_ms =
+        f.u64("quantum_deadline_ms", opts.quantum_deadline_ms).map_err(|e| anyhow!("{e}"))?;
+    opts.conn_limit =
+        f.u64("conn_limit", opts.conn_limit as u64).map_err(|e| anyhow!("{e}"))? as usize;
+    opts.io_timeout_ms = f.u64("io_timeout_ms", opts.io_timeout_ms).map_err(|e| anyhow!("{e}"))?;
+    if let Some(v) = f.opt("faults") {
+        opts.faults = Some(v);
+    }
     opts.validate().map_err(|e| anyhow!("{e}"))?;
     let handle = revffn::serve::serve(opts.clone()).map_err(|e| anyhow!("{e}"))?;
     eprintln!(
@@ -293,7 +311,7 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         opts.price_geometry.name()
     );
     eprintln!(
-        "[serve] NDJSON verbs: submit | status | events | cancel | shutdown (docs/SERVE.md)"
+        "[serve] NDJSON verbs: submit | status | events | cancel | resume | shutdown (docs/SERVE.md)"
     );
     handle.join().map_err(|e| anyhow!("{e}"))
 }
@@ -315,8 +333,10 @@ PASSES (at least one):
                         the analytic memory model (CF rules;
                         [--budget-gb G] [--assumptions bf16_mixed|paper|f32]
                         override/extend what the config declares)
-  --lint                repo invariant lint over Rust sources (LN rules;
-                        [--src DIR] defaults to rust/src or src)
+  --lint                repo invariant lint over Rust sources (LN rules,
+                        incl. LN004: no raw thread::sleep outside
+                        util/retry.rs; [--src DIR] defaults to rust/src
+                        or src)
 
 OUTPUT: human text, or --json for
   {\"ok\", \"errors\", \"warnings\", \"findings\": [{rule, severity, subject, message}]}

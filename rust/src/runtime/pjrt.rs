@@ -31,6 +31,7 @@ use xla::{
 };
 
 use crate::error::{Error, Result};
+use crate::util::faults::{self, FaultSite};
 
 /// Host↔device transfer tally (atomic; shared across the device, its
 /// programs, and its device-resident state). Counts *transfers*, not
@@ -111,6 +112,7 @@ impl Device {
 
     /// Stage one literal as a device buffer (counted as one upload).
     pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        faults::failpoint(FaultSite::PjrtTransfer)?;
         self.counters.count_uploads(1);
         Ok(self.client.buffer_from_host_literal(None, lit)?)
     }
@@ -124,6 +126,7 @@ impl Device {
     /// download). Scalars and lazy snapshots go through here so the
     /// transfer tally stays honest.
     pub fn from_device(&self, buf: &PjRtBuffer) -> Result<Literal> {
+        faults::failpoint(FaultSite::PjrtTransfer)?;
         self.counters.count_downloads(1);
         Ok(buf.to_literal_sync()?)
     }
@@ -173,6 +176,7 @@ impl Program {
     /// borrowed literals — cold paths pass `&Literal` state to avoid
     /// copies.
     pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        faults::failpoint(FaultSite::PjrtExecute)?;
         self.counters.count_uploads(inputs.len() as u64);
         let result = self.exe.execute::<L>(inputs)?;
         let bufs = result
@@ -200,6 +204,7 @@ impl Program {
         &self,
         inputs: &[B],
     ) -> Result<Vec<PjRtBuffer>> {
+        faults::failpoint(FaultSite::PjrtExecute)?;
         let result = self.exe.execute_b::<B>(inputs)?;
         let bufs = result
             .into_iter()

@@ -17,7 +17,12 @@
 //! * [`protocol`] — the JSON-lines wire format (`submit` / `status` /
 //!   `events` / `cancel` / `shutdown`), built on the in-crate codec.
 //! * [`server`] — the `std::net` TCP control plane streaming each job's
-//!   `StepEvent`s as NDJSON.
+//!   `StepEvent`s as NDJSON, with per-socket timeouts and a connection
+//!   cap so slow or hostile clients cannot wedge the plane.
+//! * [`supervise`] — supervised recovery (docs/ROBUSTNESS.md): failed
+//!   jobs retry from their latest valid snapshot with exponential
+//!   backoff, a device-health probe gates re-admission, and jobs that
+//!   exhaust the budget quarantine with their failure chain.
 //!
 //! Entry points: `revffn serve` in the CLI, [`server::serve`] in code,
 //! or a bare [`Scheduler`] for in-process multiplexing (how
@@ -28,8 +33,10 @@ pub mod lock;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
+pub mod supervise;
 
 pub use admission::Admission;
 pub use protocol::{JobState, Request};
 pub use scheduler::{Board, EventLog, JobView, Scheduler, SubmitOutcome};
 pub use server::{serve, ServerHandle};
+pub use supervise::{HealthProbe, RetryPolicy, Supervision};

@@ -11,8 +11,9 @@
 //!   `{"job":…,"done":true,…}` terminator (follow=false returns what
 //!   exists and terminates immediately).
 //! * `{"cmd":"cancel","job":"job-0"}` → `{"ok":true,"cancelled":…}`.
-//! * `{"cmd":"resume","job":"job-0"}` → resubmits a failed/cancelled
-//!   job from its latest periodic snapshot as a new job:
+//! * `{"cmd":"resume","job":"job-0"}` → resubmits a
+//!   failed/cancelled/quarantined job from its latest periodic
+//!   snapshot as a new job:
 //!   `{"ok":true,"job":"job-3","resumed_from":"job-0","admitted":…}`.
 //!
 //! Plus `{"cmd":"shutdown"}` to stop the server (tests, smoke scripts).
@@ -36,6 +37,13 @@ pub enum JobState {
     Finished,
     Failed,
     Cancelled,
+    /// Failed, but within the supervised-retry budget: waiting out its
+    /// backoff delay before re-activation from the latest valid
+    /// snapshot (docs/ROBUSTNESS.md).
+    Retrying,
+    /// Exhausted the retry budget; `error` carries the failure chain.
+    /// Terminal for the scheduler, but `resume` accepts it.
+    Quarantined,
 }
 
 impl JobState {
@@ -46,6 +54,8 @@ impl JobState {
             JobState::Finished => "finished",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::Retrying => "retrying",
+            JobState::Quarantined => "quarantined",
         }
     }
 
@@ -56,13 +66,19 @@ impl JobState {
             "finished" => Ok(JobState::Finished),
             "failed" => Ok(JobState::Failed),
             "cancelled" => Ok(JobState::Cancelled),
+            "retrying" => Ok(JobState::Retrying),
+            "quarantined" => Ok(JobState::Quarantined),
             other => Err(Error::Parse(format!("unknown job state {other:?}"))),
         }
     }
 
-    /// No further events will be produced in this state.
+    /// No further events will be produced in this state. `Retrying` is
+    /// NOT terminal — event followers keep waiting across a retry.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Finished | JobState::Failed | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Finished | JobState::Failed | JobState::Cancelled | JobState::Quarantined
+        )
     }
 }
 
@@ -73,7 +89,8 @@ pub enum Request {
     Status { job: Option<String> },
     Events { job: String, from: u64, follow: bool },
     Cancel { job: String },
-    /// Resubmit a failed/cancelled job from its latest checkpoint.
+    /// Resubmit a failed/cancelled/quarantined job from its latest
+    /// checkpoint.
     Resume { job: String },
     Shutdown,
 }
@@ -219,7 +236,12 @@ pub struct JobSnapshot {
     pub eval_loss: Option<f32>,
     /// Events produced so far (the `events` verb's cursor space).
     pub events: u64,
+    /// Last failure — or, once quarantined, the whole failure chain.
     pub error: Option<String>,
+    /// Supervised-retry failures so far (0 = never failed).
+    pub attempts: u64,
+    /// When the next supervised retry is due (`Retrying` only).
+    pub retry_at: Option<std::time::Instant>,
 }
 
 pub fn snapshot_json(s: &JobSnapshot) -> Json {
@@ -232,7 +254,15 @@ pub fn snapshot_json(s: &JobSnapshot) -> Json {
         .num("steps_done", s.steps_done as f64)
         .val("last_loss", s.last_loss.map_or(Json::Null, |x| num_or_null(x as f64)))
         .val("eval_loss", s.eval_loss.map_or(Json::Null, |x| num_or_null(x as f64)))
-        .num("events", s.events as f64);
+        .num("events", s.events as f64)
+        .num("attempts", s.attempts as f64)
+        .val(
+            "next_retry_ms",
+            s.retry_at.map_or(Json::Null, |at| {
+                Json::Num(at.saturating_duration_since(std::time::Instant::now()).as_millis()
+                    as f64)
+            }),
+        );
     if let Some(e) = &s.error {
         b = b.str("error", e.clone());
     }
@@ -410,6 +440,8 @@ mod tests {
             eval_loss: None,
             events: 6,
             error: None,
+            attempts: 0,
+            retry_at: None,
         };
         let st = json::parse(&status_json(&[snap], 8.0, 1.5, 8.0, 0.25).to_string()).unwrap();
         assert!(st.bool_of("ok").unwrap());
@@ -419,6 +451,8 @@ mod tests {
         let jobs = st.arr_of("jobs").unwrap();
         assert_eq!(jobs[0].str_of("state").unwrap(), "running");
         assert_eq!(jobs[0].req("eval_loss").unwrap(), &Json::Null);
+        assert_eq!(jobs[0].u64_of("attempts").unwrap(), 0);
+        assert_eq!(jobs[0].req("next_retry_ms").unwrap(), &Json::Null);
 
         let done = json::parse(&done_json("job-0", JobState::Finished, 6).to_string()).unwrap();
         assert!(done.bool_of("done").unwrap());
@@ -443,10 +477,38 @@ mod tests {
             JobState::Finished,
             JobState::Failed,
             JobState::Cancelled,
+            JobState::Retrying,
+            JobState::Quarantined,
         ] {
             assert_eq!(JobState::parse(s.name()).unwrap(), s);
         }
         assert!(!JobState::Queued.is_terminal());
         assert!(JobState::Cancelled.is_terminal());
+        assert!(!JobState::Retrying.is_terminal(), "followers wait across a retry");
+        assert!(JobState::Quarantined.is_terminal());
+    }
+
+    #[test]
+    fn retrying_snapshot_reports_attempts_and_deadline() {
+        let snap = JobSnapshot {
+            id: "job-1".into(),
+            name: "b".into(),
+            method: "revffn".into(),
+            state: JobState::Retrying,
+            peak_gb: 1.0,
+            steps_done: 9,
+            last_loss: None,
+            eval_loss: None,
+            events: 11,
+            error: Some("injected fault: pjrt_execute".into()),
+            attempts: 2,
+            retry_at: Some(std::time::Instant::now() + std::time::Duration::from_secs(5)),
+        };
+        let j = json::parse(&snapshot_json(&snap).to_string()).unwrap();
+        assert_eq!(j.str_of("state").unwrap(), "retrying");
+        assert_eq!(j.u64_of("attempts").unwrap(), 2);
+        let ms = j.f64_of("next_retry_ms").unwrap();
+        assert!(ms > 0.0 && ms <= 5_000.0, "next_retry_ms {ms}");
+        assert!(j.str_of("error").unwrap().contains("injected"));
     }
 }

@@ -19,6 +19,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::checkpoint;
 use crate::config::{PriceGeometry, RunConfig, ServeConfig};
@@ -30,7 +31,13 @@ use crate::runtime::pjrt::{Device, ProgramCache};
 use crate::serve::admission::{self, Admission};
 use crate::serve::lock;
 use crate::serve::protocol::{self, JobSnapshot, JobState};
+use crate::serve::supervise::{HealthProbe, RetryPolicy, Supervision};
 use crate::util::json::Json;
+use crate::util::retry::{self, Backoff};
+
+/// Nap while a due retry waits on budget or backoff (keeps
+/// `run_until_idle` from busy-spinning between deadlines).
+const RETRY_POLL: Duration = Duration::from_millis(5);
 
 /// Decision returned by [`Scheduler::submit`].
 #[derive(Debug, Clone)]
@@ -184,6 +191,8 @@ struct Job {
     host_gb: f64,
     seq: u64,
     state: JobState,
+    /// Supervised-recovery record: attempts, failure chain, deadline.
+    sup: Supervision,
 }
 
 enum Quantum {
@@ -206,6 +215,12 @@ pub struct Scheduler {
     /// FIFO admission queue (indices into `jobs`).
     waiting: VecDeque<usize>,
     board: Arc<Mutex<Board>>,
+    /// Supervised-retry policy (docs/ROBUSTNESS.md).
+    policy: RetryPolicy,
+    /// Shared backoff jitter stream for retry delays.
+    backoff: Backoff,
+    /// Device-health probe gating supervised re-admission.
+    probe: HealthProbe,
 }
 
 impl Scheduler {
@@ -215,6 +230,8 @@ impl Scheduler {
         let board = Arc::new(Mutex::new(Board::new(opts.budget_gb, opts.host_budget_gb)));
         let host_budget =
             if opts.host_budget_gb > 0.0 { opts.host_budget_gb } else { f64::INFINITY };
+        let policy = RetryPolicy::from_serve(&opts);
+        let backoff = Backoff::new(policy.base_ms, policy.max_ms, 0xb0ff);
         Ok(Scheduler {
             device,
             cache: ProgramCache::new(),
@@ -225,6 +242,9 @@ impl Scheduler {
             active: VecDeque::new(),
             waiting: VecDeque::new(),
             board,
+            policy,
+            backoff,
+            probe: HealthProbe::new(),
         })
     }
 
@@ -302,10 +322,10 @@ impl Scheduler {
             .find(|j| j.id == id)
             .ok_or_else(|| Error::Config(format!("unknown job {id:?}")))?;
         match job.state {
-            JobState::Failed | JobState::Cancelled => {}
+            JobState::Failed | JobState::Cancelled | JobState::Quarantined => {}
             other => {
                 return Err(Error::Config(format!(
-                    "job {id} is {}; only failed or cancelled jobs can resume",
+                    "job {id} is {}; only failed, cancelled, or quarantined jobs can resume",
                     other.name()
                 )))
             }
@@ -423,6 +443,7 @@ impl Scheduler {
             host_gb: priced.host_gb,
             seq: base_seq,
             state: JobState::Queued,
+            sup: Supervision::default(),
         });
         {
             let mut board = lock::board(&self.board);
@@ -438,6 +459,8 @@ impl Scheduler {
                     eval_loss: None,
                     events: base_seq,
                     error: None,
+                    attempts: 0,
+                    retry_at: None,
                 },
                 events: EventLog::with_base(self.opts.event_log_cap, base_seq),
                 report: None,
@@ -477,7 +500,8 @@ impl Scheduler {
         let _ = std::fs::remove_file(self.jobs[idx].cfg.out_dir.join("job.json"));
     }
 
-    /// Cancel a job. `Ok(true)` if it was queued or running, `Ok(false)`
+    /// Cancel a job. `Ok(true)` if it was queued, running, or waiting
+    /// out a supervised retry; `Ok(false)`
     /// if it had already reached a terminal state. A user cancellation
     /// removes the job's recovery marker — it must not resurrect on the
     /// next server start (it stays resumable in-process via the
@@ -492,7 +516,10 @@ impl Scheduler {
     /// from their latest snapshots.
     pub fn cancel_all(&mut self) {
         for idx in 0..self.jobs.len() {
-            if matches!(self.jobs[idx].state, JobState::Queued | JobState::Running) {
+            if matches!(
+                self.jobs[idx].state,
+                JobState::Queued | JobState::Running | JobState::Retrying
+            ) {
                 let id = self.jobs[idx].id.clone();
                 let _ = self.cancel_impl(&id, true);
             }
@@ -527,6 +554,16 @@ impl Scheduler {
                 self.drain_waiting();
                 Ok(true)
             }
+            JobState::Retrying => {
+                // no reservation is held while a retry waits out its
+                // backoff, so there is nothing to release or drain
+                self.jobs[idx].sup.retry_at = None;
+                self.set_state(idx, JobState::Cancelled, None);
+                if !keep_marker {
+                    self.remove_job_file(idx);
+                }
+                Ok(true)
+            }
             _ => Ok(false),
         }
     }
@@ -542,21 +579,31 @@ impl Scheduler {
     }
 
     /// Drive one quantum of the next active job. Returns `false` when
-    /// there is nothing to run (idle).
+    /// there is nothing to run (idle) — including no supervised retry
+    /// waiting out its backoff.
     pub fn tick(&mut self) -> Result<bool> {
+        let retry_wait = self.poll_retries();
         if self.active.is_empty() {
             self.drain_waiting();
         }
         let Some(idx) = self.active.pop_front() else {
+            if let Some(d) = retry_wait {
+                // a retry deadline is pending and the device is
+                // otherwise idle: nap toward it so run_until_idle keeps
+                // driving without busy-spinning
+                retry::pause(d.min(RETRY_POLL));
+                return Ok(true);
+            }
             return Ok(false);
         };
         // invariant: an active job holds a run. If it somehow does not,
         // fail that one job instead of killing the scheduler thread (and
         // with it every other job on the device).
         let Some(mut run) = self.jobs[idx].run.take() else {
-            self.finalize(idx, JobState::Failed, Some("scheduler invariant: active job lost its run".into()));
+            self.fail_admitted(idx, "scheduler invariant: active job lost its run".into());
             return Ok(true);
         };
+        let quantum_start = Instant::now();
         let mut outcome = Quantum::Progress;
         // resume: re-pin this job's state as device buffers for the
         // quantum (no-op when the job is not device-resident)
@@ -579,13 +626,33 @@ impl Scheduler {
         }
         match outcome {
             Quantum::Progress => {
+                // step watchdog: a quantum that blew through the
+                // deadline means the job is wedged or starving its
+                // peers — fail it (snapshots stay on disk) and release
+                // the slot instead of letting it hold the device
+                let deadline = self.opts.quantum_deadline_ms;
+                if deadline > 0 {
+                    let elapsed = quantum_start.elapsed();
+                    if elapsed > Duration::from_millis(deadline) {
+                        drop(run);
+                        self.fail_admitted(
+                            idx,
+                            format!(
+                                "watchdog: quantum ran {}ms against a {}ms deadline",
+                                elapsed.as_millis(),
+                                deadline
+                            ),
+                        );
+                        return Ok(true);
+                    }
+                }
                 // preempt: hand the device to the next job. When this
                 // is the only active job, skip the suspend/resume churn
                 // — state handoff is lossless either way.
                 if !self.active.is_empty() {
                     if let Err(e) = run.suspend() {
                         drop(run);
-                        self.finalize(idx, JobState::Failed, Some(format!("suspend: {e}")));
+                        self.fail_admitted(idx, format!("suspend: {e}"));
                         return Ok(true);
                     }
                 }
@@ -597,11 +664,11 @@ impl Scheduler {
                     lock::board(&self.board).jobs[idx].report = Some(report);
                     self.finalize(idx, JobState::Finished, None);
                 }
-                Err(e) => self.finalize(idx, JobState::Failed, Some(e.to_string())),
+                Err(e) => self.fail_admitted(idx, e.to_string()),
             },
             Quantum::Failed(msg) => {
                 drop(run);
-                self.finalize(idx, JobState::Failed, Some(msg));
+                self.fail_admitted(idx, msg);
             }
         }
         Ok(true)
@@ -619,15 +686,20 @@ impl Scheduler {
     fn activate(&mut self, idx: usize) {
         let cfg = self.jobs[idx].cfg.clone();
         let resume_from = self.jobs[idx].resume_from.take();
-        let built = Trainer::with_cache(&self.device, self.cache.clone(), cfg)
-            .and_then(Trainer::into_run)
-            .and_then(|mut run| {
-                if let Some(path) = &resume_from {
-                    let ckpt = checkpoint::load(path)?;
-                    run.restore(ckpt)?;
-                }
-                Ok(run)
-            });
+        let mut built = self.build_run(cfg.clone(), resume_from.as_deref());
+        // graceful degradation: an allocation-shaped failure at
+        // admission time gets one more chance after the newest running
+        // job parks its device buffers as host literals (it re-pins
+        // lazily at its next quantum)
+        if matches!(built, Err(Error::Xla(_)) | Err(Error::Layout(_))) {
+            if let Some(victim) = self.suspend_newest_active() {
+                eprintln!(
+                    "[serve] activation of {} retried after suspending {victim} to host",
+                    self.jobs[idx].id
+                );
+                built = self.build_run(cfg, resume_from.as_deref());
+            }
+        }
         match built {
             Ok(run) => {
                 self.jobs[idx].run = Some(run);
@@ -636,15 +708,114 @@ impl Scheduler {
             }
             Err(e) => {
                 self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
-                self.set_state(idx, JobState::Failed, Some(e.to_string()));
+                self.supervise_failure(idx, e.to_string());
             }
         }
     }
 
+    /// Build (and optionally restore) the `Run` for one job config.
+    fn build_run(
+        &self,
+        cfg: RunConfig,
+        resume_from: Option<&std::path::Path>,
+    ) -> Result<Run<Trainer>> {
+        let mut run =
+            Trainer::with_cache(&self.device, self.cache.clone(), cfg).and_then(Trainer::into_run)?;
+        if let Some(path) = resume_from {
+            let ckpt = checkpoint::load(path)?;
+            run.restore(ckpt)?;
+        }
+        Ok(run)
+    }
+
+    /// Suspend the most recently admitted active job to host literals,
+    /// releasing its pinned device buffers. Returns its id when one was
+    /// actually suspended.
+    fn suspend_newest_active(&mut self) -> Option<String> {
+        let &victim = self.active.iter().max()?;
+        let run = self.jobs[victim].run.as_mut()?;
+        match run.suspend() {
+            Ok(()) => Some(self.jobs[victim].id.clone()),
+            Err(_) => None,
+        }
+    }
+
+    /// Failure funnel for an admitted job (reservation held): release
+    /// the reservation, route through supervision, then admit whoever
+    /// now fits (FIFO).
+    fn fail_admitted(&mut self, idx: usize, msg: String) {
+        self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+        self.supervise_failure(idx, msg);
+        self.drain_waiting();
+    }
+
+    /// Record a failure on a job whose reservation is already released:
+    /// schedule a supervised retry with exponential backoff, or — with
+    /// supervision off / the attempt budget spent — mark it `Failed` /
+    /// `Quarantined`. The recovery marker stays in all three outcomes:
+    /// each leaves snapshots worth bringing back (a server restart also
+    /// resets the retry budget this way).
+    fn supervise_failure(&mut self, idx: usize, msg: String) {
+        self.jobs[idx].run = None;
+        self.jobs[idx].sup.record(msg.clone());
+        if !self.policy.enabled() {
+            self.set_state(idx, JobState::Failed, Some(msg));
+        } else if self.jobs[idx].sup.attempts <= self.policy.max_attempts {
+            let delay = self.backoff.delay(self.jobs[idx].sup.attempts);
+            self.jobs[idx].sup.retry_at = Some(Instant::now() + delay);
+            self.set_state(idx, JobState::Retrying, Some(msg));
+        } else {
+            self.jobs[idx].sup.retry_at = None;
+            let chain = self.jobs[idx].sup.chain();
+            self.set_state(idx, JobState::Quarantined, Some(chain));
+        }
+    }
+
+    /// Re-activate supervised retries whose backoff deadline has
+    /// passed: device-health probe first (a probe failure consumes an
+    /// attempt — a dead device quarantines its jobs instead of spinning
+    /// forever), then re-admission against the budget, then activation
+    /// from the latest valid snapshot (none ⇒ a deterministic restart
+    /// from scratch). Returns the shortest wait until a pending retry
+    /// is due, if any job is still `Retrying`.
+    fn poll_retries(&mut self) -> Option<Duration> {
+        let now = Instant::now();
+        let mut wait: Option<Duration> = None;
+        for idx in 0..self.jobs.len() {
+            if self.jobs[idx].state != JobState::Retrying {
+                continue;
+            }
+            if let Some(at) = self.jobs[idx].sup.retry_at {
+                if at > now {
+                    let d = at - now;
+                    wait = Some(wait.map_or(d, |w| w.min(d)));
+                    continue;
+                }
+            }
+            if let Err(e) = self.probe.check(&self.device) {
+                self.supervise_failure(idx, format!("device health probe: {e}"));
+                continue;
+            }
+            if !self.admission.try_admit(self.jobs[idx].peak_gb, self.jobs[idx].host_gb) {
+                // budget busy: hold the retry (no attempt consumed) and
+                // check again next tick
+                wait = Some(wait.map_or(RETRY_POLL, |w| w.min(RETRY_POLL)));
+                continue;
+            }
+            self.jobs[idx].sup.retry_at = None;
+            self.jobs[idx].resume_from =
+                checkpoint::latest_valid_checkpoint(&self.jobs[idx].cfg.out_dir);
+            self.activate(idx);
+        }
+        self.sync_ledger();
+        wait
+    }
+
     /// Terminal transition of an admitted job: record state, return its
-    /// reservation, and admit whoever now fits (FIFO). The recovery
-    /// marker survives only a `Failed` exit — that is the one state
-    /// with something left to bring back.
+    /// reservation, and admit whoever now fits (FIFO). Failures no
+    /// longer come through here (see [`Scheduler::fail_admitted`]), but
+    /// the marker rule stays general: it survives any exit with
+    /// something left to bring back.
     fn finalize(&mut self, idx: usize, state: JobState, error: Option<String>) {
         self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
         self.set_state(idx, state, error);
@@ -668,9 +839,18 @@ impl Scheduler {
     fn set_state(&mut self, idx: usize, state: JobState, error: Option<String>) {
         self.jobs[idx].state = state;
         let mut board = lock::board(&self.board);
-        board.jobs[idx].snap.state = state;
+        let snap = &mut board.jobs[idx].snap;
+        snap.state = state;
+        snap.attempts = u64::from(self.jobs[idx].sup.attempts);
+        snap.retry_at =
+            if state == JobState::Retrying { self.jobs[idx].sup.retry_at } else { None };
         if error.is_some() {
-            board.jobs[idx].snap.error = error;
+            snap.error = error;
+        } else if state == JobState::Running {
+            // a (re)activation clears the previous failure message —
+            // `status` reports the current state, the failure chain is
+            // preserved in the supervision record
+            snap.error = None;
         }
         board.committed_gb = self.admission.committed_gb();
         board.host_committed_gb = self.admission.host_committed_gb();

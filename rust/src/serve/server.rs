@@ -16,10 +16,16 @@
 //!
 //! Handlers never touch the device; everything they read comes off the
 //! board, everything they change goes through the control channel.
+//!
+//! Degradation posture (docs/ROBUSTNESS.md): sockets carry read/write
+//! timeouts and the accept loop enforces a connection cap, so a slow or
+//! hostile client times out or is turned away at the door instead of
+//! pinning a handler thread forever; an `events` follower that stops
+//! draining is disconnected when its writes time out.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -31,11 +37,29 @@ use crate::runtime::Device;
 use crate::serve::lock;
 use crate::serve::protocol::{self, Request};
 use crate::serve::scheduler::{Board, Scheduler, SubmitOutcome};
+use crate::util::faults::{self, FaultSite};
 use crate::util::json::Json;
+use crate::util::retry;
 
 /// How long the scheduler parks on the control channel when idle, and
 /// how often event followers re-poll the board.
 const POLL: Duration = Duration::from_millis(25);
+
+/// `true` for the error kinds a timed-out socket read/write produces
+/// (`WouldBlock` on unix, `TimedOut` on windows).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// RAII slot in the connection cap: decrements on drop, however the
+/// handler thread exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// Control messages from handler threads to the scheduler thread.
 enum Control {
@@ -48,7 +72,8 @@ enum Control {
         job: String,
         reply: Sender<std::result::Result<bool, String>>,
     },
-    /// Resubmit a failed/cancelled job from its latest snapshot.
+    /// Resubmit a failed/cancelled/quarantined job from its latest
+    /// snapshot.
     Resume {
         job: String,
         reply: Sender<std::result::Result<SubmitOutcome, String>>,
@@ -97,6 +122,11 @@ impl ServerHandle {
 /// Bind the control plane and start serving. Returns once the listener
 /// is bound; scheduling runs on background threads until `shutdown`.
 pub fn serve(opts: ServeConfig) -> Result<ServerHandle> {
+    // fault injection arms here, once, before any thread can hit a
+    // failpoint (REVFFN_FAULTS overrides the config plan)
+    if faults::install_from(opts.faults.as_deref())? {
+        eprintln!("[serve] fault injection armed");
+    }
     let listener = TcpListener::bind(&opts.addr).map_err(|e| {
         Error::Io(std::io::Error::new(e.kind(), format!("bind {}: {e}", opts.addr)))
     })?;
@@ -121,9 +151,11 @@ pub fn serve(opts: ServeConfig) -> Result<ServerHandle> {
     let accept_board = board.clone();
     let accept_ctl = ctl_tx.clone();
     let accept_shutdown = shutdown.clone();
-    let accept_thread = std::thread::Builder::new()
-        .name("serve-accept".into())
-        .spawn(move || accept_loop(listener, accept_ctl, accept_board, accept_shutdown))?;
+    let conn_limit = opts.conn_limit;
+    let io_timeout = (opts.io_timeout_ms > 0).then(|| Duration::from_millis(opts.io_timeout_ms));
+    let accept_thread = std::thread::Builder::new().name("serve-accept".into()).spawn(move || {
+        accept_loop(listener, accept_ctl, accept_board, accept_shutdown, conn_limit, io_timeout)
+    })?;
 
     Ok(ServerHandle {
         addr,
@@ -219,34 +251,56 @@ fn accept_loop(
     ctl: Sender<Control>,
     board: Arc<Mutex<Board>>,
     shutdown: Arc<AtomicBool>,
+    conn_limit: usize,
+    io_timeout: Option<Duration>,
 ) {
+    let conns = Arc::new(AtomicUsize::new(0));
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
+                // socket deadlines: a peer that stops reading or
+                // writing gets a timeout error on the handler thread,
+                // not a thread wedged forever
+                let _ = stream.set_read_timeout(io_timeout);
+                let _ = stream.set_write_timeout(io_timeout);
+                // connection cap: refuse with a parseable error line
+                // rather than accumulating handler threads without
+                // bound (0 = uncapped)
+                if conn_limit > 0 && conns.fetch_add(1, Ordering::SeqCst) >= conn_limit {
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                    let _ = write_line(
+                        &mut stream,
+                        &protocol::error_json("server at connection capacity"),
+                    );
+                    continue;
+                }
+                let guard = ConnGuard(conns.clone());
                 let ctl = ctl.clone();
                 let board = board.clone();
                 let shutdown = shutdown.clone();
                 let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
+                    let _guard = guard;
                     if let Err(e) = handle_connection(stream, ctl, board, shutdown) {
                         eprintln!("[serve] connection: {e}");
                     }
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(POLL);
+                retry::pause(POLL);
             }
             Err(e) => {
                 eprintln!("[serve] accept: {e}");
-                std::thread::sleep(POLL);
+                retry::pause(POLL);
             }
         }
     }
 }
 
 fn write_line(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    faults::io_failpoint(FaultSite::WireWrite)?;
     let mut line = j.to_string();
     line.push('\n');
     stream.write_all(line.as_bytes())?;
@@ -262,7 +316,14 @@ fn handle_connection(
     let reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            // an idle or wedged client hit the socket deadline: close
+            // this connection quietly, the server is fine
+            Err(e) if is_timeout(&e) => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        faults::io_failpoint(FaultSite::WireRead)?;
         if line.trim().is_empty() {
             continue;
         }
@@ -387,12 +448,15 @@ fn stream_events(
             cursor = start;
             (lines, view.snap.state)
         };
-        for line in &batch {
-            out.write_all(line.as_bytes())?;
-            out.write_all(b"\n")?;
-        }
-        if !batch.is_empty() {
-            out.flush()?;
+        if let Err(e) = push_lines(out, &batch) {
+            // a follower that stopped draining hit the write deadline:
+            // disconnect it rather than let it pin the handler (and the
+            // board lock cadence) indefinitely
+            if is_timeout(&e) {
+                eprintln!("[serve] events: disconnected slow consumer of {job}");
+                return Ok(());
+            }
+            return Err(e.into());
         }
         cursor += batch.len() as u64;
         let stop = state.is_terminal() || !follow || shutdown.load(Ordering::SeqCst);
@@ -410,13 +474,29 @@ fn stream_events(
                 let (lines, _start) = view.events.lines_from(cursor);
                 (lines, view.snap.state, view.snap.events)
             };
-            for line in &tail {
-                out.write_all(line.as_bytes())?;
-                out.write_all(b"\n")?;
+            let done = push_lines(out, &tail)
+                .and_then(|()| write_line(out, &protocol::done_json(job, state, total)));
+            if let Err(e) = done {
+                if is_timeout(&e) {
+                    eprintln!("[serve] events: disconnected slow consumer of {job}");
+                    return Ok(());
+                }
+                return Err(e.into());
             }
-            write_line(out, &protocol::done_json(job, state, total))?;
             return Ok(());
         }
-        std::thread::sleep(POLL);
+        retry::pause(POLL);
     }
+}
+
+/// Write a batch of NDJSON lines and flush (no-op on an empty batch).
+fn push_lines(out: &mut TcpStream, lines: &[String]) -> std::io::Result<()> {
+    for line in lines {
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    if !lines.is_empty() {
+        out.flush()?;
+    }
+    Ok(())
 }

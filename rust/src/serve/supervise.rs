@@ -1,0 +1,187 @@
+//! Supervised recovery for serve jobs (docs/ROBUSTNESS.md).
+//!
+//! Three pieces the scheduler composes:
+//!
+//! * [`RetryPolicy`] — the config knobs: how many supervised retries a
+//!   failed job gets and the exponential-backoff window between them
+//!   (delays come from [`crate::util::retry::Backoff`]).
+//! * [`Supervision`] — the per-job record: attempt count, the failure
+//!   chain (one entry per failure, surfaced verbatim in `status` once
+//!   the job quarantines), and the next-retry deadline.
+//! * [`HealthProbe`] — a cheap compiled-program execute that gates
+//!   re-admission after a failure: a device that cannot add two
+//!   four-element vectors must not get the job back. When the probe
+//!   module cannot compile (exotic PJRT plugin), it degrades to a
+//!   host↔device literal roundtrip rather than going blind.
+
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::runtime::literal::{f32_literal, to_f32_vec};
+use crate::runtime::pjrt::{Device, Program};
+
+/// Supervised-retry knobs, lifted from [`ServeConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries a failed job gets before quarantine (0 = supervision
+    /// off: the first failure is terminal, pre-supervision behavior).
+    pub max_attempts: u32,
+    /// Backoff base delay, milliseconds (0 = retry immediately).
+    pub base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub max_ms: u64,
+}
+
+impl RetryPolicy {
+    pub fn from_serve(opts: &ServeConfig) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: opts.retry_max_attempts,
+            base_ms: opts.retry_base_ms,
+            max_ms: opts.retry_max_ms,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+}
+
+/// Per-job supervision record.
+#[derive(Debug, Clone, Default)]
+pub struct Supervision {
+    /// Failures so far (== `failures.len()`).
+    pub attempts: u32,
+    /// Failure chain, oldest first.
+    pub failures: Vec<String>,
+    /// When the pending retry is due (`Retrying` state only).
+    pub retry_at: Option<Instant>,
+}
+
+impl Supervision {
+    /// Record one failure.
+    pub fn record(&mut self, msg: String) {
+        self.attempts += 1;
+        self.failures.push(msg);
+    }
+
+    /// The failure chain as one string for `status` / quarantine.
+    pub fn chain(&self) -> String {
+        let mut out = String::new();
+        for (i, f) in self.failures.iter().enumerate() {
+            if i > 0 {
+                out.push_str("; ");
+            }
+            out.push_str("attempt ");
+            out.push_str(&(i + 1).to_string());
+            out.push_str(": ");
+            out.push_str(f);
+        }
+        out
+    }
+}
+
+/// Minimal HLO module the probe compiles once per scheduler: doubles a
+/// four-element vector. Executing it exercises the same
+/// compile→execute→download path training steps take, at trivial cost.
+const PROBE_HLO: &str = "HloModule health_probe, \
+entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY %main.1 (Arg_0.1: f32[4]) -> f32[4] {
+  %Arg_0.1 = f32[4]{0} parameter(0)
+  ROOT %add.2 = f32[4]{0} add(%Arg_0.1, %Arg_0.1)
+}
+";
+
+const PROBE_IN: [f32; 4] = [1.0, 2.0, 3.0, 4.0];
+
+/// Device-health probe gating supervised re-admission.
+#[derive(Default)]
+pub struct HealthProbe {
+    program: Option<Program>,
+    compile_failed: bool,
+}
+
+impl HealthProbe {
+    pub fn new() -> HealthProbe {
+        HealthProbe::default()
+    }
+
+    /// Execute the probe; `Ok(())` means the device computes correctly.
+    /// An injected or real execute fault surfaces as `Err`, which the
+    /// scheduler counts against the job's retry budget — a dead device
+    /// quarantines its jobs instead of spinning forever.
+    pub fn check(&mut self, device: &Device) -> Result<()> {
+        if self.program.is_none() && !self.compile_failed {
+            match compile_probe(device) {
+                Ok(p) => self.program = Some(p),
+                Err(_) => self.compile_failed = true,
+            }
+        }
+        match &self.program {
+            Some(p) => {
+                let input = f32_literal(&PROBE_IN, &[4])?;
+                let out = p.run(&[input])?;
+                let first = out
+                    .first()
+                    .ok_or_else(|| Error::Training("health probe produced no output".into()))?;
+                let got = to_f32_vec(first)?;
+                if got.len() == 4 && got.iter().zip([2.0f32, 4.0, 6.0, 8.0]).all(|(a, b)| *a == b)
+                {
+                    Ok(())
+                } else {
+                    Err(Error::Training(format!(
+                        "health probe computed {got:?}, expected [2, 4, 6, 8]"
+                    )))
+                }
+            }
+            // Probe module unavailable: a literal roundtrip still
+            // proves transfers work, which beats passing blind.
+            None => {
+                let lit = f32_literal(&PROBE_IN, &[4])?;
+                let buf = device.to_device(&lit)?;
+                let back = to_f32_vec(&device.from_device(&buf)?)?;
+                if back == PROBE_IN {
+                    Ok(())
+                } else {
+                    Err(Error::Training(format!(
+                        "health probe roundtrip returned {back:?}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// `load_hlo_text` compiles from a file path, so the probe module goes
+/// through a scratch file (removed immediately after compile).
+fn compile_probe(device: &Device) -> Result<Program> {
+    let path = std::env::temp_dir().join(format!("revffn-probe-{}.hlo.txt", std::process::id()));
+    std::fs::write(&path, PROBE_HLO)?;
+    let prog = device.load_hlo_text(&path);
+    let _ = std::fs::remove_file(&path);
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_formats_attempts_in_order() {
+        let mut s = Supervision::default();
+        assert_eq!(s.chain(), "");
+        s.record("execute exploded".into());
+        s.record("probe said no".into());
+        assert_eq!(s.attempts, 2);
+        assert_eq!(s.chain(), "attempt 1: execute exploded; attempt 2: probe said no");
+    }
+
+    #[test]
+    fn policy_enabled_iff_attempts_budgeted() {
+        let on = RetryPolicy { max_attempts: 3, base_ms: 250, max_ms: 10_000 };
+        let off = RetryPolicy { max_attempts: 0, base_ms: 250, max_ms: 10_000 };
+        assert!(on.enabled());
+        assert!(!off.enabled());
+    }
+}

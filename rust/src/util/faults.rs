@@ -1,0 +1,456 @@
+//! Deterministic fault injection (chaos harness) for the serve and
+//! training hot paths.
+//!
+//! A [`FaultPlan`] arms a set of [`FaultSpec`]s against named
+//! [`FaultSite`]s — the real failure surfaces threaded through the
+//! tree: `runtime/pjrt.rs` (program execute + host transfer),
+//! `checkpoint` (snapshot write / fsync / rename, including torn
+//! writes), and the serve wire layer (socket read / write). Each site
+//! calls [`hit`] (usually via [`failpoint`] / [`io_failpoint`]) on its
+//! hot path; with no plan installed that is a single relaxed atomic
+//! load, so production pays nothing.
+//!
+//! Plans are compact strings, taken from the serve config `faults` key
+//! or the `REVFFN_FAULTS` environment variable (the env var wins):
+//!
+//! ```text
+//! pjrt_execute@3:error             # the 3rd execute call fails
+//! ckpt_write@1:torn                # the first snapshot write is torn
+//! wire_read@2x0:delay=50           # every read from the 2nd on stalls 50ms
+//! seed=7;pjrt_execute@5:error      # seed the tear/jitter RNG
+//! ```
+//!
+//! Clauses are `;`- or `,`-separated: `SITE[@AT[xTIMES]]:KIND`, where
+//! `AT` is the 1-based hit index at which the fault starts firing
+//! (default 1) and `TIMES` is how many consecutive hits fire (default
+//! 1; `0` = every hit from `AT` on). `KIND` is `error`, `torn`, or
+//! `delay=MILLIS`. See docs/ROBUSTNESS.md for the full catalog.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::retry;
+use crate::util::Rng;
+
+/// An injection point threaded through a real failure surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// PJRT program execution (`Program::run` / `Program::run_buffers`).
+    PjrtExecute,
+    /// Host<->device literal transfer (`Device::to_device` / `from_device`).
+    PjrtTransfer,
+    /// Checkpoint payload write (supports `torn`).
+    CkptWrite,
+    /// Checkpoint fsync before the atomic rename.
+    CkptFsync,
+    /// Checkpoint tmp -> final rename.
+    CkptRename,
+    /// Serve control-plane socket read (one NDJSON request line).
+    WireRead,
+    /// Serve control-plane socket write (one NDJSON reply/event line).
+    WireWrite,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::PjrtExecute,
+        FaultSite::PjrtTransfer,
+        FaultSite::CkptWrite,
+        FaultSite::CkptFsync,
+        FaultSite::CkptRename,
+        FaultSite::WireRead,
+        FaultSite::WireWrite,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::PjrtExecute => "pjrt_execute",
+            FaultSite::PjrtTransfer => "pjrt_transfer",
+            FaultSite::CkptWrite => "ckpt_write",
+            FaultSite::CkptFsync => "ckpt_fsync",
+            FaultSite::CkptRename => "ckpt_rename",
+            FaultSite::WireRead => "wire_read",
+            FaultSite::WireWrite => "wire_write",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|site| site.name() == s)
+    }
+
+    fn index(self) -> usize {
+        FaultSite::ALL
+            .iter()
+            .position(|s| *s == self)
+            .unwrap_or_default()
+    }
+}
+
+/// What happens when an armed spec fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation fails with an injected error.
+    Error,
+    /// The operation stalls this many milliseconds, then succeeds
+    /// (exercises watchdogs and socket timeouts).
+    Delay(u64),
+    /// Checkpoint-write only: the snapshot is truncated mid-stream and
+    /// renamed into place without an fsync — a simulated torn write
+    /// that `latest_valid_checkpoint` must skip. At sites that cannot
+    /// tear it degrades to `Error`.
+    Torn,
+}
+
+/// One armed fault: fire `kind` at `site`, starting at the `at`-th hit
+/// (1-based), for `times` consecutive hits (0 = forever).
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    pub at: u64,
+    pub times: u64,
+}
+
+/// A parsed fault plan: seed for the tear/jitter RNG plus armed specs.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the compact spec grammar (module docs). Empty clauses are
+    /// skipped, so trailing separators are harmless.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in text.split([';', ',']) {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(seed) = clause.strip_prefix("seed=") {
+                plan.seed = seed
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| bad_spec(clause, "seed must be a u64"))?;
+                continue;
+            }
+            let (head, kind_str) = clause
+                .split_once(':')
+                .ok_or_else(|| bad_spec(clause, "expected SITE[@AT[xTIMES]]:KIND"))?;
+            let (site_str, trigger) = match head.split_once('@') {
+                Some((s, t)) => (s.trim(), Some(t.trim())),
+                None => (head.trim(), None),
+            };
+            let site = FaultSite::parse(site_str)
+                .ok_or_else(|| bad_spec(clause, "unknown fault site"))?;
+            let (at, times) = match trigger {
+                None => (1, 1),
+                Some(t) => match t.split_once('x') {
+                    None => (parse_u64(t, clause, "AT")?, 1),
+                    Some((a, n)) => (
+                        parse_u64(a.trim(), clause, "AT")?,
+                        parse_u64(n.trim(), clause, "TIMES")?,
+                    ),
+                },
+            };
+            if at == 0 {
+                return Err(bad_spec(clause, "AT is 1-based; 0 never fires"));
+            }
+            let kind = match kind_str.trim() {
+                "error" => FaultKind::Error,
+                "torn" => FaultKind::Torn,
+                other => match other.strip_prefix("delay=") {
+                    Some(ms) => FaultKind::Delay(parse_u64(ms.trim(), clause, "delay millis")?),
+                    None => return Err(bad_spec(clause, "kind must be error|torn|delay=MS")),
+                },
+            };
+            plan.specs.push(FaultSpec {
+                site,
+                kind,
+                at,
+                times,
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Read `REVFFN_FAULTS`; `Ok(None)` when unset or blank.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("REVFFN_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+fn bad_spec(clause: &str, why: &str) -> Error {
+    Error::Config(format!("fault spec `{clause}`: {why}"))
+}
+
+fn parse_u64(s: &str, clause: &str, what: &str) -> Result<u64> {
+    s.parse::<u64>()
+        .map_err(|_| bad_spec(clause, &format!("{what} must be a u64")))
+}
+
+struct Armed {
+    spec: FaultSpec,
+    hits: u64,
+}
+
+struct Installed {
+    rng: Rng,
+    armed: Vec<Armed>,
+    fired: [u64; FaultSite::ALL.len()],
+}
+
+// Disabled fast path: one relaxed load. The Mutex is touched only while
+// a plan is installed (tests, chaos drills).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Installed>> = Mutex::new(None);
+static TEST_GATE: Mutex<()> = Mutex::new(());
+
+fn lock_plan() -> MutexGuard<'static, Option<Installed>> {
+    PLAN.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Install a plan process-wide, replacing any previous one. Hit
+/// counters start from zero.
+pub fn install(plan: FaultPlan) {
+    let armed = plan
+        .specs
+        .into_iter()
+        .map(|spec| Armed { spec, hits: 0 })
+        .collect();
+    *lock_plan() = Some(Installed {
+        rng: Rng::seed_from_u64(plan.seed),
+        armed,
+        fired: [0; FaultSite::ALL.len()],
+    });
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove any installed plan; every site reverts to the no-op path.
+pub fn clear() {
+    *lock_plan() = None;
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Resolve and install a plan: `REVFFN_FAULTS` wins over the config
+/// spec. Returns whether a plan was installed.
+pub fn install_from(config_spec: Option<&str>) -> Result<bool> {
+    if let Some(plan) = FaultPlan::from_env()? {
+        install(plan);
+        return Ok(true);
+    }
+    if let Some(spec) = config_spec {
+        install(FaultPlan::parse(spec)?);
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// Record one hit at `site` and return the fault kind to apply, if any
+/// armed spec fires. The production fast path (no plan) is a single
+/// relaxed atomic load.
+#[inline]
+pub fn hit(site: FaultSite) -> Option<FaultKind> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    hit_slow(site)
+}
+
+fn hit_slow(site: FaultSite) -> Option<FaultKind> {
+    let mut guard = lock_plan();
+    let inst = guard.as_mut()?;
+    let mut out = None;
+    for a in inst.armed.iter_mut() {
+        if a.spec.site != site {
+            continue;
+        }
+        a.hits += 1;
+        let n = a.hits;
+        let firing = n >= a.spec.at && (a.spec.times == 0 || n < a.spec.at + a.spec.times);
+        if firing && out.is_none() {
+            out = Some(a.spec.kind);
+        }
+    }
+    if out.is_some() {
+        inst.fired[site.index()] += 1;
+    }
+    out
+}
+
+/// How many faults have fired at `site` under the current plan.
+pub fn fired(site: FaultSite) -> u64 {
+    lock_plan()
+        .as_ref()
+        .map(|inst| inst.fired[site.index()])
+        .unwrap_or(0)
+}
+
+/// Fraction of a torn checkpoint to keep, in `[0.25, 0.75)`, drawn
+/// from the plan's seeded RNG so tears are reproducible per plan.
+pub fn torn_fraction() -> f64 {
+    match lock_plan().as_mut() {
+        Some(inst) => 0.25 + 0.5 * inst.rng.gen_f64(),
+        None => 0.5,
+    }
+}
+
+/// Error/delay failpoint for sites where a torn write has no meaning
+/// (`Torn` degrades to `Error`). Delay faults stall via [`retry::pause`].
+pub fn failpoint(site: FaultSite) -> Result<()> {
+    match hit(site) {
+        None => Ok(()),
+        Some(FaultKind::Delay(ms)) => {
+            retry::pause(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Error) | Some(FaultKind::Torn) => Err(Error::Training(format!(
+            "injected fault: {}",
+            site.name()
+        ))),
+    }
+}
+
+/// `std::io`-flavored failpoint for the serve wire layer.
+pub fn io_failpoint(site: FaultSite) -> std::io::Result<()> {
+    match hit(site) {
+        None => Ok(()),
+        Some(FaultKind::Delay(ms)) => {
+            retry::pause(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Error) | Some(FaultKind::Torn) => Err(std::io::Error::other(format!(
+            "injected fault: {}",
+            site.name()
+        ))),
+    }
+}
+
+/// Fault plans are process-global; a test that installs one must hold
+/// this lock for its whole body (and `clear()` right after locking) so
+/// parallel tests never observe each other's plans.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    TEST_GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_defaults_and_trigger_grammar() {
+        let p = FaultPlan::parse("pjrt_execute:error").unwrap();
+        assert_eq!(p.specs.len(), 1);
+        assert_eq!(p.specs[0].site, FaultSite::PjrtExecute);
+        assert_eq!(p.specs[0].kind, FaultKind::Error);
+        assert_eq!((p.specs[0].at, p.specs[0].times), (1, 1));
+
+        let p = FaultPlan::parse("seed=9; ckpt_write@3:torn, wire_read@2x0:delay=50;").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.specs.len(), 2);
+        assert_eq!(p.specs[0].site, FaultSite::CkptWrite);
+        assert_eq!(p.specs[0].kind, FaultKind::Torn);
+        assert_eq!((p.specs[0].at, p.specs[0].times), (3, 1));
+        assert_eq!(p.specs[1].site, FaultSite::WireRead);
+        assert_eq!(p.specs[1].kind, FaultKind::Delay(50));
+        assert_eq!((p.specs[1].at, p.specs[1].times), (2, 0));
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        for bad in [
+            "nope:error",
+            "pjrt_execute",
+            "pjrt_execute:boom",
+            "pjrt_execute@0:error",
+            "pjrt_execute@x:error",
+            "pjrt_execute:delay=abc",
+            "seed=minus",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn window_semantics_fire_in_range_only() {
+        let _g = test_lock();
+        clear();
+        install(FaultPlan::parse("pjrt_execute@3x2:error").unwrap());
+        let fired_at: Vec<bool> = (1..=6).map(|_| hit(FaultSite::PjrtExecute).is_some()).collect();
+        assert_eq!(fired_at, [false, false, true, true, false, false]);
+        assert_eq!(fired(FaultSite::PjrtExecute), 2);
+        clear();
+        assert!(hit(FaultSite::PjrtExecute).is_none());
+    }
+
+    #[test]
+    fn forever_window_and_site_isolation() {
+        let _g = test_lock();
+        clear();
+        install(FaultPlan::parse("wire_write@2x0:error").unwrap());
+        assert!(hit(FaultSite::WireWrite).is_none());
+        for _ in 0..5 {
+            assert_eq!(hit(FaultSite::WireWrite), Some(FaultKind::Error));
+        }
+        // other sites untouched
+        assert!(hit(FaultSite::WireRead).is_none());
+        assert!(failpoint(FaultSite::CkptRename).is_ok());
+        clear();
+    }
+
+    #[test]
+    fn failpoints_translate_kinds() {
+        let _g = test_lock();
+        clear();
+        install(FaultPlan::parse("ckpt_rename@1:torn; wire_write@1:error").unwrap());
+        // torn degrades to an error at a site that cannot tear
+        assert!(failpoint(FaultSite::CkptRename).is_err());
+        assert!(io_failpoint(FaultSite::WireWrite).is_err());
+        clear();
+    }
+
+    #[test]
+    fn torn_fraction_is_seeded_and_bounded() {
+        let _g = test_lock();
+        clear();
+        install(FaultPlan {
+            seed: 11,
+            specs: Vec::new(),
+        });
+        let a = torn_fraction();
+        assert!((0.25..0.75).contains(&a));
+        install(FaultPlan {
+            seed: 11,
+            specs: Vec::new(),
+        });
+        assert_eq!(a, torn_fraction());
+        clear();
+        // no plan: deterministic midpoint
+        assert_eq!(torn_fraction(), 0.5);
+    }
+
+    #[test]
+    fn env_install_wins_over_config_spec() {
+        let _g = test_lock();
+        clear();
+        std::env::set_var("REVFFN_FAULTS", "pjrt_transfer@1:error");
+        let installed = install_from(Some("wire_read@1:error")).unwrap();
+        std::env::remove_var("REVFFN_FAULTS");
+        assert!(installed);
+        assert!(hit(FaultSite::WireRead).is_none());
+        assert_eq!(hit(FaultSite::PjrtTransfer), Some(FaultKind::Error));
+        clear();
+
+        // env unset: the config spec installs
+        assert!(install_from(Some("wire_read@1:error")).unwrap());
+        assert_eq!(hit(FaultSite::WireRead), Some(FaultKind::Error));
+        clear();
+        assert!(!install_from(None).unwrap());
+    }
+}

@@ -1,11 +1,13 @@
 //! In-crate substrates for the fully-offline build: JSON codec, PRNG,
-//! CLI flag parser, bench-timing helpers, and a scratch-dir guard for
-//! tests.
+//! CLI flag parser, bench-timing helpers, fault injection, the
+//! sanctioned backoff/sleep helper, and a scratch-dir guard for tests.
 
 pub mod bench;
+pub mod faults;
 pub mod flags;
 pub mod json;
 pub mod prop;
+pub mod retry;
 pub mod rng;
 
 pub use flags::Flags;

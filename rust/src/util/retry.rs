@@ -1,0 +1,112 @@
+//! Sanctioned waiting: exponential backoff with seeded jitter, plus the
+//! single raw-sleep chokepoint [`pause`].
+//!
+//! Lint rule LN004 (`revffn check --lint`, docs/ANALYSIS.md) forbids
+//! `thread::sleep` anywhere else under `rust/src` — every wait in the
+//! tree (scheduler poll parks, supervised-retry delays, injected fault
+//! stalls) routes through this module so waits stay auditable, bounded,
+//! and jittered in one place.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Exponential backoff with deterministic "equal jitter".
+///
+/// Delay before retry `attempt` (1-based) is `base * 2^(attempt-1)`
+/// capped at `max`, then jittered to `[d/2, d)` — half fixed so a delay
+/// never collapses to zero, half uniform so concurrent retries
+/// decorrelate. The jitter stream is seeded, so a given `Backoff` value
+/// produces a reproducible delay sequence.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, max_ms: u64, seed: u64) -> Backoff {
+        Backoff {
+            base: Duration::from_millis(base_ms),
+            max: Duration::from_millis(max_ms.max(base_ms)),
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Jittered delay before retry `attempt` (1-based). A zero base
+    /// yields zero delays (used by tests to retry immediately).
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        if self.base.is_zero() {
+            return Duration::ZERO;
+        }
+        let shift = attempt.saturating_sub(1).min(20);
+        let exp = self.base.saturating_mul(1u32 << shift).min(self.max);
+        let half = exp / 2;
+        half + Duration::from_secs_f64(half.as_secs_f64() * self.rng.gen_f64())
+    }
+}
+
+/// The one sanctioned raw sleep (LN004): poll parks, backoff waits, and
+/// injected delay faults all come through here.
+pub fn pause(d: Duration) {
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_delays_are_reproducible() {
+        let mut a = Backoff::new(100, 10_000, 7);
+        let mut b = Backoff::new(100, 10_000, 7);
+        for attempt in 1..=8 {
+            assert_eq!(a.delay(attempt), b.delay(attempt));
+        }
+    }
+
+    #[test]
+    fn delays_grow_exponentially_within_jitter_bounds() {
+        let mut b = Backoff::new(100, 100_000, 3);
+        for attempt in 1..=6u32 {
+            let exp = Duration::from_millis(100 * (1u64 << (attempt - 1)));
+            let d = b.delay(attempt);
+            assert!(d >= exp / 2, "attempt {attempt}: {d:?} < {:?}", exp / 2);
+            assert!(d < exp, "attempt {attempt}: {d:?} >= {exp:?}");
+        }
+    }
+
+    #[test]
+    fn delays_cap_at_max() {
+        let mut b = Backoff::new(100, 400, 1);
+        for attempt in 1..=12 {
+            assert!(b.delay(attempt) < Duration::from_millis(400));
+        }
+    }
+
+    #[test]
+    fn zero_base_means_no_wait() {
+        let mut b = Backoff::new(0, 10_000, 1);
+        for attempt in 1..=4 {
+            assert_eq!(b.delay(attempt), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn max_below_base_is_clamped_up() {
+        let mut b = Backoff::new(200, 50, 1);
+        // max is raised to base, so every delay lands in [100, 200)
+        let d = b.delay(5);
+        assert!(d >= Duration::from_millis(100) && d < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let mut b = Backoff::new(1_000, 30_000, 1);
+        let d = b.delay(u32::MAX);
+        assert!(d < Duration::from_millis(30_000));
+    }
+}

@@ -89,7 +89,7 @@ fn all_rule_ids_are_stable_strings() {
     let catalog = [
         "AR001", "AR002", "AR003", "AR004", "AR005", "AR006", "AR007", "AR008", "AR009",
         "AR010", "CK001", "CK002", "CK003", "CK004", "CF001", "CF002", "CF003", "CF004",
-        "LN000", "LN001", "LN002", "LN003",
+        "LN000", "LN001", "LN002", "LN003", "LN004",
     ];
     let mut findings = Vec::new();
     for dir in ["clean", "missing_accum", "bad_shape", "dtype_flip"] {

@@ -1,0 +1,307 @@
+//! Fault-injection matrix (docs/ROBUSTNESS.md): every injection site
+//! driven through its real failure surface, asserting the system either
+//! recovers bit-identically or lands in the right degraded state.
+//!
+//! Device-free tests (checkpoint sites, plan plumbing) run everywhere —
+//! tier-1. Device tests (execute faults → supervised retry / quarantine
+//! / watchdog) skip silently when `artifacts/tiny` is absent, like the
+//! other integration suites.
+//!
+//! Fault plans are process-global: every test that installs one holds
+//! `faults::test_lock()` for its whole body and clears on entry, so the
+//! suite is safe under the default parallel test runner.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use revffn::checkpoint::{
+    latest_valid_checkpoint, load, periodic_path, save_state, OptMoments, RunCursor,
+};
+use revffn::config::{PriceGeometry, RunConfig, ServeConfig};
+use revffn::coordinator::Trainer;
+use revffn::engine::Method;
+use revffn::runtime::artifact::TensorSpec;
+use revffn::runtime::store::ParamStore;
+use revffn::runtime::Device;
+use revffn::serve::{JobState, Scheduler};
+use revffn::util::faults::{self, FaultPlan, FaultSite};
+use revffn::util::json;
+use revffn::util::ScratchDir;
+
+// ---------------------------------------------------------------- fixtures
+
+fn spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    TensorSpec { name: name.into(), shape, dtype: "f32".into(), blob: "x".into(), offset: 0, nbytes: n * 4 }
+}
+
+fn store() -> ParamStore {
+    let specs = vec![spec("embed", vec![4, 3]), spec("norm_f", vec![3])];
+    let host = vec![(0..12).map(|i| i as f32 * 0.5).collect(), vec![1.0, 2.0, 3.0]];
+    ParamStore::from_host(specs, host).unwrap()
+}
+
+fn moments() -> OptMoments {
+    OptMoments {
+        m: vec![(vec![4, 3], vec![0.25; 12]), (vec![3], vec![0.5; 3])],
+        v: vec![(vec![4, 3], vec![0.0625; 12]), (vec![3], vec![1.5; 3])],
+    }
+}
+
+fn cursor(step: u64) -> RunCursor {
+    RunCursor {
+        phase_idx: 0,
+        step_in_phase: step,
+        batches_taken: step,
+        batch_seed: 7,
+        seq: step,
+        steps_total: step,
+    }
+}
+
+fn artifacts_root() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    p.join("index.json").exists().then_some(p)
+}
+
+/// A short single-stage SFT run (steps are unique per stage).
+fn job_cfg(root: &Path, out: &Path) -> RunConfig {
+    let mut cfg = RunConfig::default_tiny(root);
+    cfg.method = Method::Sft;
+    cfg.schedule.stage1_steps = 0;
+    cfg.schedule.stage2_steps = 4;
+    cfg.schedule.warmup_steps = 1;
+    cfg.data.pretrain_steps = 0;
+    cfg.data.n_train = 48;
+    cfg.data.n_eval = 16;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.checkpoint_every = 2;
+    cfg.out_dir = out.into();
+    cfg
+}
+
+/// Serve options with fast supervised retries (1ms base backoff).
+fn sup_opts(root: &Path, scratch: &Path, max_attempts: u32) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        artifacts: root.to_path_buf(),
+        budget_gb: 1e9,
+        quantum: 2,
+        assumptions: "f32".into(),
+        price_geometry: PriceGeometry::Manifest,
+        run_root: scratch.join("serve"),
+        checkpoint_every: 0,
+        recover: false,
+        retry_max_attempts: max_attempts,
+        retry_base_ms: 1,
+        retry_max_ms: 4,
+        ..ServeConfig::default()
+    }
+}
+
+/// Per-job (stage, step) → loss-bits map, LAST event wins — replayed
+/// steps after a supervised retry overwrite their first emission, so
+/// the map is the deterministic projection of a recovered stream.
+fn step_map(events: &[String]) -> HashMap<(u64, u64), u32> {
+    events
+        .iter()
+        .map(|l| json::parse(l).unwrap())
+        .filter(|j| j.str_of("type").unwrap() == "step")
+        .map(|j| {
+            (
+                (j.u64_of("stage").unwrap(), j.u64_of("step").unwrap()),
+                (j.f64_of("loss").unwrap() as f32).to_bits(),
+            )
+        })
+        .collect()
+}
+
+// ------------------------------------------------- device-free: checkpoint
+
+#[test]
+fn ckpt_write_error_fault_fails_save_and_leaves_no_snapshot() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = ScratchDir::new("fault-ckpt-write").unwrap();
+    let p = dir.join("state.rvt");
+
+    faults::install(FaultPlan::parse("ckpt_write@1:error").unwrap());
+    let err = save_state(&p, &store(), 1, Some(&moments()), Some(&cursor(1)));
+    assert!(err.is_err(), "injected write fault must fail the save");
+    assert!(!p.exists(), "no snapshot may appear after a failed write");
+
+    // the window has passed: the next save succeeds and round-trips
+    let saved = save_state(&p, &store(), 2, Some(&moments()), Some(&cursor(2)));
+    assert!(saved.is_ok(), "{saved:?}");
+    assert_eq!(load(&p).unwrap().step, 2);
+    faults::clear();
+}
+
+#[test]
+fn ckpt_fsync_and_rename_faults_fail_save_atomically() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = ScratchDir::new("fault-ckpt-fsync").unwrap();
+
+    for plan in ["ckpt_fsync@1:error", "ckpt_rename@1:error"] {
+        let p = dir.join(format!("{}.rvt", plan.split('@').next().unwrap()));
+        faults::install(FaultPlan::parse(plan).unwrap());
+        assert!(
+            save_state(&p, &store(), 1, Some(&moments()), Some(&cursor(1))).is_err(),
+            "{plan} must fail the save"
+        );
+        assert!(!p.exists(), "{plan}: the final path must never materialize");
+        faults::clear();
+    }
+}
+
+#[test]
+fn torn_ckpt_write_is_skipped_by_latest_valid_checkpoint() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = ScratchDir::new("fault-ckpt-torn").unwrap();
+    let out = dir.join("out");
+
+    // a good snapshot at step 2, then a torn one at step 4
+    let good = periodic_path(&out, 0, 2);
+    save_state(&good, &store(), 2, Some(&moments()), Some(&cursor(2))).unwrap();
+    faults::install(FaultPlan::parse("seed=3; ckpt_write@1:torn").unwrap());
+    let torn = periodic_path(&out, 0, 4);
+    save_state(&torn, &store(), 4, Some(&moments()), Some(&cursor(4))).unwrap();
+    faults::clear();
+
+    // the torn file exists (it renamed into place) but cannot load —
+    // exactly the crash shape latest_valid_checkpoint exists to skip
+    assert!(torn.exists());
+    assert!(load(&torn).is_err(), "torn snapshot must not parse");
+    assert_eq!(
+        latest_valid_checkpoint(&out),
+        Some(good),
+        "resume must fall back to the newest snapshot that parses"
+    );
+}
+
+#[test]
+fn delay_fault_stalls_but_preserves_the_snapshot() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let dir = ScratchDir::new("fault-ckpt-delay").unwrap();
+    let p = dir.join("state.rvt");
+    faults::install(FaultPlan::parse("ckpt_write@1:delay=10").unwrap());
+    let t0 = std::time::Instant::now();
+    save_state(&p, &store(), 3, Some(&moments()), Some(&cursor(3))).unwrap();
+    assert!(t0.elapsed() >= std::time::Duration::from_millis(10));
+    assert_eq!(load(&p).unwrap().step, 3, "a delay fault must not corrupt the write");
+    faults::clear();
+}
+
+// ------------------------------------------------------ device: supervision
+
+#[test]
+fn execute_fault_retries_with_backoff_and_finishes_bit_identical() {
+    let Some(root) = artifacts_root() else { return };
+    let _g = faults::test_lock();
+    faults::clear();
+    let scratch = ScratchDir::new("fault-retry").unwrap();
+
+    // fault-free solo baseline
+    let solo: HashMap<(u64, u64), u32> = {
+        let device = Device::cpu().unwrap();
+        let mut t = Trainer::new(&device, job_cfg(&root, &scratch.join("solo"))).unwrap();
+        t.run().unwrap();
+        t.metrics.steps.iter().map(|r| ((r.stage as u64, r.step), r.loss.to_bits())).collect()
+    };
+
+    // the 3rd program execute fails once, mid-run (past the step-2
+    // periodic snapshot, before the schedule ends)
+    faults::install(FaultPlan::parse("pjrt_execute@3:error").unwrap());
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, sup_opts(&root, &scratch, 3)).unwrap();
+    let a = sched.submit(job_cfg(&root, &scratch.join("faulted")), Some("a".into())).unwrap();
+    assert!(a.admitted);
+    sched.run_until_idle().unwrap();
+    faults::clear();
+
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Finished));
+    assert_eq!(faults::fired(FaultSite::PjrtExecute), 0, "plan cleared");
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let snap = &board.jobs[0].snap;
+    assert_eq!(snap.attempts, 1, "exactly one supervised retry");
+    assert!(snap.error.is_none(), "a recovered job reports no error");
+    assert_eq!(
+        step_map(&board.jobs[0].events.to_vec()),
+        solo,
+        "recovered run must be bit-identical to the fault-free solo run"
+    );
+}
+
+#[test]
+fn persistent_execute_fault_quarantines_with_failure_chain() {
+    let Some(root) = artifacts_root() else { return };
+    let _g = faults::test_lock();
+    faults::clear();
+    let scratch = ScratchDir::new("fault-quarantine").unwrap();
+
+    // every execute fails, forever — retries burn down via the failing
+    // device-health probe, then the job quarantines
+    faults::install(FaultPlan::parse("pjrt_execute@1x0:error").unwrap());
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, sup_opts(&root, &scratch, 2)).unwrap();
+    let a = sched.submit(job_cfg(&root, &scratch.join("dead")), Some("a".into())).unwrap();
+    sched.run_until_idle().unwrap();
+    faults::clear();
+
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Quarantined));
+    {
+        let board = sched.board();
+        let board = board.lock().unwrap();
+        let snap = &board.jobs[0].snap;
+        assert_eq!(snap.attempts, 3, "max_attempts=2 allows 3 total failures");
+        let chain = snap.error.clone().expect("quarantine must carry the failure chain");
+        assert!(chain.contains("attempt 1:"), "chain lists each failure: {chain}");
+        assert!(chain.contains("attempt 3:"), "chain lists each failure: {chain}");
+        assert!(chain.contains("injected fault"), "{chain}");
+        assert!(chain.contains("device health probe"), "probe failures join the chain: {chain}");
+    }
+
+    // the device is healthy again: other jobs proceed
+    let b = sched.submit(job_cfg(&root, &scratch.join("alive")), Some("b".into())).unwrap();
+    sched.run_until_idle().unwrap();
+    assert_eq!(sched.job_state(&b.id), Some(JobState::Finished));
+
+    // the resume verb accepts the quarantined state (every execute
+    // failed, so no snapshot was ever written — the state gate must
+    // pass and the snapshot check must be what rejects it)
+    let err = sched.resume_job(&a.id).expect_err("no snapshot exists to resume from");
+    let msg = err.to_string();
+    assert!(msg.contains("no periodic snapshot"), "state gate must accept quarantined: {msg}");
+}
+
+#[test]
+fn watchdog_fails_a_stalled_quantum_and_the_retry_finishes() {
+    let Some(root) = artifacts_root() else { return };
+    let _g = faults::test_lock();
+    faults::clear();
+    let scratch = ScratchDir::new("fault-watchdog").unwrap();
+
+    // the 3rd execute stalls well past the quantum deadline, once
+    faults::install(FaultPlan::parse("pjrt_execute@3:delay=1500").unwrap());
+    let mut opts = sup_opts(&root, &scratch, 3);
+    opts.quantum_deadline_ms = 250;
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, opts).unwrap();
+    let a = sched.submit(job_cfg(&root, &scratch.join("stall")), Some("a".into())).unwrap();
+    sched.run_until_idle().unwrap();
+    faults::clear();
+
+    assert_eq!(sched.job_state(&a.id), Some(JobState::Finished));
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    assert!(
+        board.jobs[0].snap.attempts >= 1,
+        "the stalled quantum must have tripped the watchdog"
+    );
+    assert_eq!(board.committed_gb, 0.0, "budget fully released after recovery");
+}
