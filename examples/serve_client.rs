@@ -1,7 +1,9 @@
 //! Drive a running `revffn serve` instance: submit two concurrent
-//! fine-tuning jobs (RevFFN + SFT), stream both NDJSON event feeds as
-//! they interleave on the shared device, then print the final status
-//! table (including each job's admission price).
+//! fine-tuning jobs — an `interactive` RevFFN job with a deadline and a
+//! `batch` SFT job under a different tenant — then follow both NDJSON
+//! event feeds with **cursor-paginated** `events` requests (the
+//! `next_cursor` chain from docs/SERVE.md) and print the final status
+//! table, including each job's admission price and scheduling identity.
 //!
 //!     # terminal 1
 //!     cargo run --release -- serve --artifacts artifacts/tiny --budget-gb 8
@@ -12,8 +14,9 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use revffn::serve::protocol::Request;
+use revffn::serve::protocol::{Priority, Request};
 use revffn::util::json::{self, Json};
 
 /// Bridge the crate's `Result` into anyhow (the binary edge).
@@ -35,49 +38,85 @@ fn read_line(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Json> {
     json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}: {line}"))
 }
 
-/// Stream one job's events on its own connection, printing each line
-/// with a job prefix, until the server sends the `done` marker.
-fn follow_events(addr: &str, job: String) -> anyhow::Result<()> {
-    let mut stream = TcpStream::connect(addr)?;
-    send(&mut stream, &Request::Events { job: job.clone(), from: 0, follow: true })?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+fn print_event(job: &str, j: &Json) -> anyhow::Result<()> {
+    let kind = j.str_of("type").unwrap_or_default();
+    match kind.as_str() {
+        "phase_started" => println!(
+            "[{job}] phase {} ({}) — {} steps",
+            ok(j.u64_of("phase"))?,
+            ok(j.str_of("label"))?,
+            ok(j.u64_of("steps"))?
+        ),
+        "step" => println!(
+            "[{job}] step {:>3} loss {:.4}",
+            ok(j.u64_of("step"))?,
+            j.f64_of("loss").unwrap_or(f64::NAN)
+        ),
+        "eval" => println!(
+            "[{job}] eval @ {} loss {:.4}",
+            ok(j.u64_of("step"))?,
+            j.f64_of("eval_loss").unwrap_or(f64::NAN)
+        ),
+        "phase_finished" => println!("[{job}] phase {} finished", ok(j.u64_of("phase"))?),
+        _ => println!("[{job}] {j}"),
+    }
+    Ok(())
+}
+
+/// Follow one job's events by chaining paginated non-follow requests:
+/// each page's `next_cursor` footer is the next request's `from`, so a
+/// lost connection costs nothing — resubmit with the last cursor. Stops
+/// once a footer reports `done` (terminal job, cursor at end of log).
+fn follow_events_paged(addr: &str, job: String, page: u64) -> anyhow::Result<()> {
+    let mut cursor = 0u64;
     loop {
-        let j = read_line(&mut reader)?;
-        if j.get("done").and_then(Json::as_bool).unwrap_or(false) {
-            println!("[{job}] done ({})", ok(j.str_of("state"))?);
-            return Ok(());
+        // one fresh connection per page: the cursor, not the socket,
+        // carries the position
+        let mut stream = TcpStream::connect(addr)?;
+        send(
+            &mut stream,
+            &Request::Events { job: job.clone(), from: cursor, limit: Some(page), follow: false },
+        )?;
+        let mut reader = BufReader::new(stream);
+        let mut progressed = false;
+        loop {
+            let j = read_line(&mut reader)?;
+            if j.get("page").and_then(Json::as_bool).unwrap_or(false) {
+                let next = ok(j.u64_of("next_cursor"))?;
+                progressed = next > cursor;
+                cursor = next;
+                if ok(j.bool_of("done"))? {
+                    println!("[{job}] done ({}) after {cursor} events", ok(j.str_of("state"))?);
+                    return Ok(());
+                }
+                break;
+            }
+            print_event(&job, &j)?;
         }
-        let kind = j.str_of("type").unwrap_or_default();
-        match kind.as_str() {
-            "phase_started" => println!(
-                "[{job}] phase {} ({}) — {} steps",
-                ok(j.u64_of("phase"))?,
-                ok(j.str_of("label"))?,
-                ok(j.u64_of("steps"))?
-            ),
-            "step" => println!(
-                "[{job}] step {:>3} loss {:.4}",
-                ok(j.u64_of("step"))?,
-                j.f64_of("loss").unwrap_or(f64::NAN)
-            ),
-            "eval" => println!(
-                "[{job}] eval @ {} loss {:.4}",
-                ok(j.u64_of("step"))?,
-                j.f64_of("eval_loss").unwrap_or(f64::NAN)
-            ),
-            "phase_finished" => println!("[{job}] phase {} finished", ok(j.u64_of("phase"))?),
-            _ => println!("[{job}] {j}"),
+        if !progressed {
+            // caught up with a live job — poll instead of spinning
+            std::thread::sleep(Duration::from_millis(100));
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn submit(
     reader: &mut BufReader<TcpStream>,
     stream: &mut TcpStream,
     config: &str,
     name: &str,
+    priority: Priority,
+    tenant: &str,
+    deadline_ms: Option<u64>,
 ) -> anyhow::Result<String> {
-    let req = Request::Submit { config: ok(json::parse(config))?, name: Some(name.into()) };
+    let req = Request::Submit {
+        config: ok(json::parse(config))?,
+        name: Some(name.into()),
+        priority,
+        tenant: Some(tenant.into()),
+        deadline_ms,
+    };
     send(stream, &req)?;
     let resp = read_line(reader)?;
     if !ok(resp.bool_of("ok"))? {
@@ -85,9 +124,11 @@ fn submit(
     }
     let id = ok(resp.str_of("job"))?;
     println!(
-        "submitted {name} as {id}: admitted={} peak {:.4} GB",
+        "submitted {name} as {id}: admitted={} peak {:.4} GB priority={} tenant={}",
         resp.bool_of("admitted").unwrap_or(false),
-        resp.f64_of("peak_gb").unwrap_or(f64::NAN)
+        resp.f64_of("peak_gb").unwrap_or(f64::NAN),
+        resp.str_of("priority").unwrap_or_default(),
+        resp.str_of("tenant").unwrap_or_default()
     );
     Ok(id)
 }
@@ -104,6 +145,9 @@ fn main() -> anyhow::Result<()> {
     let mut control = TcpStream::connect(&addr)?;
     let mut reader = BufReader::new(control.try_clone()?);
     println!("== submitting two concurrent jobs to {addr} ==");
+    // the interactive job outranks the batch job at every quantum
+    // boundary, so its steps come first in the interleaving below even
+    // though both are admitted together
     let job_a = submit(
         &mut reader,
         &mut control,
@@ -111,6 +155,9 @@ fn main() -> anyhow::Result<()> {
             "schedule":{"stage1_steps":2,"stage2_steps":6},
             "data":{"pretrain_steps":0,"n_train":64,"n_eval":16}}"#,
         "revffn-demo",
+        Priority::Interactive,
+        "team-a",
+        Some(60_000),
     )?;
     let job_b = submit(
         &mut reader,
@@ -119,14 +166,18 @@ fn main() -> anyhow::Result<()> {
             "schedule":{"stage2_steps":6},
             "data":{"pretrain_steps":0,"n_train":64,"n_eval":16}}"#,
         "sft-demo",
+        Priority::Batch,
+        "team-b",
+        None,
     )?;
 
-    // stream both feeds concurrently — the interleaving you see is the
-    // scheduler's round-robin over the shared device
+    // follow both feeds concurrently via cursor pagination (4 lines a
+    // page) — the interleaving you see is the scheduler's
+    // priority-then-round-robin over the shared device
     let addr_a = addr.clone();
     let addr_b = addr.clone();
-    let ta = std::thread::spawn(move || follow_events(&addr_a, job_a));
-    let tb = std::thread::spawn(move || follow_events(&addr_b, job_b));
+    let ta = std::thread::spawn(move || follow_events_paged(&addr_a, job_a, 4));
+    let tb = std::thread::spawn(move || follow_events_paged(&addr_b, job_b, 4));
     ta.join().expect("job-a follower panicked")?;
     tb.join().expect("job-b follower panicked")?;
 
@@ -139,10 +190,12 @@ fn main() -> anyhow::Result<()> {
     );
     for row in ok(status.arr_of("jobs"))? {
         println!(
-            "  {}  {:<12} {:<9} peak {:.4} GB  steps {}  last loss {:.4}",
+            "  {}  {:<12} {:<9} {:<11} {:<7} peak {:.4} GB  steps {}  last loss {:.4}",
             ok(row.str_of("id"))?,
             ok(row.str_of("name"))?,
             ok(row.str_of("state"))?,
+            row.str_of("priority").unwrap_or_default(),
+            row.str_of("tenant").unwrap_or_default(),
             ok(row.f64_of("peak_gb"))?,
             ok(row.u64_of("steps_done"))?,
             row.f64_of("last_loss").unwrap_or(f64::NAN)

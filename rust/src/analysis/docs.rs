@@ -1,0 +1,414 @@
+//! Pass 5 — docs consistency (DC rules).
+//!
+//! The docs tree (`README.md` + `docs/*.md`) is part of the product
+//! surface, and it drifts: a renamed file leaves a dead link, a CLI
+//! table keeps advertising a flag the binary dropped, a doc cites a
+//! rule ID the catalog never defined. This pass pins the docs to the
+//! code the same way the other passes pin artifacts to programs:
+//!
+//! * **DC001** — dangling relative link: a markdown link whose target
+//!   (resolved against the containing file, fragment stripped) does not
+//!   exist on disk. Absolute `http(s)://` / `mailto:` targets and pure
+//!   `#fragment` anchors are out of scope.
+//! * **DC002** — undocumented-by-code flag: a `--flag` token in the
+//!   docs that `main.rs` never reads via the `Flags` accessors. A small
+//!   allowlist covers cargo's own flags, which the quickstart examples
+//!   legitimately mention.
+//! * **DC003** — uncataloged rule ID: an `AR`/`CK`/`CF`/`LN`/`DC` rule
+//!   ID cited anywhere in the docs that has no row in the
+//!   `docs/ANALYSIS.md` catalog tables.
+//!
+//! All scans are line-based so findings carry `file:line` subjects;
+//! fenced code blocks are skipped for link extraction (sample payloads
+//! may contain bracket syntax) but scanned for flags (usage blocks are
+//! exactly where flag tables live).
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::Finding;
+
+/// Rule-ID families the analysis module defines; DC003 only fires on
+/// these prefixes so prose like `RFC2119` can never false-positive.
+const ID_FAMILIES: &[&str] = &["AR", "CK", "CF", "LN", "DC"];
+
+/// Flags the docs may mention that are not `revffn` flags: cargo's own
+/// (quickstart build/run and CI command lines), the AOT lowering tool's
+/// (`python -m compile.aot --analyze`), plus the `--flag` usage
+/// placeholder.
+const EXTERNAL_FLAGS: &[&str] = &[
+    "--flag",
+    "--release",
+    "--quiet",
+    "--example",
+    "--test",
+    "--tests",
+    "--lib",
+    "--bin",
+    "--workspace",
+    "--features",
+    "--no-default-features",
+    "--offline",
+    "--all-targets",
+    "--bench",
+    "--no-run",
+    "--check",
+    "--analyze",
+];
+
+/// Markdown links `[text](target)` outside fenced code blocks, as
+/// (1-based line, target) pairs.
+pub fn extract_links(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut fenced = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if fenced {
+            continue;
+        }
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i + 1 < b.len() {
+            if b[i] == b']' && b[i + 1] == b'(' {
+                let start = i + 2;
+                if let Some(off) = line[start..].find(')') {
+                    out.push((lineno + 1, line[start..start + off].trim().to_string()));
+                    i = start + off;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `--flag` tokens, as (1-based line, flag) pairs. A token starts at a
+/// line start / whitespace / `` ` `` / `[` / `|` / `(` / `"` boundary,
+/// reads `--` plus a letter plus `[a-z0-9-]*`, and never ends with `-`
+/// (so a markdown `---` rule is not a flag).
+pub fn extract_flags(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i + 2 < b.len() {
+            let boundary = i == 0
+                || matches!(b[i - 1], b' ' | b'\t' | b'`' | b'[' | b'|' | b'(' | b'"' | b'=');
+            if boundary && b[i] == b'-' && b[i + 1] == b'-' && b[i + 2].is_ascii_lowercase() {
+                let mut j = i + 2;
+                while j < b.len() && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'-')
+                {
+                    j += 1;
+                }
+                let mut end = j;
+                while end > i + 2 && b[end - 1] == b'-' {
+                    end -= 1;
+                }
+                out.push((lineno + 1, line[i..end].to_string()));
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// The flag set `main.rs` accepts, derived from its `Flags` accessor
+/// calls (`f.opt("x")`, `f.str("x", …)`, `f.u64`/`f.f64`/`f.bool`):
+/// accessor key `tenant_max_jobs` ↔ CLI flag `--tenant-max-jobs`.
+pub fn accepted_flags(main_src: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    out.insert("--help".to_string());
+    for pat in ["opt(\"", "str(\"", "u64(\"", "f64(\"", "bool(\""] {
+        let mut rest = main_src;
+        while let Some(at) = rest.find(pat) {
+            let tail = &rest[at + pat.len()..];
+            if let Some(end) = tail.find('"') {
+                let key = &tail[..end];
+                if !key.is_empty() && key.bytes().all(|c| c.is_ascii_alphanumeric() || c == b'_') {
+                    out.insert(format!("--{}", key.replace('_', "-")));
+                }
+                rest = &tail[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Rule IDs with a catalog row in `docs/ANALYSIS.md`: the first cell of
+/// any table row (`| AR001 | … |`), backticks tolerated.
+pub fn catalog_ids(analysis_md: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in analysis_md.lines() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix('|') else { continue };
+        let Some(cell) = rest.split('|').next() else { continue };
+        let id = cell.trim().trim_matches('`');
+        if is_rule_id(id) {
+            out.insert(id.to_string());
+        }
+    }
+    out
+}
+
+/// Rule IDs cited anywhere in a doc, as (1-based line, id) pairs.
+/// Byte-wise (doc prose is full of multi-byte punctuation; an ID match
+/// is pure ASCII, so a continuation byte can never start one).
+pub fn cited_ids(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i + 5 <= b.len() {
+            let before_ok = i == 0 || !(b[i - 1].is_ascii_alphanumeric());
+            let after_ok = i + 5 == b.len() || !(b[i + 5].is_ascii_alphanumeric());
+            if before_ok && after_ok && is_rule_id_bytes(&b[i..i + 5]) {
+                out.push((lineno + 1, String::from_utf8_lossy(&b[i..i + 5]).into_owned()));
+                i += 5;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn is_rule_id_bytes(b: &[u8]) -> bool {
+    b.len() == 5
+        && ID_FAMILIES.iter().any(|f| f.as_bytes() == &b[..2])
+        && b[2..].iter().all(u8::is_ascii_digit)
+}
+
+fn is_rule_id(s: &str) -> bool {
+    is_rule_id_bytes(s.as_bytes())
+}
+
+/// Run the whole docs pass rooted at the repo top (the directory
+/// holding `README.md` and `docs/`).
+pub fn check_docs(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut files: Vec<PathBuf> = Vec::new();
+    let readme = root.join("README.md");
+    if readme.is_file() {
+        files.push(readme);
+    } else {
+        findings.push(Finding::error(
+            "DC001",
+            readme.display().to_string(),
+            "README.md missing — the repo has no front door",
+        ));
+    }
+    let docs_dir = root.join("docs");
+    let mut doc_pages: Vec<PathBuf> = std::fs::read_dir(&docs_dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| p.extension().map(|e| e == "md").unwrap_or(false))
+                .collect()
+        })
+        .unwrap_or_default();
+    doc_pages.sort();
+    files.extend(doc_pages);
+
+    let accepted = ["rust/src/main.rs", "src/main.rs"]
+        .iter()
+        .map(|p| root.join(p))
+        .find(|p| p.is_file())
+        .and_then(|p| std::fs::read_to_string(&p).ok())
+        .map(|src| accepted_flags(&src));
+    if accepted.is_none() {
+        findings.push(Finding::warning(
+            "DC002",
+            root.display().to_string(),
+            "main.rs not found under rust/src or src — flag check skipped",
+        ));
+    }
+    let catalog = std::fs::read_to_string(docs_dir.join("ANALYSIS.md")).ok().map(|t| catalog_ids(&t));
+    if catalog.is_none() {
+        findings.push(Finding::error(
+            "DC003",
+            docs_dir.join("ANALYSIS.md").display().to_string(),
+            "docs/ANALYSIS.md missing — rule IDs have no catalog to resolve against",
+        ));
+    }
+
+    for file in &files {
+        let rel = file.strip_prefix(root).unwrap_or(file).to_string_lossy().replace('\\', "/");
+        let text = match std::fs::read_to_string(file) {
+            Ok(t) => t,
+            Err(e) => {
+                findings.push(Finding::error("DC001", rel, format!("unreadable: {e}")));
+                continue;
+            }
+        };
+        let parent = file.parent().unwrap_or(root);
+        for (line, target) in extract_links(&text) {
+            let bare = target.split('#').next().unwrap_or("");
+            if bare.is_empty() || bare.contains("://") || bare.starts_with("mailto:") {
+                continue;
+            }
+            if !parent.join(bare).exists() {
+                findings.push(Finding::error(
+                    "DC001",
+                    format!("{rel}:{line}"),
+                    format!("dangling link: {target} does not exist"),
+                ));
+            }
+        }
+        if let Some(accepted) = &accepted {
+            for (line, flag) in extract_flags(&text) {
+                if !accepted.contains(&flag) && !EXTERNAL_FLAGS.contains(&flag.as_str()) {
+                    findings.push(Finding::error(
+                        "DC002",
+                        format!("{rel}:{line}"),
+                        format!("docs mention {flag}, which main.rs does not accept"),
+                    ));
+                }
+            }
+        }
+        if let Some(catalog) = &catalog {
+            for (line, id) in cited_ids(&text) {
+                if !catalog.contains(&id) {
+                    findings.push(Finding::error(
+                        "DC003",
+                        format!("{rel}:{line}"),
+                        format!("rule {id} is cited here but has no docs/ANALYSIS.md catalog row"),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn links_extracted_outside_fences_only() {
+        let md = "\
+see [the api](API.md) and [site](https://example.com#x)\n\
+```\n\
+not a [link](inside_fence.md)\n\
+```\n\
+anchor [here](#section) and [rel](../README.md#top)\n";
+        let links = extract_links(md);
+        let targets: Vec<&str> = links.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(
+            targets,
+            vec!["API.md", "https://example.com#x", "#section", "../README.md#top"]
+        );
+        assert_eq!(links[0].0, 1);
+        assert_eq!(links[3].0, 5);
+    }
+
+    #[test]
+    fn flags_extracted_with_boundaries() {
+        let md = "use `--budget-gb G` or [--no-recover]; a table |--quantum N|\n\
+---\n\
+prose--not-a-flag and --x\n";
+        let flags: Vec<&str> = extract_flags(md).iter().map(|(_, f)| f.as_str()).collect();
+        assert_eq!(flags, vec!["--budget-gb", "--no-recover", "--quantum", "--x"]);
+    }
+
+    #[test]
+    fn accepted_flags_derived_from_accessor_calls() {
+        let src = r#"
+            let a = f.opt("artifacts");
+            let b = f.u64("stage1_steps", 30)?;
+            let c = f.f64("budget_gb", 80.0)?;
+            if f.bool("no_recover") {}
+            let d = f.str("method", "revffn");
+        "#;
+        let acc = accepted_flags(src);
+        for flag in ["--artifacts", "--stage1-steps", "--budget-gb", "--no-recover", "--method", "--help"]
+        {
+            assert!(acc.contains(flag), "missing {flag}: {acc:?}");
+        }
+        assert!(!acc.contains("--revffn"), "string values are not flags");
+    }
+
+    #[test]
+    fn catalog_and_citations_roundtrip() {
+        let catalog_md = "| rule | meaning |\n|---|---|\n| `AR001` | x |\n| LN004 | y |\n";
+        let ids = catalog_ids(catalog_md);
+        assert!(ids.contains("AR001") && ids.contains("LN004"));
+        assert_eq!(ids.len(), 2);
+        let cited = cited_ids("AR001 fires before LN004; RFC2119 and PR007 do not count; XAR001y neither\n");
+        let names: Vec<&str> = cited.iter().map(|(_, i)| i.as_str()).collect();
+        assert_eq!(names, vec!["AR001", "LN004"]);
+    }
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("revffn-docs-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("docs")).unwrap();
+        std::fs::create_dir_all(dir.join("rust/src")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn clean_tree_passes() {
+        let dir = scratch("clean");
+        std::fs::write(
+            dir.join("README.md"),
+            "see [serve](docs/SERVE.md); run `revffn serve --budget-gb 40`. AR001.\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("docs/SERVE.md"), "back to [readme](../README.md)\n").unwrap();
+        std::fs::write(dir.join("docs/ANALYSIS.md"), "| `AR001` | a rule |\n").unwrap();
+        std::fs::write(dir.join("rust/src/main.rs"), "f.f64(\"budget_gb\", 80.0)").unwrap();
+        let f = check_docs(&dir);
+        assert!(f.is_empty(), "{f:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn each_rule_fires_on_its_defect() {
+        let dir = scratch("dirty");
+        std::fs::write(
+            dir.join("README.md"),
+            "dead [link](docs/GONE.md); flag `--no-such-flag`; rule DC999.\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("docs/ANALYSIS.md"), "| `AR001` | a rule |\n").unwrap();
+        std::fs::write(dir.join("rust/src/main.rs"), "f.opt(\"config\")").unwrap();
+        let f = check_docs(&dir);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert!(rules.contains(&"DC001"), "{f:?}");
+        assert!(rules.contains(&"DC002"), "{f:?}");
+        assert!(rules.contains(&"DC003"), "{f:?}");
+        assert_eq!(f.len(), 3, "{f:?}");
+        assert!(f.iter().all(|x| x.subject.starts_with("README.md:1")), "{f:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_readme_and_catalog_reported() {
+        let dir = scratch("missing");
+        std::fs::write(dir.join("rust/src/main.rs"), "f.opt(\"config\")").unwrap();
+        let f = check_docs(&dir);
+        assert!(f.iter().any(|x| x.rule == "DC001" && x.message.contains("front door")), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "DC003" && x.message.contains("catalog")), "{f:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn own_docs_tree_is_clean() {
+        // the acceptance gate: `revffn check --docs` passes on the
+        // shipped docs — enforced here and in the static CI job
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+        if !root.join("README.md").is_file() {
+            return; // packaged crate without the repo docs tree
+        }
+        let f = check_docs(&root);
+        assert!(f.is_empty(), "docs findings: {f:#?}");
+    }
+}

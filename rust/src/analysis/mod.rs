@@ -8,7 +8,7 @@
 //! shape-mismatched `.rvt`, or a truncated program inventory is caught
 //! in the always-on CI job instead of as a runtime crash mid-run.
 //!
-//! Four passes, each a pure function from inputs to [`Finding`]s:
+//! Five passes, each a pure function from inputs to [`Finding`]s:
 //!
 //! * [`contract::check_artifacts`] — artifact dir vs. what `Stepper` /
 //!   `GradAccumulator` / `DeviceState` will feed the programs (AR rules)
@@ -18,6 +18,8 @@
 //!   memory model: does the priced peak fit the budget? (CF rules)
 //! * [`lint::lint_sources`] — comment/string-aware source scan of
 //!   `rust/src/**` enforcing repo invariants (LN rules)
+//! * [`docs::check_docs`] — docs-tree consistency: dangling links,
+//!   flags the binary does not accept, uncataloged rule IDs (DC rules)
 //!
 //! Rule IDs are stable and documented in `docs/ANALYSIS.md`; adding a
 //! rule means adding a `Finding` emission and a catalog row, nothing
@@ -27,12 +29,14 @@
 pub mod ckpt;
 pub mod configcheck;
 pub mod contract;
+pub mod docs;
 pub mod hlo;
 pub mod lint;
 
 pub use ckpt::check_checkpoint;
 pub use configcheck::check_config;
 pub use contract::check_artifacts;
+pub use docs::check_docs;
 pub use lint::lint_sources;
 
 use crate::util::json::{Json, ObjBuilder};

@@ -420,6 +420,34 @@ pub struct ServeConfig {
     /// production — every hook stays a no-op. The `REVFFN_FAULTS`
     /// environment variable overrides this.
     pub faults: Option<String>,
+    /// Default per-tenant cap on concurrently admitted jobs (0 =
+    /// unlimited). Applies to every tenant without a `tenants` override.
+    pub tenant_max_jobs: usize,
+    /// Default per-tenant share of the device budget, GB (0 =
+    /// unlimited): the summed priced peak-VRAM of one tenant's admitted
+    /// jobs must stay within it.
+    pub tenant_share_gb: f64,
+    /// Per-tenant quota overrides (`tenants` JSON array). Tenants not
+    /// listed here get the `tenant_max_jobs`/`tenant_share_gb` defaults
+    /// at fairness weight 1.
+    pub tenants: Vec<TenantQuotaCfg>,
+    /// Max event lines per `events` response page; larger client
+    /// `limit`s are clamped down to it. Bounds the copy made under the
+    /// board lock and the burst written to any one connection.
+    pub events_page_size: usize,
+}
+
+/// One per-tenant quota override in [`ServeConfig::tenants`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantQuotaCfg {
+    /// Tenant name as sent in the `submit` verb's `tenant` key.
+    pub name: String,
+    /// Max concurrently admitted jobs (0 = unlimited).
+    pub max_jobs: usize,
+    /// Device-GB share (0 = unlimited).
+    pub share_gb: f64,
+    /// Fairness weight for weighted-deficit ordering (> 0; default 1).
+    pub weight: f64,
 }
 
 impl Default for ServeConfig {
@@ -443,6 +471,10 @@ impl Default for ServeConfig {
             conn_limit: 64,
             io_timeout_ms: 60_000,
             faults: None,
+            tenant_max_jobs: 0,
+            tenant_share_gb: 0.0,
+            tenants: Vec::new(),
+            events_page_size: 256,
         }
     }
 }
@@ -513,6 +545,30 @@ impl ServeConfig {
         if let Some(v) = j.get("faults").and_then(Json::as_str) {
             cfg.faults = Some(v.to_string());
         }
+        if let Some(v) = j.get("tenant_max_jobs").and_then(Json::as_usize) {
+            cfg.tenant_max_jobs = v;
+        }
+        if let Some(v) = j.get("tenant_share_gb").and_then(Json::as_f64) {
+            cfg.tenant_share_gb = v;
+        }
+        if let Some(Json::Arr(items)) = j.get("tenants") {
+            for item in items {
+                let name = item
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Config("tenants[] entry needs a \"name\"".into()))?
+                    .to_string();
+                cfg.tenants.push(TenantQuotaCfg {
+                    name,
+                    max_jobs: item.get("max_jobs").and_then(Json::as_usize).unwrap_or(0),
+                    share_gb: item.get("share_gb").and_then(Json::as_f64).unwrap_or(0.0),
+                    weight: item.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+                });
+            }
+        }
+        if let Some(v) = j.get("events_page_size").and_then(Json::as_usize) {
+            cfg.events_page_size = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -535,9 +591,27 @@ impl ServeConfig {
             .num("retry_max_ms", self.retry_max_ms as f64)
             .num("quantum_deadline_ms", self.quantum_deadline_ms as f64)
             .num("conn_limit", self.conn_limit as f64)
-            .num("io_timeout_ms", self.io_timeout_ms as f64);
+            .num("io_timeout_ms", self.io_timeout_ms as f64)
+            .num("tenant_max_jobs", self.tenant_max_jobs as f64)
+            .num("tenant_share_gb", self.tenant_share_gb)
+            .num("events_page_size", self.events_page_size as f64);
         if let Some(f) = &self.faults {
             b = b.str("faults", f.clone());
+        }
+        if !self.tenants.is_empty() {
+            let items = self
+                .tenants
+                .iter()
+                .map(|t| {
+                    ObjBuilder::new()
+                        .str("name", t.name.clone())
+                        .num("max_jobs", t.max_jobs as f64)
+                        .num("share_gb", t.share_gb)
+                        .num("weight", t.weight)
+                        .build()
+                })
+                .collect();
+            b = b.val("tenants", Json::Arr(items));
         }
         b.build()
     }
@@ -558,6 +632,26 @@ impl ServeConfig {
         if let Some(spec) = &self.faults {
             // surface a bad chaos plan at config time, not mid-drill
             crate::util::faults::FaultPlan::parse(spec)?;
+        }
+        if self.tenant_share_gb.is_nan() || self.tenant_share_gb < 0.0 {
+            return Err(Error::Config("tenant_share_gb must be >= 0 (0 = unlimited)".into()));
+        }
+        if self.events_page_size == 0 {
+            return Err(Error::Config("events_page_size must be >= 1".into()));
+        }
+        for t in &self.tenants {
+            if t.name.is_empty() {
+                return Err(Error::Config("tenants[] entry needs a non-empty name".into()));
+            }
+            if t.share_gb.is_nan() || t.share_gb < 0.0 {
+                return Err(Error::Config(format!(
+                    "tenant {:?}: share_gb must be >= 0 (0 = unlimited)",
+                    t.name
+                )));
+            }
+            if !(t.weight > 0.0) {
+                return Err(Error::Config(format!("tenant {:?}: weight must be > 0", t.name)));
+            }
         }
         self.assumptions()?;
         Ok(())
@@ -740,6 +834,52 @@ mod tests {
         assert_eq!(back.conn_limit, 0);
         assert_eq!(back.io_timeout_ms, 0);
         assert_eq!(back.faults.as_deref(), Some("pjrt_execute@3:error; ckpt_write@1:torn"));
+    }
+
+    #[test]
+    fn serve_tenant_quota_keys_roundtrip_with_defaults() {
+        let c = ServeConfig::from_json_str("{}").unwrap();
+        assert_eq!(c.tenant_max_jobs, 0, "quotas default to unlimited");
+        assert_eq!(c.tenant_share_gb, 0.0);
+        assert!(c.tenants.is_empty());
+        assert_eq!(c.events_page_size, 256);
+
+        let c = ServeConfig::from_json_str(
+            r#"{"tenant_max_jobs": 2, "tenant_share_gb": 40.0, "events_page_size": 16,
+                "tenants": [
+                    {"name": "team-a", "max_jobs": 4, "share_gb": 60.0, "weight": 2.0},
+                    {"name": "team-b"}
+                ]}"#,
+        )
+        .unwrap();
+        let back = ServeConfig::from_json_str(&c.to_json().to_string()).unwrap();
+        assert_eq!(back.tenant_max_jobs, 2);
+        assert_eq!(back.tenant_share_gb, 40.0);
+        assert_eq!(back.events_page_size, 16);
+        assert_eq!(back.tenants.len(), 2);
+        assert_eq!(
+            back.tenants[0],
+            TenantQuotaCfg { name: "team-a".into(), max_jobs: 4, share_gb: 60.0, weight: 2.0 }
+        );
+        assert_eq!(
+            back.tenants[1],
+            TenantQuotaCfg { name: "team-b".into(), max_jobs: 0, share_gb: 0.0, weight: 1.0 },
+            "omitted override keys mean unlimited at weight 1"
+        );
+    }
+
+    #[test]
+    fn serve_tenant_quota_keys_reject_bad_values() {
+        assert!(ServeConfig::from_json_str(r#"{"tenant_share_gb": -1}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"events_page_size": 0}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"tenants": [{"max_jobs": 1}]}"#).is_err());
+        assert!(ServeConfig::from_json_str(r#"{"tenants": [{"name": ""}]}"#).is_err());
+        assert!(
+            ServeConfig::from_json_str(r#"{"tenants": [{"name": "t", "weight": 0}]}"#).is_err()
+        );
+        assert!(
+            ServeConfig::from_json_str(r#"{"tenants": [{"name": "t", "share_gb": -2}]}"#).is_err()
+        );
     }
 
     #[test]

@@ -63,12 +63,16 @@ COMMANDS:
                 [--retry-max-attempts N] [--retry-base-ms MS]
                 [--retry-max-ms MS] [--quantum-deadline-ms MS]
                 [--conn-limit N] [--io-timeout-ms MS] [--faults SPEC]
-                [--config FILE.json]
+                [--tenant-max-jobs N] [--tenant-share-gb G]
+                [--events-page-size N] [--config FILE.json]
                 (supervised retries, watchdog, fault injection:
-                docs/ROBUSTNESS.md; REVFFN_FAULTS overrides --faults)
+                docs/ROBUSTNESS.md; REVFFN_FAULTS overrides --faults;
+                priority/tenant scheduling and per-tenant `tenants`
+                overrides: docs/SERVE.md)
   check         [--artifacts DIR] [--checkpoint FILE.rvt] [--method M]
                 [--variant V] [--config FILE.json] [--budget-gb G]
-                [--assumptions A] [--lint] [--src DIR] [--json]
+                [--assumptions A] [--lint] [--src DIR] [--docs]
+                [--docs-root DIR] [--json]
                 (static analysis, no device needed — `check --help`,
                 docs/ANALYSIS.md)
 
@@ -300,6 +304,13 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     if let Some(v) = f.opt("faults") {
         opts.faults = Some(v);
     }
+    opts.tenant_max_jobs =
+        f.u64("tenant_max_jobs", opts.tenant_max_jobs as u64).map_err(|e| anyhow!("{e}"))? as usize;
+    opts.tenant_share_gb =
+        f.f64("tenant_share_gb", opts.tenant_share_gb).map_err(|e| anyhow!("{e}"))?;
+    opts.events_page_size = f
+        .u64("events_page_size", opts.events_page_size as u64)
+        .map_err(|e| anyhow!("{e}"))? as usize;
     opts.validate().map_err(|e| anyhow!("{e}"))?;
     let handle = revffn::serve::serve(opts.clone()).map_err(|e| anyhow!("{e}"))?;
     eprintln!(
@@ -337,6 +348,11 @@ PASSES (at least one):
                         incl. LN004: no raw thread::sleep outside
                         util/retry.rs; [--src DIR] defaults to rust/src
                         or src)
+  --docs                docs-consistency pass over README.md + docs/*.md
+                        (DC rules: dangling relative links, CLI flags the
+                        binary does not accept, rule IDs cited but missing
+                        from the catalog; [--docs-root DIR] defaults to
+                        the repo root)
 
 OUTPUT: human text, or --json for
   {\"ok\", \"errors\", \"warnings\", \"findings\": [{rule, severity, subject, message}]}
@@ -389,8 +405,18 @@ fn cmd_check(f: &Flags) -> Result<()> {
         findings.extend(revffn::analysis::lint_sources(&src));
         ran_any = true;
     }
+    if f.bool("docs") {
+        let root = match f.opt("docs_root") {
+            Some(s) => PathBuf::from(s),
+            // works from the repo root and from rust/
+            None if PathBuf::from("docs").is_dir() => PathBuf::from("."),
+            None => PathBuf::from(".."),
+        };
+        findings.extend(revffn::analysis::check_docs(&root));
+        ran_any = true;
+    }
     if !ran_any {
-        bail!("nothing to check — pass at least one of --artifacts / --checkpoint / --config / --lint\n{CHECK_USAGE}");
+        bail!("nothing to check — pass at least one of --artifacts / --checkpoint / --config / --lint / --docs\n{CHECK_USAGE}");
     }
 
     let report = revffn::analysis::Report::new(findings);

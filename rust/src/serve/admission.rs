@@ -12,6 +12,7 @@
 //! releases the reservation when the job finishes, fails, or is
 //! cancelled.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::engine::Method;
@@ -153,6 +154,142 @@ impl Admission {
     }
 }
 
+// ----------------------------------------------------------------------
+// Per-tenant quotas + weighted-deficit fairness
+// ----------------------------------------------------------------------
+
+/// Quota policy for one tenant (or the default applied to any tenant
+/// without an override). Zero means "unlimited" for both caps, so the
+/// single-tenant deployment keeps PR 4's behavior untouched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantPolicy {
+    /// Max concurrently *admitted* jobs (queued jobs don't count).
+    pub max_jobs: usize,
+    /// Max summed device peak-GB across the tenant's admitted jobs —
+    /// the tenant's share of the device budget, in the same
+    /// `memory::model` pricing units the global ledger uses.
+    pub share_gb: f64,
+    /// Fairness weight for deficit accounting (must be > 0; a tenant
+    /// with weight 2 is owed twice the device-GB throughput of a
+    /// weight-1 tenant before the scheduler prefers the latter).
+    pub weight: f64,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { max_jobs: 0, share_gb: 0.0, weight: 1.0 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct TenantLedger {
+    jobs: usize,
+    gb: f64,
+    /// Normalized service received: Σ admitted peak_gb / weight. The
+    /// admission picker always prefers the lowest-debt tenant, and debt
+    /// persists across a tenant going idle (the carry-over), so a heavy
+    /// tenant cannot starve others by resubmitting faster.
+    debt: f64,
+}
+
+/// Per-tenant admission ledgers. The global [`Admission`] budget stays
+/// the hard capacity gate; this layer enforces *fairness* on top of it:
+/// hard per-tenant caps (`max_jobs`, `share_gb`) plus weighted-deficit
+/// ordering for the scheduler's pick among waiting tenants.
+#[derive(Debug, Clone, Default)]
+pub struct Tenants {
+    default_policy: TenantPolicy,
+    overrides: BTreeMap<String, TenantPolicy>,
+    ledgers: BTreeMap<String, TenantLedger>,
+}
+
+impl Tenants {
+    pub fn new(default_policy: TenantPolicy) -> Self {
+        Tenants { default_policy, ..Default::default() }
+    }
+
+    /// Install a per-tenant override (config `tenants` table).
+    pub fn set_policy(&mut self, tenant: &str, policy: TenantPolicy) {
+        self.overrides.insert(tenant.to_string(), policy);
+    }
+
+    pub fn policy(&self, tenant: &str) -> &TenantPolicy {
+        self.overrides.get(tenant).unwrap_or(&self.default_policy)
+    }
+
+    /// Would admitting a `peak_gb` job keep `tenant` within its quota?
+    /// (The global budget is checked separately by [`Admission`].) The
+    /// share comparison carries the same relative epsilon as the global
+    /// ledger so release/re-admit cycles never flip on float rounding.
+    pub fn admits(&self, tenant: &str, peak_gb: f64) -> bool {
+        let pol = self.policy(tenant);
+        let led = self.ledgers.get(tenant);
+        let (jobs, gb) = led.map_or((0, 0.0), |l| (l.jobs, l.gb));
+        let jobs_ok = pol.max_jobs == 0 || jobs < pol.max_jobs;
+        let share_ok = pol.share_gb == 0.0 || gb + peak_gb <= pol.share_gb * (1.0 + 1e-9);
+        jobs_ok && share_ok
+    }
+
+    /// Record an admission: bumps the tenant's live usage and its
+    /// normalized debt (`peak_gb / weight`). A tenant first seen here
+    /// joins at the lowest live debt, not at zero — otherwise renaming
+    /// yourself would reset your place in line.
+    pub fn charge(&mut self, tenant: &str, peak_gb: f64) {
+        let floor = self.debt_floor();
+        let weight = self.policy(tenant).weight.max(1e-9);
+        let led = self.ledgers.entry(tenant.to_string()).or_insert(TenantLedger {
+            jobs: 0,
+            gb: 0.0,
+            debt: floor,
+        });
+        led.jobs += 1;
+        led.gb += peak_gb;
+        led.debt += peak_gb / weight;
+    }
+
+    /// Return a leaving job's share. Usage snaps to zero when the
+    /// tenant's last job leaves; debt is deliberately kept — it IS the
+    /// carry-over.
+    pub fn release(&mut self, tenant: &str, peak_gb: f64) {
+        if let Some(led) = self.ledgers.get_mut(tenant) {
+            led.jobs = led.jobs.saturating_sub(1);
+            led.gb = if led.jobs == 0 { 0.0 } else { (led.gb - peak_gb).max(0.0) };
+        }
+    }
+
+    /// Normalized service debt used to order tenants (lower = picked
+    /// first). Unseen tenants report the current floor.
+    pub fn debt(&self, tenant: &str) -> f64 {
+        self.ledgers.get(tenant).map_or_else(|| self.debt_floor(), |l| l.debt)
+    }
+
+    /// Currently admitted jobs of one tenant.
+    pub fn jobs(&self, tenant: &str) -> usize {
+        self.ledgers.get(tenant).map_or(0, |l| l.jobs)
+    }
+
+    /// Currently committed device-GB of one tenant.
+    pub fn committed_gb(&self, tenant: &str) -> f64 {
+        self.ledgers.get(tenant).map_or(0.0, |l| l.gb)
+    }
+
+    /// Lowest debt among tenants with live jobs (0 when none): the
+    /// join-point for newcomers.
+    fn debt_floor(&self) -> f64 {
+        let floor = self
+            .ledgers
+            .values()
+            .filter(|l| l.jobs > 0)
+            .map(|l| l.debt)
+            .fold(f64::INFINITY, f64::min);
+        if floor.is_finite() {
+            floor
+        } else {
+            0.0
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +416,96 @@ mod tests {
         adm.release(0.3, 0.3);
         assert_eq!(adm.committed_gb(), 0.0);
         assert_eq!(adm.host_committed_gb(), 0.0);
+    }
+
+    #[test]
+    fn tenant_max_jobs_caps_concurrency() {
+        let mut t = Tenants::new(TenantPolicy { max_jobs: 2, share_gb: 0.0, weight: 1.0 });
+        assert!(t.admits("a", 1.0));
+        t.charge("a", 1.0);
+        assert!(t.admits("a", 1.0));
+        t.charge("a", 1.0);
+        assert!(!t.admits("a", 1.0), "third concurrent job must be quota-blocked");
+        assert!(t.admits("b", 1.0), "another tenant is unaffected");
+        t.release("a", 1.0);
+        assert!(t.admits("a", 1.0), "released slot re-admits");
+    }
+
+    #[test]
+    fn tenant_share_gb_caps_device_footprint() {
+        let mut t = Tenants::new(TenantPolicy { max_jobs: 0, share_gb: 5.0, weight: 1.0 });
+        assert!(t.admits("a", 3.0));
+        t.charge("a", 3.0);
+        assert!(t.admits("a", 2.0), "exactly at share must fit");
+        t.charge("a", 2.0);
+        assert!(!t.admits("a", 0.5));
+        assert!((t.committed_gb("a") - 5.0).abs() < 1e-12);
+        t.release("a", 3.0);
+        assert!(t.admits("a", 3.0));
+    }
+
+    #[test]
+    fn default_policy_is_unlimited() {
+        let mut t = Tenants::default();
+        for _ in 0..100 {
+            assert!(t.admits("solo", 10.0));
+            t.charge("solo", 10.0);
+        }
+        assert_eq!(t.jobs("solo"), 100);
+    }
+
+    #[test]
+    fn per_tenant_override_beats_default() {
+        let mut t = Tenants::new(TenantPolicy::default());
+        t.set_policy("capped", TenantPolicy { max_jobs: 1, share_gb: 0.0, weight: 1.0 });
+        t.charge("capped", 1.0);
+        assert!(!t.admits("capped", 1.0));
+        assert!(t.admits("free", 1.0));
+    }
+
+    #[test]
+    fn debt_orders_heavy_tenant_behind_light_one() {
+        let mut t = Tenants::default();
+        t.charge("heavy", 8.0);
+        t.charge("light", 1.0);
+        assert!(t.debt("heavy") > t.debt("light"));
+        // release does NOT erase debt — the carry-over
+        t.release("heavy", 8.0);
+        assert!(t.debt("heavy") > t.debt("light"));
+    }
+
+    #[test]
+    fn weight_scales_debt_accrual() {
+        let mut t = Tenants::new(TenantPolicy::default());
+        t.set_policy("vip", TenantPolicy { max_jobs: 0, share_gb: 0.0, weight: 4.0 });
+        t.charge("vip", 4.0);
+        t.charge("std", 4.0);
+        assert!(
+            t.debt("vip") < t.debt("std"),
+            "same GB must cost a weight-4 tenant a quarter of the debt"
+        );
+    }
+
+    #[test]
+    fn newcomer_joins_at_live_floor_not_zero() {
+        let mut t = Tenants::default();
+        t.charge("a", 6.0);
+        t.charge("b", 9.0);
+        // newcomer starts at the lowest live debt (a's 6.0), so it gets
+        // preference over b but no infinite backlog of credit
+        assert!((t.debt("new") - 6.0).abs() < 1e-12);
+        t.charge("new", 1.0);
+        assert!(t.debt("new") > t.debt("a"));
+        assert!(t.debt("new") < t.debt("b"));
+    }
+
+    #[test]
+    fn tenant_usage_snaps_to_zero_when_idle() {
+        let mut t = Tenants::default();
+        t.charge("a", 0.1 + 0.2); // float-noisy price
+        t.release("a", 0.3);
+        assert_eq!(t.committed_gb("a"), 0.0);
+        assert_eq!(t.jobs("a"), 0);
     }
 
     #[test]

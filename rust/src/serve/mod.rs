@@ -10,12 +10,17 @@
 //!   its geometry/method and admits while the priced peaks fit
 //!   `budget_gb`. RevFFN jobs price depth-independent activations, so a
 //!   fixed budget admits more of them than SFT jobs (unit-tested).
-//! * [`scheduler`] — a cooperative round-robin [`Scheduler`] over owned
-//!   [`crate::engine::Run`]s, with per-job `DeviceState` handoff (pin
+//!   Per-tenant quotas ([`admission::Tenants`]) bound one tenant's
+//!   concurrent jobs and device-GB share, with weighted-deficit debt
+//!   deciding who admits first within a class.
+//! * [`scheduler`] — a cooperative [`Scheduler`] over owned
+//!   [`crate::engine::Run`]s: dispatch by priority class then earliest
+//!   deadline (round-robin on ties), per-job `DeviceState` handoff (pin
 //!   buffers on resume, release via a lazy literal sync on preemption)
 //!   and deterministic interleaving given the submission order.
 //! * [`protocol`] — the JSON-lines wire format (`submit` / `status` /
-//!   `events` / `cancel` / `shutdown`), built on the in-crate codec.
+//!   `events` / `cancel` / `shutdown`), built on the in-crate codec,
+//!   with keyset-cursor pagination for `events` (docs/SERVE.md).
 //! * [`server`] — the `std::net` TCP control plane streaming each job's
 //!   `StepEvent`s as NDJSON, with per-socket timeouts and a connection
 //!   cap so slow or hostile clients cannot wedge the plane.
@@ -35,8 +40,8 @@ pub mod scheduler;
 pub mod server;
 pub mod supervise;
 
-pub use admission::Admission;
-pub use protocol::{JobState, Request};
-pub use scheduler::{Board, EventLog, JobView, Scheduler, SubmitOutcome};
+pub use admission::{Admission, TenantPolicy, Tenants};
+pub use protocol::{JobState, Priority, Request};
+pub use scheduler::{Board, EventLog, JobView, Scheduler, SubmitMeta, SubmitOutcome};
 pub use server::{serve, ServerHandle};
 pub use supervise::{HealthProbe, RetryPolicy, Supervision};

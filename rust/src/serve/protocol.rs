@@ -1,15 +1,25 @@
 //! The serve wire protocol: JSON-lines (NDJSON) over TCP.
 //!
-//! Every request and response is one JSON object per line. Four verbs:
+//! Every request and response is one JSON object per line. The verbs:
 //!
-//! * `{"cmd":"submit","config":{…RunConfig…},"name":"…"}` →
-//!   `{"ok":true,"job":"job-0","admitted":true,"peak_gb":…}`
+//! * `{"cmd":"submit","config":{…RunConfig…},"name":"…",
+//!   "priority":"interactive|normal|batch","tenant":"…",
+//!   "deadline_ms":N}` →
+//!   `{"ok":true,"job":"job-0","admitted":true,"peak_gb":…,
+//!   "priority":…,"tenant":…,"state":…}`. Priority selects the
+//!   scheduling class (default `normal`); within a class jobs order by
+//!   earliest deadline (`deadline_ms`, relative to submit; absent =
+//!   latest). `tenant` (default `"default"`) is the quota-accounting
+//!   identity.
 //! * `{"cmd":"status"}` / `{"cmd":"status","job":"job-0"}` → one
 //!   status object with the budget ledger and per-job snapshots.
-//! * `{"cmd":"events","job":"job-0","from":0,"follow":true}` → streams
-//!   the job's `StepEvent`s as NDJSON lines, then a
-//!   `{"job":…,"done":true,…}` terminator (follow=false returns what
-//!   exists and terminates immediately).
+//! * `{"cmd":"events","job":"job-0","after_seq":C,"limit":N,
+//!   "follow":false}` → a keyset-paginated page: up to `limit` event
+//!   lines with `seq > C`, then a `{"page":true,…,"next_cursor":…}`
+//!   footer — pass `next_cursor` back as the next `after_seq`.
+//!   `follow:true` streams live in bounded batches and ends with a
+//!   `{"job":…,"done":true,…}` terminator. The legacy inclusive `from`
+//!   cursor is still accepted (`after_seq` wins when both appear).
 //! * `{"cmd":"cancel","job":"job-0"}` → `{"ok":true,"cancelled":…}`.
 //! * `{"cmd":"resume","job":"job-0"}` → resubmits a
 //!   failed/cancelled/quarantined job from its latest periodic
@@ -20,8 +30,12 @@
 //!
 //! Everything (de)serializes through the in-crate `util::json` codec —
 //! the wire format needs no dependency the build doesn't already carry.
-//! Non-finite floats (the pre-pass's NaN eval loss) serialize as JSON
-//! `null`, never as bare `NaN`.
+//! The server dispatches requests through [`Request::from_line_fast`],
+//! which lazily scans the raw bytes (`Json::get_path`) for the
+//! scalar-only verbs and only builds a full tree for `submit` (whose
+//! `config` subtree needs one anyway) or when the lazy scan comes up
+//! short. Non-finite floats (the pre-pass's NaN eval loss) serialize as
+//! JSON `null`, never as bare `NaN`.
 
 use crate::engine::StepEvent;
 use crate::error::{Error, Result};
@@ -82,26 +96,104 @@ impl JobState {
     }
 }
 
+/// Scheduling class of a submitted job. Higher classes are dispatched
+/// first at every quantum boundary; within a class, earliest deadline
+/// wins and submit order breaks ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Throughput work: runs when nothing more urgent is runnable.
+    Batch,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Latency-sensitive work: overtakes running lower-class jobs at
+    /// the next quantum boundary (preemption reuses suspend/resume).
+    Interactive,
+}
+
+impl Priority {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Normal => "normal",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "batch" => Ok(Priority::Batch),
+            "normal" => Ok(Priority::Normal),
+            "interactive" => Ok(Priority::Interactive),
+            other => Err(Error::Parse(format!("unknown priority {other:?}"))),
+        }
+    }
+
+    /// Numeric class rank — larger runs first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            Priority::Batch => 0,
+            Priority::Normal => 1,
+            Priority::Interactive => 2,
+        }
+    }
+}
+
 /// One parsed control-plane request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Submit { config: Json, name: Option<String> },
-    Status { job: Option<String> },
-    Events { job: String, from: u64, follow: bool },
-    Cancel { job: String },
+    Submit {
+        config: Json,
+        name: Option<String>,
+        /// Scheduling class (wire default: `normal`).
+        priority: Priority,
+        /// Quota-accounting identity (wire default: `"default"`).
+        tenant: Option<String>,
+        /// Within-class deadline, milliseconds from submit. Absent =
+        /// no deadline (orders after every job that has one).
+        deadline_ms: Option<u64>,
+    },
+    Status {
+        job: Option<String>,
+    },
+    Events {
+        job: String,
+        /// First sequence number to deliver (resolved cursor: the wire
+        /// carries the exclusive `after_seq`, or the legacy inclusive
+        /// `from`).
+        from: u64,
+        /// Page size cap; `None` = server default. The server clamps
+        /// this to its configured maximum either way.
+        limit: Option<u64>,
+        follow: bool,
+    },
+    Cancel {
+        job: String,
+    },
     /// Resubmit a failed/cancelled/quarantined job from its latest
     /// checkpoint.
-    Resume { job: String },
+    Resume {
+        job: String,
+    },
     Shutdown,
 }
 
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Submit { config, name } => {
+            Request::Submit { config, name, priority, tenant, deadline_ms } => {
                 let mut b = ObjBuilder::new().str("cmd", "submit").val("config", config.clone());
                 if let Some(n) = name {
                     b = b.str("name", n.clone());
+                }
+                if *priority != Priority::default() {
+                    b = b.str("priority", priority.name());
+                }
+                if let Some(t) = tenant {
+                    b = b.str("tenant", t.clone());
+                }
+                if let Some(d) = deadline_ms {
+                    b = b.num("deadline_ms", *d as f64);
                 }
                 b.build()
             }
@@ -112,12 +204,17 @@ impl Request {
                 }
                 b.build()
             }
-            Request::Events { job, from, follow } => ObjBuilder::new()
-                .str("cmd", "events")
-                .str("job", job.clone())
-                .num("from", *from as f64)
-                .bool("follow", *follow)
-                .build(),
+            Request::Events { job, from, limit, follow } => {
+                let mut b = ObjBuilder::new().str("cmd", "events").str("job", job.clone());
+                if *from > 0 {
+                    // exclusive keyset cursor: resume after seq from-1
+                    b = b.num("after_seq", (*from - 1) as f64);
+                }
+                if let Some(n) = limit {
+                    b = b.num("limit", *n as f64);
+                }
+                b.bool("follow", *follow).build()
+            }
             Request::Cancel { job } => {
                 ObjBuilder::new().str("cmd", "cancel").str("job", job.clone()).build()
             }
@@ -134,13 +231,23 @@ impl Request {
             "submit" => Ok(Request::Submit {
                 config: j.get("config").cloned().unwrap_or_else(|| Json::Obj(Default::default())),
                 name: j.get("name").and_then(Json::as_str).map(str::to_string),
+                priority: match j.get("priority").and_then(Json::as_str) {
+                    Some(p) => Priority::parse(p)?,
+                    None => Priority::default(),
+                },
+                tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
+                deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
             }),
             "status" => Ok(Request::Status {
                 job: j.get("job").and_then(Json::as_str).map(str::to_string),
             }),
             "events" => Ok(Request::Events {
                 job: j.str_of("job")?,
-                from: j.get("from").and_then(Json::as_u64).unwrap_or(0),
+                from: resolve_cursor(
+                    j.get("after_seq").and_then(Json::as_f64),
+                    j.get("from").and_then(Json::as_f64),
+                ),
+                limit: j.get("limit").and_then(Json::as_u64),
                 follow: j.get("follow").and_then(Json::as_bool).unwrap_or(true),
             }),
             "cancel" => Ok(Request::Cancel { job: j.str_of("job")? }),
@@ -157,6 +264,59 @@ impl Request {
 
     pub fn from_line(line: &str) -> Result<Request> {
         Self::from_json(&json::parse(line.trim())?)
+    }
+
+    /// Hot-path parse: lazily scan the raw bytes for the scalar-only
+    /// verbs (`status`/`events`/`cancel`/`resume`/`shutdown`) without
+    /// building a `Json` tree, falling back to the full parser for
+    /// `submit` (its `config` subtree needs a tree anyway), for unknown
+    /// or malformed input (so error messages stay identical), and for
+    /// any field the scan cannot settle. On every line the full parser
+    /// accepts, this returns exactly what [`Request::from_line`] would
+    /// (pinned by the wire property tests); on lines it rejects, the
+    /// lazy path may still salvage a scalar verb whose scanned spine is
+    /// well-formed — the fields the strict parser would have rejected
+    /// were unused either way.
+    pub fn from_line_fast(line: &str) -> Result<Request> {
+        let t = line.trim();
+        match Json::path_str(t, &["cmd"]).as_deref() {
+            Some("status") => Ok(Request::Status { job: Json::path_str(t, &["job"]) }),
+            Some("events") => match Json::path_str(t, &["job"]) {
+                // job is required: let the full parser produce its error
+                None => Self::from_line(line),
+                Some(job) => Ok(Request::Events {
+                    job,
+                    from: resolve_cursor(
+                        Json::path_f64(t, &["after_seq"]),
+                        Json::path_f64(t, &["from"]),
+                    ),
+                    limit: Json::path_f64(t, &["limit"]).map(|n| n as u64),
+                    follow: Json::path_bool(t, &["follow"]).unwrap_or(true),
+                }),
+            },
+            Some("cancel") => match Json::path_str(t, &["job"]) {
+                None => Self::from_line(line),
+                Some(job) => Ok(Request::Cancel { job }),
+            },
+            Some("resume") => match Json::path_str(t, &["job"]) {
+                None => Self::from_line(line),
+                Some(job) => Ok(Request::Resume { job }),
+            },
+            Some("shutdown") => Ok(Request::Shutdown),
+            _ => Self::from_line(line),
+        }
+    }
+}
+
+/// Resolve the events cursor: exclusive `after_seq` wins over the
+/// legacy inclusive `from`; both absent = 0 (start of log). The f64 →
+/// u64 casts saturate exactly like `Json::as_u64` on the full-parse
+/// path, so hostile numbers (negative, 1e308, NaN) resolve identically.
+fn resolve_cursor(after_seq: Option<f64>, from: Option<f64>) -> u64 {
+    match (after_seq, from) {
+        (Some(a), _) => (a as u64).saturating_add(1),
+        (None, Some(f)) => f as u64,
+        (None, None) => 0,
     }
 }
 
@@ -212,13 +372,39 @@ pub fn event_json(job: &str, seq: u64, ev: &StepEvent) -> Json {
     }
 }
 
-/// End-of-stream marker for the `events` verb.
+/// End-of-stream marker for the `events` verb (`follow:true` only — a
+/// follower sees it once the job is terminal and fully drained).
 pub fn done_json(job: &str, state: JobState, events: u64) -> Json {
     ObjBuilder::new()
         .str("job", job)
         .bool("done", true)
         .str("state", state.name())
         .num("events", events as f64)
+        .build()
+}
+
+/// Page footer for a non-follow `events` request: `count` event lines
+/// were delivered and `next_cursor` is the cursor for the next page —
+/// pass it back as `from` verbatim, or equivalently pass the last
+/// delivered line's `seq` as `after_seq` (`next_cursor` is always that
+/// seq + 1; when `count` is 0 it echoes the request's resolved cursor,
+/// so retrying with it is exact even at the start of the log).
+/// `done:true` means the job is terminal and no event past this page
+/// will ever exist — stop paging.
+pub fn events_page_json(
+    job: &str,
+    count: u64,
+    next_cursor: u64,
+    state: JobState,
+    done: bool,
+) -> Json {
+    ObjBuilder::new()
+        .str("job", job)
+        .bool("page", true)
+        .num("count", count as f64)
+        .num("next_cursor", next_cursor as f64)
+        .str("state", state.name())
+        .bool("done", done)
         .build()
 }
 
@@ -242,6 +428,12 @@ pub struct JobSnapshot {
     pub attempts: u64,
     /// When the next supervised retry is due (`Retrying` only).
     pub retry_at: Option<std::time::Instant>,
+    /// Scheduling class.
+    pub priority: Priority,
+    /// Quota-accounting identity.
+    pub tenant: String,
+    /// Requested deadline (ms from submit), if any.
+    pub deadline_ms: Option<u64>,
 }
 
 pub fn snapshot_json(s: &JobSnapshot) -> Json {
@@ -256,6 +448,12 @@ pub fn snapshot_json(s: &JobSnapshot) -> Json {
         .val("eval_loss", s.eval_loss.map_or(Json::Null, |x| num_or_null(x as f64)))
         .num("events", s.events as f64)
         .num("attempts", s.attempts as f64)
+        .str("priority", s.priority.name())
+        .str("tenant", s.tenant.clone())
+        .val(
+            "deadline_ms",
+            s.deadline_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
+        )
         .val(
             "next_retry_ms",
             s.retry_at.map_or(Json::Null, |at| {
@@ -299,13 +497,23 @@ pub fn error_json(message: &str) -> Json {
 /// Response to a successful `submit`. `state` disambiguates
 /// `admitted:false` — `queued` will run later; `failed` never will
 /// (activation errored; the `status` verb carries the error text).
-pub fn submitted_json(job: &str, admitted: bool, peak_gb: f64, state: JobState) -> Json {
+/// Echoes the scheduling class and tenant the job was accounted under.
+pub fn submitted_json(
+    job: &str,
+    admitted: bool,
+    peak_gb: f64,
+    state: JobState,
+    priority: Priority,
+    tenant: &str,
+) -> Json {
     ObjBuilder::new()
         .bool("ok", true)
         .str("job", job)
         .bool("admitted", admitted)
         .num("peak_gb", peak_gb)
         .str("state", state.name())
+        .str("priority", priority.name())
+        .str("tenant", tenant)
         .build()
 }
 
@@ -333,20 +541,32 @@ mod tests {
     use super::*;
     use crate::coordinator::StepRecord;
 
+    fn submit(config: &str, name: Option<&str>) -> Request {
+        Request::Submit {
+            config: json::parse(config).unwrap(),
+            name: name.map(str::to_string),
+            priority: Priority::default(),
+            tenant: None,
+            deadline_ms: None,
+        }
+    }
+
     #[test]
     fn requests_roundtrip_through_lines() {
         let cases = vec![
-            Request::Submit {
-                config: json::parse(r#"{"method":"revffn","eval_every":0}"#).unwrap(),
-                name: Some("job-a".into()),
-            },
+            submit(r#"{"method":"revffn","eval_every":0}"#, Some("job-a")),
+            submit("{}", None),
             Request::Submit {
                 config: json::parse("{}").unwrap(),
-                name: None,
+                name: Some("hot".into()),
+                priority: Priority::Interactive,
+                tenant: Some("team-a".into()),
+                deadline_ms: Some(30_000),
             },
             Request::Status { job: None },
             Request::Status { job: Some("job-3".into()) },
-            Request::Events { job: "job-0".into(), from: 17, follow: false },
+            Request::Events { job: "job-0".into(), from: 17, limit: None, follow: false },
+            Request::Events { job: "job-0".into(), from: 0, limit: Some(64), follow: true },
             Request::Cancel { job: "job-1".into() },
             Request::Resume { job: "job-2".into() },
             Request::Shutdown,
@@ -356,13 +576,86 @@ mod tests {
             assert!(!line.contains('\n'), "one line per request");
             let back = Request::from_line(&line).unwrap();
             assert_eq!(back, req, "roundtrip failed for {line}");
+            let fast = Request::from_line_fast(&line).unwrap();
+            assert_eq!(fast, req, "fast-path disagreed on {line}");
         }
     }
 
     #[test]
     fn events_defaults_follow_and_from() {
         let r = Request::from_line(r#"{"cmd":"events","job":"job-0"}"#).unwrap();
-        assert_eq!(r, Request::Events { job: "job-0".into(), from: 0, follow: true });
+        assert_eq!(
+            r,
+            Request::Events { job: "job-0".into(), from: 0, limit: None, follow: true }
+        );
+    }
+
+    #[test]
+    fn events_cursor_grammar() {
+        // exclusive after_seq resolves to the next sequence number
+        let r = Request::from_line(r#"{"cmd":"events","job":"j","after_seq":9}"#).unwrap();
+        assert_eq!(r, Request::Events { job: "j".into(), from: 10, limit: None, follow: true });
+        // legacy inclusive `from` still accepted
+        let r = Request::from_line(r#"{"cmd":"events","job":"j","from":9}"#).unwrap();
+        assert_eq!(r, Request::Events { job: "j".into(), from: 9, limit: None, follow: true });
+        // after_seq wins when both appear
+        let r =
+            Request::from_line(r#"{"cmd":"events","job":"j","after_seq":4,"from":99}"#).unwrap();
+        assert_eq!(r, Request::Events { job: "j".into(), from: 5, limit: None, follow: true });
+        // hostile cursors saturate instead of wrapping
+        let r =
+            Request::from_line(r#"{"cmd":"events","job":"j","after_seq":1e308}"#).unwrap();
+        assert!(matches!(r, Request::Events { from: u64::MAX, .. }));
+    }
+
+    #[test]
+    fn submit_priority_grammar() {
+        let r = Request::from_line(
+            r#"{"cmd":"submit","config":{},"priority":"interactive","tenant":"t0","deadline_ms":500}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Submit { priority, tenant, deadline_ms, .. } => {
+                assert_eq!(priority, Priority::Interactive);
+                assert_eq!(tenant.as_deref(), Some("t0"));
+                assert_eq!(deadline_ms, Some(500));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // unknown class is a parse error, not a silent default
+        assert!(
+            Request::from_line(r#"{"cmd":"submit","config":{},"priority":"urgent"}"#).is_err()
+        );
+        assert!(Priority::Interactive.rank() > Priority::Normal.rank());
+        assert!(Priority::Normal.rank() > Priority::Batch.rank());
+        for p in [Priority::Batch, Priority::Normal, Priority::Interactive] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn fast_path_agrees_with_full_parser_on_scalar_verbs() {
+        let lines = [
+            r#"{"cmd":"status"}"#,
+            r#"{"cmd":"status","job":"job-0"}"#,
+            r#"{"cmd":"events","job":"job-0","after_seq":17,"limit":32,"follow":false}"#,
+            r#"{"cmd":"events","job":"job-0","from":-3}"#,
+            r#"{"cmd":"cancel","job":"job-1"}"#,
+            r#"{"cmd":"resume","job":"job-2"}"#,
+            r#"{"cmd":"shutdown"}"#,
+            r#"  {"cmd":"status"}  "#,
+        ];
+        for line in lines {
+            assert_eq!(
+                Request::from_line_fast(line).unwrap(),
+                Request::from_line(line).unwrap(),
+                "disagreement on {line}"
+            );
+        }
+        // malformed lines fall back to the full parser's rejection
+        assert!(Request::from_line_fast("not json").is_err());
+        assert!(Request::from_line_fast(r#"{"cmd":"cancel"}"#).is_err());
+        assert!(Request::from_line_fast(r#"{"cmd":42}"#).is_err());
     }
 
     #[test]
@@ -442,6 +735,9 @@ mod tests {
             error: None,
             attempts: 0,
             retry_at: None,
+            priority: Priority::Interactive,
+            tenant: "team-a".into(),
+            deadline_ms: Some(2_000),
         };
         let st = json::parse(&status_json(&[snap], 8.0, 1.5, 8.0, 0.25).to_string()).unwrap();
         assert!(st.bool_of("ok").unwrap());
@@ -453,10 +749,31 @@ mod tests {
         assert_eq!(jobs[0].req("eval_loss").unwrap(), &Json::Null);
         assert_eq!(jobs[0].u64_of("attempts").unwrap(), 0);
         assert_eq!(jobs[0].req("next_retry_ms").unwrap(), &Json::Null);
+        assert_eq!(jobs[0].str_of("priority").unwrap(), "interactive");
+        assert_eq!(jobs[0].str_of("tenant").unwrap(), "team-a");
+        assert_eq!(jobs[0].u64_of("deadline_ms").unwrap(), 2_000);
 
         let done = json::parse(&done_json("job-0", JobState::Finished, 6).to_string()).unwrap();
         assert!(done.bool_of("done").unwrap());
         assert_eq!(done.str_of("state").unwrap(), "finished");
+    }
+
+    #[test]
+    fn events_page_footer_shape() {
+        let j = json::parse(
+            &events_page_json("job-0", 32, 47, JobState::Running, false).to_string(),
+        )
+        .unwrap();
+        assert!(j.bool_of("page").unwrap());
+        assert!(!j.bool_of("done").unwrap());
+        assert_eq!(j.u64_of("count").unwrap(), 32);
+        assert_eq!(j.u64_of("next_cursor").unwrap(), 47);
+        assert_eq!(j.str_of("state").unwrap(), "running");
+        let end = json::parse(
+            &events_page_json("job-0", 0, 47, JobState::Finished, true).to_string(),
+        )
+        .unwrap();
+        assert!(end.bool_of("done").unwrap());
     }
 
     #[test]
@@ -503,6 +820,9 @@ mod tests {
             error: Some("injected fault: pjrt_execute".into()),
             attempts: 2,
             retry_at: Some(std::time::Instant::now() + std::time::Duration::from_secs(5)),
+            priority: Priority::default(),
+            tenant: "default".into(),
+            deadline_ms: None,
         };
         let j = json::parse(&snapshot_json(&snap).to_string()).unwrap();
         assert_eq!(j.str_of("state").unwrap(), "retrying");

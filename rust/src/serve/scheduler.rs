@@ -10,13 +10,34 @@
 //! interleaved job computes exactly what it would have computed solo;
 //! `tests/serve.rs` asserts the losses are bit-identical.
 //!
-//! Scheduling is deterministic given the submission order: admission is
-//! strict FIFO (a queued job is never overtaken, even by a smaller
-//! one), the round-robin order is the admission order, and the quantum
-//! is fixed. Every yielded event is serialized onto the shared
-//! [`Board`] (an `Arc<Mutex<_>>` the TCP handlers read), so the control
-//! plane streams live NDJSON without touching the device thread.
+//! Dispatch is priority-scheduled, not FIFO. Every job carries a
+//! scheduling class ([`Priority`]: `interactive` > `normal` > `batch`),
+//! an optional deadline, and a tenant identity, and both decision
+//! points honor them at quantum boundaries:
+//!
+//! * **Device time** (which active job runs next): highest class first
+//!   — a newly admitted higher-class job overtakes a running
+//!   lower-class one at the next quantum boundary, using the same
+//!   suspend/resume handoff as ordinary preemption. Within a class,
+//!   earliest deadline first (EDF; no deadline sorts last), then
+//!   round-robin in admission order.
+//! * **Admission** (which waiting job gets freed budget): highest class
+//!   first; within a class the tenant with the lowest weighted service
+//!   debt is preferred (see `admission::Tenants` — debt carries over,
+//!   so a heavy tenant cannot starve others), then EDF, then submit
+//!   order. A job whose tenant is at quota (`max_jobs` / `share_gb`)
+//!   is skipped — other tenants admit past it — but a job blocked only
+//!   by the *global* budget blocks everything behind it in the same
+//!   order (no small-job overtake, so big jobs cannot starve).
+//!
+//! Scheduling stays deterministic given the submission order: all
+//! ordering keys (class, deadline, debt, submit order) are fixed at
+//! submit/admission time and the quantum is fixed. Every yielded event
+//! is serialized onto the shared [`Board`] (an `Arc<Mutex<_>>` the TCP
+//! handlers read), so the control plane streams live NDJSON without
+//! touching the device thread.
 
+use std::cmp::Ordering;
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -28,9 +49,9 @@ use crate::engine::{Run, StepEvent};
 use crate::error::{Error, Result};
 use crate::memory::{Assumptions, Geometry};
 use crate::runtime::pjrt::{Device, ProgramCache};
-use crate::serve::admission::{self, Admission};
+use crate::serve::admission::{self, Admission, TenantPolicy, Tenants};
 use crate::serve::lock;
-use crate::serve::protocol::{self, JobSnapshot, JobState};
+use crate::serve::protocol::{self, JobSnapshot, JobState, Priority};
 use crate::serve::supervise::{HealthProbe, RetryPolicy, Supervision};
 use crate::util::json::Json;
 use crate::util::retry::{self, Backoff};
@@ -43,13 +64,35 @@ const RETRY_POLL: Duration = Duration::from_millis(5);
 #[derive(Debug, Clone)]
 pub struct SubmitOutcome {
     pub id: String,
-    /// Admitted immediately (false = queued behind the budget, or the
-    /// activation failed — `state` disambiguates).
+    /// Admitted immediately (false = queued behind the budget or a
+    /// tenant quota, or the activation failed — `state`
+    /// disambiguates).
     pub admitted: bool,
     pub peak_gb: f64,
     /// The job's state right after submission (`Running`, `Queued`, or
     /// `Failed` when activation errored).
     pub state: JobState,
+    /// Scheduling class the job was accepted under.
+    pub priority: Priority,
+    /// Tenant the job is accounted to.
+    pub tenant: String,
+}
+
+/// Scheduling metadata carried by a submit (wire fields `priority`,
+/// `tenant`, `deadline_ms`).
+#[derive(Debug, Clone, Default)]
+pub struct SubmitMeta {
+    pub priority: Priority,
+    /// Quota-accounting identity; `None` = `"default"`.
+    pub tenant: Option<String>,
+    /// Within-class deadline, milliseconds from submit.
+    pub deadline_ms: Option<u64>,
+}
+
+impl SubmitMeta {
+    pub fn tenant_name(&self) -> &str {
+        self.tenant.as_deref().unwrap_or("default")
+    }
 }
 
 /// Shared, lock-protected view of every job: snapshots, event logs, and
@@ -142,12 +185,21 @@ impl EventLog {
     /// returned slice actually starts at (clamped forward to the base
     /// when `seq` points into the evicted region).
     pub fn lines_from(&self, seq: u64) -> (Vec<String>, u64) {
+        self.page_from(seq, usize::MAX)
+    }
+
+    /// One keyset page: at most `limit` lines from sequence `seq` on,
+    /// plus the clamped start sequence. This is what the `events` verb
+    /// serves — bounding the copy made under the board lock is the
+    /// backpressure: a lagging follower costs one page per request, not
+    /// a full ring replay.
+    pub fn page_from(&self, seq: u64, limit: usize) -> (Vec<String>, u64) {
         let start = seq.max(self.base);
         let idx = (start - self.base) as usize;
         let lines = if idx >= self.lines.len() {
             Vec::new()
         } else {
-            self.lines.iter().skip(idx).cloned().collect()
+            self.lines.iter().skip(idx).take(limit).cloned().collect()
         };
         (lines, start)
     }
@@ -193,6 +245,14 @@ struct Job {
     state: JobState,
     /// Supervised-recovery record: attempts, failure chain, deadline.
     sup: Supervision,
+    /// Scheduling class (dispatch + admission ordering).
+    priority: Priority,
+    /// Quota-accounting identity.
+    tenant: String,
+    /// Absolute within-class deadline (EDF key); `None` sorts last.
+    deadline: Option<Instant>,
+    /// The requested relative deadline, kept for snapshots/persistence.
+    deadline_ms: Option<u64>,
 }
 
 enum Quantum {
@@ -210,10 +270,15 @@ pub struct Scheduler {
     assume: Assumptions,
     admission: Admission,
     jobs: Vec<Job>,
-    /// Round-robin order of admitted jobs (indices into `jobs`).
+    /// Admitted jobs (indices into `jobs`); each tick picks the best
+    /// dispatch candidate (class, deadline, then this queue's order —
+    /// which round-robins because finished quanta push_back).
     active: VecDeque<usize>,
-    /// FIFO admission queue (indices into `jobs`).
+    /// Admission queue (indices into `jobs`), ordered at drain time by
+    /// class, tenant debt, deadline, then submit order.
     waiting: VecDeque<usize>,
+    /// Per-tenant quota ledgers + weighted-deficit fairness state.
+    tenants: Tenants,
     board: Arc<Mutex<Board>>,
     /// Supervised-retry policy (docs/ROBUSTNESS.md).
     policy: RetryPolicy,
@@ -232,6 +297,17 @@ impl Scheduler {
             if opts.host_budget_gb > 0.0 { opts.host_budget_gb } else { f64::INFINITY };
         let policy = RetryPolicy::from_serve(&opts);
         let backoff = Backoff::new(policy.base_ms, policy.max_ms, 0xb0ff);
+        let mut tenants = Tenants::new(TenantPolicy {
+            max_jobs: opts.tenant_max_jobs,
+            share_gb: opts.tenant_share_gb,
+            weight: 1.0,
+        });
+        for t in &opts.tenants {
+            tenants.set_policy(
+                &t.name,
+                TenantPolicy { max_jobs: t.max_jobs, share_gb: t.share_gb, weight: t.weight },
+            );
+        }
         Ok(Scheduler {
             device,
             cache: ProgramCache::new(),
@@ -241,6 +317,7 @@ impl Scheduler {
             jobs: Vec::new(),
             active: VecDeque::new(),
             waiting: VecDeque::new(),
+            tenants,
             board,
             policy,
             backoff,
@@ -262,7 +339,12 @@ impl Scheduler {
     /// Submit a job from its wire-format JSON config. Keys the config
     /// omits fall back to the serve defaults (`artifacts` → the serve
     /// artifact dir, `out_dir` → a fresh directory under `run_root`).
-    pub fn submit_json(&mut self, config: &Json, name: Option<String>) -> Result<SubmitOutcome> {
+    pub fn submit_json(
+        &mut self,
+        config: &Json,
+        name: Option<String>,
+        meta: SubmitMeta,
+    ) -> Result<SubmitOutcome> {
         let mut cfg = RunConfig::from_json(config)?;
         if config.get("artifacts").is_none() {
             cfg.artifacts = self.opts.artifacts.clone();
@@ -277,7 +359,7 @@ impl Scheduler {
         if config.get("checkpoint_every").is_none() {
             cfg.checkpoint_every = self.opts.checkpoint_every;
         }
-        self.submit(cfg, name)
+        self.submit_with(cfg, name, meta)
     }
 
     /// A default `out_dir` that no other job — from this server life or
@@ -302,11 +384,22 @@ impl Scheduler {
         }
     }
 
-    /// Submit a fully-formed job config: price it, then admit (FIFO) or
-    /// queue it. A job pricing over the whole budget is rejected
-    /// outright — it could never run.
+    /// Submit a fully-formed job config at default scheduling metadata
+    /// (`normal` class, `default` tenant, no deadline): price it, then
+    /// admit or queue it. A job pricing over the whole budget is
+    /// rejected outright — it could never run.
     pub fn submit(&mut self, cfg: RunConfig, name: Option<String>) -> Result<SubmitOutcome> {
-        self.submit_inner(cfg, name, None)
+        self.submit_inner(cfg, name, None, SubmitMeta::default())
+    }
+
+    /// [`Scheduler::submit`] with explicit scheduling metadata.
+    pub fn submit_with(
+        &mut self,
+        cfg: RunConfig,
+        name: Option<String>,
+        meta: SubmitMeta,
+    ) -> Result<SubmitOutcome> {
+        self.submit_inner(cfg, name, None, meta)
     }
 
     /// Resubmit a `Failed` or `Cancelled` job from its latest periodic
@@ -332,13 +425,20 @@ impl Scheduler {
         }
         let cfg = job.cfg.clone();
         let name = job.name.clone();
+        // the continuation inherits the original's scheduling identity;
+        // a relative deadline restarts from the resubmit
+        let meta = SubmitMeta {
+            priority: job.priority,
+            tenant: Some(job.tenant.clone()),
+            deadline_ms: job.deadline_ms,
+        };
         let ckpt = checkpoint::latest_valid_checkpoint(&cfg.out_dir).ok_or_else(|| {
             Error::Config(format!(
                 "job {id} has no periodic snapshot under {} — set checkpoint_every",
                 cfg.out_dir.display()
             ))
         })?;
-        self.submit_inner(cfg, Some(name), Some(ckpt))
+        self.submit_inner(cfg, Some(name), Some(ckpt), meta)
     }
 
     /// Rescan `run_root` for interrupted jobs (a persisted `job.json`
@@ -368,9 +468,21 @@ impl Scheduler {
                             Error::Parse("job.json lacks a config object".into())
                         })?,
                     )?;
-                    Ok((name, cfg))
+                    // scheduling identity survives the restart; markers
+                    // from before these fields existed recover at the
+                    // defaults
+                    let meta = SubmitMeta {
+                        priority: j
+                            .get("priority")
+                            .and_then(Json::as_str)
+                            .and_then(|p| Priority::parse(p).ok())
+                            .unwrap_or_default(),
+                        tenant: j.get("tenant").and_then(Json::as_str).map(str::to_string),
+                        deadline_ms: j.get("deadline_ms").and_then(Json::as_u64),
+                    };
+                    Ok((name, cfg, meta))
                 });
-            let (name, cfg) = match parsed {
+            let (name, cfg, meta) = match parsed {
                 Ok(x) => x,
                 Err(e) => {
                     eprintln!("[serve] not recovering {}: {e}", marker.display());
@@ -388,7 +500,7 @@ impl Scheduler {
                     marker.display()
                 );
             }
-            match self.submit_inner(cfg, name, ckpt) {
+            match self.submit_inner(cfg, name, ckpt, meta) {
                 Ok(o) => {
                     let state = o.state.name();
                     eprintln!("[serve] recovered {} as {} ({state})", dir.display(), o.id);
@@ -405,6 +517,7 @@ impl Scheduler {
         cfg: RunConfig,
         name: Option<String>,
         resume_from: Option<std::path::PathBuf>,
+        meta: SubmitMeta,
     ) -> Result<SubmitOutcome> {
         cfg.validate()?;
         let geo = match self.opts.price_geometry {
@@ -418,6 +531,16 @@ impl Scheduler {
                 priced.peak_gb, priced.geometry, self.opts.budget_gb
             )));
         }
+        let tenant = meta.tenant_name().to_string();
+        // a job pricing over its tenant's whole share could never be
+        // admitted either — reject at submit, same as over-budget
+        let share = self.tenants.policy(&tenant).share_gb;
+        if share > 0.0 && priced.peak_gb > share * (1.0 + 1e-9) {
+            return Err(Error::Config(format!(
+                "job prices {:.3} GB — over tenant {tenant:?}'s whole {share:.3} GB share",
+                priced.peak_gb
+            )));
+        }
         let idx = self.jobs.len();
         let id = self.next_job_id();
         let name = name.unwrap_or_else(|| id.clone());
@@ -425,7 +548,7 @@ impl Scheduler {
         // persist the job config next to its checkpoints so a restarted
         // server can find and resume it (recover()); removed again when
         // the job ends in a state with nothing left to recover
-        self.persist_job_file(&cfg, &name)?;
+        self.persist_job_file(&cfg, &name, &meta)?;
         // a resumed job continues its predecessor's event numbering
         // (cursor-only read — no tensor payload is materialized here)
         let base_seq = resume_from
@@ -444,6 +567,10 @@ impl Scheduler {
             seq: base_seq,
             state: JobState::Queued,
             sup: Supervision::default(),
+            priority: meta.priority,
+            tenant: tenant.clone(),
+            deadline: meta.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            deadline_ms: meta.deadline_ms,
         });
         {
             let mut board = lock::board(&self.board);
@@ -461,36 +588,45 @@ impl Scheduler {
                     error: None,
                     attempts: 0,
                     retry_at: None,
+                    priority: meta.priority,
+                    tenant: tenant.clone(),
+                    deadline_ms: meta.deadline_ms,
                 },
                 events: EventLog::with_base(self.opts.event_log_cap, base_seq),
                 report: None,
             });
         }
-        // strict FIFO: never overtake an already-waiting job, even if
-        // this one would fit the headroom
-        let mut admitted =
-            self.waiting.is_empty() && self.admission.try_admit(priced.peak_gb, priced.host_gb);
-        if admitted {
-            self.activate(idx);
-            // activation can fail (missing variant dir, bad artifacts):
-            // the reservation was already rolled back and the error is
-            // on the board — the submit reply must not claim admission
-            admitted = self.jobs[idx].state == JobState::Running;
-        } else {
-            self.waiting.push_back(idx);
-        }
-        self.sync_ledger();
-        Ok(SubmitOutcome { id, admitted, peak_gb: priced.peak_gb, state: self.jobs[idx].state })
+        // queue, then drain: the drain picks by (class, tenant debt,
+        // deadline, submit order), so a higher-class submit overtakes
+        // waiting lower-class jobs, while an equal-or-lower one cannot
+        // jump the queue even if it would fit the headroom
+        self.waiting.push_back(idx);
+        self.drain_waiting();
+        let state = self.jobs[idx].state;
+        Ok(SubmitOutcome {
+            id,
+            admitted: state == JobState::Running,
+            peak_gb: priced.peak_gb,
+            state,
+            priority: meta.priority,
+            tenant,
+        })
     }
 
-    /// Write `<out_dir>/job.json` (`{"name": …, "config": {…}}`) — the
-    /// recovery marker `recover()` looks for.
-    fn persist_job_file(&self, cfg: &RunConfig, name: &str) -> Result<()> {
+    /// Write `<out_dir>/job.json` (`{"name": …, "config": {…}}` plus
+    /// the scheduling identity) — the recovery marker `recover()` looks
+    /// for.
+    fn persist_job_file(&self, cfg: &RunConfig, name: &str, meta: &SubmitMeta) -> Result<()> {
         std::fs::create_dir_all(&cfg.out_dir)?;
-        let j = crate::util::json::ObjBuilder::new()
+        let mut b = crate::util::json::ObjBuilder::new()
             .str("name", name)
             .val("config", cfg.to_json())
-            .build();
+            .str("priority", meta.priority.name())
+            .str("tenant", meta.tenant_name());
+        if let Some(d) = meta.deadline_ms {
+            b = b.num("deadline_ms", d as f64);
+        }
+        let j = b.build();
         std::fs::write(cfg.out_dir.join("job.json"), format!("{j}\n"))?;
         Ok(())
     }
@@ -546,7 +682,7 @@ impl Scheduler {
                 // dropping the run releases its pinned buffers and
                 // prefetch thread
                 self.jobs[idx].run = None;
-                self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+                self.release_job(idx);
                 self.set_state(idx, JobState::Cancelled, None);
                 if !keep_marker {
                     self.remove_job_file(idx);
@@ -586,7 +722,12 @@ impl Scheduler {
         if self.active.is_empty() {
             self.drain_waiting();
         }
-        let Some(idx) = self.active.pop_front() else {
+        // quantum-boundary preemption: the dispatch pick is by class
+        // (then EDF, then round-robin), so a higher-class job admitted
+        // since the last tick overtakes a running lower-class one here
+        // — the suspend at the end of the previous quantum already
+        // parked the loser's state as host literals
+        let Some(pos) = self.pick_active() else {
             if let Some(d) = retry_wait {
                 // a retry deadline is pending and the device is
                 // otherwise idle: nap toward it so run_until_idle keeps
@@ -594,6 +735,9 @@ impl Scheduler {
                 retry::pause(d.min(RETRY_POLL));
                 return Ok(true);
             }
+            return Ok(false);
+        };
+        let Some(idx) = self.active.remove(pos) else {
             return Ok(false);
         };
         // invariant: an active job holds a run. If it somehow does not,
@@ -707,7 +851,7 @@ impl Scheduler {
                 self.active.push_back(idx);
             }
             Err(e) => {
-                self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+                self.release_job(idx);
                 self.supervise_failure(idx, e.to_string());
             }
         }
@@ -742,9 +886,9 @@ impl Scheduler {
 
     /// Failure funnel for an admitted job (reservation held): release
     /// the reservation, route through supervision, then admit whoever
-    /// now fits (FIFO).
+    /// the dispatch order now picks.
     fn fail_admitted(&mut self, idx: usize, msg: String) {
-        self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+        self.release_job(idx);
         self.supervise_failure(idx, msg);
         self.drain_waiting();
     }
@@ -796,9 +940,9 @@ impl Scheduler {
                 self.supervise_failure(idx, format!("device health probe: {e}"));
                 continue;
             }
-            if !self.admission.try_admit(self.jobs[idx].peak_gb, self.jobs[idx].host_gb) {
-                // budget busy: hold the retry (no attempt consumed) and
-                // check again next tick
+            if !self.try_admit_job(idx) {
+                // budget or tenant quota busy: hold the retry (no
+                // attempt consumed) and check again next tick
                 wait = Some(wait.map_or(RETRY_POLL, |w| w.min(RETRY_POLL)));
                 continue;
             }
@@ -812,12 +956,12 @@ impl Scheduler {
     }
 
     /// Terminal transition of an admitted job: record state, return its
-    /// reservation, and admit whoever now fits (FIFO). Failures no
-    /// longer come through here (see [`Scheduler::fail_admitted`]), but
-    /// the marker rule stays general: it survives any exit with
-    /// something left to bring back.
+    /// reservation, and admit whoever the dispatch order now picks.
+    /// Failures no longer come through here (see
+    /// [`Scheduler::fail_admitted`]), but the marker rule stays general:
+    /// it survives any exit with something left to bring back.
     fn finalize(&mut self, idx: usize, state: JobState, error: Option<String>) {
-        self.admission.release(self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+        self.release_job(idx);
         self.set_state(idx, state, error);
         if state != JobState::Failed {
             self.remove_job_file(idx);
@@ -825,15 +969,94 @@ impl Scheduler {
         self.drain_waiting();
     }
 
+    /// Admit waiting jobs while budget allows, picking each round by
+    /// (class desc, tenant debt asc, deadline asc, submit order).
+    /// Tenant-quota-blocked jobs are skipped — their tenant being at
+    /// its cap must not block other tenants — but when the best
+    /// *eligible* candidate fails the global budget the drain stops:
+    /// nothing overtakes it, so a large job cannot be starved by
+    /// smaller ones slipping past. Debt updates between rounds, so a
+    /// burst from one tenant interleaves fairly with everyone else's
+    /// queue even within a single drain.
     fn drain_waiting(&mut self) {
-        while let Some(&idx) = self.waiting.front() {
-            if !self.admission.try_admit(self.jobs[idx].peak_gb, self.jobs[idx].host_gb) {
+        loop {
+            let Some(pos) = self.pick_waiting() else { break };
+            let Some(&idx) = self.waiting.get(pos) else { break };
+            if !self.try_admit_job(idx) {
                 break;
             }
-            self.waiting.pop_front();
+            self.waiting.remove(pos);
             self.activate(idx);
         }
         self.sync_ledger();
+    }
+
+    /// Position (in `waiting`) of the next admission candidate: the
+    /// best-ordered waiting job whose tenant quota has room. `None`
+    /// when every waiting job is quota-blocked (or none is waiting).
+    fn pick_waiting(&self) -> Option<usize> {
+        (0..self.waiting.len())
+            .filter(|&p| {
+                let j = &self.jobs[self.waiting[p]];
+                self.tenants.admits(&j.tenant, j.peak_gb)
+            })
+            .min_by(|&pa, &pb| self.admission_order(self.waiting[pa], self.waiting[pb]))
+    }
+
+    /// Position (in `active`) of the next dispatch candidate: highest
+    /// class, then EDF, then queue order (round-robin — a finished
+    /// quantum pushes back).
+    fn pick_active(&self) -> Option<usize> {
+        (0..self.active.len()).min_by(|&pa, &pb| {
+            self.dispatch_order(self.active[pa], self.active[pb]).then(pa.cmp(&pb))
+        })
+    }
+
+    /// Device-time ordering between two jobs: class desc, deadline asc
+    /// (None last). Ties are broken by the caller (queue position for
+    /// dispatch, submit order for admission).
+    fn dispatch_order(&self, a: usize, b: usize) -> Ordering {
+        let (ja, jb) = (&self.jobs[a], &self.jobs[b]);
+        class_deadline_cmp(
+            (ja.priority, ja.deadline),
+            (jb.priority, jb.deadline),
+        )
+    }
+
+    /// Admission ordering: class desc, then tenant debt asc (the
+    /// weighted-deficit fairness pick), then deadline asc, then submit
+    /// order.
+    fn admission_order(&self, a: usize, b: usize) -> Ordering {
+        let (ja, jb) = (&self.jobs[a], &self.jobs[b]);
+        jb.priority
+            .rank()
+            .cmp(&ja.priority.rank())
+            .then_with(|| self.tenants.debt(&ja.tenant).total_cmp(&self.tenants.debt(&jb.tenant)))
+            .then_with(|| deadline_cmp(ja.deadline, jb.deadline))
+            .then_with(|| a.cmp(&b))
+    }
+
+    /// Reserve budget AND tenant quota for one job; charges the tenant
+    /// ledger only when the global ledger admitted.
+    fn try_admit_job(&mut self, idx: usize) -> bool {
+        let (peak, host) = (self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+        let tenant = self.jobs[idx].tenant.clone();
+        if !self.tenants.admits(&tenant, peak) {
+            return false;
+        }
+        if !self.admission.try_admit(peak, host) {
+            return false;
+        }
+        self.tenants.charge(&tenant, peak);
+        true
+    }
+
+    /// Return one admitted job's budget reservation and tenant share.
+    fn release_job(&mut self, idx: usize) {
+        let (peak, host) = (self.jobs[idx].peak_gb, self.jobs[idx].host_gb);
+        let tenant = self.jobs[idx].tenant.clone();
+        self.admission.release(peak, host);
+        self.tenants.release(&tenant, peak);
     }
 
     fn set_state(&mut self, idx: usize, state: JobState, error: Option<String>) {
@@ -885,9 +1108,96 @@ impl Scheduler {
     }
 }
 
+/// Earliest-deadline-first key: `None` (no deadline) sorts after every
+/// real deadline.
+fn deadline_cmp(a: Option<Instant>, b: Option<Instant>) -> Ordering {
+    match (a, b) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => Ordering::Less,
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => Ordering::Equal,
+    }
+}
+
+/// The dispatch key: higher class first, then EDF. Exposed as a free
+/// function so the ordering is unit-testable without a device.
+fn class_deadline_cmp(
+    a: (Priority, Option<Instant>),
+    b: (Priority, Option<Instant>),
+) -> Ordering {
+    b.0.rank().cmp(&a.0.rank()).then_with(|| deadline_cmp(a.1, b.1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // ---- dispatch/admission ordering (device-free) -------------------
+
+    fn at(ms: u64) -> Option<Instant> {
+        // a shared epoch keeps the test's deadlines comparable
+        use std::sync::OnceLock;
+        static EPOCH: OnceLock<Instant> = OnceLock::new();
+        let epoch = *EPOCH.get_or_init(Instant::now);
+        Some(epoch + Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn higher_class_dispatches_first() {
+        let hi = (Priority::Interactive, None);
+        let lo = (Priority::Batch, at(1));
+        assert_eq!(class_deadline_cmp(hi, lo), Ordering::Less, "class beats deadline");
+        assert_eq!(class_deadline_cmp(lo, hi), Ordering::Greater);
+        assert_eq!(
+            class_deadline_cmp((Priority::Normal, None), (Priority::Batch, None)),
+            Ordering::Less
+        );
+    }
+
+    #[test]
+    fn deadline_breaks_ties_within_class() {
+        let soon = (Priority::Normal, at(10));
+        let late = (Priority::Normal, at(10_000));
+        let never = (Priority::Normal, None);
+        assert_eq!(class_deadline_cmp(soon, late), Ordering::Less);
+        assert_eq!(class_deadline_cmp(late, never), Ordering::Less, "any deadline beats none");
+        assert_eq!(class_deadline_cmp(never, soon), Ordering::Greater);
+        assert_eq!(class_deadline_cmp(never, never), Ordering::Equal, "ties fall to queue order");
+    }
+
+    #[test]
+    fn admission_prefers_lowest_debt_tenant_within_class() {
+        // simulate the drain's pick over a waiting queue: tenant "big"
+        // has consumed service, "small" has not — same class, so the
+        // deficit ordering must prefer "small" despite later submission
+        let mut tenants = Tenants::default();
+        tenants.charge("big", 8.0);
+        tenants.release("big", 8.0); // idle, but debt carries over
+        let debt_big = tenants.debt("big");
+        let debt_small = tenants.debt("small");
+        assert!(debt_small < debt_big);
+        // and a quota-blocked tenant is not a candidate at all
+        let mut capped = Tenants::new(TenantPolicy { max_jobs: 1, share_gb: 0.0, weight: 1.0 });
+        capped.charge("t", 1.0);
+        assert!(!capped.admits("t", 1.0));
+        assert!(capped.admits("u", 1.0), "another tenant admits while t waits at quota");
+    }
+
+    #[test]
+    fn quota_starvation_is_bounded_by_debt() {
+        // a heavy tenant hammering the queue accrues debt with every
+        // admission, so after K grants its debt exceeds the light
+        // tenant's and the pick flips — the starvation bound
+        let mut tenants = Tenants::default();
+        let mut grants_before_flip = 0;
+        tenants.charge("light", 1.0); // light got one unit once
+        while tenants.debt("heavy") <= tenants.debt("light") {
+            tenants.charge("heavy", 1.0);
+            grants_before_flip += 1;
+            assert!(grants_before_flip < 100, "debt must eventually order heavy last");
+        }
+        assert!(grants_before_flip <= 2, "flip must come after ~1 equal-sized grant");
+    }
 
     #[test]
     fn event_log_uncapped_keeps_everything() {
@@ -935,6 +1245,37 @@ mod tests {
         let (lines, start) = log.lines_from(8);
         assert_eq!(start, 8);
         assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn event_log_pages_clamp_lagging_cursors_and_chain() {
+        let mut log = EventLog::new(5);
+        for i in 0..12 {
+            log.push(format!("e{i}"));
+        }
+        // base is now 7; a cursor deep in the evicted region clamps
+        // forward and still only gets one bounded page
+        let (lines, start) = log.page_from(1, 2);
+        assert_eq!(start, 7);
+        assert_eq!(lines, vec!["e7", "e8"]);
+        // chaining pages via next_cursor = start + count reconstructs
+        // exactly the sequence a full replay would deliver
+        let mut cursor = 0u64;
+        let mut replay = Vec::new();
+        loop {
+            let (page, start) = log.page_from(cursor, 2);
+            if page.is_empty() {
+                break;
+            }
+            cursor = start + page.len() as u64;
+            replay.extend(page);
+        }
+        assert_eq!(replay, log.to_vec());
+        assert_eq!(cursor, log.total());
+        // limit 0 yields an empty page without moving anything
+        let (page, start) = log.page_from(9, 0);
+        assert!(page.is_empty());
+        assert_eq!(start, 9);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::error::{Error, Result};
 use crate::runtime::Device;
 use crate::serve::lock;
 use crate::serve::protocol::{self, Request};
-use crate::serve::scheduler::{Board, Scheduler, SubmitOutcome};
+use crate::serve::scheduler::{Board, Scheduler, SubmitMeta, SubmitOutcome};
 use crate::util::faults::{self, FaultSite};
 use crate::util::json::Json;
 use crate::util::retry;
@@ -66,6 +66,7 @@ enum Control {
     Submit {
         config: Json,
         name: Option<String>,
+        meta: SubmitMeta,
         reply: Sender<std::result::Result<SubmitOutcome, String>>,
     },
     Cancel {
@@ -153,8 +154,17 @@ pub fn serve(opts: ServeConfig) -> Result<ServerHandle> {
     let accept_shutdown = shutdown.clone();
     let conn_limit = opts.conn_limit;
     let io_timeout = (opts.io_timeout_ms > 0).then(|| Duration::from_millis(opts.io_timeout_ms));
+    let page_size = opts.events_page_size;
     let accept_thread = std::thread::Builder::new().name("serve-accept".into()).spawn(move || {
-        accept_loop(listener, accept_ctl, accept_board, accept_shutdown, conn_limit, io_timeout)
+        accept_loop(
+            listener,
+            accept_ctl,
+            accept_board,
+            accept_shutdown,
+            conn_limit,
+            io_timeout,
+            page_size,
+        )
     })?;
 
     Ok(ServerHandle {
@@ -230,8 +240,8 @@ fn scheduler_thread(
 
 fn handle_control(sched: &mut Scheduler, msg: Control) {
     match msg {
-        Control::Submit { config, name, reply } => {
-            let r = sched.submit_json(&config, name).map_err(|e| e.to_string());
+        Control::Submit { config, name, meta, reply } => {
+            let r = sched.submit_json(&config, name, meta).map_err(|e| e.to_string());
             let _ = reply.send(r);
         }
         Control::Cancel { job, reply } => {
@@ -253,6 +263,7 @@ fn accept_loop(
     shutdown: Arc<AtomicBool>,
     conn_limit: usize,
     io_timeout: Option<Duration>,
+    page_size: usize,
 ) {
     let conns = Arc::new(AtomicUsize::new(0));
     loop {
@@ -283,7 +294,7 @@ fn accept_loop(
                 let shutdown = shutdown.clone();
                 let _ = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
                     let _guard = guard;
-                    if let Err(e) = handle_connection(stream, ctl, board, shutdown) {
+                    if let Err(e) = handle_connection(stream, ctl, board, shutdown, page_size) {
                         eprintln!("[serve] connection: {e}");
                     }
                 });
@@ -312,6 +323,7 @@ fn handle_connection(
     ctl: Sender<Control>,
     board: Arc<Mutex<Board>>,
     shutdown: Arc<AtomicBool>,
+    page_size: usize,
 ) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -327,7 +339,10 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let req = match Request::from_line(&line) {
+        // the hot path: a lazy scan settles scalar verbs without
+        // building a Json tree; submit and malformed lines fall back to
+        // the full parser (identical behavior, pinned by wire tests)
+        let req = match Request::from_line_fast(&line) {
             Ok(r) => r,
             Err(e) => {
                 write_line(&mut out, &protocol::error_json(&e.to_string()))?;
@@ -335,14 +350,17 @@ fn handle_connection(
             }
         };
         match req {
-            Request::Submit { config, name } => {
+            Request::Submit { config, name, priority, tenant, deadline_ms } => {
+                let meta = SubmitMeta { priority, tenant, deadline_ms };
                 let (reply_tx, reply_rx) = channel();
-                if ctl.send(Control::Submit { config, name, reply: reply_tx }).is_err() {
+                if ctl.send(Control::Submit { config, name, meta, reply: reply_tx }).is_err() {
                     write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
                     continue;
                 }
                 let resp = match reply_rx.recv() {
-                    Ok(Ok(o)) => protocol::submitted_json(&o.id, o.admitted, o.peak_gb, o.state),
+                    Ok(Ok(o)) => protocol::submitted_json(
+                        &o.id, o.admitted, o.peak_gb, o.state, o.priority, &o.tenant,
+                    ),
                     Ok(Err(msg)) => protocol::error_json(&msg),
                     Err(_) => protocol::error_json("scheduler stopped"),
                 };
@@ -374,8 +392,15 @@ fn handle_connection(
                 };
                 write_line(&mut out, &resp)?;
             }
-            Request::Events { job, from, follow } => {
-                stream_events(&mut out, &board, &shutdown, &job, from, follow)?;
+            Request::Events { job, from, limit, follow } => {
+                // client limits are honored up to the configured page
+                // size; both modes serve bounded pages (the non-follow
+                // footer carries `next_cursor` for the next request)
+                let page = limit
+                    .map(|l| l.min(usize::MAX as u64) as usize)
+                    .unwrap_or(page_size)
+                    .clamp(1, page_size);
+                stream_events(&mut out, &board, &shutdown, &job, from, page, follow)?;
             }
             Request::Cancel { job } => {
                 let (reply_tx, reply_rx) = channel();
@@ -419,9 +444,16 @@ fn handle_connection(
     Ok(())
 }
 
-/// Copy a job's event lines to the client from `from`, then (in follow
-/// mode) poll for new ones until the job reaches a terminal state.
-/// Always ends with a `done` marker line.
+/// Serve a job's event lines from the keyset cursor `from`, at most
+/// `page` lines per board read.
+///
+/// Non-follow mode returns exactly one page plus an
+/// [`protocol::events_page_json`] footer whose `next_cursor` resumes
+/// the scan — backpressure is the client asking for the next page, and
+/// no request ever replays the whole ring. Follow mode keeps polling
+/// (still page-bounded per read, so one follower can never hold the
+/// board lock for a full-ring copy) until the job reaches a terminal
+/// state, then ends with a `done` marker line.
 ///
 /// The per-job log is a capped ring (`ServeConfig::event_log_cap`): a
 /// cursor pointing into the evicted region is clamped forward to the
@@ -434,19 +466,20 @@ fn stream_events(
     shutdown: &Arc<AtomicBool>,
     job: &str,
     from: u64,
+    page: usize,
     follow: bool,
 ) -> Result<()> {
     let mut cursor = from;
     loop {
-        let (batch, state) = {
+        let (batch, next_cursor, state, total) = {
             let b = lock::board(board);
             let Some(view) = b.job(job) else {
                 write_line(out, &protocol::error_json("unknown job"))?;
                 return Ok(());
             };
-            let (lines, start) = view.events.lines_from(cursor);
-            cursor = start;
-            (lines, view.snap.state)
+            let (lines, start) = view.events.page_from(cursor, page);
+            let next = start + lines.len() as u64;
+            (lines, next, view.snap.state, view.snap.events)
         };
         if let Err(e) = push_lines(out, &batch) {
             // a follower that stopped draining hit the write deadline:
@@ -458,25 +491,32 @@ fn stream_events(
             }
             return Err(e.into());
         }
-        cursor += batch.len() as u64;
-        let stop = state.is_terminal() || !follow || shutdown.load(Ordering::SeqCst);
-        if stop {
-            // drain anything that raced in between the copy and the
-            // terminal-state read
-            let (tail, state, total) = {
-                let b = lock::board(board);
-                // jobs are never removed from the board, but a missing
-                // view must close the stream cleanly, not kill the handler
-                let Some(view) = b.job(job) else {
-                    write_line(out, &protocol::error_json("unknown job"))?;
+        cursor = next_cursor;
+        if !follow {
+            // one page per request: the footer's cursor is where the
+            // next request resumes, `done` says no further page can
+            // ever exist
+            let done = state.is_terminal() && cursor >= total;
+            let footer =
+                protocol::events_page_json(job, batch.len() as u64, cursor, state, done);
+            if let Err(e) = write_line(out, &footer) {
+                if is_timeout(&e) {
+                    eprintln!("[serve] events: disconnected slow consumer of {job}");
                     return Ok(());
-                };
-                let (lines, _start) = view.events.lines_from(cursor);
-                (lines, view.snap.state, view.snap.events)
-            };
-            let done = push_lines(out, &tail)
-                .and_then(|()| write_line(out, &protocol::done_json(job, state, total)));
-            if let Err(e) = done {
+                }
+                return Err(e.into());
+            }
+            return Ok(());
+        }
+        if !batch.is_empty() {
+            // more lines may already be waiting past this page: drain
+            // them before deciding whether the stream is over
+            continue;
+        }
+        if state.is_terminal() || shutdown.load(Ordering::SeqCst) {
+            // the page came back empty at a terminal state, so the log
+            // is fully drained — close the stream
+            if let Err(e) = write_line(out, &protocol::done_json(job, state, total)) {
                 if is_timeout(&e) {
                     eprintln!("[serve] events: disconnected slow consumer of {job}");
                     return Ok(());

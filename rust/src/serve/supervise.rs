@@ -7,7 +7,11 @@
 //!   (delays come from [`crate::util::retry::Backoff`]).
 //! * [`Supervision`] — the per-job record: attempt count, the failure
 //!   chain (one entry per failure, surfaced verbatim in `status` once
-//!   the job quarantines), and the next-retry deadline.
+//!   the job quarantines), and the next-retry deadline. A due retry
+//!   re-enters through the same admission gate as a fresh submit —
+//!   global budget AND the job's tenant quota — so a retrying job can
+//!   hold in `Retrying` past its backoff until its tenant has room,
+//!   rather than jumping the fairness queue.
 //! * [`HealthProbe`] — a cheap compiled-program execute that gates
 //!   re-admission after a failure: a device that cannot add two
 //!   four-element vectors must not get the job back. When the probe

@@ -356,6 +356,228 @@ impl<'a> Parser<'a> {
 }
 
 // ----------------------------------------------------------------------
+// Lazy path extraction (no tree allocation)
+// ----------------------------------------------------------------------
+//
+// The serve request hot path needs two or three scalar fields out of each
+// wire line (`cmd`, `job`, a cursor); building the full `Json` tree per
+// request allocates a `BTreeMap` + `String` per key just to throw them
+// away. `Json::get_path` scans the raw bytes instead: it decodes only the
+// object keys it walks past and materializes only the one value at the
+// requested path (for the hot path that is a short string or a number —
+// effectively allocation-free).
+//
+// Agreement contract (property-tested in `tests/wire.rs`): for every
+// input that `parse` accepts, `get_path(text, path)` returns exactly what
+// walking the parsed tree with `Json::get` would — including duplicate-
+// key last-wins semantics and the `MAX_DEPTH` cap along the traversed
+// spine. On inputs `parse` rejects, `get_path` never panics and may
+// return anything (it does not validate the parts of the document it
+// skips — that is the point).
+
+impl Json {
+    /// Lazily extract the value at `path` from raw JSON text.
+    ///
+    /// `Ok(None)` means a path step was missing or the value there was
+    /// not an object; `Err` means the scanned spine was malformed. An
+    /// empty path parses and returns the whole document.
+    pub fn get_path(text: &str, path: &[&str]) -> Result<Option<Json>> {
+        if path.is_empty() {
+            return parse(text).map(Some);
+        }
+        let mut s = Scan { b: text.as_bytes(), i: 0, depth: 0 };
+        for (step, key) in path.iter().enumerate() {
+            s.ws();
+            if s.peek()? != b'{' {
+                return Ok(None);
+            }
+            s.i += 1;
+            s.depth += 1;
+            if s.depth > MAX_DEPTH {
+                return Err(Error::Parse(format!(
+                    "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                    s.i
+                )));
+            }
+            // Scan every member: duplicate keys must resolve last-wins,
+            // exactly like `BTreeMap::insert` does in the full parser.
+            let mut found: Option<usize> = None;
+            s.ws();
+            if s.peek()? == b'}' {
+                return Ok(None);
+            }
+            loop {
+                s.ws();
+                let k = s.key()?;
+                s.ws();
+                if s.peek()? != b':' {
+                    return Err(Error::Parse(format!("expected ':' at byte {}", s.i)));
+                }
+                s.i += 1;
+                s.ws();
+                if k == *key {
+                    found = Some(s.i);
+                }
+                s.skip_value()?;
+                s.ws();
+                match s.peek()? {
+                    b',' => s.i += 1,
+                    b'}' => {
+                        s.i += 1;
+                        break;
+                    }
+                    c => {
+                        return Err(Error::Parse(format!(
+                            "expected , or }} found {:?}",
+                            c as char
+                        )))
+                    }
+                }
+            }
+            match found {
+                None => return Ok(None),
+                Some(at) if step + 1 == path.len() => {
+                    // Materialize just this value, with the spine's depth
+                    // so the cap matches what the full parser enforces.
+                    let mut p = Parser { b: s.b, i: at, depth: s.depth };
+                    return p.value().map(Some);
+                }
+                Some(at) => s.i = at,
+            }
+        }
+        Ok(None)
+    }
+
+    /// `get_path` narrowed to a string; `None` on error/missing/mismatch.
+    pub fn path_str(text: &str, path: &[&str]) -> Option<String> {
+        match Self::get_path(text, path) {
+            Ok(Some(Json::Str(s))) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// `get_path` narrowed to a number; `None` on error/missing/mismatch.
+    pub fn path_f64(text: &str, path: &[&str]) -> Option<f64> {
+        match Self::get_path(text, path) {
+            Ok(Some(Json::Num(n))) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// `get_path` narrowed to a bool; `None` on error/missing/mismatch.
+    pub fn path_bool(text: &str, path: &[&str]) -> Option<bool> {
+        match Self::get_path(text, path) {
+            Ok(Some(Json::Bool(b))) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// Byte scanner behind `get_path`: skips values without building them.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| Error::Parse("unexpected end of input".into()))
+    }
+
+    /// Decode an object key with the full parser's string routine, so
+    /// escaped keys (`"cmd"`) compare equal to their decoded form.
+    fn key(&mut self) -> Result<String> {
+        let mut p = Parser { b: self.b, i: self.i, depth: self.depth };
+        let s = p.string()?;
+        self.i = p.i;
+        Ok(s)
+    }
+
+    /// Skip one value without materializing it. Containers are skipped
+    /// iteratively (bracket counting — no recursion, so hostile nesting
+    /// cannot overflow the stack), but the depth cap is still enforced to
+    /// mirror the full parser's refusal.
+    fn skip_value(&mut self) -> Result<()> {
+        self.ws();
+        match self.peek()? {
+            b'"' => self.skip_string(),
+            b'{' | b'[' => {
+                let mut d = 0usize;
+                loop {
+                    match self.peek()? {
+                        b'{' | b'[' => {
+                            d += 1;
+                            if self.depth + d > MAX_DEPTH {
+                                return Err(Error::Parse(format!(
+                                    "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                                    self.i
+                                )));
+                            }
+                            self.i += 1;
+                        }
+                        b'}' | b']' => {
+                            d -= 1;
+                            self.i += 1;
+                            if d == 0 {
+                                return Ok(());
+                            }
+                        }
+                        b'"' => self.skip_string()?,
+                        _ => self.i += 1,
+                    }
+                }
+            }
+            b',' | b':' | b'}' | b']' => {
+                Err(Error::Parse(format!("expected a value at byte {}", self.i)))
+            }
+            _ => {
+                // number or literal: consume to the next delimiter
+                while self.i < self.b.len()
+                    && !matches!(
+                        self.b[self.i],
+                        b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r'
+                    )
+                {
+                    self.i += 1;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<()> {
+        if self.peek()? != b'"' {
+            return Err(Error::Parse(format!("expected '\"' at byte {}", self.i)));
+        }
+        self.i += 1;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    self.i += 1;
+                    self.peek()?; // escaped byte must exist
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
 // Writing
 // ----------------------------------------------------------------------
 
@@ -563,6 +785,93 @@ mod tests {
         // mixed object/array nesting also counts levels
         let mixed = format!("{{\"k\":{}}}", nested_arrays(MAX_DEPTH - 1));
         assert!(parse(&mixed).is_ok());
+    }
+
+    // ---- lazy path extraction ----------------------------------------
+
+    /// Reference semantics: full parse, then walk with `get`.
+    fn eager_path(text: &str, path: &[&str]) -> Option<Json> {
+        let mut v = parse(text).ok()?;
+        for key in path {
+            v = v.get(key)?.clone();
+        }
+        Some(v)
+    }
+
+    #[test]
+    fn get_path_extracts_scalars_without_full_parse() {
+        let text = r#"{"cmd":"events","job":"job-3","after_seq":17,"follow":true}"#;
+        assert_eq!(Json::path_str(text, &["cmd"]).unwrap(), "events");
+        assert_eq!(Json::path_str(text, &["job"]).unwrap(), "job-3");
+        assert_eq!(Json::path_f64(text, &["after_seq"]).unwrap(), 17.0);
+        assert!(Json::path_bool(text, &["follow"]).unwrap());
+        assert!(Json::path_str(text, &["missing"]).is_none());
+    }
+
+    #[test]
+    fn get_path_walks_nested_objects() {
+        let text = r#"{"a":{"b":{"c":[1,2,3]}},"z":0}"#;
+        let got = Json::get_path(text, &["a", "b", "c"]).unwrap().unwrap();
+        assert_eq!(got, parse("[1,2,3]").unwrap());
+        assert_eq!(Json::get_path(text, &["a", "x"]).unwrap(), None);
+        // walking through a non-object yields None, same as `get`
+        assert_eq!(Json::get_path(text, &["z", "q"]).unwrap(), None);
+    }
+
+    #[test]
+    fn get_path_duplicate_keys_last_wins_like_btreemap() {
+        let text = r#"{"k":1,"k":2,"k":{"x":"last"}}"#;
+        assert_eq!(
+            Json::get_path(text, &["k"]).unwrap(),
+            eager_path(text, &["k"])
+        );
+        assert_eq!(Json::path_str(text, &["k", "x"]).unwrap(), "last");
+    }
+
+    #[test]
+    fn get_path_decodes_escaped_keys_and_skips_tricky_values() {
+        // escaped key bytes must compare decoded; skipped values contain
+        // braces and escaped quotes inside strings
+        let text = r#"{"a":"{\"not\":1}","cmd":"yes","b":[{"]":"}"}]}"#;
+        assert_eq!(Json::path_str(text, &["cmd"]).unwrap(), "yes");
+        assert_eq!(Json::path_str(text, &["a"]).unwrap(), "{\"not\":1}");
+    }
+
+    #[test]
+    fn get_path_respects_depth_cap_on_spine_and_skip() {
+        let deep = format!("{{\"k\":{}}}", nested_arrays(MAX_DEPTH));
+        assert!(Json::get_path(&deep, &["k"]).is_err());
+        let skip_deep = format!("{{\"a\":{},\"k\":1}}", nested_arrays(MAX_DEPTH + 4));
+        assert!(Json::get_path(&skip_deep, &["k"]).is_err());
+        let ok = format!("{{\"k\":{}}}", nested_arrays(MAX_DEPTH - 1));
+        assert!(Json::get_path(&ok, &["k"]).unwrap().is_some());
+        // hostile depth far past the cap errors instead of overflowing
+        assert!(Json::get_path(&nested_arrays(100_000), &["k"]).is_err());
+    }
+
+    #[test]
+    fn get_path_agrees_with_parser_on_corpus_like_lines() {
+        let cases = [
+            r#"{}"#,
+            r#"{"cmd":""}"#,
+            r#"{"cmd":42}"#,
+            r#"{"cmd":"status","job":" "}"#,
+            r#"{"cmd":"submit","config":{"method":"revffn","eval_every":0}}"#,
+            r#"{"cmd":"events","job":"job-0","from":-3}"#,
+            r#"  { "cmd" : "status" }  "#,
+            r#"[1,2,3]"#,
+            r#""just a string""#,
+            r#"null"#,
+        ];
+        for text in cases {
+            for path in [&["cmd"][..], &["job"][..], &["config", "method"][..]] {
+                assert_eq!(
+                    Json::get_path(text, path).ok().flatten(),
+                    eager_path(text, path),
+                    "disagreement on {text:?} at {path:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Serve-subsystem integration tests over the real AOT artifacts:
 //! concurrent jobs must interleave deterministically on one shared
 //! device and finish with losses bit-identical to running each job
-//! solo; admission must queue past-budget jobs FIFO and admit them as
-//! budget frees; the TCP control plane must speak the NDJSON protocol
-//! end to end.
+//! solo; admission must order the waiting queue by (class, tenant
+//! debt, deadline, submit order) and admit as budget frees; tenant
+//! quotas must hold one tenant without blocking others; the TCP
+//! control plane must speak the NDJSON protocol — including keyset
+//! cursor pagination — end to end.
 //!
 //! Like the other integration tests, everything skips silently when
 //! `artifacts/tiny` is absent (run `make artifacts` first).
@@ -16,8 +18,8 @@ use revffn::config::{PriceGeometry, RunConfig, ServeConfig};
 use revffn::coordinator::Trainer;
 use revffn::engine::Method;
 use revffn::runtime::Device;
-use revffn::serve::protocol::{JobState, Request};
-use revffn::serve::{admission, Scheduler};
+use revffn::serve::protocol::{JobState, Priority, Request};
+use revffn::serve::{admission, Scheduler, SubmitMeta};
 use revffn::util::json::{self, Json};
 use revffn::util::ScratchDir;
 
@@ -243,7 +245,16 @@ fn tcp_control_plane_end_to_end() {
             "data":{"pretrain_steps":0,"n_train":48,"n_eval":16}}"#,
     )
     .unwrap();
-    send(&mut control, &Request::Submit { config: cfg, name: Some("tcp".into()) });
+    send(
+        &mut control,
+        &Request::Submit {
+            config: cfg,
+            name: Some("tcp".into()),
+            priority: Priority::Normal,
+            tenant: None,
+            deadline_ms: None,
+        },
+    );
     let resp = read(&mut reader);
     assert!(resp.bool_of("ok").unwrap(), "submit failed: {resp}");
     let job = resp.str_of("job").unwrap();
@@ -252,7 +263,7 @@ fn tcp_control_plane_end_to_end() {
 
     // follow the event stream on a second connection until done
     let mut ev_stream = TcpStream::connect(&addr).unwrap();
-    send(&mut ev_stream, &Request::Events { job: job.clone(), from: 0, follow: true });
+    send(&mut ev_stream, &Request::Events { job: job.clone(), from: 0, limit: None, follow: true });
     let mut ev_reader = BufReader::new(ev_stream.try_clone().unwrap());
     let mut step_events = 0;
     let mut phases = Vec::new();
@@ -428,7 +439,7 @@ fn restarted_scheduler_recovers_jobs_from_disk() {
             out_dir.to_str().unwrap()
         ))
         .unwrap();
-        let a = sched.submit_json(&cfg_json, Some("survivor".into())).unwrap();
+        let a = sched.submit_json(&cfg_json, Some("survivor".into()), SubmitMeta::default()).unwrap();
         assert!(a.admitted);
         for _ in 0..6 {
             assert!(sched.tick().unwrap());
@@ -459,6 +470,207 @@ fn restarted_scheduler_recovers_jobs_from_disk() {
         !opts.run_root.join("job-0").join("job.json").exists(),
         "finished job must clear its recovery marker"
     );
+}
+
+#[test]
+fn interactive_job_overtakes_queued_batch_backlog() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-priority").unwrap();
+
+    // budget fits exactly one tiny job at a time — a real backlog forms
+    let assume = revffn::memory::Assumptions::parse("f32").unwrap();
+    let priced = admission::price_job(&root, Method::Sft, assume, None).unwrap();
+    let budget = 1.5 * priced.peak_gb;
+
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, serve_opts(&root, &scratch, budget, 4)).unwrap();
+    let batch = SubmitMeta { priority: Priority::Batch, ..SubmitMeta::default() };
+    let b1 = sched
+        .submit_with(job_cfg(&root, &scratch.join("b1"), Method::Sft), None, batch.clone())
+        .unwrap();
+    let b2 = sched
+        .submit_with(job_cfg(&root, &scratch.join("b2"), Method::Sft), None, batch.clone())
+        .unwrap();
+    let b3 = sched
+        .submit_with(job_cfg(&root, &scratch.join("b3"), Method::Sft), None, batch)
+        .unwrap();
+    let hi = sched
+        .submit_with(
+            job_cfg(&root, &scratch.join("hi"), Method::Sft),
+            None,
+            SubmitMeta { priority: Priority::Interactive, ..SubmitMeta::default() },
+        )
+        .unwrap();
+    assert!(b1.admitted, "first batch job owns the budget");
+    assert!(!b2.admitted && !b3.admitted && !hi.admitted, "the rest must queue");
+
+    sched.run_until_idle().unwrap();
+    for id in [&b1.id, &b2.id, &b3.id, &hi.id] {
+        assert_eq!(sched.job_state(id), Some(JobState::Finished));
+    }
+
+    // the interactive job must be the FIRST admission out of the
+    // backlog, overtaking both earlier-submitted batch jobs — and the
+    // batch pair must then drain in submit order
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let first_seen = |id: &str| board.timeline.iter().position(|t| t == id).unwrap();
+    assert!(
+        first_seen(&hi.id) < first_seen(&b2.id) && first_seen(&hi.id) < first_seen(&b3.id),
+        "interactive job must run before the queued batch jobs: {:?}",
+        board.timeline
+    );
+    assert!(first_seen(&b2.id) < first_seen(&b3.id), "equal jobs keep submit order");
+}
+
+#[test]
+fn tenant_at_quota_waits_while_other_tenant_admits() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-tenant-quota").unwrap();
+    let opts = {
+        let mut o = serve_opts(&root, &scratch, 1e9, 4);
+        o.tenant_max_jobs = 1; // budget is effectively unlimited; the quota is the gate
+        o
+    };
+    let device = Device::cpu().unwrap();
+    let mut sched = Scheduler::new(device, opts).unwrap();
+    let meta = |tenant: &str| SubmitMeta { tenant: Some(tenant.into()), ..SubmitMeta::default() };
+
+    let a1 = sched
+        .submit_with(job_cfg(&root, &scratch.join("a1"), Method::Sft), None, meta("team-a"))
+        .unwrap();
+    let a2 = sched
+        .submit_with(job_cfg(&root, &scratch.join("a2"), Method::Sft), None, meta("team-a"))
+        .unwrap();
+    let b1 = sched
+        .submit_with(job_cfg(&root, &scratch.join("bb"), Method::Sft), None, meta("team-b"))
+        .unwrap();
+
+    assert!(a1.admitted, "within quota");
+    assert!(!a2.admitted, "tenant at max_jobs must wait despite free budget");
+    assert_eq!(sched.job_state(&a2.id), Some(JobState::Queued));
+    assert!(b1.admitted, "a quota-blocked tenant must not block others");
+
+    sched.run_until_idle().unwrap();
+    for id in [&a1.id, &a2.id, &b1.id] {
+        assert_eq!(sched.job_state(id), Some(JobState::Finished), "quota releases free the queue");
+    }
+    // a2 only started once a1 released team-a's slot
+    let board = sched.board();
+    let board = board.lock().unwrap();
+    let last_a1 = board.timeline.iter().rposition(|t| t == &a1.id).unwrap();
+    let first_a2 = board.timeline.iter().position(|t| t == &a2.id).unwrap();
+    assert!(last_a1 < first_a2, "tenant slot must serialize a1 before a2");
+}
+
+#[test]
+fn tcp_paginated_events_reconstruct_the_full_replay() {
+    let Some(root) = artifacts_root() else { return };
+    let scratch = ScratchDir::new("serve-pages").unwrap();
+    let handle = revffn::serve::serve(serve_opts(&root, &scratch, 1e9, 2)).unwrap();
+    let addr = handle.addr().to_string();
+
+    let send = |stream: &mut TcpStream, req: &Request| {
+        let mut line = req.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.flush().unwrap();
+    };
+    let read = |reader: &mut BufReader<TcpStream>| -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("{e}: {line:?}"))
+    };
+
+    let mut control = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(control.try_clone().unwrap());
+    let cfg = json::parse(
+        r#"{"method":"revffn","eval_every":0,"eval_batches":1,
+            "schedule":{"stage1_steps":1,"stage2_steps":2},
+            "data":{"pretrain_steps":0,"n_train":48,"n_eval":16}}"#,
+    )
+    .unwrap();
+    send(
+        &mut control,
+        &Request::Submit {
+            config: cfg,
+            name: None,
+            priority: Priority::Interactive,
+            tenant: Some("pager".into()),
+            deadline_ms: Some(120_000),
+        },
+    );
+    let resp = read(&mut reader);
+    assert!(resp.bool_of("ok").unwrap(), "submit failed: {resp}");
+    assert_eq!(resp.str_of("priority").unwrap(), "interactive");
+    assert_eq!(resp.str_of("tenant").unwrap(), "pager");
+    let job = resp.str_of("job").unwrap();
+
+    // the reference: one follow stream, every event line until done
+    let mut full = Vec::new();
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        send(&mut s, &Request::Events { job: job.clone(), from: 0, limit: None, follow: true });
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        loop {
+            let j = read(&mut r);
+            if j.get("done").and_then(Json::as_bool).unwrap_or(false) {
+                assert_eq!(j.str_of("state").unwrap(), "finished");
+                break;
+            }
+            full.push(j.to_string());
+        }
+    }
+    assert!(full.len() > 4, "short job still emits a multi-page stream");
+
+    // now reconstruct it with limit-2 pages chained through next_cursor
+    let mut paged = Vec::new();
+    let mut cursor = 0u64;
+    loop {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        send(
+            &mut s,
+            &Request::Events { job: job.clone(), from: cursor, limit: Some(2), follow: false },
+        );
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut count = 0u64;
+        loop {
+            let j = read(&mut r);
+            if j.get("page").and_then(Json::as_bool).unwrap_or(false) {
+                assert_eq!(j.u64_of("count").unwrap(), count, "footer count = delivered lines");
+                let next = j.u64_of("next_cursor").unwrap();
+                assert_eq!(next, cursor + count, "next_cursor advances by the page length");
+                cursor = next;
+                if j.bool_of("done").unwrap() {
+                    assert_eq!(j.str_of("state").unwrap(), "finished");
+                } else {
+                    assert_eq!(count, 2, "only the final page may come up short");
+                }
+                break;
+            }
+            count += 1;
+            assert!(count <= 2, "page overflowed its limit");
+            paged.push(j.to_string());
+        }
+        if cursor >= full.len() as u64 {
+            break;
+        }
+    }
+    assert_eq!(paged, full, "chained pages must reconstruct the exact replay");
+
+    // an idle retry past the end is exact: zero lines, echoed cursor
+    let mut s = TcpStream::connect(&addr).unwrap();
+    send(&mut s, &Request::Events { job: job.clone(), from: cursor, limit: Some(2), follow: false });
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let j = read(&mut r);
+    assert!(j.get("page").and_then(Json::as_bool).unwrap_or(false));
+    assert_eq!(j.u64_of("count").unwrap(), 0);
+    assert_eq!(j.u64_of("next_cursor").unwrap(), cursor);
+    assert!(j.bool_of("done").unwrap());
+
+    send(&mut control, &Request::Shutdown);
+    assert!(read(&mut reader).bool_of("ok").unwrap());
+    handle.join().unwrap();
 }
 
 #[test]

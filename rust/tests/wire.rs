@@ -1,22 +1,32 @@
 //! Wire-protocol robustness: arbitrary and mutated bytes through the
 //! NDJSON request path must never panic, must produce a well-formed
 //! `error_json` reply when rejected, and valid requests must round-trip
-//! exactly. A committed seed corpus (`tests/fixtures/wire_corpus.txt`)
-//! pins the regression cases; the property tests explore around them.
+//! exactly. The lazy hot path carries two agreement contracts pinned
+//! here: `Request::from_line_fast` must equal `Request::from_line` on
+//! every accepted line, and `Json::get_path` must equal a full parse +
+//! `get` walk on every input the parser accepts. A committed seed
+//! corpus (`tests/fixtures/wire_corpus.txt`) pins the regression cases;
+//! the property tests explore around them.
 
-use revffn::serve::protocol::{error_json, Request};
+use revffn::serve::protocol::{error_json, Priority, Request};
 use revffn::util::json::{self, Json, ObjBuilder};
 use revffn::util::prop::{gen, prop_check};
 use revffn::util::rng::Rng;
 
 /// The invariant every hostile line must satisfy: parsing returns (no
-/// panic — the call itself proves that), and a rejection converts into
-/// an `error_json` reply that is itself valid JSON with `ok:false`.
+/// panic — the call itself proves that), a rejection converts into an
+/// `error_json` reply that is itself valid JSON with `ok:false`, and
+/// the lazy dispatcher (`Request::from_line_fast`) agrees with the full
+/// parser on every line the full parser accepts.
 fn survives(line: &str) -> bool {
+    // calling the lazy path first proves it never panics, accepted or not
+    let fast = Request::from_line_fast(line);
     match Request::from_line(line) {
         Ok(req) => {
-            // accepted input must re-serialize and re-parse to itself
+            // accepted input must re-serialize and re-parse to itself,
+            // and the hot path must have produced the identical request
             matches!(Request::from_line(&req.to_line()), Ok(back) if back == req)
+                && matches!(fast, Ok(f) if f == req)
         }
         Err(e) => {
             let reply = error_json(&e.to_string()).to_string();
@@ -26,6 +36,47 @@ fn survives(line: &str) -> bool {
             }
         }
     }
+}
+
+/// The paths the serve hot path actually scans, plus a nested one.
+const HOT_PATHS: &[&[&str]] = &[
+    &["cmd"],
+    &["job"],
+    &["name"],
+    &["after_seq"],
+    &["from"],
+    &["limit"],
+    &["follow"],
+    &["priority"],
+    &["tenant"],
+    &["deadline_ms"],
+    &["config", "method"],
+];
+
+/// `Json::get_path` agreement contract: on every input the full parser
+/// accepts, the lazy scan must return exactly what walking the parsed
+/// tree with `Json::get` would — including duplicate-key last-wins and
+/// type mismatches along the path. On rejected input it must simply not
+/// panic (its result is unspecified there — it skips what it never
+/// validates).
+fn paths_agree(text: &str) -> bool {
+    let tree = json::parse(text);
+    for path in HOT_PATHS {
+        let lazy = Json::get_path(text, path);
+        let Ok(ref t) = tree else { continue };
+        let mut eager = Some(t);
+        for key in *path {
+            eager = eager.and_then(|v| v.get(key));
+        }
+        match (lazy, eager) {
+            (Ok(l), e) if l.as_ref() == e => {}
+            (got, want) => {
+                eprintln!("path {path:?} on {text:?}: lazy {got:?} != eager {want:?}");
+                return false;
+            }
+        }
+    }
+    true
 }
 
 #[test]
@@ -39,11 +90,13 @@ fn corpus_cases_never_panic_and_reject_cleanly() {
         }
         cases += 1;
         assert!(survives(line), "corpus case failed invariant: {line:?}");
+        assert!(paths_agree(line), "corpus case broke get_path agreement: {line:?}");
     }
     assert!(cases >= 25, "corpus unexpectedly small: {cases} cases");
     // the blank-line case, explicitly (corpus readers skip blank rows)
     assert!(survives(""));
     assert!(survives("   \t  "));
+    assert!(paths_agree("") && paths_agree("   \t  "));
 }
 
 #[test]
@@ -78,17 +131,64 @@ fn random_request(rng: &mut Rng) -> Request {
                 .num("eval_every", rng.gen_range(0..50) as f64)
                 .build(),
             name: if rng.gen_range(0..2) == 0 { None } else { Some(job) },
+            priority: match rng.gen_range(0..3) {
+                0 => Priority::Batch,
+                1 => Priority::Normal,
+                _ => Priority::Interactive,
+            },
+            tenant: if rng.gen_range(0..2) == 0 {
+                None
+            } else {
+                Some(format!("tenant-{}", rng.gen_range(0..5)))
+            },
+            deadline_ms: if rng.gen_range(0..2) == 0 {
+                None
+            } else {
+                Some(rng.gen_range(0..600_000) as u64)
+            },
         },
         1 => Request::Status { job: if rng.gen_range(0..2) == 0 { None } else { Some(job) } },
         2 => Request::Events {
             job,
             from: rng.gen_range(0..10_000) as u64,
+            limit: if rng.gen_range(0..2) == 0 {
+                None
+            } else {
+                Some(rng.gen_range(1..5_000) as u64)
+            },
             follow: rng.gen_range(0..2) == 0,
         },
         3 => Request::Cancel { job },
         4 => Request::Resume { job },
         _ => Request::Shutdown,
     }
+}
+
+#[test]
+fn prop_get_path_agrees_with_full_parser() {
+    // arbitrary text: agreement holds trivially on rejects (no panic)
+    // and exactly on the occasional accept
+    prop_check("get-path-arbitrary", 300, 41,
+        |rng| gen::string(rng, 120),
+        |s| paths_agree(s));
+    // jsonish text parses much more often — this is where the accept
+    // branch of the agreement contract actually gets exercised
+    prop_check("get-path-jsonish", 300, 43,
+        |rng| {
+            let n = rng.gen_range(0..100);
+            (0..n)
+                .map(|_| {
+                    let jsonish = b"{}[]\",:0123456789.eE+-truefalsnl ";
+                    jsonish[rng.gen_range(0..jsonish.len())] as char
+                })
+                .collect::<String>()
+        },
+        |s| paths_agree(s));
+    // serialized real requests: every one parses, so agreement is
+    // checked on the exact shapes the serve hot path sees
+    prop_check("get-path-requests", 200, 47,
+        |rng| random_request(rng).to_line(),
+        |s| paths_agree(s));
 }
 
 #[test]
@@ -119,7 +219,7 @@ fn prop_mutated_valid_lines_never_panic() {
             }
             String::from_utf8_lossy(&bytes).into_owned()
         },
-        |s| survives(s));
+        |s| survives(s) && paths_agree(s));
 }
 
 #[test]
