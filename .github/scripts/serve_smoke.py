@@ -71,6 +71,33 @@ def shutdown(control, control_lines):
     assert resp.get("ok"), f"shutdown failed: {resp}"
 
 
+def check_metrics(control, control_lines):
+    """The `metrics` verb must answer a Prometheus-parseable exposition
+    with liveness (steps_total > 0) and the scheduler gauge families
+    (docs/OBSERVABILITY.md)."""
+    send(control, {"cmd": "metrics"})
+    resp = next(control_lines)
+    assert resp.get("ok") and resp.get("kind") == "metrics", f"bad metrics reply: {resp}"
+    assert resp.get("steps_total", 0) > 0, f"metrics reports no steps: {resp}"
+    body = resp["body"]
+    for needle in (
+        "# TYPE revffn_steps_total counter",
+        "revffn_stage_seconds",
+        "revffn_tenant_queue_depth",
+        "revffn_jobs{state=",
+        "revffn_budget_gb",
+    ):
+        assert needle in body, f"missing {needle!r} in exposition:\n{body[:600]}"
+    for line in body.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name, f"unparseable sample line: {line!r}"
+        if value not in ("+Inf", "-Inf", "NaN"):
+            float(value)  # raises on a malformed sample
+    print(f"metrics scrape ok: steps_total={resp['steps_total']}")
+
+
 def cancel_mode(control, control_lines):
     job = submit(control, control_lines, "smoke", {
         "method": "revffn",
@@ -107,6 +134,7 @@ def cancel_mode(control, control_lines):
     status = next(control_lines)
     assert status["jobs"][0]["state"] == "cancelled", f"bad status: {status}"
     print("status confirms cancellation")
+    check_metrics(control, control_lines)
     shutdown(control, control_lines)
     print("serve smoke test passed")
 
@@ -140,6 +168,7 @@ def chaos_mode(control, control_lines):
     assert row.get("attempts", 0) >= 1, \
         f"the injected fault must have forced a supervised retry: {row}"
     print(f"job retried {row['attempts']} time(s) and finished")
+    check_metrics(control, control_lines)
     shutdown(control, control_lines)
     print("serve chaos smoke test passed")
 

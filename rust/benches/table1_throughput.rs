@@ -71,6 +71,9 @@ fn row_json(
 }
 
 fn main() -> anyhow::Result<()> {
+    // telemetry on: the PJRT transfer counters and stage histograms
+    // accumulate across every timed path and land in the output doc
+    revffn::obs::registry::arm();
     let device = Device::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
     let cache = ProgramCache::new();
 
@@ -361,12 +364,41 @@ fn main() -> anyhow::Result<()> {
         paper_table1(Method::Revffn.memory_method()).1 / paper_sft
     );
 
+    // registry snapshot: process-wide transfer totals and per-site
+    // stage latency quantiles accumulated across every path above
+    let snap = revffn::obs::registry::snapshot();
+    let steps_timed = rows.len().max(1) as f64 * (WARMUP + ITERS) as f64;
+    let stages: Vec<Json> = snap
+        .hists
+        .iter()
+        .map(|h| {
+            ObjBuilder::new()
+                .str("site", h.site.name())
+                .num("count", h.count as f64)
+                .num("p50_s", h.p50_s)
+                .num("p95_s", h.p95_s)
+                .num("p99_s", h.p99_s)
+                .num("sum_s", h.sum_s)
+                .build()
+        })
+        .collect();
+    let uploads = snap.counter(revffn::obs::registry::Counter::Uploads);
+    let downloads = snap.counter(revffn::obs::registry::Counter::Downloads);
+    let telemetry = ObjBuilder::new()
+        .num("uploads_total", uploads as f64)
+        .num("downloads_total", downloads as f64)
+        .num("uploads_per_step", uploads as f64 / steps_timed)
+        .num("downloads_per_step", downloads as f64 / steps_timed)
+        .val("stages", Json::Arr(stages))
+        .build();
+
     let doc = ObjBuilder::new()
         .str("bench", "table1_throughput")
         .str("artifacts", "artifacts/tiny")
         .num("grad_accum", GRAD_ACCUM as f64)
         .num("warmup", WARMUP as f64)
         .num("iters", ITERS as f64)
+        .val("telemetry", telemetry)
         .val("methods", Json::Arr(rows))
         .build();
     std::fs::write(OUT_PATH, doc.to_string())?;

@@ -17,6 +17,11 @@
 //! * **DC003** — uncataloged rule ID: an `AR`/`CK`/`CF`/`LN`/`DC` rule
 //!   ID cited anywhere in the docs that has no row in the
 //!   `docs/ANALYSIS.md` catalog tables.
+//! * **DC004** — exported-but-uncataloged metric name: every
+//!   `"revffn_…"` string literal in the telemetry layer
+//!   (`rust/src/obs/**`, non-test lines) must have a row in the
+//!   `docs/OBSERVABILITY.md` catalog tables. Skipped silently when the
+//!   tree has no obs module.
 //!
 //! All scans are line-based so findings carry `file:line` subjects;
 //! fenced code blocks are skipped for link extraction (sample payloads
@@ -179,6 +184,59 @@ pub fn cited_ids(text: &str) -> Vec<(usize, String)> {
     out
 }
 
+/// `"revffn_…"` string literals in telemetry source text — the
+/// exported metric-name surface DC004 pins to the catalog. Only whole
+/// literals that look like metric names count (lowercase/digit/underscore
+/// after the prefix), so prefix checks like `starts_with("revffn_")` and
+/// rendered sample lines in tests never register; scanning stops at the
+/// trailing `#[cfg(test)]` block (repo convention: tests last).
+pub fn exported_metric_names(obs_src: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in obs_src.lines() {
+        if line.trim() == "#[cfg(test)]" {
+            break;
+        }
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i < b.len() {
+            if b[i] == b'"' {
+                if let Some(off) = b[i + 1..].iter().position(|&c| c == b'"') {
+                    let lit = &b[i + 1..i + 1 + off];
+                    if lit.starts_with(b"revffn_")
+                        && lit.len() > "revffn_".len()
+                        && lit.iter().all(|&c| {
+                            c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_'
+                        })
+                    {
+                        out.insert(String::from_utf8_lossy(lit).into_owned());
+                    }
+                    i += off + 2;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Metric names with a catalog row in `docs/OBSERVABILITY.md`: the
+/// first cell of any table row (`| revffn_steps_total | … |`),
+/// backticks tolerated.
+pub fn cataloged_metrics(observability_md: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in observability_md.lines() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix('|') else { continue };
+        let Some(cell) = rest.split('|').next() else { continue };
+        let name = cell.trim().trim_matches('`');
+        if name.starts_with("revffn_") {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
 fn is_rule_id_bytes(b: &[u8]) -> bool {
     b.len() == 5
         && ID_FAMILIES.iter().any(|f| f.as_bytes() == &b[..2])
@@ -236,6 +294,42 @@ pub fn check_docs(root: &Path) -> Vec<Finding> {
             docs_dir.join("ANALYSIS.md").display().to_string(),
             "docs/ANALYSIS.md missing — rule IDs have no catalog to resolve against",
         ));
+    }
+
+    // DC004 — exported-but-uncataloged metric names. Skipped silently
+    // when the tree has no telemetry module (scratch fixtures, packaged
+    // crates); a missing catalog then means every exported name fires.
+    if let Some(obs_dir) =
+        ["rust/src/obs", "src/obs"].iter().map(|p| root.join(p)).find(|p| p.is_dir())
+    {
+        let cataloged = std::fs::read_to_string(docs_dir.join("OBSERVABILITY.md"))
+            .ok()
+            .map(|t| cataloged_metrics(&t))
+            .unwrap_or_default();
+        let mut obs_files: Vec<PathBuf> = std::fs::read_dir(&obs_dir)
+            .map(|rd| {
+                rd.flatten()
+                    .map(|e| e.path())
+                    .filter(|p| p.extension().map(|e| e == "rs").unwrap_or(false))
+                    .collect()
+            })
+            .unwrap_or_default();
+        obs_files.sort();
+        for file in &obs_files {
+            let rel = file.strip_prefix(root).unwrap_or(file).to_string_lossy().replace('\\', "/");
+            let Ok(text) = std::fs::read_to_string(file) else { continue };
+            for name in exported_metric_names(&text) {
+                if !cataloged.contains(&name) {
+                    findings.push(Finding::error(
+                        "DC004",
+                        rel.clone(),
+                        format!(
+                            "metric {name} is exported here but has no docs/OBSERVABILITY.md catalog row"
+                        ),
+                    ));
+                }
+            }
+        }
     }
 
     for file in &files {
@@ -387,6 +481,49 @@ prose--not-a-flag and --x\n";
         assert!(rules.contains(&"DC003"), "{f:?}");
         assert_eq!(f.len(), 3, "{f:?}");
         assert!(f.iter().all(|x| x.subject.starts_with("README.md:1")), "{f:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metric_names_extracted_from_whole_literals_only() {
+        let src = "\
+pub const A: &str = \"revffn_steps_total\";\n\
+let p = n.starts_with(\"revffn_\");\n\
+let l = \"revffn_steps_total 1\";\n\
+#[cfg(test)]\n\
+mod tests { const T: &str = \"revffn_test_metric\"; }\n";
+        let names = exported_metric_names(src);
+        assert_eq!(names.into_iter().collect::<Vec<_>>(), vec!["revffn_steps_total"]);
+        let ids = cataloged_metrics("| `revffn_steps_total` | counter | — |\n| rule | x |\n");
+        assert_eq!(ids.into_iter().collect::<Vec<_>>(), vec!["revffn_steps_total"]);
+    }
+
+    #[test]
+    fn uncataloged_metric_fires_dc004() {
+        let dir = scratch("metric");
+        std::fs::create_dir_all(dir.join("rust/src/obs")).unwrap();
+        std::fs::write(dir.join("README.md"), "front door\n").unwrap();
+        std::fs::write(dir.join("docs/ANALYSIS.md"), "| `AR001` | a rule |\n").unwrap();
+        std::fs::write(dir.join("rust/src/main.rs"), "f.opt(\"config\")").unwrap();
+        std::fs::write(
+            dir.join("rust/src/obs/registry.rs"),
+            "pub const A: &str = \"revffn_lost_total\";\npub const B: &str = \"revffn_kept_total\";\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("docs/OBSERVABILITY.md"), "| `revffn_kept_total` | counter |\n")
+            .unwrap();
+        let f = check_docs(&dir);
+        let dc4: Vec<_> = f.iter().filter(|x| x.rule == "DC004").collect();
+        assert_eq!(dc4.len(), 1, "{f:?}");
+        assert!(dc4[0].message.contains("revffn_lost_total"), "{f:?}");
+        assert_eq!(dc4[0].subject, "rust/src/obs/registry.rs");
+        // cataloging the name clears the finding
+        std::fs::write(
+            dir.join("docs/OBSERVABILITY.md"),
+            "| `revffn_kept_total` | counter |\n| `revffn_lost_total` | counter |\n",
+        )
+        .unwrap();
+        assert!(check_docs(&dir).iter().all(|x| x.rule != "DC004"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -18,6 +18,11 @@
 //!   loops with no jitter and no cap. Waits go through
 //!   `util::retry::Backoff` (retry delays) or `util::retry::pause`
 //!   (the one sanctioned sleep wrapper).
+//! * **LN005** — no raw `Instant::now()` in `serve/` or `engine/`
+//!   outside `obs/`: ad-hoc stopwatches are timing sites the telemetry
+//!   layer cannot see. Timing goes through `obs::span` (records into
+//!   the stage histograms and the trace ring) or `obs::now` (the
+//!   sanctioned clock for deadline arithmetic).
 //!
 //! The scanner strips line/block comments (nested), string literals
 //! (incl. raw and byte strings), and char literals before matching, and
@@ -172,6 +177,8 @@ const LN003_PATTERNS: &[&str] = &["with_capacity(", "vec![0"];
 pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
     let norm = rel.replace('\\', "/");
     let in_serve = norm.starts_with("serve/") || norm.contains("/serve/");
+    let in_engine = norm.starts_with("engine/") || norm.contains("/engine/");
+    let is_obs = norm.starts_with("obs/") || norm.contains("/obs/");
     let is_lock_helper = norm.ends_with("serve/lock.rs") || norm == "serve/lock.rs";
     let is_backoff_helper = norm.ends_with("util/retry.rs") || norm == "util/retry.rs";
     let stripped = strip(text);
@@ -218,6 +225,13 @@ pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
                 "LN004",
                 subject.clone(),
                 "raw thread::sleep — waits go through util::retry (Backoff::delay for retry delays, retry::pause for sanctioned sleeps)".to_string(),
+            ));
+        }
+        if (in_serve || in_engine) && !is_obs && line.contains("Instant::now(") {
+            out.push(Finding::error(
+                "LN005",
+                subject.clone(),
+                "raw Instant::now() in timed code — time through obs::span (stage histograms + trace) or obs::now (deadline arithmetic) so telemetry sees the site".to_string(),
             ));
         }
     }
@@ -333,6 +347,24 @@ mod tests { fn t() { x.unwrap(); } }\n";
         let f = lint_text("serve/server.rs", src);
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].rule, "LN001");
+    }
+
+    #[test]
+    fn raw_instant_flagged_in_serve_and_engine_only() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        let f = lint_text("serve/scheduler.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN005");
+        let f = lint_text("engine/run.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "LN005");
+        // the telemetry layer itself owns the real clock
+        assert!(lint_text("obs/trace.rs", src).is_empty());
+        // the rule is scoped: other subsystems may time ad hoc
+        assert!(lint_text("util/retry.rs", src).is_empty());
+        // comments, strings, and trailing test blocks stay exempt
+        let exempt = "// Instant::now( in prose\nlet s = \"Instant::now(\";\n#[cfg(test)]\nmod tests { fn t() { Instant::now(); } }\n";
+        assert!(lint_text("serve/server.rs", exempt).is_empty());
     }
 
     #[test]

@@ -33,7 +33,6 @@
 
 use std::borrow::{Borrow, BorrowMut};
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use crate::checkpoint;
 use crate::coordinator::lr::lr_at;
@@ -43,6 +42,7 @@ use crate::coordinator::trainer::{TrainReport, Trainer};
 use crate::data::dataset::{encode_corpus, encode_lm_text};
 use crate::data::{Batcher, Pipeline};
 use crate::error::{Error, Result};
+use crate::obs::{self, registry};
 use crate::runtime::accum::GradAccumulator;
 use crate::runtime::stepper::{Batch, Stepper};
 
@@ -302,7 +302,10 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             trainer.metrics.write_jsonl(metrics_path)?;
         }
         if trainer.cfg.save_checkpoint {
+            let sp = obs::span(obs::Site::CheckpointSave);
             checkpoint::save_stepper(trainer.cfg.out_dir.join("final.rvt"), &mut stepper)?;
+            sp.finish();
+            registry::inc(registry::Counter::CheckpointSaves);
         }
         trainer.stepper = Some(stepper);
         Ok(report)
@@ -390,6 +393,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         // too), and note how far the data cursor must be replayed.
         let cursor = match &resume {
             Some(ckpt) => {
+                let sp = obs::span(obs::Site::CheckpointRestore);
                 let cursor = ckpt.cursor.expect("restore() validated the cursor");
                 if cursor.batch_seed != batch_seed {
                     return Err(Error::Config(format!(
@@ -415,6 +419,8 @@ impl<T: BorrowMut<Trainer>> Run<T> {
                     phase.label, cursor.step_in_phase, phase.steps, ckpt.step,
                     cursor.batches_taken
                 );
+                sp.finish();
+                registry::inc(registry::Counter::CheckpointRestores);
                 Some(cursor)
             }
             None => None,
@@ -500,7 +506,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         let mut aux_acc = 0.0f32;
         let mut device_s = 0.0f64;
         let grad_norm;
-        let t0 = Instant::now();
+        let sp = obs::span(obs::Site::EngineStep);
         if let Some(accum) = self.accum.as_mut() {
             let use_buffers = stepper.is_device_resident() && accum.supports_buffers();
             let outcome = if use_buffers && !stepper.buffers_verified() {
@@ -557,7 +563,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             }
             grad_norm = gn_acc / ga as f32;
         }
-        let time_acc = t0.elapsed().as_secs_f64();
+        let time_acc = sp.finish().as_secs_f64();
         let gaf = ga as f32;
         let samples = (b * ga) as f64;
         let rec = StepRecord {
@@ -572,6 +578,7 @@ impl<T: BorrowMut<Trainer>> Run<T> {
             samples_per_s: samples / time_acc.max(1e-9),
         };
         trainer.metrics.record_step(rec.clone());
+        registry::inc(registry::Counter::Steps);
         self.queue.push_back(StepEvent::Step(rec));
         // the step consumed exactly `ga` batches (the buffer-path
         // fallback redo reuses its pre-fetched burst, never extras) —
@@ -608,7 +615,10 @@ impl<T: BorrowMut<Trainer>> Run<T> {
         };
         let stepper = self.stepper.as_mut().expect("phase open");
         let path = checkpoint::periodic_path(&out_dir, cursor.phase_idx, cursor.step_in_phase);
+        let sp = obs::span(obs::Site::CheckpointSave);
         checkpoint::save_stepper_state(&path, stepper, Some(&cursor))?;
+        sp.finish();
+        registry::inc(registry::Counter::CheckpointSaves);
         checkpoint::prune_checkpoints(&out_dir, keep_last);
         Ok(())
     }

@@ -72,6 +72,7 @@ pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod memory;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

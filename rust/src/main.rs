@@ -47,7 +47,12 @@ COMMANDS:
                 [--pretrain-steps N] [--eval-batches N] [--out-dir DIR]
                 [--config FILE.json] [--eval-suite] [--save-checkpoint]
                 [--checkpoint-every N] [--keep-last N] [--resume [FILE.rvt]]
-                [--no-device-resident]
+                [--no-device-resident] [--trace-out FILE.json]
+                [--metrics-out FILE.prom] [--metrics-every-secs N]
+                (telemetry sinks: docs/OBSERVABILITY.md — --trace-out
+                dumps hot-path spans as Chrome trace-event JSON,
+                --metrics-out writes the Prometheus exposition on a
+                cadence)
   eval          --artifacts DIR --method M [--checkpoint FILE.rvt] [--questions N]
   plan-memory   [--seq N] [--budget-gb G] [--batch B] [--assumptions bf16_mixed|paper|f32]
   calibrate     [--artifacts DIR]
@@ -153,6 +158,38 @@ fn cmd_train(f: &Flags) -> Result<()> {
         )?),
         Some(path) => Some(PathBuf::from(path)),
     };
+    // telemetry sinks (docs/OBSERVABILITY.md): either flag arms the
+    // metrics registry; --trace-out additionally records hot-path spans
+    // for a Chrome trace-event dump at exit
+    let trace_out = f.opt("trace_out").map(PathBuf::from);
+    let metrics_out = f.opt("metrics_out").map(PathBuf::from);
+    let metrics_every =
+        f.u64("metrics_every_secs", 10).map_err(|e| anyhow!("{e}"))?.max(1);
+    if trace_out.is_some() || metrics_out.is_some() {
+        revffn::obs::registry::arm();
+    }
+    if trace_out.is_some() {
+        revffn::obs::trace::enable();
+    }
+    let metrics_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_thread = metrics_out.map(|path| {
+        let stop = metrics_stop.clone();
+        let every = std::time::Duration::from_secs(metrics_every);
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            let slice = std::time::Duration::from_millis(200);
+            while !stop.load(Ordering::SeqCst) {
+                let _ = std::fs::write(&path, revffn::obs::prom::render_default());
+                let mut waited = std::time::Duration::ZERO;
+                while waited < every && !stop.load(Ordering::SeqCst) {
+                    revffn::util::retry::pause(slice);
+                    waited += slice;
+                }
+            }
+            // final snapshot: even a short run leaves the exposition
+            let _ = std::fs::write(&path, revffn::obs::prom::render_default());
+        })
+    });
     let device = Device::cpu().map_err(|e| anyhow!("{e}"))?;
     eprintln!("[device] {} x{}", device.platform_name(), device.device_count());
     let mut trainer = Trainer::new(&device, cfg).map_err(|e| anyhow!("{e}"))?;
@@ -181,6 +218,14 @@ fn cmd_train(f: &Flags) -> Result<()> {
             "bench: mmlu-like {:.1}%  gsm8k-like {:.1}%  multilingual-like {:.1}%  mtbench-like {:.2}",
             scores.mmlu_like, scores.gsm8k_like, scores.multilingual_like, scores.mtbench_like
         );
+    }
+    metrics_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    if let Some(t) = metrics_thread {
+        let _ = t.join();
+    }
+    if let Some(path) = &trace_out {
+        revffn::obs::trace::write_chrome(path)?;
+        eprintln!("[obs] wrote Chrome trace to {} (load in chrome://tracing)", path.display());
     }
     Ok(())
 }
@@ -322,7 +367,7 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         opts.price_geometry.name()
     );
     eprintln!(
-        "[serve] NDJSON verbs: submit | status | events | cancel | resume | shutdown (docs/SERVE.md)"
+        "[serve] NDJSON verbs: submit | status | events | cancel | resume | metrics | shutdown (docs/SERVE.md)"
     );
     handle.join().map_err(|e| anyhow!("{e}"))
 }
@@ -346,13 +391,15 @@ PASSES (at least one):
                         override/extend what the config declares)
   --lint                repo invariant lint over Rust sources (LN rules,
                         incl. LN004: no raw thread::sleep outside
-                        util/retry.rs; [--src DIR] defaults to rust/src
-                        or src)
+                        util/retry.rs, and LN005: no raw Instant::now()
+                        in serve/ or engine/ outside obs/; [--src DIR]
+                        defaults to rust/src or src)
   --docs                docs-consistency pass over README.md + docs/*.md
                         (DC rules: dangling relative links, CLI flags the
                         binary does not accept, rule IDs cited but missing
-                        from the catalog; [--docs-root DIR] defaults to
-                        the repo root)
+                        from the catalog, exported metric names missing
+                        from docs/OBSERVABILITY.md; [--docs-root DIR]
+                        defaults to the repo root)
 
 OUTPUT: human text, or --json for
   {\"ok\", \"errors\", \"warnings\", \"findings\": [{rule, severity, subject, message}]}

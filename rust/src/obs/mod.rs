@@ -1,0 +1,34 @@
+//! Unified telemetry (docs/OBSERVABILITY.md): a process-global metrics
+//! registry, hot-path tracing spans, and Prometheus exposition.
+//!
+//! Three dependency-free layers:
+//!
+//! * [`registry`] — statically enumerated counters, gauges, and
+//!   per-site latency histograms. Disarmed collectors cost one relaxed
+//!   atomic load (the `util::faults` fast-path discipline), so the
+//!   instrumentation lives permanently in the hot path and is armed by
+//!   sinks: `serve` at startup, the CLI trainer under `--metrics-out`
+//!   / `--trace-out`, the throughput bench for its JSON snapshot.
+//! * [`trace`] — RAII begin/end spans over the real hot paths (PJRT
+//!   transfers/execution, the optimizer step, gradient accumulation,
+//!   checkpoint save/restore, scheduler quanta and suspend/resume
+//!   handoffs, supervised retries, wire read/handle), collected in a
+//!   bounded ring and exportable as Chrome trace-event JSON
+//!   (`--trace-out FILE`). Spans are the sanctioned clock for `serve/`
+//!   and `engine/` — lint rule LN005 bans raw `Instant::now()` there.
+//! * [`prom`] — Prometheus text rendering for the registry plus the
+//!   scrape-time families serve assembles (per-tenant/per-class
+//!   scheduler gauges, deadline-miss counters, fault trips). The serve
+//!   `metrics` verb returns this text over the wire.
+//!
+//! Rule of thumb for instrumenting new code: wrap the operation in
+//! [`span`] (you get the histogram and the trace event), count discrete
+//! outcomes with [`registry::inc`], and catalog any new metric name in
+//! docs/OBSERVABILITY.md — `revffn check --docs` (DC004) will hold you
+//! to it.
+
+pub mod prom;
+pub mod registry;
+pub mod trace;
+
+pub use trace::{now, span, Site, SpanGuard};

@@ -1,0 +1,323 @@
+//! Prometheus text exposition (format 0.0.4) for the metrics registry.
+//!
+//! Renders [`Family`] groups — `# HELP` / `# TYPE` headers plus one
+//! sample line per label set — with the format's escaping rules
+//! (label values escape `\`, `"`, and newline; help text escapes `\`
+//! and newline). [`registry_families`] converts the process-global
+//! registry snapshot (counters, gauges, per-site latency summaries)
+//! plus the fault-injection trip counts into families; serve's
+//! `metrics` verb appends its scheduler-derived per-tenant/per-class
+//! families on top (`serve/server.rs`), and the CLI trainer writes
+//! [`render_default`] to `--metrics-out` on a cadence.
+//!
+//! Every metric name below is a literal in `rust/src/obs/` and must
+//! have a catalog row in `docs/OBSERVABILITY.md` — `revffn check
+//! --docs` rule DC004 enforces that.
+
+use crate::obs::registry;
+use crate::util::faults::{self, FaultSite};
+
+/// Per-site latency summary family (quantiles from the registry
+/// histograms).
+pub const STAGE_SECONDS: &str = "revffn_stage_seconds";
+/// Fault-injection trips per site (`util::faults::fired`).
+pub const FAULT_TRIPS: &str = "revffn_fault_trips_total";
+
+// Scheduler-derived families assembled by `serve/server.rs` at scrape
+// time. The name constants live here so DC004 can enumerate every
+// exported name from `rust/src/obs/` alone.
+pub const TENANT_QUEUE_DEPTH: &str = "revffn_tenant_queue_depth";
+pub const TENANT_ACTIVE_JOBS: &str = "revffn_tenant_active_jobs";
+pub const TENANT_RESERVED_GB: &str = "revffn_tenant_reserved_gb";
+pub const TENANT_DEBT: &str = "revffn_tenant_debt";
+pub const TENANT_DEADLINE_MISS: &str = "revffn_tenant_deadline_miss_total";
+pub const CLASS_QUEUE_DEPTH: &str = "revffn_class_queue_depth";
+pub const JOBS_BY_STATE: &str = "revffn_jobs";
+pub const BUDGET_GB: &str = "revffn_budget_gb";
+pub const COMMITTED_GB: &str = "revffn_committed_gb";
+pub const HOST_BUDGET_GB: &str = "revffn_host_budget_gb";
+pub const HOST_COMMITTED_GB: &str = "revffn_host_committed_gb";
+
+/// Prometheus metric kind (drives the `# TYPE` header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl Kind {
+    fn token(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Summary => "summary",
+        }
+    }
+}
+
+/// One sample line: optional name suffix (`_sum` / `_count` for
+/// summaries), label pairs, value.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub suffix: &'static str,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn new(labels: Vec<(&'static str, String)>, value: f64) -> Sample {
+        Sample { suffix: "", labels, value }
+    }
+}
+
+/// One metric family: a `# HELP`/`# TYPE` header plus its samples.
+#[derive(Debug, Clone)]
+pub struct Family {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: Kind,
+    pub samples: Vec<Sample>,
+}
+
+/// Escape a label value: `\` → `\\`, `"` → `\"`, newline → `\n`.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape help text: `\` → `\\`, newline → `\n`.
+pub fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Is `name` a valid Prometheus metric name this repo would export?
+/// (Stricter than the spec: lowercase, digits, underscores only.)
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.as_bytes()[0].is_ascii_lowercase()
+        && name.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render families as Prometheus exposition text.
+pub fn render(families: &[Family]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        out.push_str("# HELP ");
+        out.push_str(fam.name);
+        out.push(' ');
+        out.push_str(&escape_help(fam.help));
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(fam.name);
+        out.push(' ');
+        out.push_str(fam.kind.token());
+        out.push('\n');
+        for s in &fam.samples {
+            out.push_str(fam.name);
+            out.push_str(s.suffix);
+            if !s.labels.is_empty() {
+                out.push('{');
+                for (i, (k, v)) in s.labels.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(k);
+                    out.push_str("=\"");
+                    out.push_str(&escape_label(v));
+                    out.push('"');
+                }
+                out.push('}');
+            }
+            out.push(' ');
+            out.push_str(&fmt_value(s.value));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The process-global registry as families: every counter and gauge,
+/// one summary per recorded span site, and the fault-injection trip
+/// counts.
+pub fn registry_families() -> Vec<Family> {
+    let snap = registry::snapshot();
+    let mut out = Vec::new();
+    for (c, v) in &snap.counters {
+        out.push(Family {
+            name: c.name(),
+            help: c.help(),
+            kind: Kind::Counter,
+            samples: vec![Sample::new(Vec::new(), *v as f64)],
+        });
+    }
+    for (g, v) in &snap.gauges {
+        out.push(Family {
+            name: g.name(),
+            help: g.help(),
+            kind: Kind::Gauge,
+            samples: vec![Sample::new(Vec::new(), *v as f64)],
+        });
+    }
+    if !snap.hists.is_empty() {
+        let mut samples = Vec::new();
+        for h in &snap.hists {
+            let site = || vec![("site", h.site.name().to_string())];
+            for (q, v) in [("0.5", h.p50_s), ("0.95", h.p95_s), ("0.99", h.p99_s)] {
+                let mut labels = site();
+                labels.push(("quantile", q.to_string()));
+                samples.push(Sample::new(labels, v));
+            }
+            samples.push(Sample { suffix: "_sum", labels: site(), value: h.sum_s });
+            samples.push(Sample { suffix: "_count", labels: site(), value: h.count as f64 });
+        }
+        out.push(Family {
+            name: STAGE_SECONDS,
+            help: "Hot-path stage latency by span site (seconds)",
+            kind: Kind::Summary,
+            samples,
+        });
+    }
+    let trips: Vec<Sample> = FaultSite::ALL
+        .iter()
+        .filter(|s| faults::fired(**s) > 0)
+        .map(|s| Sample::new(vec![("site", s.name().to_string())], faults::fired(*s) as f64))
+        .collect();
+    if !trips.is_empty() {
+        out.push(Family {
+            name: FAULT_TRIPS,
+            help: "Injected-fault trips by site",
+            kind: Kind::Counter,
+            samples: trips,
+        });
+    }
+    out
+}
+
+/// Registry families rendered to exposition text — what the CLI
+/// trainer writes to `--metrics-out`.
+pub fn render_default() -> String {
+    render(&registry_families())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{Counter, Gauge};
+    use crate::obs::trace::Site;
+    use std::time::Duration;
+
+    #[test]
+    fn label_and_help_escaping() {
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        assert_eq!(escape_help("a\\b\"c\nd"), "a\\\\b\"c\\nd");
+        let fam = Family {
+            name: "revffn_test_metric",
+            help: "line one\nline two",
+            kind: Kind::Gauge,
+            samples: vec![Sample::new(vec![("tenant", "a\"b\\c".to_string())], 1.0)],
+        };
+        let text = render(&[fam]);
+        assert!(text.contains("# HELP revffn_test_metric line one\\nline two\n"), "{text}");
+        assert!(text.contains("revffn_test_metric{tenant=\"a\\\"b\\\\c\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn exported_names_are_valid() {
+        let mut names: Vec<&str> = vec![
+            STAGE_SECONDS,
+            FAULT_TRIPS,
+            TENANT_QUEUE_DEPTH,
+            TENANT_ACTIVE_JOBS,
+            TENANT_RESERVED_GB,
+            TENANT_DEBT,
+            TENANT_DEADLINE_MISS,
+            CLASS_QUEUE_DEPTH,
+            JOBS_BY_STATE,
+            BUDGET_GB,
+            COMMITTED_GB,
+            HOST_BUDGET_GB,
+            HOST_COMMITTED_GB,
+        ];
+        names.extend(Counter::ALL.iter().map(|c| c.name()));
+        names.extend(Gauge::ALL.iter().map(|g| g.name()));
+        for n in names {
+            assert!(valid_name(n), "invalid metric name {n}");
+            assert!(n.starts_with("revffn_"), "unprefixed metric name {n}");
+        }
+    }
+
+    #[test]
+    fn non_finite_values_render_as_prometheus_literals() {
+        let fam = Family {
+            name: "revffn_test_metric",
+            help: "h",
+            kind: Kind::Gauge,
+            samples: vec![
+                Sample::new(Vec::new(), f64::NAN),
+                Sample::new(Vec::new(), f64::INFINITY),
+            ],
+        };
+        let text = render(&[fam]);
+        assert!(text.contains("revffn_test_metric NaN\n"), "{text}");
+        assert!(text.contains("revffn_test_metric +Inf\n"), "{text}");
+    }
+
+    #[test]
+    fn registry_snapshot_renders_parseable_families() {
+        let _g = registry::test_lock();
+        registry::reset();
+        registry::arm();
+        registry::inc(Counter::Steps);
+        registry::observe(Site::EngineStep, Duration::from_micros(900));
+        let text = render_default();
+        registry::disarm();
+        registry::reset();
+        assert!(text.contains("# TYPE revffn_steps_total counter\n"), "{text}");
+        assert!(text.contains("revffn_steps_total 1\n"), "{text}");
+        assert!(text.contains("# TYPE revffn_stage_seconds summary\n"), "{text}");
+        assert!(
+            text.contains("revffn_stage_seconds_count{site=\"engine.step\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("revffn_stage_seconds{site=\"engine.step\",quantile=\"0.5\"} 0.001\n"),
+            "{text}"
+        );
+        // every line is HELP, TYPE, or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# HELP ")
+                    || line.starts_with("# TYPE ")
+                    || line.starts_with("revffn_"),
+                "unparseable line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,507 @@
+//! Process-global metrics registry: monotonic counters, integer gauges,
+//! and fixed-bucket latency histograms.
+//!
+//! The registry is **disarmed by default**: every record call bails on a
+//! single relaxed atomic load (the same fast-path discipline as
+//! `util::faults::hit`), so telemetry compiled into the hot path costs
+//! one predictable branch until a sink arms it. `server::serve` arms it
+//! at startup, the CLI trainer arms it when `--metrics-out` /
+//! `--trace-out` is given, and `table1_throughput` arms it to embed a
+//! snapshot in `BENCH_throughput.json`.
+//!
+//! All collectors are statically enumerated ([`Counter`], [`Gauge`], and
+//! one histogram per [`Site`]) — no allocation, no locks, no string
+//! interning on the record path. Dynamic label sets (per-tenant, per
+//! fault site) are assembled at *scrape* time by the exposition layer
+//! (`obs::prom`, `serve/server.rs`) from their owning state, which keeps
+//! the registry itself dependency-free.
+//!
+//! Every metric name exported from this module is cataloged in
+//! `docs/OBSERVABILITY.md`; `revffn check --docs` (DC004) fails on an
+//! exported-but-uncataloged name.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use crate::obs::trace::Site;
+
+/// Master switch. Relaxed is enough: a record racing an `arm()` may be
+/// lost, which telemetry tolerates by design.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Is the registry collecting? One relaxed load — the entire cost of a
+/// disarmed collector.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Start collecting (idempotent).
+pub fn arm() {
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting (tests; production sinks stay armed for life).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Monotonic counters. Names follow the Prometheus `_total` convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Optimizer steps completed (`engine::Run::train_one`).
+    Steps,
+    /// Host→device transfers (`runtime::pjrt::TransferCounters`).
+    Uploads,
+    /// Device→host transfers (`runtime::pjrt::TransferCounters`).
+    Downloads,
+    /// Jobs that ran past their submitted deadline (first detection).
+    DeadlineMiss,
+    /// Scheduler quanta that overran the watchdog budget.
+    QuantumOverrun,
+    /// Supervised retries scheduled after a job failure.
+    Retries,
+    /// Jobs quarantined after exhausting their retry budget.
+    Quarantines,
+    /// Events skipped past a lagging `events` cursor by the ring clamp.
+    EventsDropped,
+    /// Wire requests parsed and dispatched by the serve control plane.
+    WireRequests,
+    /// Wire requests answered with an error response.
+    WireErrors,
+    /// Full-state checkpoint snapshots written.
+    CheckpointSaves,
+    /// Full-state checkpoint restores performed.
+    CheckpointRestores,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 12] = [
+        Counter::Steps,
+        Counter::Uploads,
+        Counter::Downloads,
+        Counter::DeadlineMiss,
+        Counter::QuantumOverrun,
+        Counter::Retries,
+        Counter::Quarantines,
+        Counter::EventsDropped,
+        Counter::WireRequests,
+        Counter::WireErrors,
+        Counter::CheckpointSaves,
+        Counter::CheckpointRestores,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Steps => "revffn_steps_total",
+            Counter::Uploads => "revffn_transfer_uploads_total",
+            Counter::Downloads => "revffn_transfer_downloads_total",
+            Counter::DeadlineMiss => "revffn_deadline_miss_total",
+            Counter::QuantumOverrun => "revffn_quantum_overrun_total",
+            Counter::Retries => "revffn_retries_total",
+            Counter::Quarantines => "revffn_quarantine_total",
+            Counter::EventsDropped => "revffn_events_dropped_total",
+            Counter::WireRequests => "revffn_wire_requests_total",
+            Counter::WireErrors => "revffn_wire_errors_total",
+            Counter::CheckpointSaves => "revffn_checkpoint_saves_total",
+            Counter::CheckpointRestores => "revffn_checkpoint_restores_total",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Counter::Steps => "Optimizer steps completed",
+            Counter::Uploads => "Host-to-device transfers",
+            Counter::Downloads => "Device-to-host transfers",
+            Counter::DeadlineMiss => "Jobs that ran past their submitted deadline",
+            Counter::QuantumOverrun => "Scheduler quanta that overran the watchdog budget",
+            Counter::Retries => "Supervised retries scheduled after job failures",
+            Counter::Quarantines => "Jobs quarantined after exhausting their retry budget",
+            Counter::EventsDropped => "Events skipped past lagging cursors by the ring clamp",
+            Counter::WireRequests => "Wire requests dispatched by the serve control plane",
+            Counter::WireErrors => "Wire requests answered with an error response",
+            Counter::CheckpointSaves => "Full-state checkpoint snapshots written",
+            Counter::CheckpointRestores => "Full-state checkpoint restores performed",
+        }
+    }
+
+    fn index(self) -> usize {
+        Counter::ALL.iter().position(|c| *c == self).unwrap_or(0)
+    }
+}
+
+/// Instantaneous integer gauges (set/inc/dec semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Live `events` follower connections.
+    FollowersActive,
+    /// Last observed follower's event-log lag (total − cursor).
+    FollowerLag,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 2] = [Gauge::FollowersActive, Gauge::FollowerLag];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::FollowersActive => "revffn_followers_active",
+            Gauge::FollowerLag => "revffn_follower_lag_events",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Gauge::FollowersActive => "Live events-follower connections",
+            Gauge::FollowerLag => "Last observed follower's event-log lag in events",
+        }
+    }
+
+    fn index(self) -> usize {
+        Gauge::ALL.iter().position(|g| *g == self).unwrap_or(0)
+    }
+}
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; Counter::ALL.len()] = [ZERO; Counter::ALL.len()];
+static GAUGES: [AtomicU64; Gauge::ALL.len()] = [ZERO; Gauge::ALL.len()];
+
+/// Histogram bucket upper bounds, microseconds; one implicit overflow
+/// bucket follows. Log-spaced to cover a 50 µs PJRT transfer through a
+/// multi-second checkpoint write.
+pub const BUCKET_BOUNDS_US: [u64; 13] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000];
+
+const N_BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const HIST_ZERO: Hist = Hist { buckets: [ZERO; N_BUCKETS], count: ZERO, sum_us: ZERO };
+static HISTS: [Hist; Site::ALL.len()] = [HIST_ZERO; Site::ALL.len()];
+
+/// Bucket index a value (µs) falls into: first bound `>=` the value,
+/// else the overflow bucket.
+pub fn bucket_index(us: u64) -> usize {
+    BUCKET_BOUNDS_US.iter().position(|b| us <= *b).unwrap_or(BUCKET_BOUNDS_US.len())
+}
+
+/// Add 1 to a counter (no-op while disarmed).
+#[inline]
+pub fn inc(c: Counter) {
+    add(c, 1);
+}
+
+/// Add `n` to a counter (no-op while disarmed).
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if !armed() {
+        return;
+    }
+    COUNTERS[c.index()].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Current counter value (reads even while disarmed).
+pub fn value(c: Counter) -> u64 {
+    COUNTERS[c.index()].load(Ordering::Relaxed)
+}
+
+/// Set a gauge (no-op while disarmed).
+#[inline]
+pub fn gauge_set(g: Gauge, v: u64) {
+    if !armed() {
+        return;
+    }
+    GAUGES[g.index()].store(v, Ordering::Relaxed);
+}
+
+/// Increment a gauge (no-op while disarmed).
+#[inline]
+pub fn gauge_inc(g: Gauge) {
+    if !armed() {
+        return;
+    }
+    GAUGES[g.index()].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Decrement a gauge, saturating at zero (no-op while disarmed).
+#[inline]
+pub fn gauge_dec(g: Gauge) {
+    if !armed() {
+        return;
+    }
+    let _ = GAUGES[g.index()].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(1))
+    });
+}
+
+/// Current gauge value (reads even while disarmed).
+pub fn gauge_value(g: Gauge) -> u64 {
+    GAUGES[g.index()].load(Ordering::Relaxed)
+}
+
+/// Record one span duration into its site's histogram (no-op while
+/// disarmed). Called by `obs::trace::SpanGuard` on every span close.
+#[inline]
+pub fn observe(site: Site, d: Duration) {
+    if !armed() {
+        return;
+    }
+    let us = d.as_micros().min(u64::MAX as u128) as u64;
+    let h = &HISTS[site.index()];
+    h.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    h.count.fetch_add(1, Ordering::Relaxed);
+    h.sum_us.fetch_add(us, Ordering::Relaxed);
+}
+
+/// Point-in-time view of one site's histogram. Quantiles are bucket
+/// upper bounds (conservative: the true quantile is ≤ the reported one,
+/// except in the overflow bucket where the largest finite bound is
+/// reported).
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    pub site: Site,
+    pub count: u64,
+    pub sum_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// Point-in-time view of the whole registry.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub counters: Vec<(Counter, u64)>,
+    pub gauges: Vec<(Gauge, u64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters.iter().find(|(k, _)| *k == c).map_or(0, |(_, v)| *v)
+    }
+
+    pub fn hist(&self, site: Site) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.site == site)
+    }
+}
+
+/// Quantile estimate over bucket counts: the upper bound of the first
+/// bucket whose cumulative count reaches `q * total`.
+fn quantile_us(buckets: &[u64; N_BUCKETS], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, b) in buckets.iter().enumerate() {
+        cum += *b;
+        if cum >= rank {
+            return BUCKET_BOUNDS_US.get(i).copied().unwrap_or(BUCKET_BOUNDS_US[12]);
+        }
+    }
+    BUCKET_BOUNDS_US[12]
+}
+
+/// Snapshot every collector (histograms with zero observations are
+/// omitted).
+pub fn snapshot() -> Snapshot {
+    let counters = Counter::ALL.iter().map(|c| (*c, value(*c))).collect();
+    let gauges = Gauge::ALL.iter().map(|g| (*g, gauge_value(*g))).collect();
+    let mut hists = Vec::new();
+    for site in Site::ALL {
+        let h = &HISTS[site.index()];
+        let count = h.count.load(Ordering::Relaxed);
+        if count == 0 {
+            continue;
+        }
+        let mut buckets = [0u64; N_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(h.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        hists.push(HistSnapshot {
+            site,
+            count,
+            sum_s: h.sum_us.load(Ordering::Relaxed) as f64 / 1e6,
+            p50_s: quantile_us(&buckets, count, 0.50) as f64 / 1e6,
+            p95_s: quantile_us(&buckets, count, 0.95) as f64 / 1e6,
+            p99_s: quantile_us(&buckets, count, 0.99) as f64 / 1e6,
+        });
+    }
+    Snapshot { counters, gauges, hists }
+}
+
+/// Zero every collector (tests and bench sections).
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &GAUGES {
+        g.store(0, Ordering::Relaxed);
+    }
+    for h in &HISTS {
+        for b in &h.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        h.count.store(0, Ordering::Relaxed);
+        h.sum_us.store(0, Ordering::Relaxed);
+    }
+}
+
+static TEST_GATE: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that arm/reset the process-global registry (same
+/// pattern as `util::faults::test_lock`).
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    TEST_GATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::Rng;
+
+    #[test]
+    fn disarmed_collectors_record_nothing() {
+        let _g = test_lock();
+        disarm();
+        reset();
+        inc(Counter::Steps);
+        add(Counter::Uploads, 7);
+        gauge_set(Gauge::FollowerLag, 9);
+        observe(Site::EngineStep, Duration::from_millis(3));
+        assert_eq!(value(Counter::Steps), 0);
+        assert_eq!(value(Counter::Uploads), 0);
+        assert_eq!(gauge_value(Gauge::FollowerLag), 0);
+        assert!(snapshot().hists.is_empty());
+    }
+
+    #[test]
+    fn concurrent_increments_all_land() {
+        let _g = test_lock();
+        reset();
+        arm();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..1000 {
+                        inc(Counter::Steps);
+                        add(Counter::Uploads, 2);
+                        observe(Site::EngineStep, Duration::from_micros(80));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("worker panicked");
+        }
+        assert_eq!(value(Counter::Steps), 8000);
+        assert_eq!(value(Counter::Uploads), 16000);
+        let snap = snapshot();
+        let h = snap.hist(Site::EngineStep).expect("histogram recorded");
+        assert_eq!(h.count, 8000);
+        disarm();
+        reset();
+    }
+
+    #[test]
+    fn gauges_set_inc_dec_saturate() {
+        let _g = test_lock();
+        reset();
+        arm();
+        gauge_inc(Gauge::FollowersActive);
+        gauge_inc(Gauge::FollowersActive);
+        gauge_dec(Gauge::FollowersActive);
+        assert_eq!(gauge_value(Gauge::FollowersActive), 1);
+        gauge_dec(Gauge::FollowersActive);
+        gauge_dec(Gauge::FollowersActive); // below zero saturates
+        assert_eq!(gauge_value(Gauge::FollowersActive), 0);
+        gauge_set(Gauge::FollowerLag, 41);
+        assert_eq!(gauge_value(Gauge::FollowerLag), 41);
+        disarm();
+        reset();
+    }
+
+    #[test]
+    fn bucket_boundaries_are_le_inclusive() {
+        // a value exactly on a bound lands in that bucket; one past it
+        // lands in the next
+        for (i, b) in BUCKET_BOUNDS_US.iter().enumerate() {
+            assert_eq!(bucket_index(*b), i, "bound {b}µs");
+            assert_eq!(bucket_index(*b + 1), i + 1, "bound {b}µs + 1");
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), BUCKET_BOUNDS_US.len());
+    }
+
+    #[test]
+    fn quantiles_bound_the_recorded_values() {
+        // property: for any batch of durations, each reported quantile
+        // is >= the true quantile of the recorded values (bucket upper
+        // bounds are conservative) and within one bucket of it
+        let _g = test_lock();
+        prop_check(
+            "hist_quantile_bounds",
+            60,
+            0xB0B5,
+            |rng: &mut Rng| {
+                let n = 1 + rng.gen_range(0..40);
+                (0..n).map(|_| rng.gen_range(0..2_000_000) as u64).collect::<Vec<u64>>()
+            },
+            |values: &Vec<u64>| {
+                reset();
+                arm();
+                for us in values {
+                    observe(Site::EngineStep, Duration::from_micros(*us));
+                }
+                let snap = snapshot();
+                let h = snap.hist(Site::EngineStep).expect("recorded");
+                disarm();
+                reset();
+                let mut sorted = values.clone();
+                sorted.sort_unstable();
+                let true_q = |q: f64| {
+                    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                    sorted[rank - 1]
+                };
+                let ok = |got_s: f64, q: f64| {
+                    let truth = true_q(q);
+                    let got = (got_s * 1e6).round() as u64;
+                    // conservative upper bound…
+                    let upper_ok = got >= truth.min(BUCKET_BOUNDS_US[12]);
+                    // …but not past the bucket the truth falls in
+                    let cap = BUCKET_BOUNDS_US
+                        .get(bucket_index(truth))
+                        .copied()
+                        .unwrap_or(BUCKET_BOUNDS_US[12]);
+                    upper_ok && got <= cap.max(truth)
+                };
+                h.count == values.len() as u64
+                    && ok(h.p50_s, 0.50)
+                    && ok(h.p95_s, 0.95)
+                    && ok(h.p99_s, 0.99)
+            },
+        );
+    }
+
+    #[test]
+    fn snapshot_reads_back_counters_and_sums() {
+        let _g = test_lock();
+        reset();
+        arm();
+        add(Counter::Downloads, 3);
+        observe(Site::PjrtDownload, Duration::from_micros(100));
+        observe(Site::PjrtDownload, Duration::from_micros(200));
+        let snap = snapshot();
+        assert_eq!(snap.counter(Counter::Downloads), 3);
+        let h = snap.hist(Site::PjrtDownload).expect("recorded");
+        assert_eq!(h.count, 2);
+        assert!((h.sum_s - 300e-6).abs() < 1e-9);
+        disarm();
+        reset();
+    }
+}

@@ -1,0 +1,391 @@
+//! Structured tracing spans over the hot paths, plus the sanctioned
+//! wall clock.
+//!
+//! [`span`] returns an RAII [`SpanGuard`]: construction records a
+//! begin event, [`SpanGuard::finish`] (or drop — early returns and `?`
+//! propagation included) records the matching end event, so exported
+//! traces are balanced by construction even under fault injection.
+//! Every close also feeds the site's latency histogram in
+//! `obs::registry`, making spans the single timing primitive: lint rule
+//! LN005 bans raw `Instant::now()` in `serve/` and `engine/` so all
+//! timing flows through here ([`now`] for deadline arithmetic,
+//! [`span`]/[`SpanGuard::elapsed`] for durations).
+//!
+//! Tracing proper (the event ring) is disarmed by default and costs one
+//! relaxed load per span when off; [`enable`] arms it (CLI
+//! `--trace-out`). Events live in a bounded ring — overflow drops the
+//! oldest and counts the loss — and export as Chrome trace-event JSON
+//! (`chrome://tracing`, Perfetto) via [`export_chrome`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::obs::registry;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Span sites — the fixed vocabulary shared by trace events and the
+/// per-site latency histograms (`revffn_stage_seconds{site=…}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Host→device literal staging (`Device::to_device`).
+    PjrtUpload,
+    /// Compiled-program execution (`Program::run` / `run_buffers`).
+    PjrtExecute,
+    /// Device→host download (`Device::from_device`).
+    PjrtDownload,
+    /// One optimizer step end-to-end (`engine::Run::train_one`).
+    EngineStep,
+    /// Gradient accumulate/scale program execution (`GradAccumulator`).
+    AccumExecute,
+    /// Full-state checkpoint write.
+    CheckpointSave,
+    /// Full-state checkpoint restore.
+    CheckpointRestore,
+    /// One scheduler quantum (pick → steps → handoff).
+    SchedQuantum,
+    /// Suspending an active job (device→host state sync).
+    SchedSuspend,
+    /// Resuming a job onto the device (pin buffers, rebuild run).
+    SchedResume,
+    /// Supervised retry re-admission (health probe + admission gate).
+    SchedRetry,
+    /// Blocking wait for the next wire line on a control connection.
+    WireRead,
+    /// Parse + dispatch + reply for one wire request.
+    WireHandle,
+}
+
+impl Site {
+    pub const ALL: [Site; 13] = [
+        Site::PjrtUpload,
+        Site::PjrtExecute,
+        Site::PjrtDownload,
+        Site::EngineStep,
+        Site::AccumExecute,
+        Site::CheckpointSave,
+        Site::CheckpointRestore,
+        Site::SchedQuantum,
+        Site::SchedSuspend,
+        Site::SchedResume,
+        Site::SchedRetry,
+        Site::WireRead,
+        Site::WireHandle,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::PjrtUpload => "pjrt.upload",
+            Site::PjrtExecute => "pjrt.execute",
+            Site::PjrtDownload => "pjrt.download",
+            Site::EngineStep => "engine.step",
+            Site::AccumExecute => "accum.execute",
+            Site::CheckpointSave => "checkpoint.save",
+            Site::CheckpointRestore => "checkpoint.restore",
+            Site::SchedQuantum => "sched.quantum",
+            Site::SchedSuspend => "sched.suspend",
+            Site::SchedResume => "sched.resume",
+            Site::SchedRetry => "sched.retry",
+            Site::WireRead => "wire.read",
+            Site::WireHandle => "wire.handle",
+        }
+    }
+
+    pub(crate) fn index(self) -> usize {
+        Site::ALL.iter().position(|s| *s == self).unwrap_or(0)
+    }
+}
+
+/// The sanctioned wall clock for `serve/` and `engine/` (LN005):
+/// deadline arithmetic and backoff scheduling read time through here.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// One begin or end record in the trace ring.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Global sequence number (strictly increasing across threads).
+    pub seq: u64,
+    pub site: Site,
+    /// `true` = span begin, `false` = span end.
+    pub begin: bool,
+    /// Microseconds since the trace epoch ([`enable`] time).
+    pub t_us: u64,
+    /// Small dense per-thread id (assigned on first event).
+    pub tid: u64,
+}
+
+/// Ring capacity: ~32k begin/end pairs of headroom; overflow drops the
+/// oldest events and is counted, never silent.
+const RING_CAP: usize = 65_536;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static RING: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn lock_ring() -> MutexGuard<'static, Vec<TraceEvent>> {
+    RING.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Is the trace ring collecting? One relaxed load when off.
+#[inline]
+pub fn enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Arm the trace ring (clears prior events; sets the epoch on first
+/// call).
+pub fn enable() {
+    let _ = EPOCH.get_or_init(Instant::now);
+    lock_ring().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+    TRACING.store(true, Ordering::SeqCst);
+}
+
+/// Disarm the trace ring (events already collected are kept for
+/// export).
+pub fn disable() {
+    TRACING.store(false, Ordering::SeqCst);
+}
+
+fn push_event(site: Site, begin: bool, at: Instant) {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    let ev = TraceEvent {
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        site,
+        begin,
+        t_us: at.saturating_duration_since(epoch).as_micros().min(u64::MAX as u128) as u64,
+        tid: TID.with(|t| *t),
+    };
+    let mut ring = lock_ring();
+    if ring.len() >= RING_CAP {
+        // drop the oldest half in one memmove rather than one event per
+        // push — overflow is exceptional, not a steady state
+        let half = RING_CAP / 2;
+        ring.drain(..half);
+        DROPPED.fetch_add(half as u64, Ordering::Relaxed);
+    }
+    ring.push(ev);
+}
+
+/// RAII span: begin on construction, end on [`finish`](SpanGuard::finish)
+/// or drop. The guard always carries real elapsed time (callers feed
+/// step stats from it), so it is also the sanctioned stopwatch when
+/// both sinks are disarmed.
+#[derive(Debug)]
+pub struct SpanGuard {
+    site: Site,
+    t0: Instant,
+    open: bool,
+}
+
+impl SpanGuard {
+    /// Time since span begin, without closing it.
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    /// Close the span and return its duration.
+    pub fn finish(mut self) -> Duration {
+        self.close()
+    }
+
+    fn close(&mut self) -> Duration {
+        let d = self.t0.elapsed();
+        if self.open {
+            self.open = false;
+            registry::observe(self.site, d);
+            if enabled() {
+                push_event(self.site, false, Instant::now());
+            }
+        }
+        d
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.open {
+            self.close();
+        }
+    }
+}
+
+/// Open a span at `site`.
+#[inline]
+pub fn span(site: Site) -> SpanGuard {
+    let t0 = Instant::now();
+    if enabled() {
+        push_event(site, true, t0);
+    }
+    SpanGuard { site, t0, open: true }
+}
+
+/// Copy out the collected events (oldest first) and the count of events
+/// lost to ring overflow.
+pub fn events() -> (Vec<TraceEvent>, u64) {
+    (lock_ring().clone(), DROPPED.load(Ordering::Relaxed))
+}
+
+/// Render the ring as Chrome trace-event JSON (the `traceEvents` array
+/// format `chrome://tracing` and Perfetto load directly).
+pub fn export_chrome() -> String {
+    let (evs, dropped) = events();
+    let rows: Vec<Json> = evs
+        .iter()
+        .map(|e| {
+            ObjBuilder::new()
+                .str("name", e.site.name())
+                .str("ph", if e.begin { "B" } else { "E" })
+                .num("ts", e.t_us as f64)
+                .num("pid", 1.0)
+                .num("tid", e.tid as f64)
+                .val("args", ObjBuilder::new().num("seq", e.seq as f64).build())
+                .build()
+        })
+        .collect();
+    ObjBuilder::new()
+        .val("traceEvents", Json::Arr(rows))
+        .str("displayTimeUnit", "ms")
+        .num("revffnDroppedEvents", dropped as f64)
+        .build()
+        .to_string()
+}
+
+/// Write [`export_chrome`] to a file (CLI `--trace-out`).
+pub fn write_chrome(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, export_chrome())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::{self, FaultSite};
+
+    /// Other unit tests in this process may open spans while a trace
+    /// test has the ring armed; every assertion below therefore filters
+    /// to the current thread's events first.
+    fn mine(evs: &[TraceEvent]) -> Vec<TraceEvent> {
+        let me = TID.with(|t| *t);
+        evs.iter().copied().filter(|e| e.tid == me).collect()
+    }
+
+    /// Balanced means: per site, begins and ends interleave as a
+    /// well-formed bracket sequence, and timestamps/seq never decrease.
+    fn assert_balanced(evs: &[TraceEvent]) {
+        use std::collections::BTreeMap;
+        let mut depth: BTreeMap<usize, i64> = BTreeMap::new();
+        let mut last_t = 0u64;
+        let mut last_seq = None;
+        for e in evs {
+            assert!(e.t_us >= last_t, "timestamps must be ordered: {evs:?}");
+            last_t = e.t_us;
+            if let Some(prev) = last_seq {
+                assert!(e.seq > prev, "seq must strictly increase: {evs:?}");
+            }
+            last_seq = Some(e.seq);
+            let d = depth.entry(e.site.index()).or_insert(0);
+            *d += if e.begin { 1 } else { -1 };
+            assert!(*d >= 0, "end before begin at {:?}: {evs:?}", e.site);
+        }
+        for (site, d) in depth {
+            assert_eq!(d, 0, "unbalanced span at site {site}: {evs:?}");
+        }
+    }
+
+    #[test]
+    fn spans_balance_and_order() {
+        let _g = registry::test_lock();
+        enable();
+        {
+            let outer = span(Site::SchedQuantum);
+            let inner = span(Site::EngineStep);
+            drop(inner);
+            let _ = outer.finish();
+        }
+        let evs = mine(&events().0);
+        disable();
+        assert_eq!(evs.len(), 4, "{evs:?}");
+        assert_balanced(&evs);
+        assert!(evs[0].begin && evs[0].site == Site::SchedQuantum);
+        assert!(evs[1].begin && evs[1].site == Site::EngineStep);
+        assert!(!evs[2].begin && evs[2].site == Site::EngineStep);
+        assert!(!evs[3].begin && evs[3].site == Site::SchedQuantum);
+    }
+
+    #[test]
+    fn spans_stay_balanced_under_fault_injection() {
+        // the guard design's golden-path guarantee: an injected fault
+        // that error-returns out of a spanned scope still produces the
+        // end event via Drop, so exports stay balanced
+        let _g = registry::test_lock();
+        let _f = faults::test_lock();
+        faults::install_from(Some("pjrt_execute:error")).expect("install plan");
+        enable();
+        let step = || -> crate::error::Result<()> {
+            let _sp = span(Site::AccumExecute);
+            faults::failpoint(FaultSite::PjrtExecute)?;
+            Ok(())
+        };
+        assert!(step().is_err(), "injected fault must surface");
+        let evs = mine(&events().0);
+        disable();
+        faults::clear();
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        assert_balanced(&evs);
+        // and the Chrome export carries them as a B/E pair
+        let me = TID.with(|t| *t) as f64;
+        let doc = export_chrome();
+        let parsed = crate::util::json::parse(&doc).expect("export must be valid JSON");
+        let rows = parsed.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+        let ours: Vec<&crate::util::json::Json> = rows
+            .iter()
+            .filter(|r| {
+                r.get("tid").and_then(|t| t.as_f64()) == Some(me)
+                    && r.get("name").and_then(|n| n.as_str()) == Some("accum.execute")
+            })
+            .collect();
+        assert_eq!(ours.len(), 2, "{doc}");
+        assert_eq!(ours[0].get("ph").and_then(|p| p.as_str()), Some("B"));
+        assert_eq!(ours[1].get("ph").and_then(|p| p.as_str()), Some("E"));
+    }
+
+    #[test]
+    fn disabled_ring_collects_nothing_but_guard_still_times() {
+        let _g = registry::test_lock();
+        disable();
+        lock_ring().clear();
+        let sp = span(Site::WireHandle);
+        std::hint::black_box(&sp);
+        let d = sp.finish();
+        assert!(d >= Duration::ZERO);
+        let evs = mine(&events().0);
+        assert!(evs.is_empty(), "disarmed ring must stay empty: {evs:?}");
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = registry::test_lock();
+        enable();
+        for _ in 0..(RING_CAP / 2 + 10) {
+            let _sp = span(Site::WireRead);
+        }
+        let (evs, dropped) = events();
+        disable();
+        assert!(evs.len() <= RING_CAP);
+        assert!(dropped > 0, "overflow must be counted");
+        // our surviving events still balance from the first begin on
+        let ours = mine(&evs);
+        let start = ours.iter().position(|e| e.begin).expect("some begin survives");
+        assert_balanced(&ours[start..]);
+    }
+}

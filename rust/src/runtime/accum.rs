@@ -36,11 +36,11 @@
 //! steady-state loop performs zero per-step heap churn on either path.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use xla::{Literal, PjRtBuffer};
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::runtime::literal::{elem_count, f32_literal, scalar_f32, to_f32_vec};
 use crate::runtime::pjrt::{Device, Program};
 use crate::runtime::stepper::Stepper;
@@ -186,9 +186,9 @@ impl GradAccumulator {
                     let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(2 * acc.len());
                     inputs.extend(acc.iter());
                     inputs.extend(grads.iter());
-                    let t0 = Instant::now();
+                    let sp = obs::span(obs::Site::AccumExecute);
                     let out = prog.run_buffers(&inputs)?;
-                    self.exec_s += t0.elapsed().as_secs_f64();
+                    self.exec_s += sp.finish().as_secs_f64();
                     out
                 };
                 if out.len() != self.shapes.len() {
@@ -226,9 +226,9 @@ impl GradAccumulator {
             let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(acc.len() + 1);
             inputs.extend(acc.iter());
             inputs.push(&s);
-            let t0 = Instant::now();
+            let sp = obs::span(obs::Site::AccumExecute);
             let out = prog.run_buffers(&inputs)?;
-            self.exec_s += t0.elapsed().as_secs_f64();
+            self.exec_s += sp.finish().as_secs_f64();
             out
         };
         if out.len() != self.shapes.len() {
@@ -253,9 +253,9 @@ impl GradAccumulator {
                 let mut inputs: Vec<&Literal> = Vec::with_capacity(2 * acc.len());
                 inputs.extend(acc.iter());
                 inputs.extend(grads.iter());
-                let t0 = Instant::now();
+                let sp = obs::span(obs::Site::AccumExecute);
                 let out = prog.run(&inputs)?;
-                self.exec_s += t0.elapsed().as_secs_f64();
+                self.exec_s += sp.finish().as_secs_f64();
                 if out.len() != self.shapes.len() {
                     return Err(Error::Layout(format!(
                         "accum_step returned {} outputs, want {}",
@@ -315,9 +315,9 @@ impl GradAccumulator {
             let mut inputs: Vec<&Literal> = Vec::with_capacity(acc.len() + 1);
             inputs.extend(acc.iter());
             inputs.push(&s);
-            let t0 = Instant::now();
+            let sp = obs::span(obs::Site::AccumExecute);
             let out = prog.run(&inputs)?;
-            self.exec_s += t0.elapsed().as_secs_f64();
+            self.exec_s += sp.finish().as_secs_f64();
             if out.len() != self.shapes.len() {
                 return Err(Error::Layout(format!(
                     "scale returned {} outputs, want {}",

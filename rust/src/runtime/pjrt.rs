@@ -31,6 +31,7 @@ use xla::{
 };
 
 use crate::error::{Error, Result};
+use crate::obs::{self, registry};
 use crate::util::faults::{self, FaultSite};
 
 /// Host↔device transfer tally (atomic; shared across the device, its
@@ -46,10 +47,12 @@ pub struct TransferCounters {
 impl TransferCounters {
     pub(crate) fn count_uploads(&self, n: u64) {
         self.uploads.fetch_add(n, Ordering::Relaxed);
+        registry::add(registry::Counter::Uploads, n);
     }
 
     pub(crate) fn count_downloads(&self, n: u64) {
         self.downloads.fetch_add(n, Ordering::Relaxed);
+        registry::add(registry::Counter::Downloads, n);
     }
 
     pub fn snapshot(&self) -> TransferSnapshot {
@@ -112,6 +115,7 @@ impl Device {
 
     /// Stage one literal as a device buffer (counted as one upload).
     pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        let _sp = obs::span(obs::Site::PjrtUpload);
         faults::failpoint(FaultSite::PjrtTransfer)?;
         self.counters.count_uploads(1);
         Ok(self.client.buffer_from_host_literal(None, lit)?)
@@ -126,6 +130,7 @@ impl Device {
     /// download). Scalars and lazy snapshots go through here so the
     /// transfer tally stays honest.
     pub fn from_device(&self, buf: &PjRtBuffer) -> Result<Literal> {
+        let _sp = obs::span(obs::Site::PjrtDownload);
         faults::failpoint(FaultSite::PjrtTransfer)?;
         self.counters.count_downloads(1);
         Ok(buf.to_literal_sync()?)
@@ -176,6 +181,7 @@ impl Program {
     /// borrowed literals — cold paths pass `&Literal` state to avoid
     /// copies.
     pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        let _sp = obs::span(obs::Site::PjrtExecute);
         faults::failpoint(FaultSite::PjrtExecute)?;
         self.counters.count_uploads(inputs.len() as u64);
         let result = self.exe.execute::<L>(inputs)?;
@@ -204,6 +210,7 @@ impl Program {
         &self,
         inputs: &[B],
     ) -> Result<Vec<PjRtBuffer>> {
+        let _sp = obs::span(obs::Site::PjrtExecute);
         faults::failpoint(FaultSite::PjrtExecute)?;
         let result = self.exe.execute_b::<B>(inputs)?;
         let bufs = result
@@ -276,6 +283,9 @@ mod tests {
 
     #[test]
     fn transfer_counters_tally_and_reset() {
+        // counts also fold into the global registry when it is armed;
+        // hold its test gate so armed registry tests see exact values
+        let _g = registry::test_lock();
         let c = TransferCounters::default();
         c.count_uploads(3);
         c.count_downloads(2);

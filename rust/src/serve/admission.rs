@@ -273,6 +273,13 @@ impl Tenants {
         self.ledgers.get(tenant).map_or(0.0, |l| l.gb)
     }
 
+    /// Every tenant ever seen with its current service debt, in name
+    /// order — the exposition layer mirrors this onto the board so the
+    /// `metrics` verb can label a debt gauge per tenant.
+    pub fn debts(&self) -> Vec<(String, f64)> {
+        self.ledgers.iter().map(|(t, l)| (t.clone(), l.debt)).collect()
+    }
+
     /// Lowest debt among tenants with live jobs (0 when none): the
     /// join-point for newcomers.
     fn debt_floor(&self) -> f64 {

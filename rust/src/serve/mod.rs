@@ -19,8 +19,10 @@
 //!   buffers on resume, release via a lazy literal sync on preemption)
 //!   and deterministic interleaving given the submission order.
 //! * [`protocol`] — the JSON-lines wire format (`submit` / `status` /
-//!   `events` / `cancel` / `shutdown`), built on the in-crate codec,
-//!   with keyset-cursor pagination for `events` (docs/SERVE.md).
+//!   `events` / `cancel` / `metrics` / `shutdown`), built on the
+//!   in-crate codec, with keyset-cursor pagination for `events`
+//!   (docs/SERVE.md) and a Prometheus scrape surface for `metrics`
+//!   (docs/OBSERVABILITY.md).
 //! * [`server`] — the `std::net` TCP control plane streaming each job's
 //!   `StepEvent`s as NDJSON, with per-socket timeouts and a connection
 //!   cap so slow or hostile clients cannot wedge the plane.

@@ -20,6 +20,10 @@
 //!   `follow:true` streams live in bounded batches and ends with a
 //!   `{"job":…,"done":true,…}` terminator. The legacy inclusive `from`
 //!   cursor is still accepted (`after_seq` wins when both appear).
+//! * `{"cmd":"metrics"}` → `{"ok":true,"kind":"metrics",
+//!   "steps_total":N,"body":"…"}` where `body` is the full telemetry
+//!   state in Prometheus text exposition format (the registry plus the
+//!   per-tenant/per-class scheduler families — docs/OBSERVABILITY.md).
 //! * `{"cmd":"cancel","job":"job-0"}` → `{"ok":true,"cancelled":…}`.
 //! * `{"cmd":"resume","job":"job-0"}` → resubmits a
 //!   failed/cancelled/quarantined job from its latest periodic
@@ -175,6 +179,9 @@ pub enum Request {
     Resume {
         job: String,
     },
+    /// Telemetry scrape: the registry plus the scheduler's per-tenant
+    /// and per-class families, rendered as Prometheus text.
+    Metrics,
     Shutdown,
 }
 
@@ -221,6 +228,7 @@ impl Request {
             Request::Resume { job } => {
                 ObjBuilder::new().str("cmd", "resume").str("job", job.clone()).build()
             }
+            Request::Metrics => ObjBuilder::new().str("cmd", "metrics").build(),
             Request::Shutdown => ObjBuilder::new().str("cmd", "shutdown").build(),
         }
     }
@@ -252,6 +260,7 @@ impl Request {
             }),
             "cancel" => Ok(Request::Cancel { job: j.str_of("job")? }),
             "resume" => Ok(Request::Resume { job: j.str_of("job")? }),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(Error::Parse(format!("unknown cmd {other:?}"))),
         }
@@ -302,6 +311,7 @@ impl Request {
                 None => Self::from_line(line),
                 Some(job) => Ok(Request::Resume { job }),
             },
+            Some("metrics") => Ok(Request::Metrics),
             Some("shutdown") => Ok(Request::Shutdown),
             _ => Self::from_line(line),
         }
@@ -391,12 +401,17 @@ pub fn done_json(job: &str, state: JobState, events: u64) -> Json {
 /// so retrying with it is exact even at the start of the log).
 /// `done:true` means the job is terminal and no event past this page
 /// will ever exist — stop paging.
+/// `dropped` counts event lines the ring evicted past this follower's
+/// cursor before it read them — the page is gap-free from its clamped
+/// start, but `gapped:true` tells the client the stream is no longer
+/// complete (it also feeds `revffn_events_dropped_total`).
 pub fn events_page_json(
     job: &str,
     count: u64,
     next_cursor: u64,
     state: JobState,
     done: bool,
+    dropped: u64,
 ) -> Json {
     ObjBuilder::new()
         .str("job", job)
@@ -405,6 +420,8 @@ pub fn events_page_json(
         .num("next_cursor", next_cursor as f64)
         .str("state", state.name())
         .bool("done", done)
+        .bool("gapped", dropped > 0)
+        .num("dropped", dropped as f64)
         .build()
 }
 
@@ -434,6 +451,10 @@ pub struct JobSnapshot {
     pub tenant: String,
     /// Requested deadline (ms from submit), if any.
     pub deadline_ms: Option<u64>,
+    /// How far past its deadline the job has run, if it missed it: the
+    /// first-detection figure while running, the final overrun once
+    /// terminal. `None` = no deadline, or not (yet) missed.
+    pub deadline_missed_by_ms: Option<u64>,
 }
 
 pub fn snapshot_json(s: &JobSnapshot) -> Json {
@@ -455,10 +476,13 @@ pub fn snapshot_json(s: &JobSnapshot) -> Json {
             s.deadline_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
         )
         .val(
+            "deadline_missed_by_ms",
+            s.deadline_missed_by_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
+        )
+        .val(
             "next_retry_ms",
             s.retry_at.map_or(Json::Null, |at| {
-                Json::Num(at.saturating_duration_since(std::time::Instant::now()).as_millis()
-                    as f64)
+                Json::Num(at.saturating_duration_since(crate::obs::now()).as_millis() as f64)
             }),
         );
     if let Some(e) = &s.error {
@@ -467,27 +491,47 @@ pub fn snapshot_json(s: &JobSnapshot) -> Json {
     b.build()
 }
 
-/// The full `status` response: device + host budget ledgers and the
-/// job table. `host_budget_gb` is the configured value (0 = unbounded).
+/// The full `status` response: device + host budget ledgers, the job
+/// table, and per-tenant deadline-miss counts (tenants that never
+/// missed are omitted). `host_budget_gb` is the configured value
+/// (0 = unbounded).
 pub fn status_json(
     jobs: &[JobSnapshot],
     budget_gb: f64,
     committed_gb: f64,
     host_budget_gb: f64,
     host_committed_gb: f64,
+    tenant_misses: &[(String, u64)],
 ) -> Json {
+    let mut misses = ObjBuilder::new();
+    for (tenant, n) in tenant_misses {
+        misses = misses.num(tenant, *n as f64);
+    }
     ObjBuilder::new()
         .bool("ok", true)
         .num("budget_gb", budget_gb)
         .num("committed_gb", committed_gb)
         .num("host_budget_gb", host_budget_gb)
         .num("host_committed_gb", host_committed_gb)
+        .val("tenant_deadline_misses", misses.build())
         .val("jobs", Json::Arr(jobs.iter().map(snapshot_json).collect()))
         .build()
 }
 
 pub fn ok_json() -> Json {
     ObjBuilder::new().bool("ok", true).build()
+}
+
+/// Response to the `metrics` verb: `steps_total` is surfaced as a JSON
+/// number so shallow clients (the smoke script) need not parse the
+/// Prometheus `body`.
+pub fn metrics_json(steps_total: u64, body: &str) -> Json {
+    ObjBuilder::new()
+        .bool("ok", true)
+        .str("kind", "metrics")
+        .num("steps_total", steps_total as f64)
+        .str("body", body)
+        .build()
 }
 
 pub fn error_json(message: &str) -> Json {
@@ -569,6 +613,7 @@ mod tests {
             Request::Events { job: "job-0".into(), from: 0, limit: Some(64), follow: true },
             Request::Cancel { job: "job-1".into() },
             Request::Resume { job: "job-2".into() },
+            Request::Metrics,
             Request::Shutdown,
         ];
         for req in cases {
@@ -642,6 +687,7 @@ mod tests {
             r#"{"cmd":"events","job":"job-0","from":-3}"#,
             r#"{"cmd":"cancel","job":"job-1"}"#,
             r#"{"cmd":"resume","job":"job-2"}"#,
+            r#"{"cmd":"metrics"}"#,
             r#"{"cmd":"shutdown"}"#,
             r#"  {"cmd":"status"}  "#,
         ];
@@ -738,12 +784,17 @@ mod tests {
             priority: Priority::Interactive,
             tenant: "team-a".into(),
             deadline_ms: Some(2_000),
+            deadline_missed_by_ms: Some(350),
         };
-        let st = json::parse(&status_json(&[snap], 8.0, 1.5, 8.0, 0.25).to_string()).unwrap();
+        let misses = vec![("team-a".to_string(), 1u64)];
+        let st =
+            json::parse(&status_json(&[snap], 8.0, 1.5, 8.0, 0.25, &misses).to_string()).unwrap();
         assert!(st.bool_of("ok").unwrap());
         assert_eq!(st.f64_of("budget_gb").unwrap(), 8.0);
         assert_eq!(st.f64_of("host_budget_gb").unwrap(), 8.0);
         assert_eq!(st.f64_of("host_committed_gb").unwrap(), 0.25);
+        let tm = st.req("tenant_deadline_misses").unwrap();
+        assert_eq!(tm.get("team-a").and_then(Json::as_u64), Some(1));
         let jobs = st.arr_of("jobs").unwrap();
         assert_eq!(jobs[0].str_of("state").unwrap(), "running");
         assert_eq!(jobs[0].req("eval_loss").unwrap(), &Json::Null);
@@ -752,6 +803,7 @@ mod tests {
         assert_eq!(jobs[0].str_of("priority").unwrap(), "interactive");
         assert_eq!(jobs[0].str_of("tenant").unwrap(), "team-a");
         assert_eq!(jobs[0].u64_of("deadline_ms").unwrap(), 2_000);
+        assert_eq!(jobs[0].u64_of("deadline_missed_by_ms").unwrap(), 350);
 
         let done = json::parse(&done_json("job-0", JobState::Finished, 6).to_string()).unwrap();
         assert!(done.bool_of("done").unwrap());
@@ -761,7 +813,7 @@ mod tests {
     #[test]
     fn events_page_footer_shape() {
         let j = json::parse(
-            &events_page_json("job-0", 32, 47, JobState::Running, false).to_string(),
+            &events_page_json("job-0", 32, 47, JobState::Running, false, 0).to_string(),
         )
         .unwrap();
         assert!(j.bool_of("page").unwrap());
@@ -769,11 +821,25 @@ mod tests {
         assert_eq!(j.u64_of("count").unwrap(), 32);
         assert_eq!(j.u64_of("next_cursor").unwrap(), 47);
         assert_eq!(j.str_of("state").unwrap(), "running");
+        assert!(!j.bool_of("gapped").unwrap());
+        assert_eq!(j.u64_of("dropped").unwrap(), 0);
         let end = json::parse(
-            &events_page_json("job-0", 0, 47, JobState::Finished, true).to_string(),
+            &events_page_json("job-0", 0, 47, JobState::Finished, true, 5).to_string(),
         )
         .unwrap();
         assert!(end.bool_of("done").unwrap());
+        assert!(end.bool_of("gapped").unwrap(), "clamped page must be flagged");
+        assert_eq!(end.u64_of("dropped").unwrap(), 5);
+    }
+
+    #[test]
+    fn metrics_response_shape() {
+        let body = "# TYPE revffn_steps_total counter\nrevffn_steps_total 12\n";
+        let j = json::parse(&metrics_json(12, body).to_string()).unwrap();
+        assert!(j.bool_of("ok").unwrap());
+        assert_eq!(j.str_of("kind").unwrap(), "metrics");
+        assert_eq!(j.u64_of("steps_total").unwrap(), 12);
+        assert_eq!(j.str_of("body").unwrap(), body, "prometheus text survives the wire");
     }
 
     #[test]
@@ -823,6 +889,7 @@ mod tests {
             priority: Priority::default(),
             tenant: "default".into(),
             deadline_ms: None,
+            deadline_missed_by_ms: None,
         };
         let j = json::parse(&snapshot_json(&snap).to_string()).unwrap();
         assert_eq!(j.str_of("state").unwrap(), "retrying");

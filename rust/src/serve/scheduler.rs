@@ -38,7 +38,7 @@
 //! touching the device thread.
 
 use std::cmp::Ordering;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -48,6 +48,7 @@ use crate::coordinator::{TrainReport, Trainer};
 use crate::engine::{Run, StepEvent};
 use crate::error::{Error, Result};
 use crate::memory::{Assumptions, Geometry};
+use crate::obs::{self, registry};
 use crate::runtime::pjrt::{Device, ProgramCache};
 use crate::serve::admission::{self, Admission, TenantPolicy, Tenants};
 use crate::serve::lock;
@@ -109,6 +110,12 @@ pub struct Board {
     pub host_committed_gb: f64,
     /// Job ids in event-emission order — the observable interleaving.
     pub timeline: Vec<String>,
+    /// Per-tenant weighted service debt (mirrors `admission::Tenants`;
+    /// refreshed by the scheduler whenever ledgers move).
+    pub tenant_debt: BTreeMap<String, f64>,
+    /// Per-tenant deadline-miss counts (first detections only — a job
+    /// counts once no matter how long it overruns).
+    pub tenant_misses: BTreeMap<String, u64>,
 }
 
 impl Board {
@@ -120,6 +127,8 @@ impl Board {
             host_budget_gb,
             host_committed_gb: 0.0,
             timeline: Vec::new(),
+            tenant_debt: BTreeMap::new(),
+            tenant_misses: BTreeMap::new(),
         }
     }
 
@@ -569,7 +578,7 @@ impl Scheduler {
             sup: Supervision::default(),
             priority: meta.priority,
             tenant: tenant.clone(),
-            deadline: meta.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            deadline: meta.deadline_ms.map(|ms| obs::now() + Duration::from_millis(ms)),
             deadline_ms: meta.deadline_ms,
         });
         {
@@ -591,6 +600,7 @@ impl Scheduler {
                     priority: meta.priority,
                     tenant: tenant.clone(),
                     deadline_ms: meta.deadline_ms,
+                    deadline_missed_by_ms: None,
                 },
                 events: EventLog::with_base(self.opts.event_log_cap, base_seq),
                 report: None,
@@ -747,11 +757,15 @@ impl Scheduler {
             self.fail_admitted(idx, "scheduler invariant: active job lost its run".into());
             return Ok(true);
         };
-        let quantum_start = Instant::now();
+        let quantum_sp = obs::span(obs::Site::SchedQuantum);
         let mut outcome = Quantum::Progress;
         // resume: re-pin this job's state as device buffers for the
         // quantum (no-op when the job is not device-resident)
-        if let Err(e) = run.resume() {
+        let resumed = {
+            let _sp = obs::span(obs::Site::SchedResume);
+            run.resume()
+        };
+        if let Err(e) = resumed {
             outcome = Quantum::Failed(format!("resume: {e}"));
         } else {
             for _ in 0..self.opts.quantum {
@@ -768,6 +782,7 @@ impl Scheduler {
                 }
             }
         }
+        self.note_deadline_miss(idx, false);
         match outcome {
             Quantum::Progress => {
                 // step watchdog: a quantum that blew through the
@@ -776,8 +791,9 @@ impl Scheduler {
                 // the slot instead of letting it hold the device
                 let deadline = self.opts.quantum_deadline_ms;
                 if deadline > 0 {
-                    let elapsed = quantum_start.elapsed();
+                    let elapsed = quantum_sp.elapsed();
                     if elapsed > Duration::from_millis(deadline) {
+                        registry::inc(registry::Counter::QuantumOverrun);
                         drop(run);
                         self.fail_admitted(
                             idx,
@@ -794,6 +810,7 @@ impl Scheduler {
                 // is the only active job, skip the suspend/resume churn
                 // — state handoff is lossless either way.
                 if !self.active.is_empty() {
+                    let _sp = obs::span(obs::Site::SchedSuspend);
                     if let Err(e) = run.suspend() {
                         drop(run);
                         self.fail_admitted(idx, format!("suspend: {e}"));
@@ -906,10 +923,12 @@ impl Scheduler {
             self.set_state(idx, JobState::Failed, Some(msg));
         } else if self.jobs[idx].sup.attempts <= self.policy.max_attempts {
             let delay = self.backoff.delay(self.jobs[idx].sup.attempts);
-            self.jobs[idx].sup.retry_at = Some(Instant::now() + delay);
+            self.jobs[idx].sup.retry_at = Some(obs::now() + delay);
+            registry::inc(registry::Counter::Retries);
             self.set_state(idx, JobState::Retrying, Some(msg));
         } else {
             self.jobs[idx].sup.retry_at = None;
+            registry::inc(registry::Counter::Quarantines);
             let chain = self.jobs[idx].sup.chain();
             self.set_state(idx, JobState::Quarantined, Some(chain));
         }
@@ -923,7 +942,7 @@ impl Scheduler {
     /// from scratch). Returns the shortest wait until a pending retry
     /// is due, if any job is still `Retrying`.
     fn poll_retries(&mut self) -> Option<Duration> {
-        let now = Instant::now();
+        let now = obs::now();
         let mut wait: Option<Duration> = None;
         for idx in 0..self.jobs.len() {
             if self.jobs[idx].state != JobState::Retrying {
@@ -936,6 +955,7 @@ impl Scheduler {
                     continue;
                 }
             }
+            let _sp = obs::span(obs::Site::SchedRetry);
             if let Err(e) = self.probe.check(&self.device) {
                 self.supervise_failure(idx, format!("device health probe: {e}"));
                 continue;
@@ -1061,6 +1081,11 @@ impl Scheduler {
 
     fn set_state(&mut self, idx: usize, state: JobState, error: Option<String>) {
         self.jobs[idx].state = state;
+        if state.is_terminal() {
+            // terminal overwrite: the final figure replaces the
+            // first-detection one so `status` reports the full overrun
+            self.note_deadline_miss(idx, true);
+        }
         let mut board = lock::board(&self.board);
         let snap = &mut board.jobs[idx].snap;
         snap.state = state;
@@ -1077,12 +1102,39 @@ impl Scheduler {
         }
         board.committed_gb = self.admission.committed_gb();
         board.host_committed_gb = self.admission.host_committed_gb();
+        board.tenant_debt = self.tenants.debts().into_iter().collect();
     }
 
     fn sync_ledger(&mut self) {
         let mut board = lock::board(&self.board);
         board.committed_gb = self.admission.committed_gb();
         board.host_committed_gb = self.admission.host_committed_gb();
+        board.tenant_debt = self.tenants.debts().into_iter().collect();
+    }
+
+    /// Deadline-miss accounting: once a job with a deadline is observed
+    /// past it, record how far over it ran (`deadline_missed_by_ms` in
+    /// its snapshot) and — on the first detection only — bump the global
+    /// and per-tenant miss counters. Terminal transitions overwrite the
+    /// figure so a finished job reports its final overrun.
+    fn note_deadline_miss(&mut self, idx: usize, terminal: bool) {
+        let Some(deadline) = self.jobs[idx].deadline else { return };
+        let now = obs::now();
+        if now <= deadline {
+            return;
+        }
+        let missed_ms = (now - deadline).as_millis() as u64;
+        let tenant = self.jobs[idx].tenant.clone();
+        let mut board = lock::board(&self.board);
+        let snap = &mut board.jobs[idx].snap;
+        let first = snap.deadline_missed_by_ms.is_none();
+        if first || terminal {
+            snap.deadline_missed_by_ms = Some(missed_ms);
+        }
+        if first {
+            registry::inc(registry::Counter::DeadlineMiss);
+            *board.tenant_misses.entry(tenant).or_insert(0) += 1;
+        }
     }
 
     /// Serialize one event onto the board (log + snapshot + timeline).

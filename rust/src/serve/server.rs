@@ -33,9 +33,10 @@ use std::time::Duration;
 
 use crate::config::ServeConfig;
 use crate::error::{Error, Result};
+use crate::obs::{self, prom, registry};
 use crate::runtime::Device;
 use crate::serve::lock;
-use crate::serve::protocol::{self, Request};
+use crate::serve::protocol::{self, JobState, Request};
 use crate::serve::scheduler::{Board, Scheduler, SubmitMeta, SubmitOutcome};
 use crate::util::faults::{self, FaultSite};
 use crate::util::json::Json;
@@ -123,6 +124,10 @@ impl ServerHandle {
 /// Bind the control plane and start serving. Returns once the listener
 /// is bound; scheduling runs on background threads until `shutdown`.
 pub fn serve(opts: ServeConfig) -> Result<ServerHandle> {
+    // telemetry arms here, once: the `metrics` verb scrapes the
+    // process-global registry, so counters must be live before the
+    // first request can land
+    registry::arm();
     // fault injection arms here, once, before any thread can hit a
     // failpoint (REVFFN_FAULTS overrides the config plan)
     if faults::install_from(opts.faults.as_deref())? {
@@ -282,10 +287,8 @@ fn accept_loop(
                 // bound (0 = uncapped)
                 if conn_limit > 0 && conns.fetch_add(1, Ordering::SeqCst) >= conn_limit {
                     conns.fetch_sub(1, Ordering::SeqCst);
-                    let _ = write_line(
-                        &mut stream,
-                        &protocol::error_json("server at connection capacity"),
-                    );
+                    let _ =
+                        write_line(&mut stream, &error_line("server at connection capacity"));
                     continue;
                 }
                 let guard = ConnGuard(conns.clone());
@@ -318,6 +321,171 @@ fn write_line(stream: &mut TcpStream, j: &Json) -> std::io::Result<()> {
     stream.flush()
 }
 
+/// Build an error reply and count it (`revffn_wire_errors_total`).
+fn error_line(msg: &str) -> Json {
+    registry::inc(registry::Counter::WireErrors);
+    protocol::error_json(msg)
+}
+
+/// RAII increment of the active-followers gauge: one per live `events`
+/// follow stream, decremented however the handler exits.
+struct FollowerGauge;
+
+impl FollowerGauge {
+    fn new() -> Self {
+        registry::gauge_inc(registry::Gauge::FollowersActive);
+        FollowerGauge
+    }
+}
+
+impl Drop for FollowerGauge {
+    fn drop(&mut self) {
+        registry::gauge_dec(registry::Gauge::FollowersActive);
+    }
+}
+
+/// Assemble the full Prometheus exposition for the `metrics` verb:
+/// process-global registry families plus scheduler gauges derived from
+/// the board at scrape time.
+fn metrics_response(b: &Board) -> Json {
+    let mut fams = prom::registry_families();
+    fams.extend(board_families(b));
+    let body = prom::render(&fams);
+    protocol::metrics_json(registry::value(registry::Counter::Steps), &body)
+}
+
+/// Scheduler-state families: per-tenant queue depth / active jobs /
+/// reserved GB (aggregated from live job rows), per-tenant debt and
+/// deadline misses (off the board maps the scheduler refreshes),
+/// per-class queue depth, jobs-by-state, and the memory ledgers.
+fn board_families(b: &Board) -> Vec<prom::Family> {
+    use crate::obs::prom::{Family, Kind, Sample};
+    use crate::serve::protocol::Priority;
+    let mut queued: std::collections::BTreeMap<&str, u64> = Default::default();
+    let mut active: std::collections::BTreeMap<&str, u64> = Default::default();
+    let mut reserved: std::collections::BTreeMap<&str, f64> = Default::default();
+    let mut class_queued: std::collections::BTreeMap<&'static str, u64> = Default::default();
+    let mut by_state: std::collections::BTreeMap<&'static str, u64> = Default::default();
+    for state in [
+        JobState::Queued,
+        JobState::Running,
+        JobState::Finished,
+        JobState::Failed,
+        JobState::Cancelled,
+        JobState::Retrying,
+        JobState::Quarantined,
+    ] {
+        by_state.insert(state.name(), 0);
+    }
+    for class in [Priority::Batch, Priority::Normal, Priority::Interactive] {
+        class_queued.insert(class.name(), 0);
+    }
+    for v in &b.jobs {
+        let s = &v.snap;
+        *by_state.entry(s.state.name()).or_insert(0) += 1;
+        match s.state {
+            JobState::Queued => {
+                *queued.entry(&s.tenant).or_insert(0) += 1;
+                *class_queued.entry(s.priority.name()).or_insert(0) += 1;
+            }
+            JobState::Running => {
+                *active.entry(&s.tenant).or_insert(0) += 1;
+                *reserved.entry(&s.tenant).or_insert(0.0) += s.peak_gb;
+            }
+            _ => {}
+        }
+    }
+    let tenant = |m: &std::collections::BTreeMap<&str, u64>| -> Vec<Sample> {
+        m.iter().map(|(t, v)| Sample::new(vec![("tenant", t.to_string())], *v as f64)).collect()
+    };
+    let scalar = |v: f64| vec![Sample::new(Vec::new(), v)];
+    vec![
+        Family {
+            name: prom::TENANT_QUEUE_DEPTH,
+            help: "Queued jobs per tenant.",
+            kind: Kind::Gauge,
+            samples: tenant(&queued),
+        },
+        Family {
+            name: prom::TENANT_ACTIVE_JOBS,
+            help: "Running jobs per tenant.",
+            kind: Kind::Gauge,
+            samples: tenant(&active),
+        },
+        Family {
+            name: prom::TENANT_RESERVED_GB,
+            help: "Admitted accelerator reservation per tenant, GB.",
+            kind: Kind::Gauge,
+            samples: reserved
+                .iter()
+                .map(|(t, v)| Sample::new(vec![("tenant", t.to_string())], *v))
+                .collect(),
+        },
+        Family {
+            name: prom::TENANT_DEBT,
+            help: "Weighted service debt per tenant (admission fairness).",
+            kind: Kind::Gauge,
+            samples: b
+                .tenant_debt
+                .iter()
+                .map(|(t, v)| Sample::new(vec![("tenant", t.to_string())], *v))
+                .collect(),
+        },
+        Family {
+            name: prom::TENANT_DEADLINE_MISS,
+            help: "Jobs that missed their submitted deadline, per tenant.",
+            kind: Kind::Counter,
+            samples: b
+                .tenant_misses
+                .iter()
+                .map(|(t, v)| Sample::new(vec![("tenant", t.to_string())], *v as f64))
+                .collect(),
+        },
+        Family {
+            name: prom::CLASS_QUEUE_DEPTH,
+            help: "Queued jobs per scheduling class.",
+            kind: Kind::Gauge,
+            samples: class_queued
+                .iter()
+                .map(|(c, v)| Sample::new(vec![("class", c.to_string())], *v as f64))
+                .collect(),
+        },
+        Family {
+            name: prom::JOBS_BY_STATE,
+            help: "Jobs on the board by lifecycle state.",
+            kind: Kind::Gauge,
+            samples: by_state
+                .iter()
+                .map(|(s, v)| Sample::new(vec![("state", s.to_string())], *v as f64))
+                .collect(),
+        },
+        Family {
+            name: prom::BUDGET_GB,
+            help: "Configured accelerator memory budget, GB.",
+            kind: Kind::Gauge,
+            samples: scalar(b.budget_gb),
+        },
+        Family {
+            name: prom::COMMITTED_GB,
+            help: "Accelerator memory committed to admitted jobs, GB.",
+            kind: Kind::Gauge,
+            samples: scalar(b.committed_gb),
+        },
+        Family {
+            name: prom::HOST_BUDGET_GB,
+            help: "Configured host snapshot budget, GB (0 = unbounded).",
+            kind: Kind::Gauge,
+            samples: scalar(b.host_budget_gb),
+        },
+        Family {
+            name: prom::HOST_COMMITTED_GB,
+            help: "Host memory committed to suspended snapshots, GB.",
+            kind: Kind::Gauge,
+            samples: scalar(b.host_committed_gb),
+        },
+    ]
+}
+
 fn handle_connection(
     stream: TcpStream,
     ctl: Sender<Control>,
@@ -342,27 +510,33 @@ fn handle_connection(
         // the hot path: a lazy scan settles scalar verbs without
         // building a Json tree; submit and malformed lines fall back to
         // the full parser (identical behavior, pinned by wire tests)
-        let req = match Request::from_line_fast(&line) {
+        let req = {
+            let _sp = obs::span(obs::Site::WireRead);
+            Request::from_line_fast(&line)
+        };
+        let req = match req {
             Ok(r) => r,
             Err(e) => {
-                write_line(&mut out, &protocol::error_json(&e.to_string()))?;
+                write_line(&mut out, &error_line(&e.to_string()))?;
                 continue;
             }
         };
+        registry::inc(registry::Counter::WireRequests);
+        let _handle_sp = obs::span(obs::Site::WireHandle);
         match req {
             Request::Submit { config, name, priority, tenant, deadline_ms } => {
                 let meta = SubmitMeta { priority, tenant, deadline_ms };
                 let (reply_tx, reply_rx) = channel();
                 if ctl.send(Control::Submit { config, name, meta, reply: reply_tx }).is_err() {
-                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    write_line(&mut out, &error_line("scheduler stopped"))?;
                     continue;
                 }
                 let resp = match reply_rx.recv() {
                     Ok(Ok(o)) => protocol::submitted_json(
                         &o.id, o.admitted, o.peak_gb, o.state, o.priority, &o.tenant,
                     ),
-                    Ok(Err(msg)) => protocol::error_json(&msg),
-                    Err(_) => protocol::error_json("scheduler stopped"),
+                    Ok(Err(msg)) => error_line(&msg),
+                    Err(_) => error_line("scheduler stopped"),
                 };
                 write_line(&mut out, &resp)?;
             }
@@ -379,14 +553,17 @@ fn handle_connection(
                         .map(|v| v.snap.clone())
                         .collect();
                     if job.is_some() && rows.is_empty() {
-                        protocol::error_json("unknown job")
+                        error_line("unknown job")
                     } else {
+                        let misses: Vec<(String, u64)> =
+                            b.tenant_misses.iter().map(|(t, n)| (t.clone(), *n)).collect();
                         protocol::status_json(
                             &rows,
                             b.budget_gb,
                             b.committed_gb,
                             b.host_budget_gb,
                             b.host_committed_gb,
+                            &misses,
                         )
                     }
                 };
@@ -405,7 +582,7 @@ fn handle_connection(
             Request::Cancel { job } => {
                 let (reply_tx, reply_rx) = channel();
                 if ctl.send(Control::Cancel { job, reply: reply_tx }).is_err() {
-                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    write_line(&mut out, &error_line("scheduler stopped"))?;
                     continue;
                 }
                 let resp = match reply_rx.recv() {
@@ -413,23 +590,33 @@ fn handle_connection(
                         .bool("ok", true)
                         .bool("cancelled", cancelled)
                         .build(),
-                    Ok(Err(msg)) => protocol::error_json(&msg),
-                    Err(_) => protocol::error_json("scheduler stopped"),
+                    Ok(Err(msg)) => error_line(&msg),
+                    Err(_) => error_line("scheduler stopped"),
                 };
                 write_line(&mut out, &resp)?;
             }
             Request::Resume { job } => {
                 let (reply_tx, reply_rx) = channel();
                 if ctl.send(Control::Resume { job: job.clone(), reply: reply_tx }).is_err() {
-                    write_line(&mut out, &protocol::error_json("scheduler stopped"))?;
+                    write_line(&mut out, &error_line("scheduler stopped"))?;
                     continue;
                 }
                 let resp = match reply_rx.recv() {
                     Ok(Ok(o)) => {
                         protocol::resumed_json(&job, &o.id, o.admitted, o.peak_gb, o.state)
                     }
-                    Ok(Err(msg)) => protocol::error_json(&msg),
-                    Err(_) => protocol::error_json("scheduler stopped"),
+                    Ok(Err(msg)) => error_line(&msg),
+                    Err(_) => error_line("scheduler stopped"),
+                };
+                write_line(&mut out, &resp)?;
+            }
+            Request::Metrics => {
+                // scrape: registry families plus board-derived
+                // scheduler gauges, rendered as Prometheus text and
+                // shipped inside one NDJSON reply
+                let resp = {
+                    let b = lock::board(&board);
+                    metrics_response(&b)
                 };
                 write_line(&mut out, &resp)?;
             }
@@ -457,9 +644,13 @@ fn handle_connection(
 ///
 /// The per-job log is a capped ring (`ServeConfig::event_log_cap`): a
 /// cursor pointing into the evicted region is clamped forward to the
-/// log's base offset, so the delivered lines are always a contiguous,
-/// gap-free run (each line self-describes its `seq`; a follower that
-/// keeps up never observes an eviction).
+/// log's base offset. The skipped sequence numbers are lines this
+/// reader will never see — they are counted
+/// (`revffn_events_dropped_total`) and surfaced on the page footer as
+/// `gapped`/`dropped` instead of being silently swallowed. The
+/// delivered lines themselves are always a contiguous run (each line
+/// self-describes its `seq`; a follower that keeps up never observes
+/// an eviction).
 fn stream_events(
     out: &mut TcpStream,
     board: &Arc<Mutex<Board>>,
@@ -470,14 +661,23 @@ fn stream_events(
     follow: bool,
 ) -> Result<()> {
     let mut cursor = from;
+    let mut dropped: u64 = 0;
+    let _follower = follow.then(FollowerGauge::new);
     loop {
         let (batch, next_cursor, state, total) = {
             let b = lock::board(board);
             let Some(view) = b.job(job) else {
-                write_line(out, &protocol::error_json("unknown job"))?;
+                write_line(out, &error_line("unknown job"))?;
                 return Ok(());
             };
             let (lines, start) = view.events.page_from(cursor, page);
+            // ring eviction: the clamp from `cursor` to `start` is a
+            // hole in this reader's stream — account for it
+            let gap = start.saturating_sub(cursor);
+            if gap > 0 {
+                registry::add(registry::Counter::EventsDropped, gap);
+                dropped += gap;
+            }
             let next = start + lines.len() as u64;
             (lines, next, view.snap.state, view.snap.events)
         };
@@ -492,13 +692,15 @@ fn stream_events(
             return Err(e.into());
         }
         cursor = next_cursor;
+        // how far this reader trails the producer, in events
+        registry::gauge_set(registry::Gauge::FollowerLag, total.saturating_sub(cursor));
         if !follow {
             // one page per request: the footer's cursor is where the
             // next request resumes, `done` says no further page can
             // ever exist
             let done = state.is_terminal() && cursor >= total;
             let footer =
-                protocol::events_page_json(job, batch.len() as u64, cursor, state, done);
+                protocol::events_page_json(job, batch.len() as u64, cursor, state, done, dropped);
             if let Err(e) = write_line(out, &footer) {
                 if is_timeout(&e) {
                     eprintln!("[serve] events: disconnected slow consumer of {job}");

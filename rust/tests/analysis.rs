@@ -6,6 +6,7 @@
 use std::path::PathBuf;
 
 use revffn::analysis::configcheck::ConfigCheckOpts;
+use revffn::analysis::lint::lint_text;
 use revffn::analysis::{check_artifacts, check_checkpoint, check_config, Report};
 
 fn fixture(rel: &str) -> PathBuf {
@@ -82,6 +83,25 @@ fn ok_serve_config_passes() {
 }
 
 #[test]
+fn seeded_raw_instant_fixture_is_ln005() {
+    // serve-style worker timing a quantum with a raw Instant::now()
+    // instead of obs::span / obs::now — exactly one live defect; the
+    // comment, string, and test-block occurrences must stay exempt
+    let src = std::fs::read_to_string(fixture("instant_timing.rs.txt")).unwrap();
+    let findings = lint_text("serve/worker.rs", &src);
+    assert_eq!(findings.len(), 1, "expected exactly the seeded defect: {findings:?}");
+    assert_eq!(findings[0].rule, "LN005");
+    assert_eq!(findings[0].subject, "serve/worker.rs:12");
+    // the same text inside obs/ is the sanctioned home of the clock
+    assert!(
+        lint_text("obs/trace.rs", &src).is_empty(),
+        "obs/ is exempt from LN005"
+    );
+    // and outside the timed trees (serve/, engine/) the rule is off
+    assert!(lint_text("util/retry.rs", &src).is_empty());
+}
+
+#[test]
 fn all_rule_ids_are_stable_strings() {
     // defense against typo'd rule IDs drifting: the catalog in
     // docs/ANALYSIS.md is the source of truth; anything emitted by the
@@ -89,7 +109,7 @@ fn all_rule_ids_are_stable_strings() {
     let catalog = [
         "AR001", "AR002", "AR003", "AR004", "AR005", "AR006", "AR007", "AR008", "AR009",
         "AR010", "CK001", "CK002", "CK003", "CK004", "CF001", "CF002", "CF003", "CF004",
-        "LN000", "LN001", "LN002", "LN003", "LN004",
+        "LN000", "LN001", "LN002", "LN003", "LN004", "LN005",
     ];
     let mut findings = Vec::new();
     for dir in ["clean", "missing_accum", "bad_shape", "dtype_flip"] {
