@@ -384,12 +384,34 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let uploads = snap.counter(revffn::obs::registry::Counter::Uploads);
     let downloads = snap.counter(revffn::obs::registry::Counter::Downloads);
+    // static-vs-predicted peak drift per variant/program, exported as
+    // `revffn_hlo_mem_drift` gauge rows (docs/OBSERVABILITY.md) so a
+    // bench archive records how honestly the analytic model priced the
+    // exact artifacts it ran
+    let (_, drift) = revffn::analysis::liveness::check_hlo_mem(
+        std::path::Path::new("artifacts/tiny"),
+        &revffn::analysis::liveness::HloMemOpts::default(),
+    );
+    let drift_rows: Vec<Json> = drift
+        .iter()
+        .map(|r| {
+            ObjBuilder::new()
+                .str("name", revffn::obs::prom::HLO_MEM_DRIFT)
+                .str("variant", &r.variant)
+                .str("program", &r.program)
+                .num("value", r.ratio)
+                .num("static_bytes", r.static_bytes as f64)
+                .num("predicted_bytes", r.predicted_bytes as f64)
+                .build()
+        })
+        .collect();
     let telemetry = ObjBuilder::new()
         .num("uploads_total", uploads as f64)
         .num("downloads_total", downloads as f64)
         .num("uploads_per_step", uploads as f64 / steps_timed)
         .num("downloads_per_step", downloads as f64 / steps_timed)
         .val("stages", Json::Arr(stages))
+        .val("hlo_mem_drift", Json::Arr(drift_rows))
         .build();
 
     let doc = ObjBuilder::new()

@@ -35,7 +35,7 @@ use crate::analysis::Finding;
 
 /// Rule-ID families the analysis module defines; DC003 only fires on
 /// these prefixes so prose like `RFC2119` can never false-positive.
-const ID_FAMILIES: &[&str] = &["AR", "CK", "CF", "LN", "DC"];
+const ID_FAMILIES: &[&str] = &["AR", "CK", "CF", "LN", "DC", "MM"];
 
 /// Flags the docs may mention that are not `revffn` flags: cargo's own
 /// (quickstart build/run and CI command lines), the AOT lowering tool's

@@ -1,13 +1,20 @@
-//! Minimal HLO-text signature reader.
+//! Tolerant HLO-text parser.
 //!
 //! The AOT layer (`python/compile/aot.py`) serializes every program as
-//! `as_hlo_text()` output. For contract checking we only need the ENTRY
-//! computation's interface — parameter types, the ROOT tuple's element
-//! types, and the `input_output_alias` donation map — not a real HLO
-//! parser. The reader is deliberately tolerant: anything it cannot
-//! understand yields `None`, which the contract pass reports as an
-//! AR009 *warning* (checks skipped), never a spurious error against
-//! real compiler output.
+//! `as_hlo_text()` output. Two readers live here:
+//!
+//! * [`parse_signature`] — the original ENTRY-interface reader the
+//!   contract pass (AR rules) uses: parameter types, ROOT tuple element
+//!   types, donated parameter numbers. Anything it cannot understand
+//!   yields `None`, reported as an AR009 *warning* (checks skipped),
+//!   never a spurious error against real compiler output.
+//! * [`parse_module`] — a full-module reader for the liveness pass (MM
+//!   rules): every computation body, every instruction with its shape
+//!   (tensors and tuples), operands, and the output-index →
+//!   parameter-number alias pairs. Still tolerant — unknown opcodes and
+//!   attributes pass through untouched — but a line that claims to be
+//!   an instruction and cannot be read degrades to a structured
+//!   [`crate::error::Error::Parse`], never a panic.
 
 /// One flat tensor type, e.g. `f32[4,8]` or `s32[]` (scalar).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -20,6 +27,104 @@ impl TensorTy {
     pub fn render(&self) -> String {
         let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
         format!("{}[{}]", self.dtype, dims.join(","))
+    }
+
+    /// Flat buffer size. Unknown element types fall back to 4 bytes
+    /// (the dominant f32/s32 case) — tolerance over precision, so one
+    /// exotic dtype cannot kill a whole-program liveness sweep.
+    pub fn flat_bytes(&self) -> u64 {
+        let elems: u64 = self.dims.iter().map(|&d| d as u64).product();
+        elems * hlo_dtype_bytes(&self.dtype).unwrap_or(4)
+    }
+}
+
+/// HLO element-type spelling → bytes per element.
+pub fn hlo_dtype_bytes(dtype: &str) -> Option<u64> {
+    Some(match dtype {
+        "pred" | "s8" | "u8" | "f8e4m3" | "f8e5m2" => 1,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "f32" | "s32" | "u32" => 4,
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "c128" => 16,
+        _ => return None,
+    })
+}
+
+/// An instruction's result shape: a flat tensor or a (possibly nested)
+/// tuple of shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Tensor(TensorTy),
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    /// Total bytes across all tensor leaves.
+    pub fn flat_bytes(&self) -> u64 {
+        match self {
+            Shape::Tensor(t) => t.flat_bytes(),
+            Shape::Tuple(elems) => elems.iter().map(Shape::flat_bytes).sum(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Shape::Tensor(t) => t.render(),
+            Shape::Tuple(elems) => {
+                let parts: Vec<String> = elems.iter().map(Shape::render).collect();
+                format!("({})", parts.join(", "))
+            }
+        }
+    }
+}
+
+/// One parsed instruction line.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    /// Name without the leading `%`.
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    /// Operand instruction names (leading `%` stripped); non-reference
+    /// operand tokens (constant literals, parameter numbers) are not
+    /// listed here.
+    pub operands: Vec<String>,
+    pub is_root: bool,
+    /// `Some(n)` when the opcode is `parameter(n)`.
+    pub param_number: Option<usize>,
+    /// Raw attribute text after the operand list (`dimensions={...},
+    /// to_apply=%add` …), kept verbatim.
+    pub attrs: String,
+}
+
+/// One computation body (`%name (...) -> ty { ... }` or the ENTRY).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub is_entry: bool,
+}
+
+impl Computation {
+    /// The `ROOT` instruction, if the body declared one.
+    pub fn root(&self) -> Option<&Instr> {
+        self.instrs.iter().find(|i| i.is_root)
+    }
+}
+
+/// A whole parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    /// `input_output_alias` pairs as `(output index, parameter number)`,
+    /// sorted by output index. Empty when the header carries no map.
+    pub alias: Vec<(usize, usize)>,
+}
+
+impl Module {
+    pub fn entry(&self) -> Option<&Computation> {
+        self.computations.iter().find(|c| c.is_entry)
     }
 }
 
@@ -178,6 +283,206 @@ pub fn parse_signature(text: &str) -> Option<Signature> {
     Some(Signature { params, outputs, aliased })
 }
 
+/// Parse a shape token: `f32[4,2]{1,0}`, `s32[]`, or a tuple
+/// `(f32[4,2], (f32[], s32[2]))`. Trailing layout after `]` is ignored.
+pub fn parse_shape(tok: &str) -> Option<Shape> {
+    let tok = tok.trim();
+    if tok.starts_with('(') {
+        let body = balanced_span(tok, 0, '(', ')')?;
+        let mut elems = Vec::new();
+        if !body.trim().is_empty() {
+            for part in split_top_level(body) {
+                elems.push(parse_shape(part)?);
+            }
+        }
+        Some(Shape::Tuple(elems))
+    } else {
+        parse_tensor_ty(tok).map(Shape::Tensor)
+    }
+}
+
+/// Byte length of the leading shape token in `s` (which starts at a
+/// shape): for tuples the balanced `(...)` span, for tensors everything
+/// up to the first whitespace outside brackets (so `f32[4,2]{1,0}`
+/// stays whole).
+fn shape_token_len(s: &str) -> Option<usize> {
+    if s.starts_with('(') {
+        return balanced_span(s, 0, '(', ')').map(|body| body.len() + 2);
+    }
+    let mut depth = 0i32;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' | '{' | '(' => depth += 1,
+            ']' | '}' | ')' => depth -= 1,
+            c if c.is_whitespace() && depth <= 0 => return Some(i),
+            _ => {}
+        }
+    }
+    Some(s.len())
+}
+
+/// Parse one instruction line (`%name = <shape> opcode(operands), attrs`,
+/// optionally `ROOT`-prefixed). `None` means the line is malformed.
+fn parse_instr(trimmed: &str) -> Option<Instr> {
+    let (is_root, rest) = match trimmed.strip_prefix("ROOT") {
+        Some(r) => (true, r.trim_start()),
+        None => (false, trimmed),
+    };
+    let name_tok = rest.strip_prefix('%')?;
+    let eq = name_tok.find('=')?;
+    let name = name_tok[..eq].trim().to_string();
+    if name.is_empty() {
+        return None;
+    }
+    let rhs = name_tok[eq + 1..].trim_start();
+    let shape_len = shape_token_len(rhs)?;
+    let shape = parse_shape(&rhs[..shape_len])?;
+    let after_shape = rhs[shape_len..].trim_start();
+    let op_end = after_shape
+        .find(|c: char| c == '(' || c == ',' || c.is_whitespace())
+        .unwrap_or(after_shape.len());
+    let opcode = after_shape[..op_end].to_string();
+    if opcode.is_empty() || !opcode.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.') {
+        return None;
+    }
+    let rest2 = after_shape[op_end..].trim_start();
+    let mut operands = Vec::new();
+    let mut param_number = None;
+    let attrs;
+    if rest2.starts_with('(') {
+        let body = balanced_span(rest2, 0, '(', ')')?;
+        for tok in split_top_level(body) {
+            // operand tokens are `%name` (possibly `ty %name` in older
+            // dialects); literal bodies (`constant({...})`) have no `%`
+            if let Some(p) = tok.find('%') {
+                let op = tok[p + 1..].trim();
+                if !op.is_empty() {
+                    operands.push(op.to_string());
+                }
+            }
+        }
+        if opcode == "parameter" {
+            param_number = body.trim().parse::<usize>().ok();
+        }
+        attrs = rest2[body.len() + 2..].trim_start_matches(',').trim().to_string();
+    } else {
+        attrs = rest2.trim_start_matches(',').trim().to_string();
+    }
+    Some(Instr { name, shape, opcode, operands, is_root, param_number, attrs })
+}
+
+/// Parse the `input_output_alias={...}` header map into `(output index,
+/// parameter number)` pairs. Missing/garbled map → empty vec (the
+/// liveness pass decides whether an absent map is a finding).
+fn parse_alias_pairs(text: &str) -> Vec<(usize, usize)> {
+    let Some(pos) = text.find("input_output_alias=") else { return Vec::new() };
+    let Some(body) = balanced_span(text, pos + "input_output_alias=".len(), '{', '}') else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut rest = body;
+    loop {
+        // one entry: `{K}: (P, {}, may-alias)`
+        let Some(ob) = rest.find('{') else { break };
+        let Some(cb) = rest[ob..].find('}').map(|i| i + ob) else { break };
+        let out_idx = rest[ob + 1..cb].split(',').next().and_then(|s| s.trim().parse::<usize>().ok());
+        let after = &rest[cb + 1..];
+        let Some(op) = after.find('(') else { break };
+        let Some(inner) = balanced_span(after, op, '(', ')') else { break };
+        let param = inner
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<String>()
+            .parse::<usize>()
+            .ok();
+        if let (Some(o), Some(p)) = (out_idx, param) {
+            out.push((o, p));
+        }
+        rest = &after[op + inner.len() + 2..];
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Parse a whole HLO module: every computation body with its
+/// instructions, plus the header alias map. Tolerant of unknown opcodes
+/// and attributes; structural problems (no ENTRY, no ROOT, a malformed
+/// instruction line, gapped parameter numbering) degrade to
+/// [`crate::error::Error::Parse`] — never a panic.
+pub fn parse_module(text: &str) -> crate::error::Result<Module> {
+    let perr = |m: String| crate::error::Error::Parse(format!("hlo: {m}"));
+    let mut name = String::from("unknown");
+    let mut computations: Vec<Computation> = Vec::new();
+    let mut current: Option<Computation> = None;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix("HloModule") {
+            if let Some(tok) = rest.split([',', ' ']).find(|t| !t.trim().is_empty()) {
+                name = tok.trim().to_string();
+            }
+            continue;
+        }
+        let is_entry_hdr = trimmed.starts_with("ENTRY ") || trimmed.starts_with("ENTRY%");
+        let is_comp_hdr = trimmed.ends_with('{')
+            && (is_entry_hdr || (trimmed.starts_with('%') && trimmed.contains("->")));
+        if is_comp_hdr {
+            if let Some(c) = current.take() {
+                computations.push(c);
+            }
+            let hdr = if is_entry_hdr { trimmed["ENTRY".len()..].trim_start() } else { trimmed };
+            let cname = hdr
+                .strip_prefix('%')
+                .unwrap_or(hdr)
+                .split(|c: char| c.is_whitespace() || c == '(')
+                .next()
+                .unwrap_or("")
+                .to_string();
+            current = Some(Computation { name: cname, instrs: Vec::new(), is_entry: is_entry_hdr });
+            continue;
+        }
+        if trimmed == "}" {
+            if let Some(c) = current.take() {
+                computations.push(c);
+            }
+            continue;
+        }
+        if let Some(cur) = current.as_mut() {
+            if trimmed.starts_with('%') || trimmed.starts_with("ROOT") {
+                match parse_instr(trimmed) {
+                    Some(i) => cur.instrs.push(i),
+                    None => return Err(perr(format!("unreadable instruction line: {trimmed}"))),
+                }
+            }
+            // anything else inside a body (metadata continuations …) is
+            // tolerated and skipped
+        }
+    }
+    if let Some(c) = current.take() {
+        computations.push(c);
+    }
+    let alias = parse_alias_pairs(text);
+    let module = Module { name, computations, alias };
+    let Some(entry) = module.entry() else {
+        return Err(perr("no ENTRY computation".into()));
+    };
+    if entry.root().is_none() {
+        return Err(perr("ENTRY computation has no ROOT instruction".into()));
+    }
+    // parameter numbers must be dense 0..n, mirroring parse_signature
+    let mut params: Vec<usize> = entry.instrs.iter().filter_map(|i| i.param_number).collect();
+    params.sort_unstable();
+    for (expect, got) in params.iter().enumerate() {
+        if *got != expect {
+            return Err(perr(format!("parameter numbering has a gap at {expect}")));
+        }
+    }
+    Ok(module)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,5 +538,62 @@ ENTRY %main.42 (Arg_0.1: f32[4,2], Arg_1.2: f32[]) -> (f32[4,2], f32[]) {
         assert_eq!(parse_tensor_ty("s32[]").unwrap().dims, Vec::<usize>::new());
         assert!(parse_tensor_ty("f32").is_none());
         assert!(parse_tensor_ty("[4]").is_none());
+    }
+
+    #[test]
+    fn module_parser_reads_bodies_and_alias() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.name, "train_step.42");
+        assert_eq!(m.computations.len(), 2, "fusion + entry");
+        assert_eq!(m.alias, vec![(0, 0), (1, 1)]);
+        let entry = m.entry().unwrap();
+        assert_eq!(entry.name, "main.42");
+        assert_eq!(entry.instrs.len(), 4);
+        assert_eq!(entry.instrs[0].param_number, Some(0));
+        assert_eq!(entry.instrs[1].attrs, "metadata={op_name=\"lr\"}");
+        // constant literal body must not leak into operands
+        assert_eq!(entry.instrs[2].opcode, "constant");
+        assert!(entry.instrs[2].operands.is_empty());
+        let root = entry.root().unwrap();
+        assert_eq!(root.operands, vec!["Arg_0.1", "Arg_1.2"]);
+        assert_eq!(root.shape.render(), "(f32[4,2], f32[])");
+        assert_eq!(root.shape.flat_bytes(), 8 * 4 + 4);
+        // the fusion body parses too
+        let fused = &m.computations[0];
+        assert!(!fused.is_entry);
+        assert_eq!(fused.root().unwrap().opcode, "add");
+    }
+
+    #[test]
+    fn module_parser_degrades_to_parse_error() {
+        assert!(matches!(parse_module("not hlo"), Err(crate::error::Error::Parse(_))));
+        assert!(matches!(
+            parse_module("ENTRY %m () -> f32[] {\n}\n"),
+            Err(crate::error::Error::Parse(_))
+        ));
+        // a line claiming to be an instruction but unreadable
+        let bad = "ENTRY %m (a: f32[]) -> (f32[]) {\n  %a = garbage\n  ROOT %t = (f32[]) tuple(%a)\n}\n";
+        assert!(matches!(parse_module(bad), Err(crate::error::Error::Parse(_))));
+        // gapped parameter numbering
+        let gap = "ENTRY %m (a: f32[]) -> (f32[]) {\n  %a = f32[] parameter(1)\n  ROOT %t = (f32[]) tuple(%a)\n}\n";
+        assert!(matches!(parse_module(gap), Err(crate::error::Error::Parse(_))));
+    }
+
+    #[test]
+    fn shape_parsing_handles_nested_tuples_and_bytes() {
+        let s = parse_shape("(f32[4,2]{1,0}, (s32[2], pred[]))").unwrap();
+        assert_eq!(s.flat_bytes(), 32 + 8 + 1);
+        assert_eq!(s.render(), "(f32[4,2], (s32[2], pred[]))");
+        assert_eq!(parse_shape("bf16[8]").unwrap().flat_bytes(), 16);
+        assert!(parse_shape("???").is_none());
+    }
+
+    #[test]
+    fn attrs_operands_stay_separate() {
+        let text = "HloModule r\nENTRY %m (a: f32[4]) -> (f32[]) {\n  %a = f32[4] parameter(0)\n  %z = f32[] constant(0)\n  %r = f32[] reduce(%a, %z), dimensions={0}, to_apply=%add_f32\n  ROOT %t = (f32[]) tuple(%r)\n}\n";
+        let m = parse_module(text).unwrap();
+        let red = &m.entry().unwrap().instrs[2];
+        assert_eq!(red.operands, vec!["a", "z"], "to_apply target is an attr, not an operand");
+        assert!(red.attrs.contains("to_apply=%add_f32"));
     }
 }

@@ -23,6 +23,12 @@
 //!   layer cannot see. Timing goes through `obs::span` (records into
 //!   the stage histograms and the trace ring) or `obs::now` (the
 //!   sanctioned clock for deadline arithmetic).
+//! * **LN006** — no silent truncating `as` integer casts in the wire
+//!   layer (`serve/protocol.rs`, `serve/server.rs`): a length or cursor
+//!   narrowed with `as` wraps silently on a hostile or corrupt frame.
+//!   Wire-derived integers convert through `try_from` (explicit
+//!   saturation/rejection) or the saturating `Json::path_u64` /
+//!   `Json::as_u64` accessors.
 //!
 //! The scanner strips line/block comments (nested), string literals
 //! (incl. raw and byte strings), and char literals before matching, and
@@ -171,6 +177,32 @@ fn strip(text: &str) -> String {
 const LN001_PATTERNS: &[&str] =
     &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
 const LN003_PATTERNS: &[&str] = &["with_capacity(", "vec![0"];
+const LN006_INT_TARGETS: &[&str] =
+    &["u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"];
+
+/// Does the (stripped) line contain ` as <int-type>` with a word
+/// boundary after the type token? Returns the matched type name.
+fn truncating_cast(line: &str) -> Option<&'static str> {
+    let mut rest = line;
+    while let Some(p) = rest.find(" as ") {
+        let after = &rest[p + 4..];
+        let tok = after.trim_start();
+        for t in LN006_INT_TARGETS {
+            if let Some(tail) = tok.strip_prefix(t) {
+                let boundary = tail
+                    .chars()
+                    .next()
+                    .map(|c| !c.is_ascii_alphanumeric() && c != '_')
+                    .unwrap_or(true);
+                if boundary {
+                    return Some(t);
+                }
+            }
+        }
+        rest = after;
+    }
+    None
+}
 
 /// Lint one file's text. `rel` is the path relative to the source root
 /// (`serve/server.rs` style) — it decides which rules apply.
@@ -181,6 +213,7 @@ pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
     let is_obs = norm.starts_with("obs/") || norm.contains("/obs/");
     let is_lock_helper = norm.ends_with("serve/lock.rs") || norm == "serve/lock.rs";
     let is_backoff_helper = norm.ends_with("util/retry.rs") || norm == "util/retry.rs";
+    let is_wire = norm.ends_with("serve/protocol.rs") || norm.ends_with("serve/server.rs");
     let stripped = strip(text);
     let mut out = Vec::new();
     for (lineno, line) in stripped.lines().enumerate() {
@@ -233,6 +266,17 @@ pub fn lint_text(rel: &str, text: &str) -> Vec<Finding> {
                 subject.clone(),
                 "raw Instant::now() in timed code — time through obs::span (stage histograms + trace) or obs::now (deadline arithmetic) so telemetry sees the site".to_string(),
             ));
+        }
+        if is_wire {
+            if let Some(t) = truncating_cast(line) {
+                out.push(Finding::error(
+                    "LN006",
+                    subject.clone(),
+                    format!(
+                        "silent truncating `as {t}` cast in the wire layer — lengths and cursors from the wire must convert via try_from (or the saturating Json::path_u64 / Json::as_u64)"
+                    ),
+                ));
+            }
         }
     }
     out
@@ -365,6 +409,27 @@ mod tests { fn t() { x.unwrap(); } }\n";
         // comments, strings, and trailing test blocks stay exempt
         let exempt = "// Instant::now( in prose\nlet s = \"Instant::now(\";\n#[cfg(test)]\nmod tests { fn t() { Instant::now(); } }\n";
         assert!(lint_text("serve/server.rs", exempt).is_empty());
+    }
+
+    #[test]
+    fn truncating_casts_flagged_only_in_wire_files() {
+        let src = "let n = len as u32;\n";
+        for wire in ["serve/protocol.rs", "serve/server.rs"] {
+            let f = lint_text(wire, src);
+            assert_eq!(f.len(), 1, "{wire}: {f:?}");
+            assert_eq!(f[0].rule, "LN006");
+            assert_eq!(f[0].subject, format!("{wire}:1"));
+        }
+        // the rest of serve/ (and the repo) may cast freely
+        assert!(lint_text("serve/scheduler.rs", src).is_empty());
+        assert!(lint_text("util/json.rs", src).is_empty());
+        // float casts and non-integer targets are not LN006's business
+        assert!(lint_text("serve/server.rs", "let x = n as f64;\n").is_empty());
+        // word boundary: `as usize_like` is an identifier, not a cast
+        assert!(lint_text("serve/server.rs", "let x = n as usize_like;\n").is_empty());
+        // comments, strings, and test blocks stay exempt
+        let exempt = "// cast as u64 in prose\nlet s = \"x as u32\";\n#[cfg(test)]\nmod t { fn f() { let y = n as u16; } }\n";
+        assert!(lint_text("serve/protocol.rs", exempt).is_empty());
     }
 
     #[test]

@@ -1,0 +1,666 @@
+//! Pass 6 — schedule-order HLO liveness & peak-memory (MM rules).
+//!
+//! Serve admission and the CF rules price jobs off the analytic model
+//! in `memory/model.rs`; nothing verified that model against the
+//! programs we actually execute. This pass closes the loop, device-free:
+//! it walks every instruction of every lowered program in schedule
+//! (textual) order, tracks which buffers are live — donation-aware via
+//! `input_output_alias`, so an in-place update costs nothing — and
+//! reports the peak in bytes, attributed to the instruction and the
+//! live set that produced it. The static peak is then cross-checked
+//! against a manifest-grounded per-program prediction built from the
+//! same terms the analytic model uses.
+//!
+//! Rules (catalog: `docs/ANALYSIS.md`):
+//!
+//! * MM001 (error) — static peak exceeds the prediction beyond the
+//!   tolerance: the analytic model under-prices; admission could OOM.
+//! * MM002 (error) — donated buffer double-counted: one parameter is
+//!   claimed by two or more alias outputs.
+//! * MM003 (error) — alias declared but not exploitable: the calling
+//!   convention donates state but the module carries no alias map, or
+//!   an aliased output's buffer cannot reuse its parameter's in place.
+//! * MM004 (error) — fused-vs-accum peak ordering violated: a
+//!   split-path program peaks above the fused `train_step`.
+//! * MM005 (warning) — predicted-vs-static drift: the model
+//!   over-predicts beyond tolerance, or a program's HLO could not be
+//!   analyzed so its drift row is missing. Advisory.
+//!
+//! Artifact-layer load failures (missing dir, bad index/manifest) reuse
+//! AR001 — same meaning as in the contract pass. The full
+//! predicted-vs-static table is always returned as [`DriftRow`]s for
+//! the CLI drift report and the `revffn_hlo_mem_drift` gauge rows.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::analysis::hlo::{self, Instr, Module};
+use crate::analysis::Finding;
+use crate::engine::Method;
+use crate::error::{Error, Result};
+use crate::memory::{Assumptions, Geometry, MemoryModel};
+use crate::runtime::artifact::{Artifact, ArtifactIndex, Manifest};
+use crate::util::json::{Json, ObjBuilder};
+
+/// Knobs for the cross-check.
+#[derive(Debug, Clone, Copy)]
+pub struct HloMemOpts {
+    /// Accepted static/predicted ratio in either direction. The
+    /// prediction is analytic and the HLO is unoptimized text, so the
+    /// band is deliberately wide; the default catches order-of-magnitude
+    /// lies, not rounding.
+    pub tolerance: f64,
+}
+
+impl Default for HloMemOpts {
+    fn default() -> Self {
+        HloMemOpts { tolerance: 8.0 }
+    }
+}
+
+/// Split-path programs may exceed the fused train_step peak by at most
+/// this factor before MM004 fires (slack for bookkeeping buffers).
+const ORDERING_SLACK: f64 = 1.25;
+
+/// Where a program's static peak landed.
+#[derive(Debug, Clone)]
+pub struct PeakReport {
+    pub peak_bytes: u64,
+    /// Instruction name at the (first) peak point, `(parameters)` when
+    /// the arguments alone dominate.
+    pub peak_at: String,
+    /// Live buffers at the peak, largest first, capped at 8 entries;
+    /// the parameter block is lumped as one `(parameters)` entry.
+    pub live: Vec<(String, u64)>,
+    pub args_bytes: u64,
+}
+
+/// Donation analysis of one module's alias map.
+#[derive(Debug, Clone, Default)]
+pub struct Donation {
+    /// `(output index, parameter number)` pairs XLA can honor in place.
+    pub applied: Vec<(usize, usize)>,
+    /// `(output index, parameter number, reason)` — declared but not
+    /// exploitable.
+    pub unexploitable: Vec<(usize, usize, String)>,
+    /// Parameter numbers claimed by two or more outputs.
+    pub double_params: Vec<usize>,
+}
+
+/// One predicted-vs-static comparison row.
+#[derive(Debug, Clone)]
+pub struct DriftRow {
+    pub variant: String,
+    pub program: String,
+    pub static_bytes: u64,
+    pub predicted_bytes: u64,
+    /// static / predicted.
+    pub ratio: f64,
+    pub peak_at: String,
+}
+
+/// Bytes a (non-parameter) instruction's result buffer occupies.
+/// `tuple` / `get-tuple-element` / `bitcast` alias existing buffers and
+/// cost nothing; parameters are accounted in the argument block.
+fn buf_bytes(i: &Instr) -> u64 {
+    match i.opcode.as_str() {
+        "parameter" | "tuple" | "get-tuple-element" | "bitcast" => 0,
+        _ => i.shape.flat_bytes(),
+    }
+}
+
+/// Map output index → entry-instruction index of its producer. A tuple
+/// root forwards to its k-th operand; a non-tuple root produces output
+/// 0 itself.
+fn output_producers(module: &Module) -> HashMap<usize, usize> {
+    let mut out = HashMap::new();
+    let Some(entry) = module.entry() else { return out };
+    let idx: HashMap<&str, usize> =
+        entry.instrs.iter().enumerate().map(|(i, ins)| (ins.name.as_str(), i)).collect();
+    let Some(root_i) = entry.instrs.iter().position(|i| i.is_root) else { return out };
+    let root = &entry.instrs[root_i];
+    if root.opcode == "tuple" {
+        for (k, op) in root.operands.iter().enumerate() {
+            if let Some(&i) = idx.get(op.as_str()) {
+                out.insert(k, i);
+            }
+        }
+    } else {
+        out.insert(0, root_i);
+    }
+    out
+}
+
+/// Analyze the alias map: which donations XLA can honor in place, which
+/// are declared but unexploitable, and which parameters are claimed
+/// more than once.
+pub fn analyze_donation(module: &Module) -> Donation {
+    let mut don = Donation::default();
+    let Some(entry) = module.entry() else { return don };
+    let producers = output_producers(module);
+    let param_of: HashMap<usize, usize> = entry
+        .instrs
+        .iter()
+        .enumerate()
+        .filter_map(|(i, ins)| ins.param_number.map(|p| (p, i)))
+        .collect();
+    let mut claims: HashMap<usize, usize> = HashMap::new();
+    for &(out, param) in &module.alias {
+        *claims.entry(param).or_insert(0) += 1;
+        let Some(&pi) = param_of.get(&param) else {
+            don.unexploitable.push((out, param, format!("no parameter {param} in ENTRY")));
+            continue;
+        };
+        let Some(&prod_i) = producers.get(&out) else {
+            don.unexploitable.push((out, param, format!("no output {out} at the ROOT")));
+            continue;
+        };
+        let prod = &entry.instrs[prod_i];
+        let pbytes = entry.instrs[pi].shape.flat_bytes();
+        let obytes = prod.shape.flat_bytes();
+        if prod.opcode == "parameter" || obytes == pbytes {
+            don.applied.push((out, param));
+        } else {
+            don.unexploitable.push((
+                out,
+                param,
+                format!(
+                    "output {out} is {obytes} bytes ({}) but parameter {param} is {pbytes} bytes — XLA cannot reuse the buffer in place",
+                    prod.shape.render()
+                ),
+            ));
+        }
+    }
+    don.double_params = {
+        let mut d: Vec<usize> = claims.iter().filter(|(_, &c)| c >= 2).map(|(&p, _)| p).collect();
+        d.sort_unstable();
+        d
+    };
+    don
+}
+
+/// Schedule-order liveness over the ENTRY computation: peak live bytes
+/// with arguments resident for the whole program, temporaries live from
+/// definition to last use, root-reachable buffers live to the end, and
+/// exploitable donations costing nothing (they write into their
+/// parameter's buffer).
+pub fn entry_peak(module: &Module) -> Result<PeakReport> {
+    let entry = module
+        .entry()
+        .ok_or_else(|| Error::Parse("hlo: no ENTRY computation".into()))?;
+    let n = entry.instrs.len();
+    let idx: HashMap<&str, usize> =
+        entry.instrs.iter().enumerate().map(|(i, ins)| (ins.name.as_str(), i)).collect();
+    let root_i = entry
+        .instrs
+        .iter()
+        .position(|i| i.is_root)
+        .ok_or_else(|| Error::Parse("hlo: ENTRY has no ROOT".into()))?;
+
+    let args_bytes: u64 = entry
+        .instrs
+        .iter()
+        .filter(|i| i.opcode == "parameter")
+        .map(|i| i.shape.flat_bytes())
+        .sum();
+
+    // last textual use of each definition
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (i, ins) in entry.instrs.iter().enumerate() {
+        for op in &ins.operands {
+            if let Some(&d) = idx.get(op.as_str()) {
+                last_use[d] = last_use[d].max(i);
+            }
+        }
+    }
+    // buffers reaching the root (through value-forwarding ops) live to
+    // the end of the program — they are the outputs
+    let mut escapes = vec![false; n];
+    let mut stack = vec![root_i];
+    while let Some(i) = stack.pop() {
+        if escapes[i] {
+            continue;
+        }
+        escapes[i] = true;
+        let ins = &entry.instrs[i];
+        if matches!(ins.opcode.as_str(), "tuple" | "get-tuple-element" | "bitcast") {
+            for op in &ins.operands {
+                if let Some(&d) = idx.get(op.as_str()) {
+                    stack.push(d);
+                }
+            }
+        }
+    }
+    for i in 0..n {
+        if escapes[i] {
+            last_use[i] = n.saturating_sub(1);
+        }
+    }
+    // exploitable donations write into their parameter's buffer
+    let donated: Vec<usize> = {
+        let producers = output_producers(module);
+        analyze_donation(module)
+            .applied
+            .iter()
+            .filter_map(|(out, _)| producers.get(out).copied())
+            .collect()
+    };
+
+    let mut peak = args_bytes;
+    let mut peak_i: Option<usize> = None;
+    for i in 0..n {
+        let mut live = args_bytes;
+        for d in 0..=i {
+            if last_use[d] >= i && !donated.contains(&d) {
+                live += buf_bytes(&entry.instrs[d]);
+            }
+        }
+        if live > peak {
+            peak = live;
+            peak_i = Some(i);
+        }
+    }
+    let (peak_at, mut live_set) = match peak_i {
+        None => ("(parameters)".to_string(), Vec::new()),
+        Some(pi) => {
+            let mut set: Vec<(String, u64)> = (0..=pi)
+                .filter(|&d| last_use[d] >= pi && !donated.contains(&d))
+                .map(|d| (format!("%{}", entry.instrs[d].name), buf_bytes(&entry.instrs[d])))
+                .filter(|(_, b)| *b > 0)
+                .collect();
+            set.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            (format!("%{}", entry.instrs[pi].name), set)
+        }
+    };
+    if args_bytes > 0 {
+        live_set.push(("(parameters)".to_string(), args_bytes));
+        live_set.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    }
+    live_set.truncate(8);
+    Ok(PeakReport { peak_bytes: peak, peak_at, live: live_set, args_bytes })
+}
+
+/// Does this program kind's calling convention donate anything for this
+/// manifest? (Mirrors the contract pass's donate bounds: train/apply
+/// donate the `params + 2·moments` state prefix, accum/scale donate the
+/// trainable accumulators, everything else donates nothing.)
+fn expects_donation(kind: &str, m: &Manifest) -> bool {
+    match kind {
+        "train_step" | "apply_step" => m.tensors.len() + 2 * m.io.opt_shapes.len() > 0,
+        "accum_step" | "scale" => m.io.trainable.iter().filter(|&&t| t).count() > 0,
+        _ => false,
+    }
+}
+
+/// Manifest-grounded per-program peak prediction, in bytes — the same
+/// terms the analytic breakdown uses, composed per calling convention:
+/// weights from the manifest tensor inventory, grads/moments from the
+/// trainable set and `opt_shapes`, activations and logits from
+/// [`MemoryModel`] under the f32 preset (the tiny artifacts are pure
+/// f32, matching the AOT → XLA calibration path).
+fn predicted_bytes(m: &Manifest, model: &MemoryModel, mm: crate::memory::Method, kind: &str) -> u64 {
+    let weights: f64 = m.tensors.iter().map(|t| t.nbytes as f64).sum();
+    let grads: f64 = m
+        .tensors
+        .iter()
+        .zip(&m.io.trainable)
+        .filter(|(_, &t)| t)
+        .map(|(t, _)| t.elem_count() as f64 * 4.0)
+        .sum();
+    let moments: f64 = 2.0
+        * m.io
+            .opt_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() as f64 * 4.0)
+            .sum::<f64>();
+    let (b, s) = (m.io.batch_size as u64, m.io.seq_len as u64);
+    // tokens + targets (s32) + mask (f32), all [B,S]
+    let data = (b * s) as f64 * 12.0;
+    let scalars = 8.0; // lr + step
+    let logits = model.logits_term_bytes(b, s);
+    let act_bwd = model.backward_activation_bytes(mm, b, s);
+    let act_fwd = model.forward_activation_bytes(mm, b, s);
+    let bytes = match kind {
+        "train_step" => weights + moments + grads + data + scalars + act_bwd + logits,
+        "grad_step" => weights + grads + data + act_bwd + logits,
+        "apply_step" => weights + moments + 2.0 * grads + scalars,
+        "accum_step" => 2.0 * grads,
+        "scale" => 2.0 * grads + 4.0,
+        "forward" => weights + (b * s) as f64 * 4.0 + act_fwd + logits,
+        "eval_step" => weights + data + act_fwd + logits,
+        _ => weights + data + act_fwd + logits,
+    };
+    bytes.max(1.0) as u64
+}
+
+/// MM004: split-path peaks must not exceed the fused train_step peak
+/// (the whole point of shipping a fused program) beyond slack.
+fn peak_ordering_findings(variant: &str, peaks: &[(String, u64)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(&(_, train)) = peaks.iter().find(|(k, _)| k == "train_step") else {
+        return out;
+    };
+    let bound = train as f64 * ORDERING_SLACK;
+    for (kind, bytes) in peaks {
+        if matches!(kind.as_str(), "grad_step" | "apply_step" | "accum_step" | "scale")
+            && *bytes as f64 > bound
+        {
+            out.push(Finding::error(
+                "MM004",
+                format!("{variant}/{kind}"),
+                format!(
+                    "split-path program statically peaks at {bytes} B, above the fused train_step peak of {train} B (+{:.0}% slack): the accumulation path would not fit where the fused path does",
+                    (ORDERING_SLACK - 1.0) * 100.0
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Variant discovery, mirroring the contract pass: `index.json` when
+/// present, else sorted `*/manifest.json` subdirectories.
+fn discover_variants(dir: &Path) -> std::result::Result<Vec<String>, Finding> {
+    let subject = dir.display().to_string();
+    if !dir.is_dir() {
+        return Err(Finding::error("AR001", subject, "artifact directory does not exist"));
+    }
+    let variants = if dir.join("index.json").exists() {
+        match ArtifactIndex::load(dir) {
+            Ok(idx) => idx.variants,
+            Err(e) => return Err(Finding::error("AR001", subject, format!("index.json: {e}"))),
+        }
+    } else {
+        let mut found = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                if entry.path().join("manifest.json").is_file() {
+                    found.push(entry.file_name().to_string_lossy().into_owned());
+                }
+            }
+        }
+        found.sort();
+        found
+    };
+    if variants.is_empty() {
+        return Err(Finding::error(
+            "AR001",
+            subject,
+            "no variants found (no index.json, no */manifest.json)",
+        ));
+    }
+    Ok(variants)
+}
+
+/// The `--hlo-mem` pass: statically compute each program's peak live
+/// bytes and cross-check against the analytic prediction. Returns the
+/// findings plus the full drift table (one row per analyzed program),
+/// both in deterministic order.
+pub fn check_hlo_mem(dir: &Path, opts: &HloMemOpts) -> (Vec<Finding>, Vec<DriftRow>) {
+    let tol = opts.tolerance.max(1.0);
+    let mut findings = Vec::new();
+    let mut rows: Vec<DriftRow> = Vec::new();
+    let variants = match discover_variants(dir) {
+        Ok(v) => v,
+        Err(f) => return (vec![f], rows),
+    };
+    for v in &variants {
+        let art = match Artifact::load(dir.join(v)) {
+            Ok(a) => a,
+            Err(e) => {
+                findings.push(Finding::error("AR001", v.clone(), format!("{e}")));
+                continue;
+            }
+        };
+        // ablation-only variants (revffn_naive, reconstruct*) have no
+        // registry method and no analytic row to compare against
+        let Some(method) = Method::from_variant(v) else { continue };
+        let mm = method.memory_method();
+        let model = MemoryModel::new(
+            Geometry::from_manifest(&art.manifest.model),
+            Assumptions::f32_exact(),
+        );
+        let mut peaks: Vec<(String, u64)> = Vec::new();
+        for kind in method.hlo_mem_programs() {
+            if !art.manifest.artifacts.contains_key(kind) {
+                continue; // inventory completeness is AR003's job
+            }
+            let subject = format!("{v}/{kind}");
+            let text = match art.hlo_path(kind).and_then(|p| {
+                std::fs::read_to_string(&p).map_err(crate::error::Error::from)
+            }) {
+                Ok(t) => t,
+                Err(e) => {
+                    findings.push(Finding::warning(
+                        "MM005",
+                        subject,
+                        format!("HLO unreadable ({e}); drift row missing"),
+                    ));
+                    continue;
+                }
+            };
+            let module = match hlo::parse_module(&text) {
+                Ok(m) => m,
+                Err(e) => {
+                    findings.push(Finding::warning(
+                        "MM005",
+                        subject,
+                        format!("{e}; liveness skipped, drift row missing"),
+                    ));
+                    continue;
+                }
+            };
+            let don = analyze_donation(&module);
+            for p in &don.double_params {
+                findings.push(Finding::error(
+                    "MM002",
+                    subject.clone(),
+                    format!(
+                        "parameter {p} is donated to {} outputs — the donation accounting would count its buffer twice",
+                        module.alias.iter().filter(|(_, q)| q == p).count()
+                    ),
+                ));
+            }
+            for (out, param, why) in &don.unexploitable {
+                findings.push(Finding::error(
+                    "MM003",
+                    subject.clone(),
+                    format!("alias {{{out}}} -> parameter {param} declared but not exploitable: {why}"),
+                ));
+            }
+            if expects_donation(kind, &art.manifest) && module.alias.is_empty() {
+                findings.push(Finding::error(
+                    "MM003",
+                    subject.clone(),
+                    "calling convention donates the mutable state prefix but the module carries no input_output_alias map — every updated buffer would be allocated twice".to_string(),
+                ));
+            }
+            let peak = match entry_peak(&module) {
+                Ok(p) => p,
+                Err(e) => {
+                    findings.push(Finding::warning(
+                        "MM005",
+                        subject,
+                        format!("{e}; drift row missing"),
+                    ));
+                    continue;
+                }
+            };
+            let predicted = predicted_bytes(&art.manifest, &model, mm, kind);
+            let ratio = peak.peak_bytes as f64 / predicted.max(1) as f64;
+            if ratio > tol {
+                let top: Vec<String> =
+                    peak.live.iter().take(3).map(|(n, b)| format!("{n}={b}B")).collect();
+                findings.push(Finding::error(
+                    "MM001",
+                    subject.clone(),
+                    format!(
+                        "static peak {} B at {} exceeds the model prediction {predicted} B by {ratio:.1}x (tolerance {tol}x); live set: {}",
+                        peak.peak_bytes,
+                        peak.peak_at,
+                        top.join(", ")
+                    ),
+                ));
+            } else if 1.0 / ratio.max(f64::MIN_POSITIVE) > tol {
+                findings.push(Finding::warning(
+                    "MM005",
+                    subject.clone(),
+                    format!(
+                        "model over-predicts: {predicted} B predicted vs {} B static ({:.1}x over, tolerance {tol}x)",
+                        peak.peak_bytes,
+                        1.0 / ratio.max(f64::MIN_POSITIVE)
+                    ),
+                ));
+            }
+            peaks.push((kind.to_string(), peak.peak_bytes));
+            rows.push(DriftRow {
+                variant: v.clone(),
+                program: kind.to_string(),
+                static_bytes: peak.peak_bytes,
+                predicted_bytes: predicted,
+                ratio,
+                peak_at: peak.peak_at,
+            });
+        }
+        findings.extend(peak_ordering_findings(v, &peaks));
+    }
+    (findings, rows)
+}
+
+/// The drift table as JSON rows (the `hlo_mem` key of `check --json`
+/// and the bench gauge snapshot share this shape).
+pub fn drift_json(rows: &[DriftRow]) -> Json {
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            ObjBuilder::new()
+                .str("variant", &r.variant)
+                .str("program", &r.program)
+                .num("static_bytes", r.static_bytes as f64)
+                .num("predicted_bytes", r.predicted_bytes as f64)
+                .num("ratio", r.ratio)
+                .str("peak_at", &r.peak_at)
+                .build()
+        })
+        .collect();
+    Json::Arr(arr)
+}
+
+/// Human rendering of the drift table.
+pub fn render_drift_table(rows: &[DriftRow], tolerance: f64) -> String {
+    let mut out = format!(
+        "hlo-mem drift (static liveness peak vs analytic prediction, tolerance {tolerance}x):\n"
+    );
+    out.push_str(&format!(
+        "  {:<16} {:<12} {:>12} {:>14} {:>7}  peak at\n",
+        "variant", "program", "static(B)", "predicted(B)", "ratio"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<16} {:<12} {:>12} {:>14} {:>7.2}  {}\n",
+            r.variant, r.program, r.static_bytes, r.predicted_bytes, r.ratio, r.peak_at
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"HloModule t, input_output_alias={ {0}: (0, {}, may-alias) }
+ENTRY %main.1 (Arg_0.1: f32[4,2], Arg_1.2: f32[4,2]) -> (f32[4,2]) {
+  %Arg_0.1 = f32[4,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[4,2]{1,0} parameter(1)
+  %big.3 = f32[8,8]{1,0} broadcast(%Arg_1.2), dimensions={0}
+  %sum.4 = f32[4,2]{1,0} reduce(%big.3, %Arg_0.1), dimensions={0}
+  %new.5 = f32[4,2]{1,0} add(%Arg_0.1, %sum.4)
+  ROOT %tuple.6 = (f32[4,2]{1,0}) tuple(%new.5)
+}
+"#;
+
+    #[test]
+    fn peak_is_attributed_to_the_widest_point() {
+        let m = hlo::parse_module(TINY).unwrap();
+        let p = entry_peak(&m).unwrap();
+        assert_eq!(p.args_bytes, 64);
+        // peak at %sum.4: args(64) + big(256) + sum(32); %new.5 is
+        // donated into parameter 0 and costs nothing
+        assert_eq!(p.peak_bytes, 64 + 256 + 32);
+        assert_eq!(p.peak_at, "%sum.4");
+        assert_eq!(p.live[0], ("%big.3".to_string(), 256));
+        assert!(p.live.iter().any(|(n, _)| n == "(parameters)"));
+    }
+
+    #[test]
+    fn donation_zeroes_the_updated_buffer() {
+        let m = hlo::parse_module(TINY).unwrap();
+        let don = analyze_donation(&m);
+        assert_eq!(don.applied, vec![(0, 0)]);
+        assert!(don.unexploitable.is_empty());
+        assert!(don.double_params.is_empty());
+        // without the alias map the output buffer costs extra at the end
+        let no_alias = TINY.replace(", input_output_alias={ {0}: (0, {}, may-alias) }", "");
+        let m2 = hlo::parse_module(&no_alias).unwrap();
+        let p2 = entry_peak(&m2).unwrap();
+        assert_eq!(p2.peak_bytes, 64 + 256 + 32, "peak point unchanged");
+        // but at the last instruction the undonated %new.5 is live
+        assert!(analyze_donation(&m2).applied.is_empty());
+    }
+
+    #[test]
+    fn double_donation_and_mismatch_are_detected() {
+        let double = TINY.replace(
+            "{ {0}: (0, {}, may-alias) }",
+            "{ {0}: (0, {}, may-alias), {0}: (0, {}, may-alias) }",
+        );
+        let m = hlo::parse_module(&double).unwrap();
+        assert_eq!(analyze_donation(&m).double_params, vec![0]);
+        // alias an output whose buffer cannot fit the parameter
+        let text = r#"HloModule t, input_output_alias={ {0}: (0, {}, may-alias) }
+ENTRY %m (a: f32[4,2]) -> (f32[8]) {
+  %a = f32[4,2]{1,0} parameter(0)
+  %b = f32[8]{0} broadcast(%a)
+  ROOT %t = (f32[8]) tuple(%b)
+}
+"#;
+        let m2 = hlo::parse_module(text).unwrap();
+        let don = analyze_donation(&m2);
+        assert!(don.applied.is_empty());
+        assert_eq!(don.unexploitable.len(), 1);
+        assert!(don.unexploitable[0].2.contains("cannot reuse"));
+    }
+
+    #[test]
+    fn ordering_findings_fire_only_above_slack() {
+        let peaks = vec![
+            ("train_step".to_string(), 1000u64),
+            ("grad_step".to_string(), 1200),
+            ("accum_step".to_string(), 1300),
+            ("eval_step".to_string(), 9999),
+        ];
+        let fs = peak_ordering_findings("sft", &peaks);
+        assert_eq!(fs.len(), 1, "only accum_step exceeds 1.25x: {fs:?}");
+        assert_eq!(fs[0].rule, "MM004");
+        assert!(fs[0].subject.contains("accum_step"));
+    }
+
+    #[test]
+    fn drift_table_renders_and_serializes() {
+        let rows = vec![DriftRow {
+            variant: "sft".into(),
+            program: "train_step".into(),
+            static_bytes: 9428,
+            predicted_bytes: 9960,
+            ratio: 0.95,
+            peak_at: "%lse.14".into(),
+        }];
+        let text = render_drift_table(&rows, 8.0);
+        assert!(text.contains("train_step"));
+        assert!(text.contains("9428"));
+        let j = drift_json(&rows);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].str_of("program").unwrap(), "train_step");
+        assert_eq!(arr[0].u64_of("static_bytes").unwrap(), 9428);
+    }
+}

@@ -8,7 +8,7 @@
 //! shape-mismatched `.rvt`, or a truncated program inventory is caught
 //! in the always-on CI job instead of as a runtime crash mid-run.
 //!
-//! Five passes, each a pure function from inputs to [`Finding`]s:
+//! Six passes, each a pure function from inputs to [`Finding`]s:
 //!
 //! * [`contract::check_artifacts`] — artifact dir vs. what `Stepper` /
 //!   `GradAccumulator` / `DeviceState` will feed the programs (AR rules)
@@ -20,6 +20,8 @@
 //!   `rust/src/**` enforcing repo invariants (LN rules)
 //! * [`docs::check_docs`] — docs-tree consistency: dangling links,
 //!   flags the binary does not accept, uncataloged rule IDs (DC rules)
+//! * [`liveness::check_hlo_mem`] — schedule-order HLO liveness: static
+//!   per-program peak live bytes vs. the analytic model (MM rules)
 //!
 //! Rule IDs are stable and documented in `docs/ANALYSIS.md`; adding a
 //! rule means adding a `Finding` emission and a catalog row, nothing
@@ -32,12 +34,14 @@ pub mod contract;
 pub mod docs;
 pub mod hlo;
 pub mod lint;
+pub mod liveness;
 
 pub use ckpt::check_checkpoint;
 pub use configcheck::check_config;
 pub use contract::check_artifacts;
 pub use docs::check_docs;
 pub use lint::lint_sources;
+pub use liveness::check_hlo_mem;
 
 use crate::util::json::{Json, ObjBuilder};
 
@@ -103,7 +107,17 @@ pub struct Report {
 }
 
 impl Report {
-    pub fn new(findings: Vec<Finding>) -> Self {
+    /// Findings are sorted by `(rule, subject, message)` so text and
+    /// `--json` output are deterministic regardless of pass order or
+    /// filesystem iteration — CI diffs and fixture assertions stay
+    /// order-stable.
+    pub fn new(mut findings: Vec<Finding>) -> Self {
+        findings.sort_by(|a, b| {
+            a.rule
+                .cmp(b.rule)
+                .then_with(|| a.subject.cmp(&b.subject))
+                .then_with(|| a.message.cmp(&b.message))
+        });
         Report { findings }
     }
 
@@ -182,6 +196,28 @@ mod tests {
         let text = r.render_text();
         assert!(text.contains("error[AR005] sft/train_step"));
         assert!(text.contains("1 error(s), 1 warning(s)"));
+    }
+
+    #[test]
+    fn findings_sort_deterministically() {
+        let shuffled = vec![
+            Finding::warning("MM005", "sft/scale", "drift"),
+            Finding::error("AR005", "sft/train_step", "arity"),
+            Finding::error("MM001", "lora/forward", "peak"),
+            Finding::error("AR005", "lora/train_step", "arity"),
+        ];
+        let r = Report::new(shuffled);
+        let order: Vec<(&str, &str)> =
+            r.findings.iter().map(|f| (f.rule, f.subject.as_str())).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("AR005", "lora/train_step"),
+                ("AR005", "sft/train_step"),
+                ("MM001", "lora/forward"),
+                ("MM005", "sft/scale"),
+            ]
+        );
     }
 
     #[test]

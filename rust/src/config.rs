@@ -435,6 +435,12 @@ pub struct ServeConfig {
     /// `limit`s are clamped down to it. Bounds the copy made under the
     /// board lock and the burst written to any one connection.
     pub events_page_size: usize,
+    /// Price admitted jobs from the static HLO liveness peak of their
+    /// variant's programs (`analysis::liveness`) instead of the
+    /// analytic memory model. Requires `price_geometry: manifest` —
+    /// static peaks are facts about the compiled artifacts, so pricing
+    /// them at a different geometry would be incoherent.
+    pub price_from_hlo: bool,
 }
 
 /// One per-tenant quota override in [`ServeConfig::tenants`].
@@ -475,6 +481,7 @@ impl Default for ServeConfig {
             tenant_share_gb: 0.0,
             tenants: Vec::new(),
             events_page_size: 256,
+            price_from_hlo: false,
         }
     }
 }
@@ -569,6 +576,9 @@ impl ServeConfig {
         if let Some(v) = j.get("events_page_size").and_then(Json::as_usize) {
             cfg.events_page_size = v;
         }
+        if let Some(v) = j.get("price_from_hlo").and_then(Json::as_bool) {
+            cfg.price_from_hlo = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -594,7 +604,8 @@ impl ServeConfig {
             .num("io_timeout_ms", self.io_timeout_ms as f64)
             .num("tenant_max_jobs", self.tenant_max_jobs as f64)
             .num("tenant_share_gb", self.tenant_share_gb)
-            .num("events_page_size", self.events_page_size as f64);
+            .num("events_page_size", self.events_page_size as f64)
+            .bool("price_from_hlo", self.price_from_hlo);
         if let Some(f) = &self.faults {
             b = b.str("faults", f.clone());
         }
@@ -638,6 +649,13 @@ impl ServeConfig {
         }
         if self.events_page_size == 0 {
             return Err(Error::Config("events_page_size must be >= 1".into()));
+        }
+        if self.price_from_hlo && self.price_geometry != PriceGeometry::Manifest {
+            return Err(Error::Config(
+                "price_from_hlo requires price_geometry: manifest — static HLO peaks \
+                 are facts about the compiled artifacts, not a substitute geometry"
+                    .into(),
+            ));
         }
         for t in &self.tenants {
             if t.name.is_empty() {

@@ -195,6 +195,20 @@ impl Method {
     pub fn paired_programs(self) -> &'static [[&'static str; 2]] {
         &[["grad_step", "apply_step"], ["accum_step", "scale"]]
     }
+
+    /// Full per-method program inventory the static memory sweep prices:
+    /// the unconditionally required kinds plus both optional pairs, in
+    /// schedule order (fused path first, then the split-accumulation
+    /// path). `revffn check --hlo-mem` walks exactly this list for every
+    /// variant, so a method gaining a program kind automatically joins
+    /// the liveness cross-check through the registry.
+    pub fn hlo_mem_programs(self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = self.required_programs().to_vec();
+        for pair in self.paired_programs() {
+            out.extend(pair.iter().copied());
+        }
+        out
+    }
 }
 
 impl fmt::Display for Method {
@@ -268,6 +282,21 @@ mod tests {
         assert_eq!(Method::from_variant("lomo"), Some(Method::Lomo));
         assert_eq!(Method::from_variant("revffn_naive"), None);
         assert_eq!(Method::from_variant("reconstruct"), None);
+    }
+
+    #[test]
+    fn hlo_mem_inventory_covers_required_and_pairs() {
+        for m in Method::ALL {
+            let inv = m.hlo_mem_programs();
+            for k in m.required_programs() {
+                assert!(inv.contains(k), "{m}: {k} missing from hlo-mem inventory");
+            }
+            for pair in m.paired_programs() {
+                for k in pair {
+                    assert!(inv.contains(k), "{m}: {k} missing from hlo-mem inventory");
+                }
+            }
+        }
     }
 
     #[test]

@@ -69,7 +69,8 @@ COMMANDS:
                 [--retry-max-ms MS] [--quantum-deadline-ms MS]
                 [--conn-limit N] [--io-timeout-ms MS] [--faults SPEC]
                 [--tenant-max-jobs N] [--tenant-share-gb G]
-                [--events-page-size N] [--config FILE.json]
+                [--events-page-size N] [--price-from-hlo]
+                [--config FILE.json]
                 (supervised retries, watchdog, fault injection:
                 docs/ROBUSTNESS.md; REVFFN_FAULTS overrides --faults;
                 priority/tenant scheduling and per-tenant `tenants`
@@ -77,7 +78,8 @@ COMMANDS:
   check         [--artifacts DIR] [--checkpoint FILE.rvt] [--method M]
                 [--variant V] [--config FILE.json] [--budget-gb G]
                 [--assumptions A] [--lint] [--src DIR] [--docs]
-                [--docs-root DIR] [--json]
+                [--docs-root DIR] [--hlo-mem DIR] [--mm-tolerance T]
+                [--json]
                 (static analysis, no device needed — `check --help`,
                 docs/ANALYSIS.md)
 
@@ -356,6 +358,9 @@ fn cmd_serve(f: &Flags) -> Result<()> {
     opts.events_page_size = f
         .u64("events_page_size", opts.events_page_size as u64)
         .map_err(|e| anyhow!("{e}"))? as usize;
+    if f.bool("price_from_hlo") {
+        opts.price_from_hlo = true;
+    }
     opts.validate().map_err(|e| anyhow!("{e}"))?;
     let handle = revffn::serve::serve(opts.clone()).map_err(|e| anyhow!("{e}"))?;
     eprintln!(
@@ -400,6 +405,14 @@ PASSES (at least one):
                         from the catalog, exported metric names missing
                         from docs/OBSERVABILITY.md; [--docs-root DIR]
                         defaults to the repo root)
+  --hlo-mem DIR         schedule-order HLO liveness over every program of
+                        every registry method in an artifact dir: static
+                        peak live bytes, donation-aware, cross-checked
+                        against the analytic memory model (MM rules;
+                        [--mm-tolerance T] widens/narrows the accepted
+                        static-vs-predicted ratio, default 8.0). Prints
+                        the predicted-vs-static drift table after the
+                        findings (JSON: extra top-level \"hlo_mem\" key)
 
 OUTPUT: human text, or --json for
   {\"ok\", \"errors\", \"warnings\", \"findings\": [{rule, severity, subject, message}]}
@@ -462,15 +475,41 @@ fn cmd_check(f: &Flags) -> Result<()> {
         findings.extend(revffn::analysis::check_docs(&root));
         ran_any = true;
     }
+    let mut drift = Vec::new();
+    let mut hlo_tol = revffn::analysis::liveness::HloMemOpts::default().tolerance;
+    let mut hlo_mem_ran = false;
+    if let Some(dir) = f.opt("hlo_mem") {
+        hlo_tol = f.f64("mm_tolerance", hlo_tol).map_err(|e| anyhow!("{e}"))?;
+        let (fs, rows) = revffn::analysis::liveness::check_hlo_mem(
+            &PathBuf::from(dir),
+            &revffn::analysis::liveness::HloMemOpts { tolerance: hlo_tol },
+        );
+        findings.extend(fs);
+        drift = rows;
+        ran_any = true;
+        hlo_mem_ran = true;
+    }
     if !ran_any {
-        bail!("nothing to check — pass at least one of --artifacts / --checkpoint / --config / --lint / --docs\n{CHECK_USAGE}");
+        bail!("nothing to check — pass at least one of --artifacts / --checkpoint / --config / --lint / --docs / --hlo-mem\n{CHECK_USAGE}");
     }
 
     let report = revffn::analysis::Report::new(findings);
     if f.bool("json") {
-        println!("{}", report.to_json());
+        let mut j = report.to_json();
+        if hlo_mem_ran {
+            if let revffn::util::json::Json::Obj(map) = &mut j {
+                map.insert(
+                    "hlo_mem".into(),
+                    revffn::analysis::liveness::drift_json(&drift),
+                );
+            }
+        }
+        println!("{j}");
     } else {
         print!("{}", report.render_text());
+        if hlo_mem_ran {
+            print!("{}", revffn::analysis::liveness::render_drift_table(&drift, hlo_tol));
+        }
     }
     if !report.ok() {
         std::process::exit(1);

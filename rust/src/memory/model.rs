@@ -364,6 +364,29 @@ impl MemoryModel {
         elems * self.assume.act_bytes
     }
 
+    /// [`activation_bytes`](Self::breakdown) made public for the HLO
+    /// liveness cross-check (`analysis/liveness.rs`): the per-program
+    /// peak predictions price backward-carrying programs from exactly
+    /// the live set the breakdown uses.
+    pub fn backward_activation_bytes(&self, m: Method, batch: u64, seq: u64) -> f64 {
+        self.activation_bytes(m, batch, seq)
+    }
+
+    /// Activation bytes live during an inference-only forward: one
+    /// inter-layer boundary plus one block's workspace (layers reuse the
+    /// workspace; nothing is cached for a backward pass).
+    pub fn forward_activation_bytes(&self, m: Method, batch: u64, seq: u64) -> f64 {
+        let tokens = (batch * seq) as f64;
+        let boundary = tokens * self.geo.d_model as f64;
+        (boundary + self.block_act_elems(tokens, m)) * self.assume.act_bytes
+    }
+
+    /// Logits + log-softmax workspace bytes (public wrapper over the
+    /// breakdown's logits term, for the same cross-check).
+    pub fn logits_term_bytes(&self, batch: u64, seq: u64) -> f64 {
+        self.logits_bytes(batch, seq)
+    }
+
     fn logits_bytes(&self, batch: u64, seq: u64) -> f64 {
         let v = self.geo.vocab_size as f64;
         let toks = if self.assume.chunked_logits {

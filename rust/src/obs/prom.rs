@@ -37,6 +37,10 @@ pub const BUDGET_GB: &str = "revffn_budget_gb";
 pub const COMMITTED_GB: &str = "revffn_committed_gb";
 pub const HOST_BUDGET_GB: &str = "revffn_host_budget_gb";
 pub const HOST_COMMITTED_GB: &str = "revffn_host_committed_gb";
+/// Static-vs-predicted peak-memory drift per variant/program, ratio
+/// units (`analysis::liveness`); rows are embedded in the bench
+/// telemetry snapshot (`BENCH_throughput.json`) rather than scraped.
+pub const HLO_MEM_DRIFT: &str = "revffn_hlo_mem_drift";
 
 /// Prometheus metric kind (drives the `# TYPE` header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

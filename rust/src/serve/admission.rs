@@ -65,6 +65,39 @@ pub fn price_job(
     })
 }
 
+/// Price a job from the *static* HLO liveness peak of its artifacts
+/// (`price_from_hlo`) instead of the analytic model: the maximum
+/// schedule-order peak across every program of every stage variant —
+/// exactly the quantity `revffn check --hlo-mem` verifies the analytic
+/// model against (MM rules, docs/ANALYSIS.md). Host-side cost, batch
+/// and seq still come from [`price_job`]: the suspended-snapshot
+/// footprint is a runtime-state fact the HLO text does not describe.
+/// The geometry label is tagged `hlo:` so `status`/`metrics` output
+/// shows which pricer admitted the job.
+pub fn price_job_static(
+    artifacts: &Path,
+    method: Method,
+    assume: Assumptions,
+    geometry: Option<Geometry>,
+) -> Result<PricedJob> {
+    let mut priced = price_job(artifacts, method, assume, geometry)?;
+    let mut peak: u64 = 0;
+    for variant in method.spec().stage_variants {
+        let artifact = Artifact::load(artifacts.join(variant))?;
+        for kind in method.hlo_mem_programs() {
+            if !artifact.manifest.artifacts.contains_key(kind) {
+                continue;
+            }
+            let text = std::fs::read_to_string(artifact.hlo_path(kind)?)?;
+            let module = crate::analysis::hlo::parse_module(&text)?;
+            peak = peak.max(crate::analysis::liveness::entry_peak(&module)?.peak_bytes);
+        }
+    }
+    priced.peak_gb = peak as f64 / 1e9;
+    priced.geometry = format!("hlo:{}", priced.geometry);
+    Ok(priced)
+}
+
 /// The budget ledger: tracks the summed peak-GB of admitted jobs on
 /// the device side AND the summed host-snapshot GB on the host side. A
 /// job is admitted only when both fit — suspended jobs' host-side

@@ -252,8 +252,8 @@ impl Request {
             "events" => Ok(Request::Events {
                 job: j.str_of("job")?,
                 from: resolve_cursor(
-                    j.get("after_seq").and_then(Json::as_f64),
-                    j.get("from").and_then(Json::as_f64),
+                    j.get("after_seq").and_then(Json::as_u64),
+                    j.get("from").and_then(Json::as_u64),
                 ),
                 limit: j.get("limit").and_then(Json::as_u64),
                 follow: j.get("follow").and_then(Json::as_bool).unwrap_or(true),
@@ -296,10 +296,10 @@ impl Request {
                 Some(job) => Ok(Request::Events {
                     job,
                     from: resolve_cursor(
-                        Json::path_f64(t, &["after_seq"]),
-                        Json::path_f64(t, &["from"]),
+                        Json::path_u64(t, &["after_seq"]),
+                        Json::path_u64(t, &["from"]),
                     ),
-                    limit: Json::path_f64(t, &["limit"]).map(|n| n as u64),
+                    limit: Json::path_u64(t, &["limit"]),
                     follow: Json::path_bool(t, &["follow"]).unwrap_or(true),
                 }),
             },
@@ -319,13 +319,14 @@ impl Request {
 }
 
 /// Resolve the events cursor: exclusive `after_seq` wins over the
-/// legacy inclusive `from`; both absent = 0 (start of log). The f64 →
-/// u64 casts saturate exactly like `Json::as_u64` on the full-parse
-/// path, so hostile numbers (negative, 1e308, NaN) resolve identically.
-fn resolve_cursor(after_seq: Option<f64>, from: Option<f64>) -> u64 {
+/// legacy inclusive `from`; both absent = 0 (start of log). Both call
+/// sites saturate through `Json::as_u64` / `Json::path_u64`, so hostile
+/// numbers (negative, 1e308, NaN) resolve identically on the lazy and
+/// full-parse paths.
+fn resolve_cursor(after_seq: Option<u64>, from: Option<u64>) -> u64 {
     match (after_seq, from) {
-        (Some(a), _) => (a as u64).saturating_add(1),
-        (None, Some(f)) => f as u64,
+        (Some(a), _) => a.saturating_add(1),
+        (None, Some(f)) => f,
         (None, None) => 0,
     }
 }

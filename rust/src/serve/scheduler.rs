@@ -533,7 +533,11 @@ impl Scheduler {
             PriceGeometry::Qwen => Some(Geometry::qwen15_moe_a27b()),
             PriceGeometry::Manifest => None,
         };
-        let priced = admission::price_job(&cfg.artifacts, cfg.method, self.assume, geo)?;
+        let priced = if self.opts.price_from_hlo {
+            admission::price_job_static(&cfg.artifacts, cfg.method, self.assume, geo)?
+        } else {
+            admission::price_job(&cfg.artifacts, cfg.method, self.assume, geo)?
+        };
         if priced.peak_gb > self.opts.budget_gb {
             return Err(Error::Config(format!(
                 "job prices {:.3} GB at {} geometry — over the whole {:.3} GB budget",

@@ -574,7 +574,7 @@ fn handle_connection(
                 // size; both modes serve bounded pages (the non-follow
                 // footer carries `next_cursor` for the next request)
                 let page = limit
-                    .map(|l| l.min(usize::MAX as u64) as usize)
+                    .map(|l| usize::try_from(l).unwrap_or(usize::MAX))
                     .unwrap_or(page_size)
                     .clamp(1, page_size);
                 stream_events(&mut out, &board, &shutdown, &job, from, page, follow)?;
@@ -678,7 +678,7 @@ fn stream_events(
                 registry::add(registry::Counter::EventsDropped, gap);
                 dropped += gap;
             }
-            let next = start + lines.len() as u64;
+            let next = start.saturating_add(u64::try_from(lines.len()).unwrap_or(u64::MAX));
             (lines, next, view.snap.state, view.snap.events)
         };
         if let Err(e) = push_lines(out, &batch) {
@@ -699,8 +699,14 @@ fn stream_events(
             // next request resumes, `done` says no further page can
             // ever exist
             let done = state.is_terminal() && cursor >= total;
-            let footer =
-                protocol::events_page_json(job, batch.len() as u64, cursor, state, done, dropped);
+            let footer = protocol::events_page_json(
+                job,
+                u64::try_from(batch.len()).unwrap_or(u64::MAX),
+                cursor,
+                state,
+                done,
+                dropped,
+            );
             if let Err(e) = write_line(out, &footer) {
                 if is_timeout(&e) {
                     eprintln!("[serve] events: disconnected slow consumer of {job}");

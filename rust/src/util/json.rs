@@ -464,6 +464,18 @@ impl Json {
         }
     }
 
+    /// `get_path` narrowed to a number, saturated to `u64` exactly like
+    /// [`Json::as_u64`] (negative/NaN → 0, overflow → `u64::MAX`);
+    /// `None` on error/missing/mismatch. The wire layer uses this so
+    /// hostile numbers resolve identically on the lazy and full paths
+    /// without a truncating cast at the call site (LN006).
+    pub fn path_u64(text: &str, path: &[&str]) -> Option<u64> {
+        match Self::get_path(text, path) {
+            Ok(Some(n @ Json::Num(_))) => n.as_u64(),
+            _ => None,
+        }
+    }
+
     /// `get_path` narrowed to a bool; `None` on error/missing/mismatch.
     pub fn path_bool(text: &str, path: &[&str]) -> Option<bool> {
         match Self::get_path(text, path) {

@@ -7,6 +7,7 @@ use std::path::PathBuf;
 
 use revffn::analysis::configcheck::ConfigCheckOpts;
 use revffn::analysis::lint::lint_text;
+use revffn::analysis::liveness::{check_hlo_mem, HloMemOpts};
 use revffn::analysis::{check_artifacts, check_checkpoint, check_config, Report};
 
 fn fixture(rel: &str) -> PathBuf {
@@ -102,6 +103,96 @@ fn seeded_raw_instant_fixture_is_ln005() {
 }
 
 #[test]
+fn seeded_wire_cast_fixture_is_ln006() {
+    // wire-layer reader narrowing a frame length with a silent `as`
+    // cast — exactly one live defect; the comment, string, float-cast,
+    // and test-block occurrences must stay exempt
+    let src = std::fs::read_to_string(fixture("wire_cast.rs.txt")).unwrap();
+    let findings = lint_text("serve/protocol.rs", &src);
+    assert_eq!(findings.len(), 1, "expected exactly the seeded defect: {findings:?}");
+    assert_eq!(findings[0].rule, "LN006");
+    assert_eq!(findings[0].subject, "serve/protocol.rs:13");
+    // the same text elsewhere in serve/ (or the repo) may cast freely
+    assert!(lint_text("serve/scheduler.rs", &src).is_empty());
+    assert!(lint_text("util/json.rs", &src).is_empty());
+}
+
+#[test]
+fn clean_fixture_hlo_mem_is_clean_with_full_drift_table() {
+    let (findings, drift) = check_hlo_mem(&fixture("clean"), &HloMemOpts::default());
+    let report = Report::new(findings);
+    assert!(
+        report.ok() && report.findings.is_empty(),
+        "clean fixture must produce zero hlo-mem findings:\n{}",
+        report.render_text()
+    );
+    // a static peak for every program of the variant's inventory
+    let programs: Vec<&str> = drift.iter().map(|r| r.program.as_str()).collect();
+    for p in ["train_step", "eval_step", "forward", "grad_step", "apply_step", "accum_step", "scale"]
+    {
+        assert!(programs.contains(&p), "missing drift row for {p}: {programs:?}");
+    }
+    for r in &drift {
+        assert!(r.static_bytes > 0, "{}/{}: zero static peak", r.variant, r.program);
+        assert!(!r.peak_at.is_empty());
+    }
+    // the documented worked example: the fused step peaks at the
+    // log-softmax workspace, just under the analytic prediction
+    let train = drift.iter().find(|r| r.program == "train_step").unwrap();
+    assert_eq!(train.static_bytes, 9428);
+    assert_eq!(train.peak_at, "%lse.14");
+    assert!(train.ratio < 1.0 && train.ratio > 0.9, "ratio {}", train.ratio);
+}
+
+#[test]
+fn inflated_intermediate_is_mm001() {
+    // train_step carries a fabricated 16.7 MB intermediate the analytic
+    // model knows nothing about — admission would under-price the job
+    let (findings, _) = check_hlo_mem(&fixture("mm_inflated"), &HloMemOpts::default());
+    let report = Report::new(findings);
+    assert!(report.has("MM001"), "expected MM001:\n{}", report.render_text());
+    assert!(!report.ok());
+    for f in &report.findings {
+        assert_eq!(f.rule, "MM001", "only MM001 may fire: {}", report.render_text());
+    }
+    let f = &report.findings[0];
+    assert!(f.subject.ends_with("sft/train_step"), "subject: {}", f.subject);
+    assert!(f.message.contains("%huge.15"), "peak attribution missing: {}", f.message);
+    // JSON carries the same rule
+    let j = report.to_json();
+    assert_eq!(j.arr_of("findings").unwrap()[0].str_of("rule").unwrap(), "MM001");
+}
+
+#[test]
+fn dropped_alias_is_mm003() {
+    // train_step's calling convention donates the state prefix, but the
+    // module header lost its input_output_alias map
+    let (findings, drift) = check_hlo_mem(&fixture("mm_dropped_alias"), &HloMemOpts::default());
+    let report = Report::new(findings);
+    assert!(report.has("MM003"), "expected MM003:\n{}", report.render_text());
+    for f in &report.findings {
+        assert_eq!(f.rule, "MM003", "only MM003 may fire: {}", report.render_text());
+    }
+    assert!(report.findings[0].message.contains("input_output_alias"));
+    // the drift row still exists — the peak is computable without the map
+    assert!(drift.iter().any(|r| r.program == "train_step"));
+}
+
+#[test]
+fn double_donation_is_mm002() {
+    // parameter 0 claimed by outputs 0 and 2 — its buffer would be
+    // counted twice by the donation accounting
+    let (findings, _) = check_hlo_mem(&fixture("mm_double_donation"), &HloMemOpts::default());
+    let report = Report::new(findings);
+    assert!(report.has("MM002"), "expected MM002:\n{}", report.render_text());
+    for f in &report.findings {
+        assert_eq!(f.rule, "MM002", "only MM002 may fire: {}", report.render_text());
+    }
+    assert!(report.findings[0].message.contains("parameter 0"));
+    assert!(report.findings[0].message.contains("2 outputs"));
+}
+
+#[test]
 fn all_rule_ids_are_stable_strings() {
     // defense against typo'd rule IDs drifting: the catalog in
     // docs/ANALYSIS.md is the source of truth; anything emitted by the
@@ -109,13 +200,17 @@ fn all_rule_ids_are_stable_strings() {
     let catalog = [
         "AR001", "AR002", "AR003", "AR004", "AR005", "AR006", "AR007", "AR008", "AR009",
         "AR010", "CK001", "CK002", "CK003", "CK004", "CF001", "CF002", "CF003", "CF004",
-        "LN000", "LN001", "LN002", "LN003", "LN004", "LN005",
+        "LN000", "LN001", "LN002", "LN003", "LN004", "LN005", "LN006", "MM001", "MM002",
+        "MM003", "MM004", "MM005",
     ];
     let mut findings = Vec::new();
     for dir in ["clean", "missing_accum", "bad_shape", "dtype_flip"] {
         findings.extend(check_artifacts(&fixture(dir)));
     }
     findings.extend(check_checkpoint(&fixture("truncated.rvt"), &fixture("clean/sft")));
+    for dir in ["clean", "mm_inflated", "mm_dropped_alias", "mm_double_donation"] {
+        findings.extend(check_hlo_mem(&fixture(dir), &HloMemOpts::default()).0);
+    }
     for f in &findings {
         assert!(catalog.contains(&f.rule), "rule {} not in the documented catalog", f.rule);
     }

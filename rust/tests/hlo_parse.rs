@@ -1,0 +1,185 @@
+//! HLO-text parser goldens and robustness sweep (`analysis::hlo`).
+//!
+//! Golden half: one committed program text per trainable variant
+//! (`tests/fixtures/hlo/`) covering the dialect surface the lowering
+//! pipeline emits — aux computations, tuple-shaped values,
+//! `get-tuple-element`, `while` with computation-reference attributes,
+//! `custom-call`, donation headers. Each must parse to the exact
+//! structure the liveness pass consumes.
+//!
+//! Fuzz half: every fixture is truncated at stride offsets and
+//! byte-mutated with a deterministic LCG; `parse_module` must always
+//! return `Ok` or a structured `Error::Parse` — never panic — and
+//! `parse_signature` must stay panic-free too. This is the tolerance
+//! contract `check --hlo-mem` relies on when pointed at real XLA dumps.
+
+use std::path::PathBuf;
+
+use revffn::analysis::hlo::{parse_module, parse_signature, Shape};
+use revffn::analysis::liveness::entry_peak;
+use revffn::error::Error;
+
+const VARIANTS: &[&str] = &[
+    "sft",
+    "lora",
+    "dora",
+    "ia3",
+    "lomo",
+    "galore",
+    "revffn_stage1",
+    "revffn_stage2",
+];
+
+fn fixture_text(variant: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/hlo")
+        .join(format!("{variant}.hlo.txt"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+#[test]
+fn every_variant_fixture_parses_with_entry_and_root() {
+    for v in VARIANTS {
+        let m = parse_module(&fixture_text(v)).unwrap_or_else(|e| panic!("{v}: {e}"));
+        let entry = m.entry().unwrap_or_else(|| panic!("{v}: no ENTRY"));
+        assert!(entry.root().is_some(), "{v}: no ROOT");
+        assert!(
+            entry.instrs.iter().any(|i| i.opcode == "parameter"),
+            "{v}: no parameters"
+        );
+        // every fixture donates at least its first state buffer
+        assert!(
+            m.alias.contains(&(0, 0)),
+            "{v}: missing the {{0}}: (0) donation, alias = {:?}",
+            m.alias
+        );
+        // the signature reader and the module parser must agree on arity
+        let sig = parse_signature(&fixture_text(v)).unwrap_or_else(|| panic!("{v}: no signature"));
+        let n_params = entry.instrs.iter().filter(|i| i.param_number.is_some()).count();
+        assert_eq!(sig.params.len(), n_params, "{v}: param arity disagreement");
+        // liveness must be computable on every golden program
+        let peak = entry_peak(&m).unwrap_or_else(|e| panic!("{v}: {e}"));
+        assert!(peak.peak_bytes > 0, "{v}: zero peak");
+    }
+}
+
+#[test]
+fn sft_golden_structure() {
+    let m = parse_module(&fixture_text("sft")).unwrap();
+    assert_eq!(m.name, "train_step.0");
+    assert_eq!(m.computations.len(), 2, "aux %add_f32 + ENTRY");
+    assert_eq!(m.alias, vec![(0, 0), (1, 1), (2, 2), (3, 3)]);
+    let entry = m.entry().unwrap();
+    assert_eq!(entry.name, "main.1");
+    assert_eq!(entry.instrs.iter().filter(|i| i.param_number.is_some()).count(), 9);
+    let root = entry.root().unwrap();
+    assert_eq!(root.opcode, "tuple");
+    assert_eq!(root.operands.len(), 7);
+    assert_eq!(root.operands[0], "newp.17");
+    // a reduce's to_apply reference is an attribute, not an operand
+    let loss = entry.instrs.iter().find(|i| i.name == "loss.15").unwrap();
+    assert_eq!(loss.operands, vec!["lse.14".to_string(), "scalar.10".to_string()]);
+    assert!(loss.attrs.contains("to_apply=%add_f32"), "attrs: {}", loss.attrs);
+}
+
+#[test]
+fn dora_golden_tuple_values_and_custom_call() {
+    let m = parse_module(&fixture_text("dora")).unwrap();
+    let entry = m.entry().unwrap();
+    let cc = entry.instrs.iter().find(|i| i.opcode == "custom-call").unwrap();
+    match &cc.shape {
+        Shape::Tuple(elems) => {
+            assert_eq!(elems.len(), 2);
+            assert_eq!(cc.shape.flat_bytes(), 8 * 2 * 4 + 4);
+        }
+        other => panic!("custom-call shape should be a tuple, got {}", other.render()),
+    }
+    assert!(cc.attrs.contains("custom_call_target=\"column_norm\""));
+    let gte: Vec<_> =
+        entry.instrs.iter().filter(|i| i.opcode == "get-tuple-element").collect();
+    assert_eq!(gte.len(), 2);
+    assert_eq!(gte[0].operands, vec!["normed.4".to_string()]);
+    assert!(gte[0].attrs.contains("index=0"));
+}
+
+#[test]
+fn galore_golden_while_loop_bodies() {
+    let m = parse_module(&fixture_text("galore")).unwrap();
+    assert_eq!(m.computations.len(), 3, "cond + body + ENTRY");
+    assert!(m.computations.iter().any(|c| c.name == "cond.inc" && !c.is_entry));
+    assert!(m.computations.iter().any(|c| c.name == "body.inc" && !c.is_entry));
+    let entry = m.entry().unwrap();
+    let w = entry.instrs.iter().find(|i| i.opcode == "while").unwrap();
+    // the loop-carried tuple is the only operand; the computation
+    // references live in the attributes
+    assert_eq!(w.operands, vec!["init.4".to_string()]);
+    assert!(w.attrs.contains("condition=%cond.inc"));
+    assert!(w.attrs.contains("body=%body.inc"));
+    // the while's tuple shape is (s32[], f32[4,2]) = 4 + 32 bytes
+    assert_eq!(w.shape.flat_bytes(), 36);
+}
+
+#[test]
+fn revffn_stages_share_the_two_stream_signature() {
+    for v in ["revffn_stage1", "revffn_stage2"] {
+        let m = parse_module(&fixture_text(v)).unwrap();
+        let entry = m.entry().unwrap();
+        let streams: Vec<_> = entry
+            .instrs
+            .iter()
+            .filter(|i| i.param_number == Some(0) || i.param_number == Some(1))
+            .collect();
+        assert_eq!(streams.len(), 2, "{v}");
+        for s in &streams {
+            assert_eq!(s.shape.flat_bytes(), 2 * 4 * 4 * 4, "{v}: {}", s.name);
+        }
+        // both residual streams are donated — the reversible calling
+        // convention that makes the live set depth-independent
+        assert_eq!(m.alias, vec![(0, 0), (1, 1)], "{v}");
+    }
+}
+
+#[test]
+fn truncations_never_panic_and_degrade_to_parse_errors() {
+    for v in VARIANTS {
+        let text = fixture_text(v);
+        let bytes = text.as_bytes();
+        for cut in (0..bytes.len()).step_by(7) {
+            let head = String::from_utf8_lossy(&bytes[..cut]);
+            match parse_module(&head) {
+                Ok(_) => {}
+                Err(Error::Parse(msg)) => {
+                    assert!(msg.starts_with("hlo:"), "{v}@{cut}: unstructured error {msg}")
+                }
+                Err(e) => panic!("{v}@{cut}: non-Parse error {e}"),
+            }
+            let _ = parse_signature(&head); // must not panic either
+        }
+    }
+}
+
+#[test]
+fn byte_mutations_never_panic() {
+    // deterministic LCG so the sweep is reproducible without any
+    // clock/rng dependency
+    let mut state: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        state
+    };
+    for v in VARIANTS {
+        let text = fixture_text(v);
+        for _ in 0..200 {
+            let mut bytes = text.as_bytes().to_vec();
+            let pos = (next() as usize) % bytes.len();
+            bytes[pos] = (next() & 0xff) as u8;
+            let mutated = String::from_utf8_lossy(&bytes).into_owned();
+            match parse_module(&mutated) {
+                Ok(_) => {}
+                Err(Error::Parse(_)) => {}
+                Err(e) => panic!("{v}: mutation produced non-Parse error {e}"),
+            }
+            let _ = parse_signature(&mutated);
+        }
+    }
+}
